@@ -1,0 +1,162 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. HLO text — NOT ``lowered.compile().serialize()`` — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Artifact variants form static-shape buckets (the stream grows the item
+matrix at runtime, so the Rust item store capacity-pads to the next
+bucket):
+
+* ``topn_b{B}_m{M}``       — recommend_topn, (B,K)x(M,K) -> top-n.
+* ``isgd_b{B}``            — fused ISGD update for B pairs.
+* ``recupd_b{B}_m{M}``     — fused recommend-then-update (prequential hot
+                             path; halves PJRT calls per event).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from ``python/``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Paper hyper-parameters: k = 10 latent features (Section 5.3.1).
+LATENT_K = 10
+# Over-fetch factor for the top-N list: the evaluator needs N=10 *unrated*
+# items; rust filters the user's history out of a longer static list.
+TOPN_OVERFETCH = 50
+# Item-store capacity buckets (multiples of the scoring kernel's BLOCK_M).
+M_BUCKETS = (1024, 4096, 16384)
+# User micro-batch sizes: 1 = per-event path, 32 = batched evaluator path.
+B_SIZES = (1, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_desc(shapes):
+    return [{"shape": list(s), "dtype": "f32"} for s in shapes]
+
+
+def build_variants():
+    """Yield (name, lowered, meta) for every artifact variant."""
+    for b in B_SIZES:
+        # Fused ISGD update: inputs u(B,K), i(B,K), eta_lam(1,2).
+        name = f"isgd_b{b}"
+        lowered = jax.jit(model.isgd_step).lower(
+            _spec((b, LATENT_K)), _spec((b, LATENT_K)), _spec((1, 2))
+        )
+        yield name, lowered, {
+            "kind": "isgd",
+            "b": b,
+            "k": LATENT_K,
+            "inputs": _io_desc([(b, LATENT_K), (b, LATENT_K), (1, 2)]),
+            "outputs": _io_desc([(b, LATENT_K), (b, LATENT_K), (b, 1)]),
+        }
+        for m in M_BUCKETS:
+            # Masked top-n scoring.
+            name = f"topn_b{b}_m{m}"
+            fn = lambda u, items, valid: model.recommend_topn(
+                u, items, valid, n=TOPN_OVERFETCH
+            )
+            lowered = jax.jit(fn).lower(
+                _spec((b, LATENT_K)), _spec((m, LATENT_K)), _spec((m,))
+            )
+            yield name, lowered, {
+                "kind": "topn",
+                "b": b,
+                "m": m,
+                "k": LATENT_K,
+                "n": TOPN_OVERFETCH,
+                "inputs": _io_desc([(b, LATENT_K), (m, LATENT_K), (m,)]),
+                "outputs": [
+                    {"shape": [b, TOPN_OVERFETCH], "dtype": "f32"},
+                    {"shape": [b, TOPN_OVERFETCH], "dtype": "s32"},
+                ],
+            }
+            # Fused recommend-then-update (prequential hot path).
+            name = f"recupd_b{b}_m{m}"
+            fn2 = lambda u, items, valid, i_rated, eta_lam: (
+                model.recommend_and_update(
+                    u, items, valid, i_rated, eta_lam, n=TOPN_OVERFETCH
+                )
+            )
+            lowered = jax.jit(fn2).lower(
+                _spec((b, LATENT_K)),
+                _spec((m, LATENT_K)),
+                _spec((m,)),
+                _spec((b, LATENT_K)),
+                _spec((1, 2)),
+            )
+            yield name, lowered, {
+                "kind": "recupd",
+                "b": b,
+                "m": m,
+                "k": LATENT_K,
+                "n": TOPN_OVERFETCH,
+                "inputs": _io_desc(
+                    [(b, LATENT_K), (m, LATENT_K), (m,), (b, LATENT_K), (1, 2)]
+                ),
+                "outputs": [
+                    {"shape": [b, TOPN_OVERFETCH], "dtype": "f32"},
+                    {"shape": [b, TOPN_OVERFETCH], "dtype": "s32"},
+                    {"shape": [b, LATENT_K], "dtype": "f32"},
+                    {"shape": [b, LATENT_K], "dtype": "f32"},
+                    {"shape": [b, 1], "dtype": "f32"},
+                ],
+            }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated variant-name filter"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {"latent_k": LATENT_K, "topn_overfetch": TOPN_OVERFETCH,
+                "m_buckets": list(M_BUCKETS), "b_sizes": list(B_SIZES),
+                "artifacts": []}
+    for name, lowered, meta in build_variants():
+        if only and name not in only:
+            continue
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {"name": name, "file": fname, **meta}
+        manifest["artifacts"].append(entry)
+        print(f"  wrote {fname:24s} ({len(text)//1024} KiB)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the Pallas kernels (and the Rust native backend)
+are validated against. They implement, with no tiling or fusion tricks:
+
+* ``scores_ref``      — batched user-vs-item dot-product scoring
+                        (the inner loop of Algorithm 2 / Equation 2).
+* ``isgd_update_ref`` — one ISGD step per (user, item) pair
+                        (Equations 3 and 4, sequential semantics: the item
+                        update sees the already-updated user vector, exactly
+                        as Algorithm 2 is written).
+* ``topn_ref``        — masked top-N selection over scores.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scores_ref(u_batch: jnp.ndarray, items: jnp.ndarray) -> jnp.ndarray:
+    """Score every user vector against every item vector.
+
+    Args:
+      u_batch: ``(B, K)`` user latent vectors.
+      items:   ``(M, K)`` item latent matrix.
+
+    Returns:
+      ``(B, M)`` scores ``u · i^T`` (Equation 2's prediction term).
+    """
+    return u_batch @ items.T
+
+
+def isgd_update_ref(
+    u: jnp.ndarray,
+    i: jnp.ndarray,
+    eta: float,
+    lam: float,
+):
+    """One ISGD step for a batch of (user, item) vector pairs.
+
+    Implements Algorithm 2's update block literally (positive-only feedback,
+    boolean rating => target 1):
+
+        err  = 1 - U_u . I_i^T                     (Equation 2, r = 1)
+        U_u <- U_u + eta(err * I_i - lam * U_u)    (Equation 3)
+        I_i <- I_i + eta(err * U_u - lam * I_i)    (Equation 4)
+
+    The item update uses the *updated* ``U_u`` — the statements are
+    sequential in Algorithm 2, and the Rust native backend matches this.
+
+    Args:
+      u:   ``(B, K)`` user vectors.
+      i:   ``(B, K)`` item vectors (row b pairs with row b of ``u``).
+      eta: learning rate.
+      lam: L2 regularization.
+
+    Returns:
+      ``(u_new, i_new, err)`` with shapes ``(B, K), (B, K), (B,)``.
+    """
+    err = 1.0 - jnp.sum(u * i, axis=-1, keepdims=True)  # (B, 1)
+    u_new = u + eta * (err * i - lam * u)
+    i_new = i + eta * (err * u_new - lam * i)
+    return u_new, i_new, err[:, 0]
+
+
+def topn_ref(
+    u_batch: jnp.ndarray,
+    items: jnp.ndarray,
+    valid: jnp.ndarray,
+    n: int,
+):
+    """Masked top-N recommendation scores.
+
+    Invalid item slots (``valid == 0``; capacity padding in the Rust
+    runtime's item store) are pushed to -1e9 so they can never enter the
+    top-N while keeping shapes static for AOT lowering.
+
+    Args:
+      u_batch: ``(B, K)`` user vectors.
+      items:   ``(M, K)`` item matrix (rows past the live count are padding).
+      valid:   ``(M,)`` float mask, 1.0 for live item rows, 0.0 for padding.
+      n:       size of the recommendation list (compile-time constant).
+
+    Returns:
+      ``(values, indices)`` of shapes ``(B, n)`` each.
+    """
+    scores = scores_ref(u_batch, items)
+    masked = scores + (valid - 1.0) * 1e9
+    return jax.lax.top_k(masked, n)

@@ -1,0 +1,106 @@
+"""Layer-1 Pallas kernel: tiled user-vs-item scoring.
+
+This is the compute hot spot of both DISGD recommendation (Algorithm 2's
+``for each p in I: r_up = U_u . I_p^T``) and the prequential evaluator: a
+``(B, K) x (M, K)^T`` matmul where ``M`` (the worker-local item-state size)
+dominates.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the item matrix is streamed
+HBM->VMEM in ``(BLOCK_M, K)`` tiles via ``BlockSpec`` while the small user
+block stays resident in VMEM across the whole grid; the per-tile
+``jnp.dot`` targets the MXU with float32 accumulation. On this image the
+kernel is lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls), so TPU efficiency is *estimated* from the block geometry —
+see ``vmem_bytes``/``mxu_utilization`` below and EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default item-tile height. 256 rows x K=16 lanes of f32 = 16 KiB per tile:
+# deep enough to amortize the HBM->VMEM copy, small enough that double
+# buffering two tiles plus the user block and output slab stays well under
+# a TPU core's ~16 MiB VMEM for every artifact variant we ship.
+DEFAULT_BLOCK_M = 256
+
+
+def _scoring_kernel(u_ref, i_ref, o_ref):
+    """One grid step: score the resident user block against one item tile.
+
+    ``u_ref``: (B, K) user block (same block every step — revisited).
+    ``i_ref``: (BLOCK_M, K) item tile for grid index m.
+    ``o_ref``: (B, BLOCK_M) output slab for grid index m.
+    """
+    # MXU-shaped contraction; accumulate in f32 regardless of input dtype.
+    o_ref[...] = jnp.dot(
+        u_ref[...], i_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def scores(
+    u_batch: jnp.ndarray,
+    items: jnp.ndarray,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas-tiled equivalent of ``ref.scores_ref``.
+
+    Args:
+      u_batch: ``(B, K)`` user vectors.
+      items:   ``(M, K)`` item matrix; ``M`` must be a multiple of
+               ``block_m`` (the Rust item store pads capacity to the
+               artifact bucket, which is always a multiple of 256).
+      block_m: item-tile height (HBM->VMEM streaming granularity).
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      ``(B, M)`` float32 scores.
+    """
+    b, k = u_batch.shape
+    m, k2 = items.shape
+    assert k == k2, f"latent dim mismatch: {k} vs {k2}"
+    block_m = min(block_m, m)
+    assert m % block_m == 0, f"M={m} not a multiple of block_m={block_m}"
+
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _scoring_kernel,
+        grid=grid,
+        in_specs=[
+            # User block: revisited every grid step, stays in VMEM.
+            pl.BlockSpec((b, k), lambda mi: (0, 0)),
+            # Item tile: streamed, one (block_m, K) slab per step.
+            pl.BlockSpec((block_m, k), lambda mi: (mi, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, block_m), lambda mi: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=interpret,
+    )(u_batch, items)
+
+
+def vmem_bytes(b: int, k: int, block_m: int = DEFAULT_BLOCK_M) -> int:
+    """Estimated VMEM footprint (bytes) of one grid step, double-buffered.
+
+    user block + 2x item tile (double buffering) + 2x output slab.
+    Used by DESIGN.md §Perf to validate artifact block geometry.
+    """
+    f32 = 4
+    return f32 * (b * k + 2 * block_m * k + 2 * b * block_m)
+
+
+def mxu_utilization(b: int, k: int) -> float:
+    """Estimated MXU lane utilization for one (B,K)x(K,BLOCK_M) pass.
+
+    The 128x128 systolic array is fed a (B, K) LHS; lanes beyond B and
+    sublanes beyond K idle. Utilization = (min(B,128)/128) * (min(K,128)/128).
+    K=10..16 and B=1 are intrinsically low — the paper's workload is a
+    skinny GEMV; batching (B=32) is the lever, see EXPERIMENTS.md §Perf.
+    """
+    return (min(b, 128) / 128.0) * (min(k, 128) / 128.0)

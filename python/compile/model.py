@@ -1,0 +1,122 @@
+"""Layer-2 JAX model: the DISGD compute graph, built on the L1 kernels.
+
+Two jitted entry points are AOT-lowered (see ``aot.py``) and executed from
+the Rust coordinator via PJRT; Python never runs on the request path.
+
+* ``recommend_topn`` — masked top-N scoring of a user batch against the
+  worker-local item matrix (Algorithm 2's recommendation half, plus the
+  capacity-padding mask the static-shape AOT contract requires).
+* ``isgd_step``      — the fused ISGD model update (Algorithm 2's learning
+  half; Equations 2-4).
+
+Both call the Pallas kernels so the kernels lower into the same HLO
+artifact the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import isgd_update as isgd_kernel
+from compile.kernels import scoring
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def recommend_topn(
+    u_batch: jnp.ndarray,
+    items: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    n: int,
+):
+    """Top-N recommendation scores for a batch of users.
+
+    Args:
+      u_batch: ``(B, K)`` user latent vectors.
+      items:   ``(M, K)`` item latent matrix, capacity-padded: rows at or
+               beyond the live item count are arbitrary.
+      valid:   ``(M,)`` float mask, 1.0 on live rows, 0.0 on padding.
+      n:       recommendation-list length (static; the Rust side over-fetches
+               ``n > N`` so already-rated items can be filtered locally).
+
+    Returns:
+      ``(values, indices)``, each ``(B, n)``; indices are row ids into the
+      worker-local item store (the Rust side maps them back to item ids).
+    """
+    raw = scoring.scores(u_batch, items)
+    # Push padding rows to -1e9: cheaper than a where() and exact enough —
+    # live ISGD scores are O(1) in magnitude (vectors start ~N(0, 0.1)).
+    masked = raw + (valid - 1.0)[None, :] * 1e9
+    values, indices = _topk_via_sort(masked, n)
+    return values, indices
+
+
+def _topk_via_sort(scores: jnp.ndarray, n: int):
+    """Top-k lowered through HLO `sort` instead of the `topk` op.
+
+    jax.lax.top_k emits the modern `topk(..., largest=true)` HLO
+    instruction, which the xla_extension 0.5.1 text parser (the version
+    the Rust `xla` crate links) rejects. A descending key-value sort plus
+    a static slice lowers to the classic `sort` + `slice` ops that
+    round-trip cleanly (see DESIGN.md §3 and aot_recipe notes).
+    """
+    b, m = scores.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b, m), dimension=1)
+    # Ascending sort on negated scores == descending on scores; ties break
+    # toward the lower index because the iota is carried as the value.
+    neg_sorted, idx_sorted = jax.lax.sort_key_val(-scores, iota, dimension=1)
+    return -neg_sorted[:, :n], idx_sorted[:, :n]
+
+
+@jax.jit
+def isgd_step(u: jnp.ndarray, i: jnp.ndarray, eta_lam: jnp.ndarray):
+    """One fused ISGD update for a batch of (user, item) vector pairs.
+
+    Thin L2 wrapper over the L1 fused kernel; exists so the AOT artifact
+    boundary is a model-level function, not a kernel-level one.
+
+    Args:
+      u:       ``(B, K)`` user vectors.
+      i:       ``(B, K)`` paired item vectors.
+      eta_lam: ``(1, 2)`` ``[[eta, lam]]`` hyper-parameters.
+
+    Returns:
+      ``(u_new, i_new, err)`` — shapes ``(B, K), (B, K), (B, 1)``.
+    """
+    return isgd_kernel.isgd_update(u, i, eta_lam)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def recommend_and_update(
+    u_batch: jnp.ndarray,
+    items: jnp.ndarray,
+    valid: jnp.ndarray,
+    i_rated: jnp.ndarray,
+    eta_lam: jnp.ndarray,
+    *,
+    n: int,
+):
+    """Fused prequential step: recommend first, then learn (Algorithm 4).
+
+    The prequential evaluator always performs recommend-then-update for the
+    same user; fusing them into one artifact halves the PJRT call count on
+    the hot path (see EXPERIMENTS.md §Perf).
+
+    Args:
+      u_batch: ``(B, K)`` user vectors.
+      items:   ``(M, K)`` capacity-padded item matrix.
+      valid:   ``(M,)`` live-row mask.
+      i_rated: ``(B, K)`` the item vector each user just rated (the training
+               half updates against *this* item, not the recommended ones).
+      eta_lam: ``(1, 2)`` ``[[eta, lam]]``.
+      n:       over-fetched recommendation-list length.
+
+    Returns:
+      ``(values, indices, u_new, i_new, err)``.
+    """
+    values, indices = recommend_topn(u_batch, items, valid, n=n)
+    u_new, i_new, err = isgd_step(u_batch, i_rated, eta_lam)
+    return values, indices, u_new, i_new, err

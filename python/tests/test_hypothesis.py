@@ -1,0 +1,75 @@
+"""Hypothesis sweeps: Pallas kernels vs pure-jnp oracle over randomized
+shapes, seeds and hyper-parameters (the property-based half of the L1
+correctness signal)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import isgd_update, ref, scoring
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(rng, shape, scale):
+    return jnp.asarray(rng.normal(0.0, scale, size=shape), dtype=jnp.float32)
+
+
+@given(
+    b=st.integers(min_value=1, max_value=48),
+    m_blocks=st.integers(min_value=1, max_value=8),
+    k=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([0.01, 0.1, 1.0]),
+)
+@settings(**_SETTINGS)
+def test_scoring_matches_ref(b, m_blocks, k, seed, scale):
+    rng = np.random.default_rng(seed)
+    m = 128 * m_blocks
+    u = _arr(rng, (b, k), scale)
+    items = _arr(rng, (m, k), scale)
+    got = scoring.scores(u, items, block_m=128)
+    want = ref.scores_ref(u, items)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(
+    b=st.integers(min_value=1, max_value=64),
+    k=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    eta=st.floats(min_value=1e-4, max_value=0.5),
+    lam=st.floats(min_value=0.0, max_value=0.2),
+)
+@settings(**_SETTINGS)
+def test_isgd_update_matches_ref(b, k, seed, eta, lam):
+    rng = np.random.default_rng(seed)
+    u = _arr(rng, (b, k), 0.1)
+    i = _arr(rng, (b, k), 0.1)
+    eta_lam = jnp.asarray([[eta, lam]], dtype=jnp.float32)
+    u_new, i_new, err = isgd_update.isgd_update(u, i, eta_lam)
+    u_ref, i_ref, err_ref = ref.isgd_update_ref(u, i, eta, lam)
+    np.testing.assert_allclose(u_new, u_ref, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(i_new, i_ref, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(err[:, 0], err_ref, rtol=1e-4, atol=1e-6)
+
+
+@given(
+    live=st.integers(min_value=1, max_value=255),
+    n=st.integers(min_value=1, max_value=30),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(**_SETTINGS)
+def test_topn_mask_excludes_padding(live, n, seed):
+    from compile import model
+
+    rng = np.random.default_rng(seed)
+    m = 256
+    u = _arr(rng, (1, 10), 0.1)
+    items = _arr(rng, (m, 10), 0.1)
+    valid = jnp.asarray(
+        np.concatenate([np.ones(live), np.zeros(m - live)]), dtype=jnp.float32
+    )
+    _, idx = model.recommend_topn(u, items, valid, n=n)
+    live_hits = np.asarray(idx[0])[: min(n, live)]
+    assert np.all(live_hits < live)

@@ -1,0 +1,111 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal for L1.
+
+Every Pallas kernel is compared against its pure-jnp oracle in ref.py with
+assert_allclose over fixed representative shapes; the randomized/hypothesis
+sweeps live in test_hypothesis.py.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels import isgd_update, ref, scoring
+
+
+def _rand(shape, seed, scale=0.1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, scale, size=shape), dtype=jnp.float32)
+
+
+class TestScoringKernel:
+    @pytest.mark.parametrize("b", [1, 3, 32])
+    @pytest.mark.parametrize("m", [256, 1024])
+    @pytest.mark.parametrize("k", [10, 16])
+    def test_matches_ref(self, b, m, k):
+        u = _rand((b, k), seed=b * 100 + m + k)
+        items = _rand((m, k), seed=b + m + k)
+        got = scoring.scores(u, items)
+        want = ref.scores_ref(u, items)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_block_not_dividing_m_rejected(self):
+        u = _rand((1, 10), seed=0)
+        items = _rand((300, 10), seed=1)  # 300 % 256 != 0
+        with pytest.raises(AssertionError):
+            scoring.scores(u, items)
+
+    def test_small_m_clamps_block(self):
+        # m < block_m must still work (block clamped to m).
+        u = _rand((2, 10), seed=2)
+        items = _rand((128, 10), seed=3)
+        got = scoring.scores(u, items)
+        np.testing.assert_allclose(got, ref.scores_ref(u, items), rtol=1e-5)
+
+    def test_zero_user_vector_scores_zero(self):
+        u = jnp.zeros((1, 10), dtype=jnp.float32)
+        items = _rand((256, 10), seed=4)
+        assert np.allclose(scoring.scores(u, items), 0.0)
+
+    def test_vmem_budget_for_shipped_buckets(self):
+        # Every shipped artifact bucket must fit comfortably in TPU VMEM.
+        for b in (1, 32):
+            for _m in (1024, 4096, 16384):
+                assert scoring.vmem_bytes(b, 10) < 16 * 1024 * 1024
+
+    def test_mxu_utilization_monotone_in_batch(self):
+        assert scoring.mxu_utilization(32, 10) > scoring.mxu_utilization(1, 10)
+
+
+class TestIsgdUpdateKernel:
+    @pytest.mark.parametrize("b", [1, 7, 32])
+    @pytest.mark.parametrize("k", [10, 16])
+    def test_matches_ref(self, b, k):
+        u = _rand((b, k), seed=b + k)
+        i = _rand((b, k), seed=b * k + 1)
+        eta, lam = 0.05, 0.01
+        eta_lam = jnp.asarray([[eta, lam]], dtype=jnp.float32)
+        u_new, i_new, err = isgd_update.isgd_update(u, i, eta_lam)
+        u_ref, i_ref, err_ref = ref.isgd_update_ref(u, i, eta, lam)
+        np.testing.assert_allclose(u_new, u_ref, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(i_new, i_ref, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(err[:, 0], err_ref, rtol=1e-5, atol=1e-6)
+
+    def test_perfect_prediction_is_pure_decay(self):
+        # err = 0 when u.i == 1: update reduces to weight decay.
+        k = 10
+        u = jnp.zeros((1, k), dtype=jnp.float32).at[0, 0].set(1.0)
+        i = jnp.zeros((1, k), dtype=jnp.float32).at[0, 0].set(1.0)
+        eta, lam = 0.05, 0.01
+        eta_lam = jnp.asarray([[eta, lam]], dtype=jnp.float32)
+        u_new, i_new, err = isgd_update.isgd_update(u, i, eta_lam)
+        np.testing.assert_allclose(err, 0.0, atol=1e-6)
+        np.testing.assert_allclose(u_new, u * (1 - eta * lam), rtol=1e-6)
+        np.testing.assert_allclose(i_new, i * (1 - eta * lam), rtol=1e-6)
+
+    def test_sequential_semantics(self):
+        # The item update must see the UPDATED user vector (Algorithm 2
+        # statement order), not the stale one.
+        u = _rand((1, 10), seed=11)
+        i = _rand((1, 10), seed=12)
+        eta, lam = 0.5, 0.1  # large eta so the difference is visible
+        eta_lam = jnp.asarray([[eta, lam]], dtype=jnp.float32)
+        _, i_new, _ = isgd_update.isgd_update(u, i, eta_lam)
+        err = 1.0 - jnp.sum(u * i)
+        u_upd = u + eta * (err * i - lam * u)
+        i_seq = i + eta * (err * u_upd - lam * i)      # sequential (correct)
+        i_par = i + eta * (err * u - lam * i)          # parallel (wrong)
+        np.testing.assert_allclose(i_new, i_seq, rtol=1e-5)
+        assert not np.allclose(i_new, i_par, rtol=1e-5)
+
+    def test_converges_toward_target(self):
+        # Repeated updates on the same pair must drive err -> 0.
+        u = _rand((1, 10), seed=21)
+        i = _rand((1, 10), seed=22)
+        eta_lam = jnp.asarray([[0.1, 0.001]], dtype=jnp.float32)
+        errs = []
+        for _ in range(200):
+            u, i, err = isgd_update.isgd_update(u, i, eta_lam)
+            errs.append(float(abs(err[0, 0])))
+        assert errs[-1] < 0.05
+        assert errs[-1] < errs[0]

@@ -1,0 +1,50 @@
+//! Forgetting-sweep benchmarks: LRU/LFU scan cost over slab and tracked
+//! map state at realistic sizes — the cost the paper blames for DICS
+//! throughput loss under aggressive LFU (Section 5.3.2).
+
+use std::time::Duration;
+
+use streamrec::benchutil::{bench_batch, black_box};
+use streamrec::state::{TrackedMap, VectorSlab};
+use streamrec::util::rng::Pcg32;
+
+fn main() {
+    println!("== forgetting sweep benchmarks ==");
+    let mut rng = Pcg32::seeded(4);
+    for n in [10_000usize, 100_000] {
+        // VectorSlab sweep (DISGD item state).
+        bench_batch(
+            &format!("sweep_lru/slab_{n}"),
+            n as u64,
+            2,
+            10,
+            Duration::from_millis(600),
+            || {
+                let mut slab = VectorSlab::new(10);
+                for id in 0..n as u64 {
+                    slab.insert(id, &[0.0; 10], rng.next_bounded(1000));
+                }
+                // Sweep evicts ~half.
+                black_box(slab.sweep_lru(500).len());
+            },
+        );
+        // TrackedMap sweep (user state).
+        bench_batch(
+            &format!("sweep_lfu/map_{n}"),
+            n as u64,
+            2,
+            10,
+            Duration::from_millis(600),
+            || {
+                let mut map: TrackedMap<u64, [f32; 10]> = TrackedMap::new();
+                for id in 0..n as u64 {
+                    map.insert(id, [0.0; 10], 0);
+                    if id % 2 == 0 {
+                        map.touch_mut(&id, 1);
+                    }
+                }
+                black_box(map.sweep_lfu(2).len());
+            },
+        );
+    }
+}

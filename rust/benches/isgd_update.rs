@@ -1,0 +1,47 @@
+//! ISGD update-step benchmarks: native Rust vs the PJRT AOT artifact
+//! (per-event and per-call cost). The gap is the PJRT dispatch overhead
+//! the batched `recupd` path amortizes — see EXPERIMENTS.md §Perf.
+
+use std::time::Duration;
+
+use streamrec::benchutil::{bench, black_box};
+use streamrec::runtime::{NativeBackend, ScoringBackend};
+use streamrec::util::rng::Pcg32;
+
+fn main() {
+    println!("== isgd update benchmarks ==");
+    let budget = Duration::from_millis(400);
+    let k = 10;
+    let mut rng = Pcg32::seeded(2);
+    let mut u: Vec<f32> = (0..k).map(|_| rng.next_f32() - 0.5).collect();
+    let mut i: Vec<f32> = (0..k).map(|_| rng.next_f32() - 0.5).collect();
+
+    let mut native = NativeBackend::new();
+    bench("isgd_step/native_k10", 1000, 10_000, budget, || {
+        black_box(native.isgd_step(&mut u, &mut i, 0.05, 0.01));
+    });
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let mut engine =
+            streamrec::runtime::pjrt::PjrtEngine::new("artifacts").unwrap();
+        // Warm the executable cache outside the timed region.
+        let _ = engine.isgd_step(&mut u, &mut i, 0.05, 0.01).unwrap();
+        bench(
+            "isgd_step/pjrt_k10",
+            10,
+            200,
+            Duration::from_millis(800),
+            || {
+                black_box(
+                    engine.isgd_step(&mut u, &mut i, 0.05, 0.01).unwrap(),
+                );
+            },
+        );
+        println!(
+            "(pjrt exec_calls={} compiles={})",
+            engine.exec_calls, engine.compile_count
+        );
+    } else {
+        println!("artifacts/ missing — run `make artifacts` for PJRT numbers");
+    }
+}

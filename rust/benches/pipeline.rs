@@ -1,0 +1,94 @@
+//! End-to-end pipeline benchmarks — one per paper table/figure family:
+//!
+//! * DISGD throughput, central vs n_i ∈ {2,4,6}, ± forgetting (Fig 8)
+//! * DICS throughput, central (capped) vs distributed (Fig 14)
+//! * channel send/recv cost (engine substrate)
+//!
+//! These are the criterion-equivalent end-to-end benches (the offline
+//! build has no criterion; `benchutil` provides warmup + p50/p99).
+
+use std::time::Instant;
+
+use streamrec::config::{Algorithm, Forgetting, RunConfig, Topology};
+use streamrec::coordinator::run_pipeline;
+use streamrec::data::DatasetSpec;
+use streamrec::engine::bounded;
+
+fn main() -> anyhow::Result<()> {
+    println!("== pipeline benchmarks (Fig 8 / Fig 14 shape) ==");
+    let events = DatasetSpec::parse("nf-like:30000", 21)?.load()?;
+
+    // Channel substrate cost first (context for the numbers below).
+    {
+        let (tx, rx) = bounded::<u64>(4096);
+        let h = std::thread::spawn(move || {
+            let mut n = 0u64;
+            while rx.recv().is_some() {
+                n += 1;
+            }
+            n
+        });
+        let t0 = Instant::now();
+        let count = 2_000_000u64;
+        for i in 0..count {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let received = h.join().unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "channel/send_recv: {:.1} M msgs/s (received {received})",
+            count as f64 / dt / 1e6
+        );
+    }
+
+    println!(
+        "\n{:8} {:>4} {:>10} {:>12} {:>12} {:>10}",
+        "algo", "n_i", "policy", "events", "ev/s", "speedup"
+    );
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let mut central_thpt = None;
+        for n_i in [1u64, 2, 4, 6] {
+            for policy in ["none", "lfu"] {
+                let forgetting = match policy {
+                    "lfu" => Forgetting::Lfu {
+                        trigger_events: 10_000,
+                        min_freq: 2,
+                    },
+                    _ => Forgetting::None,
+                };
+                let cfg = RunConfig {
+                    algorithm: algo,
+                    topology: Topology::new(n_i, 0)?,
+                    forgetting,
+                    sample_every: 10_000,
+                    ..RunConfig::default()
+                };
+                // Cap the central cosine baseline (paper Section 5.3.2).
+                let slice = if algo == Algorithm::Cosine && n_i == 1 {
+                    &events[..6000]
+                } else {
+                    &events[..]
+                };
+                let r = run_pipeline(
+                    &cfg,
+                    slice,
+                    &format!("bench-{}-ni{}-{}", algo.name(), n_i, policy),
+                )?;
+                if n_i == 1 && policy == "none" {
+                    central_thpt = Some(r.throughput);
+                }
+                let speedup = r.throughput
+                    / central_thpt.unwrap_or(r.throughput).max(1e-9);
+                println!(
+                    "{:8} {n_i:>4} {policy:>10} {:>12} {:>12.0} {speedup:>9.1}x",
+                    algo.name(),
+                    r.events,
+                    r.throughput
+                );
+            }
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Router micro-benchmarks: the closed-form Algorithm 1 vs the literal
+//! candidate-list construction, across topologies. L3 §Perf target:
+//! >= 10M routes/s (the router must never be the pipeline bottleneck).
+
+use std::time::Duration;
+
+use streamrec::benchutil::{bench, black_box};
+use streamrec::config::Topology;
+use streamrec::coordinator::Router;
+use streamrec::util::rng::Pcg32;
+
+fn main() {
+    println!("== routing benchmarks ==");
+    let budget = Duration::from_millis(400);
+    for n_i in [2u64, 4, 6] {
+        let router = Router::new(Topology::new(n_i, 0).unwrap());
+        let mut rng = Pcg32::seeded(1);
+        let pairs: Vec<(u64, u64)> =
+            (0..4096).map(|_| (rng.next_u64(), rng.next_u64())).collect();
+        let mut i = 0;
+        bench(
+            &format!("route_closed_form/ni{n_i}"),
+            1000,
+            10_000,
+            budget,
+            || {
+                let (u, it) = pairs[i & 4095];
+                black_box(router.route(u, it));
+                i += 1;
+            },
+        );
+        let mut j = 0;
+        bench(
+            &format!("route_algorithm1_literal/ni{n_i}"),
+            1000,
+            10_000,
+            budget,
+            || {
+                let (u, it) = pairs[j & 4095];
+                black_box(router.route_candidates(u, it));
+                j += 1;
+            },
+        );
+    }
+}

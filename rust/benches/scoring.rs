@@ -1,0 +1,64 @@
+//! Top-N scoring benchmarks over the capacity-padded item slab: native
+//! loop vs the PJRT scoring artifact, across slab buckets. This is the
+//! per-event hot spot of DISGD recommendation (Algorithm 2's inner loop).
+
+use std::time::Duration;
+
+use streamrec::benchutil::{bench, black_box};
+use streamrec::runtime::{NativeBackend, ScoringBackend};
+use streamrec::state::VectorSlab;
+use streamrec::util::rng::Pcg32;
+
+fn filled_slab(rows: usize, k: usize, rng: &mut Pcg32) -> VectorSlab {
+    let mut slab = VectorSlab::new(k);
+    for id in 0..rows as u64 {
+        let v: Vec<f32> = (0..k).map(|_| rng.next_f32() - 0.5).collect();
+        slab.insert(id, &v, 0);
+    }
+    slab
+}
+
+fn main() {
+    println!("== scoring benchmarks ==");
+    let k = 10;
+    let mut rng = Pcg32::seeded(3);
+    let u: Vec<f32> = (0..k).map(|_| rng.next_f32() - 0.5).collect();
+
+    for rows in [512usize, 1000, 4000, 16_000] {
+        let slab = filled_slab(rows, k, &mut rng);
+        let mut native = NativeBackend::new();
+        bench(
+            &format!("topn/native_m{rows}"),
+            100,
+            2_000,
+            Duration::from_millis(400),
+            || {
+                black_box(native.topn(&u, &slab, 50));
+            },
+        );
+    }
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        for rows in [1000usize, 4000, 16_000] {
+            let slab = filled_slab(rows, k, &mut rng);
+            let mut engine =
+                streamrec::runtime::pjrt::PjrtEngine::new("artifacts").unwrap();
+            let _ = engine.topn(&u, &slab).unwrap(); // warm compile+upload
+            bench(
+                &format!("topn/pjrt_m{rows}_cached_items"),
+                5,
+                100,
+                Duration::from_millis(800),
+                || {
+                    black_box(engine.topn(&u, &slab).unwrap());
+                },
+            );
+            println!(
+                "  (uploads={} exec_calls={})",
+                engine.uploads, engine.exec_calls
+            );
+        }
+    } else {
+        println!("artifacts/ missing — run `make artifacts` for PJRT numbers");
+    }
+}

@@ -1,0 +1,301 @@
+//! ISGD — incremental matrix factorization (Vinagre et al. 2014), the
+//! model behind both the central baseline and DISGD (Algorithm 2).
+//!
+//! Positive-only boolean feedback: every observed `<user, item>` has
+//! target rating 1, error `err = 1 - U_u . I_i^T`, vectors initialized
+//! ~N(0, 0.1), one SGD step per event, single pass over the stream.
+//!
+//! The numeric work (scoring against the item matrix, the fused update)
+//! is delegated to a [`ScoringBackend`] — either hand-written Rust or the
+//! AOT-compiled JAX/Pallas artifacts via PJRT. Both see the identical
+//! `VectorSlab` memory.
+
+use std::collections::HashSet;
+
+use crate::algorithms::StreamingRecommender;
+use crate::data::types::{ItemId, Rating, StateSizes, UserId};
+use crate::runtime::ScoringBackend;
+use crate::state::{SweepKind, TrackedMap, VectorSlab};
+use crate::util::rng::Pcg32;
+
+/// Per-user state: the latent vector + rated-item history.
+struct UserState {
+    vec: Box<[f32]>,
+    rated: HashSet<ItemId>,
+}
+
+/// The ISGD model for one worker (or the whole system when central).
+pub struct IsgdModel {
+    users: TrackedMap<UserId, UserState>,
+    items: VectorSlab,
+    backend: Box<dyn ScoringBackend>,
+    rng: Pcg32,
+    k: usize,
+    eta: f32,
+    lambda: f32,
+    /// Scratch for recommend() (no per-event allocation).
+    rec_buf: Vec<ItemId>,
+    /// Events processed (diagnostics).
+    pub updates: u64,
+}
+
+impl IsgdModel {
+    pub fn new(
+        k: usize,
+        eta: f32,
+        lambda: f32,
+        seed: u64,
+        backend: Box<dyn ScoringBackend>,
+    ) -> Self {
+        Self {
+            users: TrackedMap::new(),
+            items: VectorSlab::new(k),
+            backend,
+            rng: Pcg32::seeded(seed),
+            k,
+            eta,
+            lambda,
+            rec_buf: Vec::new(),
+            updates: 0,
+        }
+    }
+
+    fn random_vector(&mut self) -> Vec<f32> {
+        (0..self.k)
+            .map(|_| (self.rng.next_gaussian() * 0.1) as f32)
+            .collect()
+    }
+
+    /// Expose the item slab (tests / state inspection).
+    pub fn items(&self) -> &VectorSlab {
+        &self.items
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+impl StreamingRecommender for IsgdModel {
+    fn name(&self) -> &'static str {
+        "isgd"
+    }
+
+    fn recommend(&mut self, user: UserId, n: usize) -> Vec<ItemId> {
+        let Some(state) = self.users.peek(&user) else {
+            return Vec::new(); // cold start: nothing to score with
+        };
+        if self.items.is_empty() {
+            return Vec::new();
+        }
+        // Over-fetch so rated items can be filtered out locally. 50 is the
+        // artifact overfetch bound; the native backend honours any size,
+        // PJRT caps at the compiled length (n + |rated| rarely exceeds it).
+        let want = (n + state.rated.len()).min(n + 40);
+        let scored = self.backend.topn(&state.vec, &self.items, want);
+        self.rec_buf.clear();
+        for s in scored {
+            if let Some(id) = self.items.id_at(s.row) {
+                if !state.rated.contains(&id) {
+                    self.rec_buf.push(id);
+                    if self.rec_buf.len() == n {
+                        break;
+                    }
+                }
+            }
+        }
+        self.rec_buf.clone()
+    }
+
+    fn update(&mut self, event: &Rating) {
+        let now = event.ts;
+        if !self.users.contains(&event.user) {
+            let vec = self.random_vector().into_boxed_slice();
+            self.users.insert(
+                event.user,
+                UserState { vec, rated: HashSet::new() },
+                now,
+            );
+        }
+        if !self.items.contains(event.item) {
+            let vec = self.random_vector();
+            self.items.insert(event.item, &vec, now);
+        }
+        // Shared-nothing: both vectors are worker-local; the fused step
+        // mutates them in place (Equations 2-4).
+        let user = self.users.touch_mut(&event.user, now).unwrap();
+        let item = self.items.touch_mut(event.item, now).unwrap();
+        self.backend.isgd_step(&mut user.vec, item, self.eta, self.lambda);
+        user.rated.insert(event.item);
+        self.updates += 1;
+    }
+
+    fn state_sizes(&self) -> StateSizes {
+        StateSizes {
+            users: self.users.len() as u64,
+            items: self.items.len() as u64,
+            aux: 0,
+        }
+    }
+
+    fn sweep(&mut self, kind: SweepKind) -> u64 {
+        let (dead_users, dead_items) = match kind {
+            SweepKind::Lru { cutoff_ts } => (
+                self.users.sweep_lru(cutoff_ts),
+                self.items.sweep_lru(cutoff_ts),
+            ),
+            SweepKind::Lfu { min_freq } => (
+                self.users.sweep_lfu(min_freq),
+                self.items.sweep_lfu(min_freq),
+            ),
+            SweepKind::Decay { factor } => {
+                // Gradual forgetting (extension): old taste fades toward
+                // the origin instead of being evicted; state size is
+                // unchanged but stale vectors drop out of the top-N.
+                self.users.for_each_value_mut(|_, s| {
+                    for v in s.vec.iter_mut() {
+                        *v *= factor;
+                    }
+                });
+                self.items.decay_all(factor);
+                return 0;
+            }
+        };
+        (dead_users.len() + dead_items.len()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn model(seed: u64) -> IsgdModel {
+        IsgdModel::new(10, 0.05, 0.01, seed, Box::new(NativeBackend::new()))
+    }
+
+    fn ev(user: u64, item: u64, ts: u64) -> Rating {
+        Rating::new(user, item, 5.0, ts)
+    }
+
+    #[test]
+    fn cold_start_returns_empty() {
+        let mut m = model(1);
+        assert!(m.recommend(99, 10).is_empty());
+        m.update(&ev(1, 2, 0));
+        // User 1 known, but item 2 is the only (rated) item -> empty.
+        assert!(m.recommend(1, 10).is_empty());
+        // Unknown user still empty even though items exist.
+        assert!(m.recommend(42, 10).is_empty());
+    }
+
+    #[test]
+    fn rated_items_never_recommended() {
+        let mut m = model(2);
+        for item in 0..20 {
+            m.update(&ev(1, item, item));
+        }
+        for item in 0..5 {
+            m.update(&ev(2, item, 100 + item));
+        }
+        let recs = m.recommend(2, 10);
+        assert!(!recs.is_empty());
+        for r in &recs {
+            assert!(!(0..5).contains(r), "rated item {r} recommended");
+        }
+    }
+
+    #[test]
+    fn repeated_co_consumption_ranks_item_up() {
+        let mut m = model(3);
+        // Users 1..40 all rate items 100 and 200 together; user 50 rates
+        // only 100. Item 200 should be highly ranked for user 50.
+        let mut ts = 0;
+        for round in 0..6 {
+            for u in 1..40 {
+                m.update(&ev(u, 100, ts));
+                m.update(&ev(u, 200, ts + 1));
+                // noise so the catalog has alternatives
+                m.update(&ev(u, 300 + u + round * 50, ts + 2));
+                ts += 3;
+            }
+        }
+        for _ in 0..5 {
+            m.update(&ev(50, 100, ts));
+            ts += 1;
+        }
+        let recs = m.recommend(50, 5);
+        assert!(
+            recs.contains(&200),
+            "co-consumed item should rank in top-5, got {recs:?}"
+        );
+    }
+
+    #[test]
+    fn state_sizes_track_population() {
+        let mut m = model(4);
+        for u in 0..7 {
+            for i in 0..3 {
+                m.update(&ev(u, i, u * 3 + i));
+            }
+        }
+        let s = m.state_sizes();
+        assert_eq!(s.users, 7);
+        assert_eq!(s.items, 3);
+        assert_eq!(s.aux, 0);
+    }
+
+    #[test]
+    fn lru_sweep_evicts_idle_users_and_items() {
+        let mut m = model(5);
+        m.update(&ev(1, 10, 0));
+        m.update(&ev(2, 20, 1000));
+        let evicted = m.sweep(SweepKind::Lru { cutoff_ts: 500 });
+        assert_eq!(evicted, 2); // user 1 + item 10
+        let s = m.state_sizes();
+        assert_eq!(s.users, 1);
+        assert_eq!(s.items, 1);
+    }
+
+    #[test]
+    fn lfu_sweep_evicts_cold_entries() {
+        let mut m = model(6);
+        for _ in 0..10 {
+            m.update(&ev(1, 10, 0));
+        }
+        m.update(&ev(2, 20, 0));
+        let evicted = m.sweep(SweepKind::Lfu { min_freq: 3 });
+        assert_eq!(evicted, 2); // user 2 + item 20
+        assert!(m.users.contains(&1));
+        assert!(m.items.contains(10));
+    }
+
+    #[test]
+    fn decay_sweep_shrinks_vectors_not_state() {
+        let mut m = model(9);
+        m.update(&ev(1, 10, 0));
+        let before = m.items().get(10).unwrap().to_vec();
+        let evicted = m.sweep(SweepKind::Decay { factor: 0.5 });
+        assert_eq!(evicted, 0, "decay never evicts ISGD state");
+        assert_eq!(m.state_sizes().users, 1);
+        let after = m.items().get(10).unwrap();
+        for (b, a) in before.iter().zip(after.iter()) {
+            assert!((a - b * 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = |seed| {
+            let mut m = model(seed);
+            for u in 0..50u64 {
+                for i in 0..10u64 {
+                    m.update(&ev(u % 9, (u * 7 + i) % 30, u * 10 + i));
+                }
+            }
+            m.recommend(3, 10)
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

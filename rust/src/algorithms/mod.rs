@@ -1,0 +1,69 @@
+//! Streaming recommender algorithms.
+//!
+//! [`StreamingRecommender`] is the contract the prequential evaluator and
+//! the distributed pipeline drive. Central and distributed variants run
+//! the *same* model code: "distributed" just means `n_c` independent
+//! instances behind the splitting-and-replication router (Section 4) —
+//! that is the whole point of the shared-nothing design.
+
+pub mod cosine;
+pub mod isgd;
+
+use crate::data::types::{ItemId, Rating, StateSizes, UserId};
+use crate::state::SweepKind;
+
+pub use cosine::CosineModel;
+pub use isgd::IsgdModel;
+
+/// An online recommender that alternates recommending and learning.
+pub trait StreamingRecommender {
+    /// Algorithm name for reports ("isgd" | "cosine").
+    fn name(&self) -> &'static str;
+
+    /// Top-`n` recommendations for `user`, excluding items the user has
+    /// already rated (Algorithm 2/3's "if p not in user's rated items").
+    /// An unknown user yields an empty list (cold start: recall 0, the
+    /// prequential protocol's behaviour).
+    fn recommend(&mut self, user: UserId, n: usize) -> Vec<ItemId>;
+
+    /// Learn from one feedback element (the training half of the
+    /// prequential loop).
+    fn update(&mut self, event: &Rating);
+
+    /// Current state-entry counts (the paper's memory metric).
+    fn state_sizes(&self) -> StateSizes;
+
+    /// Apply a forgetting sweep; returns the number of evicted entries.
+    fn sweep(&mut self, kind: SweepKind) -> u64;
+}
+
+/// Construct the configured algorithm (invoked inside a worker thread so
+/// `!Send` backends are legal).
+pub fn build_model(
+    cfg: &crate::config::RunConfig,
+    worker_id: usize,
+) -> anyhow::Result<Box<dyn StreamingRecommender>> {
+    match cfg.algorithm {
+        crate::config::Algorithm::Isgd => {
+            let backend =
+                crate::runtime::make_backend(cfg.backend, &cfg.artifacts_dir)?;
+            Ok(Box::new(IsgdModel::new(
+                cfg.latent_k,
+                cfg.eta,
+                cfg.lambda,
+                // Decorrelate worker init streams deterministically.
+                cfg.seed ^ crate::util::rng::mix64(worker_id as u64),
+                backend,
+            )))
+        }
+        crate::config::Algorithm::Cosine => {
+            // Pipelines default to the bounded-staleness fast mode; the
+            // strict (exact) mode stays available for cross-checks via
+            // cfg.cosine_strict.
+            Ok(Box::new(CosineModel::with_mode(
+                cfg.neighbors_k,
+                cfg.cosine_strict,
+            )))
+        }
+    }
+}

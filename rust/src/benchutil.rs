@@ -1,0 +1,123 @@
+//! Tiny benchmark harness (the offline build has no criterion crate;
+//! DESIGN.md §3). Provides warmup + timed iterations with mean / p50 /
+//! p99 reporting, and a `black_box` to defeat const-folding.
+
+use std::time::{Duration, Instant};
+
+use crate::util::histogram::Histogram;
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub throughput_per_sec: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:40} {:>12.1} ns/iter  p50={:>10} p99={:>10}  ({:.2e}/s)",
+            self.name,
+            self.mean_ns,
+            self.p50_ns,
+            self.p99_ns,
+            self.throughput_per_sec
+        );
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then timed runs until
+/// `budget` elapses (at least `min_iters`). Each iteration is timed
+/// individually, so p50/p99 are meaningful.
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: u64,
+    min_iters: u64,
+    budget: Duration,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut hist = Histogram::new();
+    let start = Instant::now();
+    let mut iters = 0u64;
+    let mut total_ns = 0u64;
+    while iters < min_iters || start.elapsed() < budget {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_nanos() as u64;
+        hist.record(dt);
+        total_ns += dt;
+        iters += 1;
+        if iters > 50_000_000 {
+            break; // sanity cap
+        }
+    }
+    let mean_ns = total_ns as f64 / iters as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns,
+        p50_ns: hist.quantile(0.5),
+        p99_ns: hist.quantile(0.99),
+        throughput_per_sec: 1e9 / mean_ns.max(1e-9),
+    };
+    r.report();
+    r
+}
+
+/// Benchmark a batch closure where one call processes `batch` items;
+/// reports per-item numbers.
+pub fn bench_batch<F: FnMut()>(
+    name: &str,
+    batch: u64,
+    warmup: u64,
+    min_iters: u64,
+    budget: Duration,
+    f: F,
+) -> BenchResult {
+    let mut r = bench(name, warmup, min_iters, budget, f);
+    r.mean_ns /= batch as f64;
+    r.p50_ns /= batch;
+    r.p99_ns /= batch;
+    r.throughput_per_sec = 1e9 / r.mean_ns.max(1e-9);
+    println!(
+        "  -> per item: {:.1} ns ({:.2e} items/s)",
+        r.mean_ns, r.throughput_per_sec
+    );
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut acc = 0u64;
+        let r = bench(
+            "noop",
+            2,
+            50,
+            Duration::from_millis(5),
+            || {
+                acc = black_box(acc.wrapping_add(1));
+            },
+        );
+        assert!(r.iters >= 50);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+    }
+}

@@ -1,0 +1,37 @@
+//! `figures` — regenerate the paper's tables and figures.
+//!
+//! ```text
+//! figures --exp all                 # everything (Table 1, Figs 3-14)
+//! figures --exp fig3 --events 200000 --out results
+//! ```
+//!
+//! Each experiment writes long-format CSVs under `results/<exp>/` and
+//! prints the paper-style summary rows (see DESIGN.md §4 for the mapping
+//! and EXPERIMENTS.md for paper-vs-measured).
+
+use anyhow::Result;
+
+use streamrec::experiments::runner::ExpContext;
+use streamrec::experiments::suites::run_experiment;
+use streamrec::util::args::Args;
+use streamrec::util::logging;
+
+fn main() -> Result<()> {
+    logging::init();
+    let args = Args::from_env()?;
+    let exp = args.get_or("exp", "all");
+    let events: u64 = args.get_parse("events")?.unwrap_or(120_000);
+    let seed: u64 = args.get_parse("seed")?.unwrap_or(42);
+    let out = args.get_or("out", "results");
+    let mut ctx = ExpContext::new(&out, events, seed);
+    if let Some(cap) = args.get_parse::<u64>("central-cosine-cap")? {
+        ctx.central_cosine_cap = cap;
+    }
+    let t0 = std::time::Instant::now();
+    run_experiment(&mut ctx, &exp)?;
+    eprintln!(
+        "experiment '{exp}' done in {:.1}s; results under {out}/",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

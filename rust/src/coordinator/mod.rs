@@ -1,0 +1,9 @@
+//! The paper's system contribution: the splitting & replication router
+//! (Algorithm 1) and the leader/worker pipeline that drives shared-nothing
+//! streaming recommenders (Figures 1-2).
+
+pub mod pipeline;
+pub mod router;
+
+pub use pipeline::run_pipeline;
+pub use router::{Router, WorkerId};

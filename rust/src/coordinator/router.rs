@@ -1,0 +1,231 @@
+//! The Splitting & Replication router — Algorithm 1, the paper's core
+//! routing contribution.
+//!
+//! # The scheme
+//!
+//! Workers form a logical grid of `n_i` item rows x `n_ciw = n_c / n_i`
+//! user columns (`n_c = n_i^2 + w * n_i`, Section 4). An incoming
+//! `<user, item, rating>` tuple is routed by:
+//!
+//! ```text
+//! itemHash = item mod n_i          // which item split (grid row)
+//! userHash = user mod n_ciw        // which user slice  (grid column)
+//! worker   = itemHash * n_ciw + userHash
+//! ```
+//!
+//! Consequences, exactly as the paper motivates:
+//! * each `(user, item)` pair lands on **exactly one** worker,
+//! * an item's state is **replicated** across the `n_ciw` workers of its
+//!   row (one replica per user slice it co-occurs with),
+//! * a user's state is **replicated** across the `n_i` workers of its
+//!   column (one replica per item split), and
+//! * replicas are never synchronized — each worker learns from its local
+//!   neighborhood only (shared-nothing; the HOGWILD!-style argument).
+//!
+//! # Faithfulness note (Algorithm 1 typos)
+//!
+//! The paper's printed candidate formulas are
+//! `itemHash * n_ciw + x (x < n_ciw)` and `userHash + y * n_c + w
+//! (y < n_i)` with `n_ciw = n_c/n_i + w`. For `w > 0` these sets cannot
+//! intersect inside `0..n_c` (the user candidates escape the grid), and
+//! `n_ciw = n_c/n_i + w = n_i + 2w` over-counts the columns. Both are
+//! evidently typos for the grid scheme above: for every configuration the
+//! paper evaluates (`w = 0`, `n_i ∈ {2,4,6}`, `n_c = n_i^2`) the printed
+//! and corrected formulas agree, and only the corrected ones satisfy the
+//! paper's own stated invariants ("each user-item pair hits only one
+//! node", every worker utilized). [`Router::route_candidates`] implements
+//! the corrected candidate-list + intersection construction literally;
+//! [`Router::route`] is the algebraically-equal closed form used on the
+//! hot path (a proptest pins their equivalence).
+
+use crate::config::Topology;
+use crate::data::types::{ItemId, UserId};
+
+/// Worker index in `0..n_c`.
+pub type WorkerId = usize;
+
+/// Stateless splitting-and-replication router.
+#[derive(Debug, Clone, Copy)]
+pub struct Router {
+    n_i: u64,
+    n_ciw: u64,
+    n_c: u64,
+}
+
+impl Router {
+    pub fn new(topology: Topology) -> Self {
+        let n_i = topology.n_i;
+        let n_ciw = topology.n_ciw();
+        let n_c = topology.n_c();
+        debug_assert_eq!(n_i * n_ciw, n_c, "grid must tile the cluster");
+        Self { n_i, n_ciw, n_c }
+    }
+
+    pub fn n_c(&self) -> usize {
+        self.n_c as usize
+    }
+
+    pub fn n_i(&self) -> u64 {
+        self.n_i
+    }
+
+    pub fn n_ciw(&self) -> u64 {
+        self.n_ciw
+    }
+
+    /// Hot-path routing: closed form of Algorithm 1.
+    #[inline]
+    pub fn route(&self, user: UserId, item: ItemId) -> WorkerId {
+        let item_hash = item % self.n_i;
+        let user_hash = user % self.n_ciw;
+        (item_hash * self.n_ciw + user_hash) as WorkerId
+    }
+
+    /// Literal Algorithm 1: build both candidate lists, intersect, take
+    /// the first element. Kept for tests/benches as the specification.
+    pub fn route_candidates(&self, user: UserId, item: ItemId) -> WorkerId {
+        let item_hash = item % self.n_i;
+        let user_hash = user % self.n_ciw;
+        let item_candidates: Vec<u64> =
+            (0..self.n_ciw).map(|x| item_hash * self.n_ciw + x).collect();
+        let user_candidates: Vec<u64> =
+            (0..self.n_i).map(|y| user_hash + y * self.n_ciw).collect();
+        let key = item_candidates
+            .iter()
+            .find(|c| user_candidates.contains(c))
+            .copied()
+            .expect("candidate lists always intersect in the grid scheme");
+        key as WorkerId
+    }
+
+    /// All workers holding a replica of this item (its grid row).
+    pub fn item_workers(&self, item: ItemId) -> Vec<WorkerId> {
+        let item_hash = item % self.n_i;
+        (0..self.n_ciw)
+            .map(|x| (item_hash * self.n_ciw + x) as WorkerId)
+            .collect()
+    }
+
+    /// All workers holding a replica of this user (its grid column).
+    pub fn user_workers(&self, user: UserId) -> Vec<WorkerId> {
+        let user_hash = user % self.n_ciw;
+        (0..self.n_i)
+            .map(|y| (user_hash + y * self.n_ciw) as WorkerId)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    fn topo(n_i: u64, w: u64) -> Router {
+        Router::new(Topology::new(n_i, w).unwrap())
+    }
+
+    #[test]
+    fn paper_configs_grid_shape() {
+        for n_i in [2u64, 4, 6] {
+            let r = topo(n_i, 0);
+            assert_eq!(r.n_c(), (n_i * n_i) as usize);
+            assert_eq!(r.n_ciw(), n_i);
+        }
+    }
+
+    #[test]
+    fn route_in_range_and_deterministic() {
+        let r = topo(4, 0);
+        for u in 0..100u64 {
+            for i in 0..100u64 {
+                let k = r.route(u, i);
+                assert!(k < r.n_c());
+                assert_eq!(k, r.route(u, i));
+            }
+        }
+    }
+
+    #[test]
+    fn closed_form_equals_algorithm1_literal() {
+        forall("router_closed_form", 500, |rng| {
+            let n_i = 1 + rng.next_bounded(6);
+            let w = rng.next_bounded(4);
+            let r = topo(n_i, w);
+            let u = rng.next_u64();
+            let i = rng.next_u64();
+            assert_eq!(r.route(u, i), r.route_candidates(u, i));
+        });
+    }
+
+    #[test]
+    fn pair_hits_exactly_one_worker() {
+        // The routed worker is in BOTH replica sets, and is unique.
+        forall("router_unique_intersection", 300, |rng| {
+            let n_i = 1 + rng.next_bounded(6);
+            let w = rng.next_bounded(3);
+            let r = topo(n_i, w);
+            let u = rng.next_u64();
+            let i = rng.next_u64();
+            let key = r.route(u, i);
+            let iw = r.item_workers(i);
+            let uw = r.user_workers(u);
+            let inter: Vec<_> =
+                iw.iter().filter(|k| uw.contains(k)).collect();
+            assert_eq!(inter, vec![&key]);
+        });
+    }
+
+    #[test]
+    fn replica_counts_match_section4() {
+        let r = topo(4, 0);
+        // Items replicated over n_ciw workers, users over n_i workers.
+        assert_eq!(r.item_workers(123).len(), 4);
+        assert_eq!(r.user_workers(456).len(), 4);
+        let r = topo(2, 1); // n_c = 6, grid 2x3
+        assert_eq!(r.n_c(), 6);
+        assert_eq!(r.item_workers(9).len(), 3);
+        assert_eq!(r.user_workers(9).len(), 2);
+    }
+
+    #[test]
+    fn all_workers_reachable_under_uniform_keys() {
+        forall("router_covers_cluster", 50, |rng| {
+            let n_i = 1 + rng.next_bounded(5);
+            let w = rng.next_bounded(3);
+            let r = topo(n_i, w);
+            let mut hit = vec![false; r.n_c()];
+            for _ in 0..r.n_c() * 64 {
+                hit[r.route(rng.next_u64(), rng.next_u64())] = true;
+            }
+            assert!(
+                hit.iter().all(|&h| h),
+                "every worker must receive load (n_i={n_i} w={w})"
+            );
+        });
+    }
+
+    #[test]
+    fn central_topology_routes_everything_to_worker_zero() {
+        let r = topo(1, 0);
+        assert_eq!(r.n_c(), 1);
+        for x in 0..50u64 {
+            assert_eq!(r.route(x * 7919, x * 104_729), 0);
+        }
+    }
+
+    #[test]
+    fn same_user_same_column_same_item_same_row() {
+        let r = topo(3, 0);
+        let u = 42u64;
+        // All of user u's events land in u's grid column.
+        let col = (u % r.n_ciw()) as usize;
+        for i in 0..100u64 {
+            assert_eq!(r.route(u, i) % r.n_ciw() as usize, col);
+        }
+        let i = 99u64;
+        let row = (i % r.n_i()) as usize;
+        for u in 0..100u64 {
+            assert_eq!(r.route(u, i) / r.n_ciw() as usize, row);
+        }
+    }
+}

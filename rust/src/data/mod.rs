@@ -1,0 +1,113 @@
+//! Dataset substrate: event types, synthetic stream generators shaped
+//! after Table 1, real-dataset loaders, and dataset statistics.
+
+pub mod movielens;
+pub mod stats;
+pub mod synth;
+pub mod types;
+
+use anyhow::Result;
+
+use synth::{SyntheticConfig, SyntheticStream};
+use types::Rating;
+
+/// Which dataset a run consumes.
+#[derive(Debug, Clone)]
+pub enum DatasetSpec {
+    /// Synthetic MovieLens-25M-shaped stream.
+    MovielensLike { events: u64, seed: u64 },
+    /// Synthetic Netflix-shaped stream.
+    NetflixLike { events: u64, seed: u64 },
+    /// Real MovieLens ratings.csv.
+    MovielensCsv { path: String, limit: Option<u64> },
+    /// Real Netflix combined_data file.
+    NetflixFile { path: String, limit: Option<u64> },
+}
+
+impl DatasetSpec {
+    /// Parse `ml-like:100000`, `nf-like:50000`, `ml-csv:path[:limit]`,
+    /// `nf-file:path[:limit]`.
+    pub fn parse(s: &str, seed: u64) -> Result<Self> {
+        let parts: Vec<&str> = s.splitn(3, ':').collect();
+        let limit = parts.get(2).map(|v| v.parse()).transpose()?;
+        match parts[0] {
+            "ml-like" => Ok(Self::MovielensLike {
+                events: parts.get(1).map(|v| v.parse()).transpose()?.unwrap_or(100_000),
+                seed,
+            }),
+            "nf-like" => Ok(Self::NetflixLike {
+                events: parts.get(1).map(|v| v.parse()).transpose()?.unwrap_or(100_000),
+                seed,
+            }),
+            "ml-csv" => Ok(Self::MovielensCsv {
+                path: parts
+                    .get(1)
+                    .ok_or_else(|| anyhow::anyhow!("ml-csv needs a path"))?
+                    .to_string(),
+                limit,
+            }),
+            "nf-file" => Ok(Self::NetflixFile {
+                path: parts
+                    .get(1)
+                    .ok_or_else(|| anyhow::anyhow!("nf-file needs a path"))?
+                    .to_string(),
+                limit,
+            }),
+            other => anyhow::bail!(
+                "unknown dataset '{other}' (ml-like|nf-like|ml-csv|nf-file)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Self::MovielensLike { .. } => "ml-like".into(),
+            Self::NetflixLike { .. } => "nf-like".into(),
+            Self::MovielensCsv { .. } => "ml-25m".into(),
+            Self::NetflixFile { .. } => "netflix".into(),
+        }
+    }
+
+    /// Materialize the full event stream (timestamp-ordered).
+    pub fn load(&self) -> Result<Vec<Rating>> {
+        match self {
+            Self::MovielensLike { events, seed } => Ok(SyntheticStream::new(
+                SyntheticConfig::movielens_like(*events, *seed),
+            )
+            .collect()),
+            Self::NetflixLike { events, seed } => Ok(SyntheticStream::new(
+                SyntheticConfig::netflix_like(*events, *seed),
+            )
+            .collect()),
+            Self::MovielensCsv { path, limit } => {
+                movielens::load_movielens(path, 5.0, *limit)
+            }
+            Self::NetflixFile { path, limit } => {
+                movielens::load_netflix(path, 5.0, *limit)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_specs() {
+        let d = DatasetSpec::parse("ml-like:5000", 1).unwrap();
+        assert!(matches!(d, DatasetSpec::MovielensLike { events: 5000, .. }));
+        assert_eq!(d.name(), "ml-like");
+        assert!(DatasetSpec::parse("bogus", 1).is_err());
+        assert!(DatasetSpec::parse("ml-csv", 1).is_err());
+        let d = DatasetSpec::parse("nf-like", 1).unwrap();
+        assert!(matches!(d, DatasetSpec::NetflixLike { events: 100_000, .. }));
+    }
+
+    #[test]
+    fn loads_synthetic() {
+        let d = DatasetSpec::parse("nf-like:2000", 3).unwrap();
+        let events = d.load().unwrap();
+        assert_eq!(events.len(), 2000);
+    }
+}

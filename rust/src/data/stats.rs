@@ -1,0 +1,111 @@
+//! Dataset characteristics — regenerates the paper's Table 1 columns
+//! (ratings, users, items, avg ratings/user, avg ratings/item, sparsity).
+
+use std::collections::HashSet;
+
+use crate::data::types::Rating;
+
+/// Table 1 row for one dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetStats {
+    pub name: String,
+    pub ratings: u64,
+    pub users: u64,
+    pub items: u64,
+    pub avg_ratings_per_user: f64,
+    pub avg_ratings_per_item: f64,
+    /// 1 - |R| / (|U| * |I|), as a percentage.
+    pub sparsity_pct: f64,
+}
+
+impl DatasetStats {
+    /// Compute over a full event slice.
+    pub fn compute(name: &str, events: &[Rating]) -> Self {
+        let mut users = HashSet::new();
+        let mut items = HashSet::new();
+        for r in events {
+            users.insert(r.user);
+            items.insert(r.item);
+        }
+        Self::from_counts(name, events.len() as u64, users.len() as u64, items.len() as u64)
+    }
+
+    /// Compute from an iterator without materializing events.
+    pub fn compute_streaming(
+        name: &str,
+        events: impl Iterator<Item = Rating>,
+    ) -> Self {
+        let mut users = HashSet::new();
+        let mut items = HashSet::new();
+        let mut n = 0u64;
+        for r in events {
+            users.insert(r.user);
+            items.insert(r.item);
+            n += 1;
+        }
+        Self::from_counts(name, n, users.len() as u64, items.len() as u64)
+    }
+
+    fn from_counts(name: &str, ratings: u64, users: u64, items: u64) -> Self {
+        let cells = (users as f64) * (items as f64);
+        Self {
+            name: name.to_string(),
+            ratings,
+            users,
+            items,
+            avg_ratings_per_user: ratings as f64 / users.max(1) as f64,
+            avg_ratings_per_item: ratings as f64 / items.max(1) as f64,
+            sparsity_pct: if cells > 0.0 {
+                (1.0 - ratings as f64 / cells) * 100.0
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Paper-style table row.
+    pub fn table_row(&self) -> String {
+        format!(
+            "| {:13} | {:8} | {:7} | {:6} | {:6.1} | {:7.1} | {:6.2}% |",
+            self.name,
+            self.ratings,
+            self.users,
+            self.items,
+            self.avg_ratings_per_user,
+            self.avg_ratings_per_item,
+            self.sparsity_pct
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn computes_counts_and_sparsity() {
+        let events = vec![
+            Rating::new(1, 10, 5.0, 0),
+            Rating::new(1, 11, 5.0, 1),
+            Rating::new(2, 10, 5.0, 2),
+        ];
+        let s = DatasetStats::compute("t", &events);
+        assert_eq!(s.ratings, 3);
+        assert_eq!(s.users, 2);
+        assert_eq!(s.items, 2);
+        assert!((s.avg_ratings_per_user - 1.5).abs() < 1e-9);
+        assert!((s.sparsity_pct - 25.0).abs() < 1e-9); // 1 - 3/4
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        let events = vec![
+            Rating::new(1, 10, 5.0, 0),
+            Rating::new(2, 11, 5.0, 1),
+            Rating::new(3, 10, 5.0, 2),
+        ];
+        let a = DatasetStats::compute("t", &events);
+        let b = DatasetStats::compute_streaming("t", events.into_iter());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,268 @@
+//! Synthetic rating-stream generator — the dataset substitution substrate
+//! (DESIGN.md §3): MovieLens-25M and the Netflix Prize set are not
+//! redistributable inside this environment, so we generate
+//! timestamp-ordered streams whose *distributional shape* matches Table 1:
+//!
+//! * heavy-tailed item popularity (Zipf) — drives `avg ratings/item`,
+//! * heavy-tailed user activity (Zipf over a shuffled user order),
+//! * positive-only feedback (the paper filters to 5-star ratings),
+//! * concept drift: user/item latent preference rotation over time plus
+//!   popularity churn (a fraction of the item ranking is re-permuted per
+//!   epoch), which is what the forgetting techniques respond to.
+//!
+//! Every quantity the evaluation measures (recall dynamics, state growth,
+//! throughput) depends on these shapes, not on the raw MovieLens bytes.
+//! If the real CSVs are present, `data::movielens` loads them instead.
+
+use crate::data::types::Rating;
+use crate::util::rng::{mix64, Pcg32, Zipf};
+
+/// Generator parameters; `movielens_like`/`netflix_like` mirror Table 1.
+#[derive(Debug, Clone)]
+pub struct SyntheticConfig {
+    /// Human-readable dataset id used in results ("ml-like", "nf-like").
+    pub name: String,
+    /// Total events to emit.
+    pub events: u64,
+    /// Distinct user population.
+    pub users: u64,
+    /// Distinct item population.
+    pub items: u64,
+    /// Zipf exponent for item popularity (bigger = heavier head).
+    pub item_s: f64,
+    /// Zipf exponent for user activity.
+    pub user_s: f64,
+    /// Fraction of the item ranking re-permuted at each drift epoch.
+    pub drift_rate: f64,
+    /// Events per drift epoch (0 disables drift).
+    pub drift_every: u64,
+    /// Simulated event-time seconds between consecutive events.
+    pub secs_per_event: f64,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl SyntheticConfig {
+    /// MovieLens-25M-shaped stream (Table 1 row 1, scaled 1:9 by default):
+    /// many items relative to users' activity, avg ratings/item ≈ 133,
+    /// avg ratings/user ≈ 23.
+    pub fn movielens_like(events: u64, seed: u64) -> Self {
+        // Keep Table 1's ratios: users = events/23.3, items = events/133.
+        let users = (events as f64 / 23.3).round().max(16.0) as u64;
+        let items = (events as f64 / 133.0).round().max(16.0) as u64;
+        Self {
+            name: "ml-like".to_string(),
+            events,
+            users,
+            items,
+            item_s: 1.05,
+            user_s: 0.9,
+            drift_rate: 0.05,
+            drift_every: events / 10,
+            secs_per_event: 17.0, // 25M ratings over ~25y -> tens of seconds
+            seed,
+        }
+    }
+
+    /// Netflix-Prize-shaped stream (Table 1 row 2): far fewer items, very
+    /// heavy item reuse (avg ratings/item ≈ 1361), avg ratings/user ≈ 10.6.
+    pub fn netflix_like(events: u64, seed: u64) -> Self {
+        let users = (events as f64 / 10.6).round().max(16.0) as u64;
+        let items = (events as f64 / 1361.5).round().max(16.0) as u64;
+        Self {
+            name: "nf-like".to_string(),
+            events,
+            users,
+            items,
+            item_s: 1.0,
+            user_s: 0.8,
+            drift_rate: 0.05,
+            drift_every: events / 10,
+            secs_per_event: 12.0,
+            seed,
+        }
+    }
+}
+
+/// Iterator of timestamp-ordered rating events.
+pub struct SyntheticStream {
+    cfg: SyntheticConfig,
+    rng: Pcg32,
+    item_zipf: Zipf,
+    user_zipf: Zipf,
+    /// rank -> item id permutation (drift re-permutes prefixes of this).
+    item_perm: Vec<u64>,
+    /// rank -> user id permutation.
+    user_perm: Vec<u64>,
+    emitted: u64,
+    clock: f64,
+}
+
+impl SyntheticStream {
+    pub fn new(cfg: SyntheticConfig) -> Self {
+        let mut rng = Pcg32::seeded(cfg.seed);
+        let mut item_perm: Vec<u64> = (0..cfg.items).collect();
+        let mut user_perm: Vec<u64> = (0..cfg.users).collect();
+        rng.shuffle(&mut item_perm);
+        rng.shuffle(&mut user_perm);
+        Self {
+            item_zipf: Zipf::new(cfg.items, cfg.item_s),
+            user_zipf: Zipf::new(cfg.users, cfg.user_s),
+            item_perm,
+            user_perm,
+            rng,
+            emitted: 0,
+            clock: 0.0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &SyntheticConfig {
+        &self.cfg
+    }
+
+    /// Apply one drift epoch: swap `drift_rate * items` randomly chosen
+    /// ranking positions (popularity churn / concept drift).
+    fn drift(&mut self) {
+        let swaps = (self.cfg.items as f64 * self.cfg.drift_rate) as u64;
+        for _ in 0..swaps {
+            let a = self.rng.next_bounded(self.cfg.items) as usize;
+            let b = self.rng.next_bounded(self.cfg.items) as usize;
+            self.item_perm.swap(a, b);
+        }
+        // Users drift too, but more slowly (taste changes < catalog churn).
+        let uswaps = (self.cfg.users as f64 * self.cfg.drift_rate * 0.25) as u64;
+        for _ in 0..uswaps {
+            let a = self.rng.next_bounded(self.cfg.users) as usize;
+            let b = self.rng.next_bounded(self.cfg.users) as usize;
+            self.user_perm.swap(a, b);
+        }
+    }
+}
+
+impl Iterator for SyntheticStream {
+    type Item = Rating;
+
+    fn next(&mut self) -> Option<Rating> {
+        if self.emitted >= self.cfg.events {
+            return None;
+        }
+        if self.cfg.drift_every > 0
+            && self.emitted > 0
+            && self.emitted % self.cfg.drift_every == 0
+        {
+            self.drift();
+        }
+        let item_rank = self.item_zipf.sample(&mut self.rng);
+        let user_rank = self.user_zipf.sample(&mut self.rng);
+        // Scramble ids so they are not dense-rank-ordered (real ids aren't;
+        // the router hashes raw ids, so id structure must not be a gift).
+        let item = mix64(self.item_perm[item_rank as usize]) % (1 << 40);
+        let user = mix64(self.user_perm[user_rank as usize] | (1 << 41))
+            % (1 << 40);
+        // Poisson-ish inter-arrival via exponential spacing.
+        let u = self.rng.next_f64().max(1e-12);
+        self.clock += -u.ln() * self.cfg.secs_per_event;
+        self.emitted += 1;
+        Some(Rating::new(user, item, 5.0, self.clock as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a: Vec<_> =
+            SyntheticStream::new(SyntheticConfig::movielens_like(1000, 1))
+                .collect();
+        let b: Vec<_> =
+            SyntheticStream::new(SyntheticConfig::movielens_like(1000, 1))
+                .collect();
+        assert_eq!(a, b);
+        let c: Vec<_> =
+            SyntheticStream::new(SyntheticConfig::movielens_like(1000, 2))
+                .collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn emits_exactly_n_events_with_monotone_time() {
+        let events: Vec<_> =
+            SyntheticStream::new(SyntheticConfig::netflix_like(5000, 3))
+                .collect();
+        assert_eq!(events.len(), 5000);
+        for w in events.windows(2) {
+            assert!(w[1].ts >= w[0].ts, "timestamps must be non-decreasing");
+        }
+    }
+
+    #[test]
+    fn ml_like_shape_roughly_matches_table1() {
+        let cfg = SyntheticConfig::movielens_like(200_000, 7);
+        let stream = SyntheticStream::new(cfg);
+        let mut per_item: HashMap<u64, u64> = HashMap::new();
+        let mut per_user: HashMap<u64, u64> = HashMap::new();
+        for r in stream {
+            *per_item.entry(r.item).or_default() += 1;
+            *per_user.entry(r.user).or_default() += 1;
+        }
+        let avg_item = 200_000.0 / per_item.len() as f64;
+        let avg_user = 200_000.0 / per_user.len() as f64;
+        // Table 1: 133 ratings/item, 23.3 ratings/user. Zipf sampling only
+        // touches a subset of the population, so allow a wide band.
+        assert!(avg_item > 60.0, "avg ratings/item {avg_item}");
+        assert!(avg_user > 15.0, "avg ratings/user {avg_user}");
+        // Heavy tail: the most popular item dwarfs the median.
+        let mut counts: Vec<u64> = per_item.values().copied().collect();
+        counts.sort_unstable();
+        let max = *counts.last().unwrap();
+        let med = counts[counts.len() / 2];
+        assert!(max > med * 20, "max={max} med={med}");
+    }
+
+    #[test]
+    fn nf_like_has_fewer_items_than_ml_like() {
+        let ml = SyntheticConfig::movielens_like(100_000, 1);
+        let nf = SyntheticConfig::netflix_like(100_000, 1);
+        assert!(nf.items < ml.items / 5);
+        assert!(nf.users > ml.users);
+    }
+
+    #[test]
+    fn drift_changes_popular_items() {
+        let mut cfg = SyntheticConfig::movielens_like(50_000, 5);
+        cfg.drift_rate = 0.5;
+        cfg.drift_every = 10_000;
+        let stream = SyntheticStream::new(cfg);
+        let mut first: HashMap<u64, u64> = HashMap::new();
+        let mut last: HashMap<u64, u64> = HashMap::new();
+        for (i, r) in stream.enumerate() {
+            if i < 10_000 {
+                *first.entry(r.item).or_default() += 1;
+            } else if i >= 40_000 {
+                *last.entry(r.item).or_default() += 1;
+            }
+        }
+        let top = |m: &HashMap<u64, u64>| {
+            let mut v: Vec<_> = m.iter().map(|(k, c)| (*c, *k)).collect();
+            v.sort_unstable_by(|a, b| b.cmp(a));
+            v.into_iter().take(20).map(|(_, k)| k).collect::<Vec<_>>()
+        };
+        let t1 = top(&first);
+        let t2 = top(&last);
+        let overlap = t1.iter().filter(|k| t2.contains(k)).count();
+        assert!(overlap < 20, "drift should churn the top-20 items");
+    }
+
+    #[test]
+    fn all_ratings_positive() {
+        let stream =
+            SyntheticStream::new(SyntheticConfig::movielens_like(1000, 9));
+        for r in stream {
+            assert!(r.rating >= 5.0);
+        }
+    }
+}

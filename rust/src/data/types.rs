@@ -1,0 +1,57 @@
+//! Core event types shared by every layer of the system.
+
+/// User identifier (dense or sparse; the router only needs integer hashes).
+pub type UserId = u64;
+
+/// Item identifier.
+pub type ItemId = u64;
+
+/// One user-item feedback element on the stream: the `<user, item, rating>`
+/// tuple of the paper, plus the event timestamp used for stream ordering
+/// and the LRU forgetting clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rating {
+    pub user: UserId,
+    pub item: ItemId,
+    /// Raw rating. The streaming algorithms are positive-only/binary
+    /// (Section 5.2 filters to 5-star feedback), but the raw value is kept
+    /// for dataset statistics and loaders.
+    pub rating: f32,
+    /// Event time in seconds (dataset timestamp or synthetic clock).
+    pub ts: u64,
+}
+
+impl Rating {
+    pub fn new(user: UserId, item: ItemId, rating: f32, ts: u64) -> Self {
+        Self { user, item, rating, ts }
+    }
+}
+
+/// Snapshot of a worker's state-entry counts — the paper's "memory"
+/// metric (Section 5.2 measures entries, not bytes).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StateSizes {
+    /// Live user representations (rows of the worker-local U).
+    pub users: u64,
+    /// Live item representations (rows of the worker-local I).
+    pub items: u64,
+    /// Algorithm-specific auxiliary entries (e.g. DICS item-pair counts).
+    pub aux: u64,
+}
+
+impl StateSizes {
+    pub fn total(&self) -> u64 {
+        self.users + self.items + self.aux
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_sizes_total() {
+        let s = StateSizes { users: 2, items: 3, aux: 5 };
+        assert_eq!(s.total(), 10);
+    }
+}

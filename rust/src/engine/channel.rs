@@ -1,0 +1,307 @@
+//! Bounded MPSC channel with backpressure instrumentation — the "network"
+//! of the shared-nothing engine (offline build has no crossbeam-channel;
+//! DESIGN.md §3). A Mutex<VecDeque> + two Condvars: simple, correct, and
+//! fast enough that the router never bottlenecks on it (see
+//! rust/benches/pipeline.rs).
+//!
+//! Semantics:
+//! * `send` blocks while the queue is at capacity (backpressure), fails
+//!   once the receiver is gone.
+//! * `recv` blocks while empty, returns `None` once all senders dropped
+//!   and the queue drained (graceful end-of-stream).
+//! * Per-channel counters: messages sent, nanoseconds blocked on
+//!   backpressure, high-water mark.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+struct Shared<T> {
+    queue: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+    metrics: ChannelMetrics,
+}
+
+struct Inner<T> {
+    buf: VecDeque<T>,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+/// Shared, lock-free-readable channel counters.
+#[derive(Default)]
+pub struct ChannelMetrics {
+    pub sent: AtomicU64,
+    pub blocked_ns: AtomicU64,
+    pub high_water: AtomicU64,
+}
+
+/// Sending half (clonable).
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Receiving half (single consumer).
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Error returned when the receiver has been dropped.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+impl<T> std::fmt::Display for SendError<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "receiver dropped")
+    }
+}
+
+/// Create a bounded channel of the given capacity (>= 1).
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(capacity >= 1, "channel capacity must be >= 1");
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(Inner {
+            buf: VecDeque::with_capacity(capacity),
+            senders: 1,
+            receiver_alive: true,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        capacity,
+        metrics: ChannelMetrics::default(),
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+impl<T> Sender<T> {
+    /// Blocking send with backpressure accounting.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut inner = self.shared.queue.lock().unwrap();
+        if !inner.receiver_alive {
+            return Err(SendError(value));
+        }
+        if inner.buf.len() >= self.shared.capacity {
+            let start = Instant::now();
+            while inner.buf.len() >= self.shared.capacity {
+                if !inner.receiver_alive {
+                    return Err(SendError(value));
+                }
+                inner = self.shared.not_full.wait(inner).unwrap();
+            }
+            self.shared
+                .metrics
+                .blocked_ns
+                .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        inner.buf.push_back(value);
+        let depth = inner.buf.len() as u64;
+        self.shared.metrics.sent.fetch_add(1, Ordering::Relaxed);
+        self.shared
+            .metrics
+            .high_water
+            .fetch_max(depth, Ordering::Relaxed);
+        drop(inner);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking send; returns the value back if the queue is full.
+    pub fn try_send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut inner = self.shared.queue.lock().unwrap();
+        if !inner.receiver_alive || inner.buf.len() >= self.shared.capacity {
+            return Err(SendError(value));
+        }
+        inner.buf.push_back(value);
+        self.shared.metrics.sent.fetch_add(1, Ordering::Relaxed);
+        drop(inner);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Snapshot of this channel's counters.
+    pub fn metrics(&self) -> (u64, u64, u64) {
+        let m = &self.shared.metrics;
+        (
+            m.sent.load(Ordering::Relaxed),
+            m.blocked_ns.load(Ordering::Relaxed),
+            m.high_water.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.queue.lock().unwrap().senders += 1;
+        Self { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut inner = self.shared.queue.lock().unwrap();
+        inner.senders -= 1;
+        if inner.senders == 0 {
+            drop(inner);
+            // Wake the receiver so it can observe end-of-stream.
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` = all senders gone and queue drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut inner = self.shared.queue.lock().unwrap();
+        loop {
+            if let Some(v) = inner.buf.pop_front() {
+                drop(inner);
+                self.shared.not_full.notify_one();
+                return Some(v);
+            }
+            if inner.senders == 0 {
+                return None;
+            }
+            inner = self.shared.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Drain up to `max` queued messages without blocking (micro-batching
+    /// on the worker side — see EXPERIMENTS.md §Perf).
+    pub fn recv_batch(&self, out: &mut Vec<T>, max: usize) -> bool {
+        let mut inner = self.shared.queue.lock().unwrap();
+        loop {
+            if !inner.buf.is_empty() {
+                while out.len() < max {
+                    match inner.buf.pop_front() {
+                        Some(v) => out.push(v),
+                        None => break,
+                    }
+                }
+                drop(inner);
+                self.shared.not_full.notify_all();
+                return true;
+            }
+            if inner.senders == 0 {
+                return false;
+            }
+            inner = self.shared.not_empty.wait(inner).unwrap();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut inner = self.shared.queue.lock().unwrap();
+        inner.receiver_alive = false;
+        inner.buf.clear();
+        drop(inner);
+        self.shared.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let (tx, rx) = bounded(16);
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let got: Vec<i32> = std::iter::from_fn(|| rx.recv()).collect();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn recv_none_after_all_senders_drop() {
+        let (tx, rx) = bounded::<i32>(4);
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(1).unwrap();
+        drop(tx2);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn send_fails_after_receiver_drop() {
+        let (tx, rx) = bounded(4);
+        drop(rx);
+        assert_eq!(tx.send(7), Err(SendError(7)));
+    }
+
+    #[test]
+    fn backpressure_blocks_until_recv() {
+        let (tx, rx) = bounded(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert!(tx.try_send(3).is_err());
+        let h = thread::spawn(move || {
+            // This send must block until the receiver drains one slot.
+            tx.send(3).unwrap();
+            tx.metrics().1 // blocked_ns
+        });
+        thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(rx.recv(), Some(1));
+        let blocked_ns = h.join().unwrap();
+        assert!(blocked_ns > 0, "send should have recorded blocking time");
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), Some(3));
+    }
+
+    #[test]
+    fn mpsc_delivers_everything_exactly_once() {
+        let (tx, rx) = bounded(8);
+        let producers = 4;
+        let per = 1000;
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    tx.send(p * per + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut got: Vec<usize> = std::iter::from_fn(|| rx.recv()).collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..producers * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn recv_batch_drains_up_to_max() {
+        let (tx, rx) = bounded(64);
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let mut buf = Vec::new();
+        assert!(rx.recv_batch(&mut buf, 4));
+        assert_eq!(buf, vec![0, 1, 2, 3]);
+        buf.clear();
+        assert!(rx.recv_batch(&mut buf, 100));
+        assert_eq!(buf.len(), 6);
+        drop(tx);
+        buf.clear();
+        assert!(!rx.recv_batch(&mut buf, 4));
+    }
+
+    #[test]
+    fn high_water_mark_tracks_depth() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(tx.metrics().2, 5);
+        let _ = rx.recv();
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared-nothing mini stream engine: bounded channels with backpressure
+//! (the "network") and worker-thread harnesses (the "task slots"). This is
+//! the substrate the paper gets from Apache Flink 1.8.1, rebuilt from
+//! scratch (DESIGN.md §2, S1).
+
+pub mod channel;
+pub mod worker;
+
+pub use channel::{bounded, Receiver, SendError, Sender};
+pub use worker::{spawn, WorkerHandle};

@@ -1,0 +1,65 @@
+//! Worker-thread harness: named OS threads with panic propagation — the
+//! shared-nothing "task slot" of the engine. Each worker owns its state;
+//! the only communication is the inbound event channel and the outbound
+//! report/sample channels.
+
+use std::thread::JoinHandle;
+
+/// Handle to a spawned worker.
+pub struct WorkerHandle<R> {
+    id: usize,
+    handle: JoinHandle<R>,
+}
+
+impl<R> WorkerHandle<R> {
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Join, converting a worker panic into an error with the worker id.
+    pub fn join(self) -> anyhow::Result<R> {
+        self.handle.join().map_err(|p| {
+            let msg = p
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            anyhow::anyhow!("worker {} panicked: {msg}", self.id)
+        })
+    }
+}
+
+/// Spawn a named worker thread. The body runs entirely inside the thread;
+/// all worker state (model, backend, PJRT client) is constructed there so
+/// non-Send types (the xla crate's Rc-based handles) stay thread-local.
+pub fn spawn<R, F>(id: usize, name: &str, body: F) -> WorkerHandle<R>
+where
+    F: FnOnce() -> R + Send + 'static,
+    R: Send + 'static,
+{
+    let handle = std::thread::Builder::new()
+        .name(format!("{name}-{id}"))
+        .spawn(body)
+        .expect("spawning worker thread");
+    WorkerHandle { id, handle }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_returns_value() {
+        let h = spawn(3, "t", || 40 + 2);
+        assert_eq!(h.id(), 3);
+        assert_eq!(h.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn worker_panic_is_reported_with_id() {
+        let h = spawn(7, "t", || -> i32 { panic!("kaboom") });
+        let err = h.join().unwrap_err().to_string();
+        assert!(err.contains("worker 7"), "{err}");
+        assert!(err.contains("kaboom"), "{err}");
+    }
+}

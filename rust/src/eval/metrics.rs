@@ -1,0 +1,144 @@
+//! Run metrics: per-worker reports and the aggregated run report the
+//! experiment harness serializes. Covers every quantity the paper's
+//! evaluation section plots: recall curves (Figs 3/5/6/9/11/12), state
+//! size distributions (Figs 4/7/10/13), and throughput (Figs 8/14).
+
+use crate::data::types::StateSizes;
+use crate::util::histogram::Histogram;
+
+/// Final report from one worker thread.
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    pub worker_id: usize,
+    /// Events processed by this worker.
+    pub processed: u64,
+    /// Prequential hits.
+    pub hits: u64,
+    /// Final state-entry counts.
+    pub state: StateSizes,
+    /// Per-event processing latency (recommend + update), nanoseconds.
+    pub latency: Histogram,
+    /// Forgetting sweeps run / entries evicted.
+    pub sweeps: u64,
+    pub evicted: u64,
+    /// Nanoseconds spent inside recommend() / update() (profile split).
+    pub recommend_ns: u64,
+    pub update_ns: u64,
+}
+
+/// Aggregated result of one pipeline run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Configuration echo (algorithm, n_i, forgetting, backend, dataset).
+    pub label: String,
+    pub n_workers: usize,
+    pub events: u64,
+    pub hits: u64,
+    /// Wall-clock seconds for the full stream.
+    pub wall_secs: f64,
+    /// Events per second end-to-end.
+    pub throughput: f64,
+    /// Lifetime average online recall (hits / events).
+    pub avg_recall: f64,
+    /// Moving-average recall curve: (global sequence, recall@N).
+    pub recall_curve: Vec<(u64, f64)>,
+    /// Per-worker final reports (state-size distributions etc.).
+    pub workers: Vec<WorkerReport>,
+    /// Router time per event (ns, driver side).
+    pub route_ns_per_event: f64,
+    /// Total ns senders spent blocked on backpressure.
+    pub backpressure_ns: u64,
+}
+
+impl RunReport {
+    /// Mean of per-worker user-state sizes (Figs 4/7/10/13 quote these).
+    pub fn mean_user_state(&self) -> f64 {
+        mean(self.workers.iter().map(|w| w.state.users as f64))
+    }
+
+    pub fn mean_item_state(&self) -> f64 {
+        mean(self.workers.iter().map(|w| w.state.items as f64))
+    }
+
+    pub fn mean_aux_state(&self) -> f64 {
+        mean(self.workers.iter().map(|w| w.state.aux as f64))
+    }
+
+    /// Merged latency histogram across workers.
+    pub fn latency(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for w in &self.workers {
+            h.merge(&w.latency);
+        }
+        h
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: events={} workers={} recall={:.4} thpt={:.0} ev/s \
+             user_state(mean)={:.1} item_state(mean)={:.1} aux(mean)={:.1}",
+            self.label,
+            self.events,
+            self.n_workers,
+            self.avg_recall,
+            self.throughput,
+            self.mean_user_state(),
+            self.mean_item_state(),
+            self.mean_aux_state(),
+        )
+    }
+}
+
+fn mean(xs: impl Iterator<Item = f64>) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0u64;
+    for x in xs {
+        sum += x;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker(id: usize, users: u64, items: u64) -> WorkerReport {
+        WorkerReport {
+            worker_id: id,
+            processed: 10,
+            hits: 2,
+            state: StateSizes { users, items, aux: 0 },
+            latency: Histogram::new(),
+            sweeps: 0,
+            evicted: 0,
+            recommend_ns: 0,
+            update_ns: 0,
+        }
+    }
+
+    #[test]
+    fn state_means() {
+        let r = RunReport {
+            label: "t".into(),
+            n_workers: 2,
+            events: 20,
+            hits: 4,
+            wall_secs: 1.0,
+            throughput: 20.0,
+            avg_recall: 0.2,
+            recall_curve: vec![],
+            workers: vec![worker(0, 10, 4), worker(1, 20, 6)],
+            route_ns_per_event: 1.0,
+            backpressure_ns: 0,
+        };
+        assert!((r.mean_user_state() - 15.0).abs() < 1e-9);
+        assert!((r.mean_item_state() - 5.0).abs() < 1e-9);
+        assert!(r.summary().contains("recall=0.2000"));
+    }
+}

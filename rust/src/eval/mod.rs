@@ -1,0 +1,8 @@
+//! Evaluation: the prequential online protocol (Algorithm 4) and the
+//! metrics the experiment harness aggregates.
+
+pub mod metrics;
+pub mod prequential;
+
+pub use metrics::{RunReport, WorkerReport};
+pub use prequential::{HitSample, MovingRecall, Prequential};

@@ -1,0 +1,198 @@
+//! Prequential online evaluation (Algorithm 4): every arriving rating is
+//! first used to test (is the item inside the current top-N
+//! recommendation for that user?) and then to train. Recall@N per event
+//! is 0/1; the paper reports a moving average over 5000-event windows.
+
+use crate::algorithms::StreamingRecommender;
+use crate::data::types::Rating;
+
+/// Ring-buffer moving average over the last `window` binary outcomes.
+#[derive(Debug, Clone)]
+pub struct MovingRecall {
+    window: usize,
+    buf: Vec<bool>,
+    next: usize,
+    filled: usize,
+    sum: u64,
+    hits: u64,
+    count: u64,
+}
+
+impl MovingRecall {
+    pub fn new(window: usize) -> Self {
+        assert!(window >= 1);
+        Self {
+            window,
+            buf: vec![false; window],
+            next: 0,
+            filled: 0,
+            sum: 0,
+            hits: 0,
+            count: 0,
+        }
+    }
+
+    pub fn push(&mut self, hit: bool) {
+        if self.filled == self.window {
+            if self.buf[self.next] {
+                self.sum -= 1;
+            }
+        } else {
+            self.filled += 1;
+        }
+        self.buf[self.next] = hit;
+        if hit {
+            self.sum += 1;
+            self.hits += 1;
+        }
+        self.next = (self.next + 1) % self.window;
+        self.count += 1;
+    }
+
+    /// Moving-average recall over the current window.
+    pub fn value(&self) -> f64 {
+        if self.filled == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.filled as f64
+        }
+    }
+
+    /// Lifetime average recall (the paper's "average recall" numbers).
+    pub fn lifetime(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.count as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+}
+
+/// One evaluated event: global stream sequence number + hit bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HitSample {
+    pub seq: u64,
+    pub hit: bool,
+}
+
+/// Prequential evaluator: drives recommend-then-update for one worker.
+pub struct Prequential {
+    top_n: usize,
+    recall: MovingRecall,
+}
+
+impl Prequential {
+    pub fn new(top_n: usize, window: usize) -> Self {
+        Self { top_n, recall: MovingRecall::new(window) }
+    }
+
+    /// Algorithm 4 for one event. Returns whether the rated item was in
+    /// the top-N list recommended *before* the model update.
+    pub fn step(
+        &mut self,
+        model: &mut dyn StreamingRecommender,
+        event: &Rating,
+    ) -> bool {
+        let recs = model.recommend(event.user, self.top_n);
+        let hit = recs.contains(&event.item);
+        self.recall.push(hit);
+        model.update(event);
+        hit
+    }
+
+    pub fn recall(&self) -> &MovingRecall {
+        &self.recall
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::types::{ItemId, StateSizes, UserId};
+    use crate::state::SweepKind;
+
+    /// Scripted model: recommends a fixed list, records updates.
+    struct Scripted {
+        list: Vec<ItemId>,
+        updated: Vec<ItemId>,
+        update_changes_list_to: Option<Vec<ItemId>>,
+    }
+
+    impl StreamingRecommender for Scripted {
+        fn name(&self) -> &'static str {
+            "scripted"
+        }
+        fn recommend(&mut self, _u: UserId, n: usize) -> Vec<ItemId> {
+            self.list.iter().copied().take(n).collect()
+        }
+        fn update(&mut self, e: &Rating) {
+            self.updated.push(e.item);
+            if let Some(l) = self.update_changes_list_to.take() {
+                self.list = l;
+            }
+        }
+        fn state_sizes(&self) -> StateSizes {
+            StateSizes::default()
+        }
+        fn sweep(&mut self, _k: SweepKind) -> u64 {
+            0
+        }
+    }
+
+    #[test]
+    fn moving_recall_window_math() {
+        let mut r = MovingRecall::new(4);
+        assert_eq!(r.value(), 0.0);
+        r.push(true);
+        r.push(false);
+        assert!((r.value() - 0.5).abs() < 1e-12);
+        r.push(true);
+        r.push(true);
+        assert!((r.value() - 0.75).abs() < 1e-12);
+        // Window slides: first push (true) falls out.
+        r.push(false);
+        assert!((r.value() - 0.5).abs() < 1e-12);
+        assert_eq!(r.count(), 5);
+        assert_eq!(r.hits(), 3);
+        assert!((r.lifetime() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recommend_happens_before_update() {
+        // The model starts NOT recommending item 7; update() switches the
+        // list to include it. Prequential must score the pre-update list.
+        let mut model = Scripted {
+            list: vec![1, 2, 3],
+            updated: vec![],
+            update_changes_list_to: Some(vec![7]),
+        };
+        let mut p = Prequential::new(10, 100);
+        let hit = p.step(&mut model, &Rating::new(1, 7, 5.0, 0));
+        assert!(!hit, "item must be tested against the pre-update model");
+        assert_eq!(model.updated, vec![7], "update must still happen");
+        // Next event: list is now [7].
+        let hit = p.step(&mut model, &Rating::new(1, 7, 5.0, 1));
+        assert!(hit);
+    }
+
+    #[test]
+    fn top_n_truncation_respected() {
+        let mut model = Scripted {
+            list: (0..50).collect(),
+            updated: vec![],
+            update_changes_list_to: None,
+        };
+        let mut p = Prequential::new(10, 100);
+        // Item 30 is in the scripted list but outside top-10.
+        assert!(!p.step(&mut model, &Rating::new(1, 30, 5.0, 0)));
+        assert!(p.step(&mut model, &Rating::new(1, 5, 5.0, 1)));
+    }
+}

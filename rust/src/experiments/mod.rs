@@ -1,0 +1,9 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation section (DESIGN.md §4 maps each experiment id to the paper
+//! artifact). Results land in `results/<exp>/*.csv` plus a printed
+//! paper-style summary; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod runner;
+pub mod suites;
+
+pub use runner::{ExpContext, RunKey};

@@ -1,0 +1,342 @@
+//! One function per paper artifact (Table 1, Figures 3-14). Each runs the
+//! needed configurations via the shared run cache, writes `results/<id>/`
+//! CSVs, and prints the paper-style comparison summary.
+
+use anyhow::Result;
+
+use crate::config::Algorithm;
+use crate::data::stats::DatasetStats;
+use crate::experiments::runner::{
+    write_recall_curves, write_state_distribution, write_throughput,
+    ExpContext, Policy, RunKey, RECALL_HEADER, STATE_HEADER,
+    THROUGHPUT_HEADER,
+};
+
+const DATASETS: [&str; 2] = ["ml-like", "nf-like"];
+
+/// Table 1: dataset characteristics after filtering.
+pub fn table1(ctx: &mut ExpContext) -> Result<()> {
+    println!("== Table 1: dataset characteristics ==");
+    println!(
+        "| {:13} | {:8} | {:7} | {:6} | {:6} | {:7} | {:7} |",
+        "Dataset", "Ratings", "Users", "Items", "r/user", "r/item", "Sparsity"
+    );
+    let mut w = ctx.csv(
+        "table1",
+        "table1.csv",
+        &[
+            "dataset", "ratings", "users", "items", "avg_ratings_per_user",
+            "avg_ratings_per_item", "sparsity_pct",
+        ],
+    )?;
+    for name in DATASETS {
+        let events = ctx.dataset(name)?;
+        let stats = DatasetStats::compute(name, events);
+        println!("{}", stats.table_row());
+        w.row(&[
+            stats.name.clone(),
+            stats.ratings.to_string(),
+            stats.users.to_string(),
+            stats.items.to_string(),
+            format!("{:.2}", stats.avg_ratings_per_user),
+            format!("{:.2}", stats.avg_ratings_per_item),
+            format!("{:.4}", stats.sparsity_pct),
+        ])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Shared DISGD suite: Figs 3 (recall), 4 (memory), 8 (throughput).
+fn disgd_base(ctx: &mut ExpContext) -> Result<Vec<(RunKey, crate::eval::RunReport)>> {
+    let mut runs = Vec::new();
+    for ds in DATASETS {
+        runs.extend(ctx.sweep(Algorithm::Isgd, ds, &[Policy::None])?);
+    }
+    Ok(runs)
+}
+
+fn disgd_forgetting(
+    ctx: &mut ExpContext,
+) -> Result<Vec<(RunKey, crate::eval::RunReport)>> {
+    let mut runs = Vec::new();
+    for ds in DATASETS {
+        runs.extend(
+            ctx.sweep(Algorithm::Isgd, ds, &[Policy::Lru, Policy::Lfu])?,
+        );
+    }
+    Ok(runs)
+}
+
+/// Fig 3: moving-average Recall@10, ISGD (central) vs DISGD, n_i∈{2,4,6}.
+pub fn fig3(ctx: &mut ExpContext) -> Result<()> {
+    let runs = disgd_base(ctx)?;
+    let mut w = ctx.csv("fig3", "recall_curves.csv", &RECALL_HEADER)?;
+    write_recall_curves(&mut w, &runs)?;
+    println!("== Fig 3: DISGD recall vs central (avg over stream) ==");
+    summarize_recall(&runs);
+    Ok(())
+}
+
+/// Fig 4: memory (state entries) distributions for DISGD.
+pub fn fig4(ctx: &mut ExpContext) -> Result<()> {
+    let runs = disgd_base(ctx)?;
+    let mut w = ctx.csv("fig4", "state_distribution.csv", &STATE_HEADER)?;
+    write_state_distribution(&mut w, &runs)?;
+    println!("== Fig 4: DISGD per-worker state sizes (mean across workers) ==");
+    summarize_state(&runs);
+    Ok(())
+}
+
+/// Fig 5: effect of LRU/LFU forgetting on DISGD recall.
+pub fn fig5(ctx: &mut ExpContext) -> Result<()> {
+    let mut runs = disgd_base(ctx)?;
+    runs.extend(disgd_forgetting(ctx)?);
+    let mut w = ctx.csv("fig5", "recall_curves.csv", &RECALL_HEADER)?;
+    write_recall_curves(&mut w, &runs)?;
+    println!("== Fig 5: DISGD forgetting effect on recall ==");
+    summarize_recall(&runs);
+    Ok(())
+}
+
+/// Fig 6: LFU vs LRU one-to-one recall comparison (DISGD).
+pub fn fig6(ctx: &mut ExpContext) -> Result<()> {
+    let runs = disgd_forgetting(ctx)?;
+    let mut w = ctx.csv("fig6", "recall_curves.csv", &RECALL_HEADER)?;
+    write_recall_curves(&mut w, &runs)?;
+    println!("== Fig 6: DISGD LRU vs LFU per n_i ==");
+    summarize_recall(&runs);
+    Ok(())
+}
+
+/// Fig 7: forgetting effect on memory (DISGD, ml-like).
+pub fn fig7(ctx: &mut ExpContext) -> Result<()> {
+    let mut runs: Vec<_> = disgd_base(ctx)?
+        .into_iter()
+        .filter(|(k, _)| k.dataset == "ml-like")
+        .collect();
+    runs.extend(
+        disgd_forgetting(ctx)?
+            .into_iter()
+            .filter(|(k, _)| k.dataset == "ml-like"),
+    );
+    let mut w = ctx.csv("fig7", "state_distribution.csv", &STATE_HEADER)?;
+    write_state_distribution(&mut w, &runs)?;
+    println!("== Fig 7: DISGD forgetting effect on state (ml-like) ==");
+    summarize_state(&runs);
+    Ok(())
+}
+
+/// Fig 8: throughput, DISGD vs central with and without forgetting.
+pub fn fig8(ctx: &mut ExpContext) -> Result<()> {
+    let mut runs = disgd_base(ctx)?;
+    runs.extend(disgd_forgetting(ctx)?);
+    let mut w = ctx.csv("fig8", "throughput.csv", &THROUGHPUT_HEADER)?;
+    write_throughput(&mut w, &runs)?;
+    println!("== Fig 8: DISGD throughput vs central ==");
+    summarize_throughput(&runs);
+    Ok(())
+}
+
+/// Shared DICS suites (Figs 9-14).
+fn dics_base(ctx: &mut ExpContext) -> Result<Vec<(RunKey, crate::eval::RunReport)>> {
+    let mut runs = Vec::new();
+    for ds in DATASETS {
+        runs.extend(ctx.sweep(Algorithm::Cosine, ds, &[Policy::None])?);
+    }
+    Ok(runs)
+}
+
+fn dics_forgetting(
+    ctx: &mut ExpContext,
+) -> Result<Vec<(RunKey, crate::eval::RunReport)>> {
+    let mut runs = Vec::new();
+    for ds in DATASETS {
+        runs.extend(
+            ctx.sweep(Algorithm::Cosine, ds, &[Policy::Lru, Policy::Lfu])?,
+        );
+    }
+    Ok(runs)
+}
+
+/// Fig 9: recall, cosine central vs DICS.
+pub fn fig9(ctx: &mut ExpContext) -> Result<()> {
+    let runs = dics_base(ctx)?;
+    let mut w = ctx.csv("fig9", "recall_curves.csv", &RECALL_HEADER)?;
+    write_recall_curves(&mut w, &runs)?;
+    println!("== Fig 9: DICS recall vs central ==");
+    summarize_recall(&runs);
+    Ok(())
+}
+
+/// Fig 10: memory distributions for DICS.
+pub fn fig10(ctx: &mut ExpContext) -> Result<()> {
+    let runs = dics_base(ctx)?;
+    let mut w = ctx.csv("fig10", "state_distribution.csv", &STATE_HEADER)?;
+    write_state_distribution(&mut w, &runs)?;
+    println!("== Fig 10: DICS per-worker state sizes ==");
+    summarize_state(&runs);
+    Ok(())
+}
+
+/// Fig 11: forgetting effect on DICS recall.
+pub fn fig11(ctx: &mut ExpContext) -> Result<()> {
+    let mut runs = dics_base(ctx)?;
+    runs.extend(dics_forgetting(ctx)?);
+    let mut w = ctx.csv("fig11", "recall_curves.csv", &RECALL_HEADER)?;
+    write_recall_curves(&mut w, &runs)?;
+    println!("== Fig 11: DICS forgetting effect on recall ==");
+    summarize_recall(&runs);
+    Ok(())
+}
+
+/// Fig 12: LFU vs LRU one-to-one (DICS).
+pub fn fig12(ctx: &mut ExpContext) -> Result<()> {
+    let runs = dics_forgetting(ctx)?;
+    let mut w = ctx.csv("fig12", "recall_curves.csv", &RECALL_HEADER)?;
+    write_recall_curves(&mut w, &runs)?;
+    println!("== Fig 12: DICS LRU vs LFU per n_i ==");
+    summarize_recall(&runs);
+    Ok(())
+}
+
+/// Fig 13: forgetting effect on memory (DICS, nf-like).
+pub fn fig13(ctx: &mut ExpContext) -> Result<()> {
+    let mut runs: Vec<_> = dics_base(ctx)?
+        .into_iter()
+        .filter(|(k, _)| k.dataset == "nf-like")
+        .collect();
+    runs.extend(
+        dics_forgetting(ctx)?
+            .into_iter()
+            .filter(|(k, _)| k.dataset == "nf-like"),
+    );
+    let mut w = ctx.csv("fig13", "state_distribution.csv", &STATE_HEADER)?;
+    write_state_distribution(&mut w, &runs)?;
+    println!("== Fig 13: DICS forgetting effect on state (nf-like) ==");
+    summarize_state(&runs);
+    Ok(())
+}
+
+/// Fig 14: throughput, DICS vs central.
+pub fn fig14(ctx: &mut ExpContext) -> Result<()> {
+    let mut runs = dics_base(ctx)?;
+    runs.extend(dics_forgetting(ctx)?);
+    let mut w = ctx.csv("fig14", "throughput.csv", &THROUGHPUT_HEADER)?;
+    write_throughput(&mut w, &runs)?;
+    println!("== Fig 14: DICS throughput vs central ==");
+    summarize_throughput(&runs);
+    Ok(())
+}
+
+/// Extension experiment (paper Section 6 future work): gradual
+/// forgetting (decay) head-to-head with LRU/LFU on both algorithms.
+pub fn ext_forgetting(ctx: &mut ExpContext) -> Result<()> {
+    let mut runs = Vec::new();
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        for ds in DATASETS {
+            for policy in [Policy::None, Policy::Lru, Policy::Lfu, Policy::Decay] {
+                let key = RunKey {
+                    algo,
+                    dataset: ds.to_string(),
+                    n_i: 2,
+                    policy,
+                };
+                let report = ctx.run(key.clone())?;
+                runs.push((key, report));
+            }
+        }
+    }
+    let mut w = ctx.csv("ext_forgetting", "throughput.csv", &THROUGHPUT_HEADER)?;
+    write_throughput(&mut w, &runs)?;
+    let mut w = ctx.csv("ext_forgetting", "state.csv", &STATE_HEADER)?;
+    write_state_distribution(&mut w, &runs)?;
+    println!("== EXT: gradual forgetting (decay) vs LRU/LFU at n_i=2 ==");
+    summarize_recall(&runs);
+    summarize_state(&runs);
+    Ok(())
+}
+
+/// Run every experiment (the `--exp all` path).
+pub fn all(ctx: &mut ExpContext) -> Result<()> {
+    table1(ctx)?;
+    fig3(ctx)?;
+    fig4(ctx)?;
+    fig5(ctx)?;
+    fig6(ctx)?;
+    fig7(ctx)?;
+    fig8(ctx)?;
+    fig9(ctx)?;
+    fig10(ctx)?;
+    fig11(ctx)?;
+    fig12(ctx)?;
+    fig13(ctx)?;
+    fig14(ctx)?;
+    Ok(())
+}
+
+/// Dispatch by experiment id.
+pub fn run_experiment(ctx: &mut ExpContext, id: &str) -> Result<()> {
+    match id {
+        "all" => all(ctx),
+        "table1" => table1(ctx),
+        "fig3" => fig3(ctx),
+        "fig4" => fig4(ctx),
+        "fig5" => fig5(ctx),
+        "fig6" => fig6(ctx),
+        "fig7" => fig7(ctx),
+        "fig8" => fig8(ctx),
+        "fig9" => fig9(ctx),
+        "fig10" => fig10(ctx),
+        "fig11" => fig11(ctx),
+        "fig12" => fig12(ctx),
+        "fig13" => fig13(ctx),
+        "fig14" => fig14(ctx),
+        "ext-forgetting" => ext_forgetting(ctx),
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (table1|fig3..fig14|ext-forgetting|all)"
+        ),
+    }
+}
+
+fn summarize_recall(runs: &[(RunKey, crate::eval::RunReport)]) {
+    for (key, r) in runs {
+        println!(
+            "  {:40} avg_recall={:.4} (events={})",
+            key.label(),
+            r.avg_recall,
+            r.events
+        );
+    }
+}
+
+fn summarize_state(runs: &[(RunKey, crate::eval::RunReport)]) {
+    for (key, r) in runs {
+        println!(
+            "  {:40} users(mean)={:>10.1} items(mean)={:>9.1} aux(mean)={:>10.1}",
+            key.label(),
+            r.mean_user_state(),
+            r.mean_item_state(),
+            r.mean_aux_state()
+        );
+    }
+}
+
+fn summarize_throughput(runs: &[(RunKey, crate::eval::RunReport)]) {
+    // Speedup vs the central run of the same (algo, dataset).
+    for (key, r) in runs {
+        let central = runs.iter().find(|(k, _)| {
+            k.algo == key.algo && k.dataset == key.dataset && k.n_i == 1
+                && k.policy == Policy::None
+        });
+        let speedup = central
+            .map(|(_, c)| r.throughput / c.throughput.max(1e-9))
+            .unwrap_or(f64::NAN);
+        println!(
+            "  {:40} {:>12.0} ev/s  speedup_vs_central={:>8.1}x",
+            key.label(),
+            r.throughput,
+            speedup
+        );
+    }
+}

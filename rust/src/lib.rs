@@ -1,0 +1,53 @@
+//! # streamrec
+//!
+//! A distributed real-time recommender system for big data streams —
+//! a Rust + JAX/Pallas reproduction of Hazem, Awad & Hassan (2022).
+//!
+//! The paper's *splitting & replication* mechanism distributes streaming
+//! recommender algorithms (incremental matrix factorization and
+//! incremental item-based cosine similarity) over a shared-nothing
+//! cluster without any state synchronization, and bounds unbounded stream
+//! state with LRU/LFU forgetting.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the coordinator: a from-scratch
+//!   shared-nothing stream engine ([`engine`]), the Algorithm-1 router and
+//!   leader/worker pipeline ([`coordinator`]), the streaming algorithms
+//!   ([`algorithms`]), worker-local state with forgetting ([`state`]),
+//!   prequential evaluation ([`eval`]), datasets ([`data`]), and the
+//!   experiment harness ([`experiments`]).
+//! * **Layer 2 (JAX, build-time)** — `python/compile/model.py`: the ISGD
+//!   compute graph, AOT-lowered to HLO-text artifacts.
+//! * **Layer 1 (Pallas, build-time)** — `python/compile/kernels/`: the
+//!   tiled scoring kernel and the fused ISGD update kernel.
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT CPU client;
+//! Python never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use streamrec::config::{RunConfig, Topology};
+//! use streamrec::coordinator::run_pipeline;
+//! use streamrec::data::DatasetSpec;
+//!
+//! let events = DatasetSpec::parse("ml-like:50000", 42).unwrap()
+//!     .load().unwrap();
+//! let mut cfg = RunConfig::default();
+//! cfg.topology = Topology::new(2, 0).unwrap(); // n_i=2 -> 4 workers
+//! let report = run_pipeline(&cfg, &events, "quickstart").unwrap();
+//! println!("{}", report.summary());
+//! ```
+
+pub mod algorithms;
+pub mod benchutil;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod eval;
+pub mod experiments;
+pub mod runtime;
+pub mod state;
+pub mod util;

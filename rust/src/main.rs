@@ -1,0 +1,236 @@
+//! `streamrec` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//! * `run`        — run one pipeline configuration and print the report.
+//! * `table1`     — print dataset characteristics.
+//! * `gen-data`   — write a synthetic rating stream to CSV.
+//! * `backends`   — cross-check native vs PJRT backends on one stream.
+//!
+//! Examples:
+//! ```text
+//! streamrec run --dataset ml-like:100000 --ni 4 --algorithm isgd
+//! streamrec run --dataset nf-like:50000 --ni 2 --forgetting lru
+//! streamrec run --config configs/disgd_ml.toml
+//! streamrec backends --events 3000
+//! ```
+
+use anyhow::{bail, Result};
+
+use streamrec::config::{Algorithm, Backend, Forgetting, RunConfig, Topology};
+use streamrec::coordinator::run_pipeline;
+use streamrec::data::stats::DatasetStats;
+use streamrec::data::DatasetSpec;
+use streamrec::util::args::Args;
+use streamrec::util::logging;
+
+fn main() -> Result<()> {
+    logging::init();
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("table1") => cmd_table1(&args),
+        Some("gen-data") => cmd_gen_data(&args),
+        Some("backends") => cmd_backends(&args),
+        Some(other) => bail!("unknown subcommand '{other}'; see --help"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "streamrec — distributed real-time recommender for big data streams
+
+USAGE:
+  streamrec run [--config FILE] [--dataset SPEC] [--algorithm isgd|cosine]
+                [--ni N] [--w W] [--backend native|pjrt]
+                [--forgetting none|lru|lfu|decay] [--seed S] [--top-n N]
+  streamrec table1 [--events N] [--seed S]
+  streamrec gen-data --dataset SPEC --out FILE.csv
+  streamrec backends [--events N]   # native-vs-PJRT cross-check
+
+DATASET SPEC:
+  ml-like:<events>   synthetic MovieLens-25M-shaped stream
+  nf-like:<events>   synthetic Netflix-shaped stream
+  ml-csv:<path>      real MovieLens ratings.csv
+  nf-file:<path>     real Netflix combined_data file
+
+Figures/tables of the paper: use the `figures` binary."
+    );
+}
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(a) = args.get("algorithm") {
+        cfg.algorithm = Algorithm::parse(a)?;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = Backend::parse(b)?;
+    }
+    let n_i = args.get_parse::<u64>("ni")?.unwrap_or(cfg.topology.n_i);
+    let w = args.get_parse::<u64>("w")?.unwrap_or(cfg.topology.w);
+    cfg.topology = Topology::new(n_i, w)?;
+    if let Some(f) = args.get("forgetting") {
+        cfg.forgetting = match f {
+            "none" => Forgetting::None,
+            "lru" => Forgetting::Lru {
+                trigger_secs: args
+                    .get_parse("lru-trigger-secs")?
+                    .unwrap_or(86_400),
+                max_idle_secs: args
+                    .get_parse("lru-max-idle-secs")?
+                    .unwrap_or(5 * 86_400),
+            },
+            "lfu" => Forgetting::Lfu {
+                trigger_events: args
+                    .get_parse("lfu-trigger-events")?
+                    .unwrap_or(10_000),
+                min_freq: args.get_parse("lfu-min-freq")?.unwrap_or(2),
+            },
+            "decay" => Forgetting::Decay {
+                trigger_events: args
+                    .get_parse("decay-trigger-events")?
+                    .unwrap_or(10_000),
+                factor: args.get_parse("decay-factor")?.unwrap_or(0.9),
+            },
+            other => bail!("unknown forgetting '{other}'"),
+        };
+    }
+    if let Some(n) = args.get_parse("top-n")? {
+        cfg.top_n = n;
+    }
+    if args.flag("cosine-strict") {
+        cfg.cosine_strict = true;
+    }
+    if let Some(s) = args.get_parse("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(d) = args.get("artifacts-dir") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let spec = DatasetSpec::parse(
+        &args.get_or("dataset", "ml-like:100000"),
+        cfg.seed,
+    )?;
+    let events = spec.load()?;
+    let label = format!(
+        "{}-{}-ni{}-{}",
+        cfg.algorithm.name(),
+        spec.name(),
+        cfg.topology.n_i,
+        cfg.forgetting.name()
+    );
+    let report = run_pipeline(&cfg, &events, &label)?;
+    println!("{}", report.summary());
+    println!(
+        "latency: {}   route: {:.0} ns/event   backpressure: {:.1} ms",
+        report.latency().summary(),
+        report.route_ns_per_event,
+        report.backpressure_ns as f64 / 1e6
+    );
+    for w in &report.workers {
+        println!(
+            "  worker {:>3}: processed={:>8} hits={:>7} users={:>7} \
+             items={:>6} aux={:>8} sweeps={} evicted={}",
+            w.worker_id,
+            w.processed,
+            w.hits,
+            w.state.users,
+            w.state.items,
+            w.state.aux,
+            w.sweeps,
+            w.evicted
+        );
+    }
+    if let Some(out) = args.get("out") {
+        let mut w = streamrec::util::csv::CsvWriter::create(
+            out,
+            &["seq", "recall_ma"],
+        )?;
+        for (seq, r) in &report.recall_curve {
+            w.row(&[seq.to_string(), format!("{r:.6}")])?;
+        }
+        w.flush()?;
+        println!("recall curve written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let events: u64 = args.get_parse("events")?.unwrap_or(120_000);
+    let seed: u64 = args.get_parse("seed")?.unwrap_or(42);
+    for name in ["ml-like", "nf-like"] {
+        let spec = DatasetSpec::parse(&format!("{name}:{events}"), seed)?;
+        let data = spec.load()?;
+        println!("{}", DatasetStats::compute(name, &data).table_row());
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let spec = DatasetSpec::parse(
+        &args.get_or("dataset", "ml-like:100000"),
+        args.get_parse("seed")?.unwrap_or(42),
+    )?;
+    let out = args.get_or("out", "synthetic.csv");
+    let events = spec.load()?;
+    let mut w = streamrec::util::csv::CsvWriter::create(
+        &out,
+        &["userId", "movieId", "rating", "timestamp"],
+    )?;
+    for e in &events {
+        w.row(&[
+            e.user.to_string(),
+            e.item.to_string(),
+            format!("{:.1}", e.rating),
+            e.ts.to_string(),
+        ])?;
+    }
+    w.flush()?;
+    println!("wrote {} events to {out}", events.len());
+    Ok(())
+}
+
+/// Cross-check: run the same stream through the native and PJRT backends
+/// and compare recall trajectories + state. The models are seeded
+/// identically, so any divergence beyond f32 noise is a bug.
+fn cmd_backends(args: &Args) -> Result<()> {
+    let n: u64 = args.get_parse("events")?.unwrap_or(3000);
+    let spec = DatasetSpec::parse(&format!("nf-like:{n}"), 7)?;
+    let events = spec.load()?;
+    let mut results = Vec::new();
+    for backend in [Backend::Native, Backend::Pjrt] {
+        let cfg = RunConfig {
+            backend,
+            artifacts_dir: args.get_or("artifacts-dir", "artifacts"),
+            ..RunConfig::default()
+        };
+        let label = format!("backend-{}", backend.name());
+        let report = run_pipeline(&cfg, &events, &label)?;
+        println!("{}", report.summary());
+        results.push(report);
+    }
+    let (a, b) = (&results[0], &results[1]);
+    println!(
+        "hits: native={} pjrt={} (delta {})",
+        a.hits,
+        b.hits,
+        (a.hits as i64 - b.hits as i64).abs()
+    );
+    let tol = (a.events / 100).max(10);
+    if (a.hits as i64 - b.hits as i64).unsigned_abs() > tol {
+        bail!("backends diverged beyond tolerance");
+    }
+    println!("backends agree within tolerance ({tol} hits)");
+    Ok(())
+}

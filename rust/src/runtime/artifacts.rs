@@ -1,0 +1,169 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. `manifest.json` enumerates every AOT-lowered HLO-text
+//! artifact with its static shapes; the runtime picks the smallest bucket
+//! that fits the live state.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One lowered artifact variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// "topn" | "isgd" | "recupd".
+    pub kind: String,
+    /// User-batch rows.
+    pub b: usize,
+    /// Item-capacity bucket (0 for isgd variants).
+    pub m: usize,
+    /// Latent dimension.
+    pub k: usize,
+    /// Over-fetched top-N length (0 for isgd variants).
+    pub n: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub latent_k: usize,
+    pub topn_overfetch: usize,
+    pub m_buckets: Vec<usize>,
+    pub b_sizes: Vec<usize>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        let get_usize = |j: &Json, k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing numeric '{k}'"))
+        };
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            artifacts.push(ArtifactMeta {
+                name: a
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing name"))?
+                    .to_string(),
+                file: dir.join(
+                    a.get("file")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| anyhow!("artifact missing file"))?,
+                ),
+                kind: a
+                    .get("kind")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("unknown")
+                    .to_string(),
+                b: get_usize(a, "b")?,
+                m: a.get("m").and_then(|x| x.as_usize()).unwrap_or(0),
+                k: get_usize(a, "k")?,
+                n: a.get("n").and_then(|x| x.as_usize()).unwrap_or(0),
+            });
+        }
+        let buckets = v
+            .get("m_buckets")
+            .and_then(|x| x.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default();
+        let b_sizes = v
+            .get("b_sizes")
+            .and_then(|x| x.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_else(|| vec![1]);
+        Ok(Self {
+            latent_k: get_usize(&v, "latent_k")?,
+            topn_overfetch: get_usize(&v, "topn_overfetch")?,
+            m_buckets: buckets,
+            b_sizes,
+            artifacts,
+            dir,
+        })
+    }
+
+    /// Find a specific variant.
+    pub fn find(&self, kind: &str, b: usize, m: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.b == b && a.m == m)
+    }
+
+    /// Smallest bucket that can hold `rows` live items (None if the state
+    /// has outgrown every compiled bucket — callers fall back to native).
+    pub fn bucket_for(&self, rows: usize) -> Option<usize> {
+        self.m_buckets.iter().copied().find(|&b| rows <= b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"latent_k": 10, "topn_overfetch": 50,
+                "m_buckets": [1024, 4096], "b_sizes": [1, 32],
+                "artifacts": [
+                  {"name": "isgd_b1", "file": "isgd_b1.hlo.txt",
+                   "kind": "isgd", "b": 1, "k": 10},
+                  {"name": "topn_b1_m1024", "file": "topn_b1_m1024.hlo.txt",
+                   "kind": "topn", "b": 1, "m": 1024, "k": 10, "n": 50}
+                ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("streamrec_manifest_test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.latent_k, 10);
+        assert_eq!(m.topn_overfetch, 50);
+        let a = m.find("topn", 1, 1024).unwrap();
+        assert_eq!(a.n, 50);
+        assert!(a.file.ends_with("topn_b1_m1024.hlo.txt"));
+        assert!(m.find("topn", 1, 4096).is_none());
+        assert!(m.find("isgd", 1, 0).is_some());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let dir = std::env::temp_dir().join("streamrec_manifest_test2");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for(0), Some(1024));
+        assert_eq!(m.bucket_for(1024), Some(1024));
+        assert_eq!(m.bucket_for(1025), Some(4096));
+        assert_eq!(m.bucket_for(5000), None);
+    }
+
+    #[test]
+    fn missing_dir_is_actionable_error() {
+        let err = Manifest::load("/nonexistent/streamrec").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

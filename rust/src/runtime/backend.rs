@@ -1,0 +1,286 @@
+//! Scoring/update backends for the ISGD hot path.
+//!
+//! Both backends operate on the same memory layout (`VectorSlab`'s padded
+//! matrix + validity mask), so they are interchangeable and cross-checked
+//! to 1e-4 by integration tests:
+//!
+//! * [`NativeBackend`] — hand-written Rust loops; used by the large figure
+//!   sweeps and as the fallback when state outgrows the compiled buckets.
+//! * `PjrtBackend` (in [`super::pjrt`]) — executes the AOT-compiled
+//!   JAX/Pallas artifacts via the PJRT CPU client.
+//!
+//! Backends are constructed *inside* each worker thread (factory pattern)
+//! because the xla crate's client handles are `!Send`.
+
+use crate::state::VectorSlab;
+
+/// A scored candidate: worker-local slab row + score.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scored {
+    pub row: usize,
+    pub score: f32,
+}
+
+/// The numeric contract of Algorithm 2 (scoring + the fused ISGD step).
+pub trait ScoringBackend {
+    fn name(&self) -> &'static str;
+
+    /// Top-`n` valid slab rows by `u . row` (descending). `n` is the
+    /// over-fetched length; the caller filters already-rated items.
+    fn topn(&mut self, u: &[f32], slab: &VectorSlab, n: usize) -> Vec<Scored>;
+
+    /// Fused ISGD step (Equations 2-4, sequential semantics). Mutates
+    /// `u` and `i` in place and returns the prediction error.
+    fn isgd_step(&mut self, u: &mut [f32], i: &mut [f32], eta: f32, lam: f32)
+        -> f32;
+}
+
+/// Pure-Rust backend.
+#[derive(Debug, Default)]
+pub struct NativeBackend {
+    /// Reusable candidate-heap buffer (no allocation on the hot path).
+    heap: Vec<Scored>,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Min-heap helpers over `Scored.score` (std BinaryHeap needs Ord, which
+/// f32 lacks; two tiny sift functions are cheaper than a wrapper type).
+fn heapify_min(xs: &mut [Scored]) {
+    for i in (0..xs.len() / 2).rev() {
+        sift_down_min(xs, i);
+    }
+}
+
+fn sift_down_min(xs: &mut [Scored], mut i: usize) {
+    let n = xs.len();
+    loop {
+        let (l, r) = (2 * i + 1, 2 * i + 2);
+        let mut smallest = i;
+        if l < n && xs[l].score < xs[smallest].score {
+            smallest = l;
+        }
+        if r < n && xs[r].score < xs[smallest].score {
+            smallest = r;
+        }
+        if smallest == i {
+            return;
+        }
+        xs.swap(i, smallest);
+        i = smallest;
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // K is 10-16; a straight loop autovectorizes fine at this size.
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b.iter()) {
+        s += x * y;
+    }
+    s
+}
+
+impl ScoringBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn topn(&mut self, u: &[f32], slab: &VectorSlab, n: usize) -> Vec<Scored> {
+        let k = slab.k();
+        let data = slab.data();
+        let valid = slab.valid();
+        // §Perf iteration 2 (see EXPERIMENTS.md): 4-row-unrolled dots
+        // (independent accumulators beat one horizontal-sum chain at
+        // K=10) + a threshold-gated size-n binary heap. Once the heap is
+        // warm, almost no row beats the threshold (~n·ln(M) expected
+        // replacements), so the steady-state cost is pure scoring.
+        let cands = &mut self.heap;
+        cands.clear();
+        let mut threshold = f32::NEG_INFINITY;
+        let hw = slab.high_water();
+
+        #[inline]
+        fn offer(
+            cands: &mut Vec<Scored>,
+            threshold: &mut f32,
+            n: usize,
+            row: usize,
+            score: f32,
+        ) {
+            if cands.len() < n {
+                cands.push(Scored { row, score });
+                // Establish the sift-down heap once full.
+                if cands.len() == n {
+                    heapify_min(cands);
+                    *threshold = cands[0].score;
+                }
+            } else if score > *threshold {
+                cands[0] = Scored { row, score };
+                sift_down_min(cands, 0);
+                *threshold = cands[0].score;
+            }
+        }
+
+        let mut row = 0;
+        while row + 4 <= hw {
+            let base = row * k;
+            let quad = &data[base..base + 4 * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+            for d in 0..k {
+                let ud = u[d];
+                s0 += ud * quad[d];
+                s1 += ud * quad[k + d];
+                s2 += ud * quad[2 * k + d];
+                s3 += ud * quad[3 * k + d];
+            }
+            for (i, s) in [s0, s1, s2, s3].into_iter().enumerate() {
+                if valid[row + i] != 0.0 {
+                    offer(cands, &mut threshold, n, row + i, s);
+                }
+            }
+            row += 4;
+        }
+        for r in row..hw {
+            if valid[r] != 0.0 {
+                let s = dot(u, &data[r * k..r * k + k]);
+                offer(cands, &mut threshold, n, r, s);
+            }
+        }
+        let mut out = cands.clone();
+        out.sort_unstable_by(|a, b| b.score.total_cmp(&a.score));
+        out
+    }
+
+    fn isgd_step(
+        &mut self,
+        u: &mut [f32],
+        i: &mut [f32],
+        eta: f32,
+        lam: f32,
+    ) -> f32 {
+        let err = 1.0 - dot(u, i);
+        for d in 0..u.len() {
+            u[d] += eta * (err * i[d] - lam * u[d]);
+        }
+        // Sequential semantics: item update uses the UPDATED user vector
+        // (Algorithm 2 statement order; matches kernels/ref.py).
+        for d in 0..i.len() {
+            i[d] += eta * (err * u[d] - lam * i[d]);
+        }
+        err
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    fn slab_with(rows: &[(u64, Vec<f32>)]) -> VectorSlab {
+        let mut s = VectorSlab::new(rows[0].1.len());
+        for (id, v) in rows {
+            s.insert(*id, v, 0);
+        }
+        s
+    }
+
+    #[test]
+    fn topn_orders_descending_and_skips_invalid() {
+        let mut slab = slab_with(&[
+            (1, vec![1.0, 0.0]),
+            (2, vec![2.0, 0.0]),
+            (3, vec![3.0, 0.0]),
+            (4, vec![4.0, 0.0]),
+        ]);
+        slab.remove(4); // most-scoring row made invalid
+        let mut be = NativeBackend::new();
+        let got = be.topn(&[1.0, 0.0], &slab, 2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(slab.id_at(got[0].row), Some(3));
+        assert_eq!(slab.id_at(got[1].row), Some(2));
+        assert!(got[0].score >= got[1].score);
+    }
+
+    #[test]
+    fn topn_handles_fewer_rows_than_n() {
+        let slab = slab_with(&[(1, vec![1.0, 1.0])]);
+        let mut be = NativeBackend::new();
+        let got = be.topn(&[0.5, 0.5], &slab, 10);
+        assert_eq!(got.len(), 1);
+        assert!((got[0].score - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topn_matches_full_sort_reference() {
+        forall("native_topn_vs_sort", 100, |rng| {
+            let k = 4;
+            let rows = 1 + rng.next_bounded(200) as usize;
+            let n = 1 + rng.next_bounded(20) as usize;
+            let mut slab = VectorSlab::new(k);
+            for id in 0..rows as u64 {
+                let v: Vec<f32> =
+                    (0..k).map(|_| rng.next_f32() - 0.5).collect();
+                slab.insert(id, &v, 0);
+            }
+            let u: Vec<f32> = (0..k).map(|_| rng.next_f32() - 0.5).collect();
+            let mut be = NativeBackend::new();
+            let got = be.topn(&u, &slab, n);
+
+            // Reference: full sort.
+            let mut all: Vec<Scored> = (0..slab.capacity())
+                .filter(|&r| slab.valid()[r] == 1.0)
+                .map(|r| Scored {
+                    row: r,
+                    score: dot(&u, &slab.data()[r * k..r * k + k]),
+                })
+                .collect();
+            all.sort_unstable_by(|a, b| b.score.total_cmp(&a.score));
+            all.truncate(n);
+            let got_scores: Vec<f32> = got.iter().map(|s| s.score).collect();
+            let want_scores: Vec<f32> = all.iter().map(|s| s.score).collect();
+            assert_eq!(got_scores.len(), want_scores.len());
+            for (g, w) in got_scores.iter().zip(want_scores.iter()) {
+                assert!((g - w).abs() < 1e-6, "{got_scores:?} {want_scores:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn isgd_step_matches_oracle_algebra() {
+        // Mirror of python ref.isgd_update_ref for one pair.
+        let mut be = NativeBackend::new();
+        let mut u = vec![0.1f32, -0.2, 0.3];
+        let mut i = vec![0.05f32, 0.1, -0.15];
+        let (eta, lam) = (0.05f32, 0.01f32);
+        let u0 = u.clone();
+        let i0 = i.clone();
+        let err = be.isgd_step(&mut u, &mut i, eta, lam);
+        let want_err =
+            1.0 - (u0[0] * i0[0] + u0[1] * i0[1] + u0[2] * i0[2]);
+        assert!((err - want_err).abs() < 1e-6);
+        for d in 0..3 {
+            let u_new = u0[d] + eta * (want_err * i0[d] - lam * u0[d]);
+            assert!((u[d] - u_new).abs() < 1e-6);
+            let i_new = i0[d] + eta * (want_err * u_new - lam * i0[d]);
+            assert!((i[d] - i_new).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn repeated_steps_converge() {
+        let mut be = NativeBackend::new();
+        let mut u = vec![0.1f32; 10];
+        let mut i = vec![0.1f32; 10];
+        let mut last = f32::MAX;
+        for _ in 0..300 {
+            last = be.isgd_step(&mut u, &mut i, 0.1, 0.001);
+        }
+        assert!(last.abs() < 0.05, "err={last}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: the Rust end of the AOT bridge. Loads HLO-text
+//! artifacts produced by `python/compile/aot.py`, compiles them on the
+//! PJRT CPU client, and exposes them behind the [`backend::ScoringBackend`]
+//! trait next to the pure-Rust native backend.
+
+pub mod artifacts;
+pub mod backend;
+pub mod pjrt;
+
+pub use artifacts::Manifest;
+pub use backend::{NativeBackend, Scored, ScoringBackend};
+pub use pjrt::{make_backend, PjrtBackend, PjrtEngine};

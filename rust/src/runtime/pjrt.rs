@@ -1,0 +1,293 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
+//! them on the XLA CPU client — the Rust end of the three-layer bridge
+//! (Python lowers once at build time; this module is the only thing that
+//! touches the compiled model on the request path).
+//!
+//! Thread-model: the xla crate's handles are `Rc`-based (`!Send`), so one
+//! [`PjrtEngine`] is constructed per worker thread. Executables are
+//! compiled lazily per (kind, bucket) and memoized. The worker-local item
+//! matrix is kept device-resident and re-uploaded only when the slab's
+//! version counter moves (see EXPERIMENTS.md §Perf for the effect).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::backend::{NativeBackend, Scored, ScoringBackend};
+use crate::state::VectorSlab;
+
+/// Lazily-compiled executables + device caches for one worker thread.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Device-resident copy of the item slab: (version, capacity, buffers).
+    items_cache: Option<ItemsCache>,
+    /// Counters for EXPERIMENTS.md §Perf.
+    pub exec_calls: u64,
+    pub uploads: u64,
+    pub compile_count: u64,
+}
+
+struct ItemsCache {
+    version: u64,
+    capacity: usize,
+    items: xla::PjRtBuffer,
+    valid: xla::PjRtBuffer,
+}
+
+impl PjrtEngine {
+    /// Create the CPU client and load the manifest from `artifacts_dir`.
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        log::info!(
+            "pjrt engine up: platform={} artifacts={}",
+            client.platform_name(),
+            manifest.artifacts.len()
+        );
+        Ok(Self {
+            client,
+            manifest,
+            exes: HashMap::new(),
+            items_cache: None,
+            exec_calls: 0,
+            uploads: 0,
+            compile_count: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (memoized) the artifact named `name`.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let meta = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name == name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let path = meta
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?
+                .to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing HLO text {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.compile_count += 1;
+            log::debug!("compiled artifact {name}");
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(self.exes.get(name).unwrap())
+    }
+
+    fn f32_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+    }
+
+    /// Refresh the device-resident item matrix if the slab moved.
+    fn ensure_items_uploaded(&mut self, slab: &VectorSlab) -> Result<()> {
+        let fresh = match &self.items_cache {
+            Some(c) => {
+                c.version == slab.version() && c.capacity == slab.capacity()
+            }
+            None => false,
+        };
+        if fresh {
+            return Ok(());
+        }
+        let cap = slab.capacity();
+        let k = slab.k();
+        let devices = self.client.devices();
+        let device = &devices[0];
+        let items = self
+            .client
+            .buffer_from_host_buffer(slab.data(), &[cap, k], Some(device))
+            .map_err(|e| anyhow!("uploading items: {e:?}"))?;
+        let valid = self
+            .client
+            .buffer_from_host_buffer(slab.valid(), &[cap], Some(device))
+            .map_err(|e| anyhow!("uploading valid mask: {e:?}"))?;
+        self.items_cache = Some(ItemsCache {
+            version: slab.version(),
+            capacity: slab.capacity(),
+            items,
+            valid,
+        });
+        self.uploads += 1;
+        Ok(())
+    }
+
+    /// Execute the `topn_b1_m{bucket}` artifact against the slab.
+    /// Returns up to `overfetch` (row, score) pairs, descending.
+    pub fn topn(
+        &mut self,
+        u: &[f32],
+        slab: &VectorSlab,
+    ) -> Result<Vec<Scored>> {
+        let cap = slab.capacity();
+        if self.manifest.find("topn", 1, cap).is_none() {
+            anyhow::bail!("no topn artifact for bucket {cap}");
+        }
+        self.ensure_items_uploaded(slab)?;
+        let name = format!("topn_b1_m{cap}");
+        let k = slab.k();
+        // Upload the user vector, then run fully on device buffers.
+        let devices = self.client.devices();
+        let device = &devices[0];
+        let u_buf = self
+            .client
+            .buffer_from_host_buffer(u, &[1, k], Some(device))
+            .map_err(|e| anyhow!("uploading user vec: {e:?}"))?;
+        self.executable(&name)?; // ensure compiled (drops &mut borrow)
+        let exe = self.exes.get(&name).unwrap();
+        let cache = self.items_cache.as_ref().unwrap();
+        let outs = exe
+            .execute_b(&[&u_buf, &cache.items, &cache.valid])
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        self.exec_calls += 1;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let values: Vec<f32> =
+            parts[0].to_vec().map_err(|e| anyhow!("values: {e:?}"))?;
+        let indices: Vec<i32> =
+            parts[1].to_vec().map_err(|e| anyhow!("indices: {e:?}"))?;
+        Ok(values
+            .into_iter()
+            .zip(indices)
+            .filter(|(v, _)| *v > -1e8) // drop padding-masked entries
+            .map(|(score, row)| Scored { row: row as usize, score })
+            .collect())
+    }
+
+    /// Execute the fused `isgd_b1` artifact; mutates `u`/`i` in place and
+    /// returns the prediction error.
+    pub fn isgd_step(
+        &mut self,
+        u: &mut [f32],
+        i: &mut [f32],
+        eta: f32,
+        lam: f32,
+    ) -> Result<f32> {
+        let k = u.len() as i64;
+        let u_lit = Self::f32_literal(u, &[1, k])?;
+        let i_lit = Self::f32_literal(i, &[1, k])?;
+        let hp = Self::f32_literal(&[eta, lam], &[1, 2])?;
+        let exe = self.executable("isgd_b1")?;
+        let outs = exe
+            .execute(&[u_lit, i_lit, hp])
+            .map_err(|e| anyhow!("executing isgd_b1: {e:?}"))?;
+        self.exec_calls += 1;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let u_new: Vec<f32> =
+            parts[0].to_vec().map_err(|e| anyhow!("u_new: {e:?}"))?;
+        let i_new: Vec<f32> =
+            parts[1].to_vec().map_err(|e| anyhow!("i_new: {e:?}"))?;
+        let err: Vec<f32> =
+            parts[2].to_vec().map_err(|e| anyhow!("err: {e:?}"))?;
+        u.copy_from_slice(&u_new);
+        i.copy_from_slice(&i_new);
+        Ok(err[0])
+    }
+}
+
+/// [`ScoringBackend`] over the PJRT engine, with automatic native fallback
+/// when the item state outgrows the largest compiled bucket.
+pub struct PjrtBackend {
+    engine: PjrtEngine,
+    native: NativeBackend,
+    max_bucket: usize,
+    pub fallbacks: u64,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let engine = PjrtEngine::new(artifacts_dir)?;
+        let max_bucket =
+            engine.manifest.m_buckets.iter().copied().max().unwrap_or(0);
+        Ok(Self {
+            engine,
+            native: NativeBackend::new(),
+            max_bucket,
+            fallbacks: 0,
+        })
+    }
+
+    pub fn engine(&self) -> &PjrtEngine {
+        &self.engine
+    }
+}
+
+impl ScoringBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn topn(&mut self, u: &[f32], slab: &VectorSlab, n: usize) -> Vec<Scored> {
+        if slab.capacity() > self.max_bucket {
+            self.fallbacks += 1;
+            return self.native.topn(u, slab, n);
+        }
+        match self.engine.topn(u, slab) {
+            Ok(mut scored) => {
+                scored.truncate(n);
+                scored
+            }
+            Err(e) => {
+                // A failed execute is a bug, not a recoverable condition —
+                // but degrade gracefully rather than poisoning the worker.
+                log::error!("pjrt topn failed ({e:#}); native fallback");
+                self.fallbacks += 1;
+                self.native.topn(u, slab, n)
+            }
+        }
+    }
+
+    fn isgd_step(
+        &mut self,
+        u: &mut [f32],
+        i: &mut [f32],
+        eta: f32,
+        lam: f32,
+    ) -> f32 {
+        match self.engine.isgd_step(u, i, eta, lam) {
+            Ok(err) => err,
+            Err(e) => {
+                log::error!("pjrt isgd failed ({e:#}); native fallback");
+                self.fallbacks += 1;
+                self.native.isgd_step(u, i, eta, lam)
+            }
+        }
+    }
+}
+
+/// Factory for per-worker-thread backend construction.
+pub fn make_backend(
+    backend: crate::config::Backend,
+    artifacts_dir: &str,
+) -> Result<Box<dyn ScoringBackend>> {
+    match backend {
+        crate::config::Backend::Native => Ok(Box::new(NativeBackend::new())),
+        crate::config::Backend::Pjrt => Ok(Box::new(
+            PjrtBackend::new(artifacts_dir)
+                .context("constructing PJRT backend")?,
+        )),
+    }
+}

@@ -1,0 +1,151 @@
+//! Forgetting triggers (Section 5.2): decide *when* a sweep runs.
+//!
+//! * LFU triggers every `trigger_events` processed records (paper: "after
+//!   processing every c records the scan starts").
+//! * LRU triggers every `trigger_secs` of *event time* (paper: "after t
+//!   time the scan starts") — event time, not wall clock, so runs are
+//!   reproducible and independent of host speed.
+//!
+//! The sweep itself lives with the state stores (`TrackedMap`,
+//! `VectorSlab`); algorithms cascade evictions across their stores.
+
+use crate::config::Forgetting;
+
+/// Which sweep fired.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SweepKind {
+    /// Evict entries with `last_ts < cutoff_ts`.
+    Lru { cutoff_ts: u64 },
+    /// Evict entries with `freq < min_freq`.
+    Lfu { min_freq: u64 },
+    /// Gradual forgetting: multiplicatively decay model evidence
+    /// (extension; Section 6 future work).
+    Decay { factor: f32 },
+}
+
+/// Per-worker trigger clock.
+#[derive(Debug, Clone)]
+pub struct ForgetClock {
+    policy: Forgetting,
+    events_since_sweep: u64,
+    last_sweep_ts: u64,
+    sweeps: u64,
+}
+
+impl ForgetClock {
+    pub fn new(policy: Forgetting) -> Self {
+        Self { policy, events_since_sweep: 0, last_sweep_ts: 0, sweeps: 0 }
+    }
+
+    pub fn policy(&self) -> Forgetting {
+        self.policy
+    }
+
+    pub fn sweeps(&self) -> u64 {
+        self.sweeps
+    }
+
+    /// Advance by one processed event at event-time `now_ts`; returns the
+    /// sweep to perform, if due.
+    pub fn on_event(&mut self, now_ts: u64) -> Option<SweepKind> {
+        match self.policy {
+            Forgetting::None => None,
+            Forgetting::Lru { trigger_secs, max_idle_secs } => {
+                if now_ts.saturating_sub(self.last_sweep_ts) >= trigger_secs {
+                    self.last_sweep_ts = now_ts;
+                    self.sweeps += 1;
+                    Some(SweepKind::Lru {
+                        cutoff_ts: now_ts.saturating_sub(max_idle_secs),
+                    })
+                } else {
+                    None
+                }
+            }
+            Forgetting::Lfu { trigger_events, min_freq } => {
+                self.events_since_sweep += 1;
+                if self.events_since_sweep >= trigger_events {
+                    self.events_since_sweep = 0;
+                    self.sweeps += 1;
+                    Some(SweepKind::Lfu { min_freq })
+                } else {
+                    None
+                }
+            }
+            Forgetting::Decay { trigger_events, factor } => {
+                self.events_since_sweep += 1;
+                if self.events_since_sweep >= trigger_events {
+                    self.events_since_sweep = 0;
+                    self.sweeps += 1;
+                    Some(SweepKind::Decay { factor })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_sweeps() {
+        let mut c = ForgetClock::new(Forgetting::None);
+        for ts in 0..10_000 {
+            assert_eq!(c.on_event(ts), None);
+        }
+        assert_eq!(c.sweeps(), 0);
+    }
+
+    #[test]
+    fn lfu_triggers_on_count() {
+        let mut c = ForgetClock::new(Forgetting::Lfu {
+            trigger_events: 3,
+            min_freq: 2,
+        });
+        assert_eq!(c.on_event(0), None);
+        assert_eq!(c.on_event(0), None);
+        assert_eq!(c.on_event(0), Some(SweepKind::Lfu { min_freq: 2 }));
+        assert_eq!(c.on_event(0), None); // counter reset
+        assert_eq!(c.sweeps(), 1);
+    }
+
+    #[test]
+    fn lru_triggers_on_event_time() {
+        let mut c = ForgetClock::new(Forgetting::Lru {
+            trigger_secs: 100,
+            max_idle_secs: 50,
+        });
+        assert_eq!(c.on_event(10), None);
+        assert_eq!(
+            c.on_event(120),
+            Some(SweepKind::Lru { cutoff_ts: 70 })
+        );
+        assert_eq!(c.on_event(150), None); // 30s since last sweep
+        assert_eq!(
+            c.on_event(220),
+            Some(SweepKind::Lru { cutoff_ts: 170 })
+        );
+    }
+
+    #[test]
+    fn decay_triggers_on_count() {
+        let mut c = ForgetClock::new(Forgetting::Decay {
+            trigger_events: 2,
+            factor: 0.9,
+        });
+        assert_eq!(c.on_event(0), None);
+        assert_eq!(c.on_event(1), Some(SweepKind::Decay { factor: 0.9 }));
+        assert_eq!(c.sweeps(), 1);
+    }
+
+    #[test]
+    fn lru_cutoff_saturates_at_zero() {
+        let mut c = ForgetClock::new(Forgetting::Lru {
+            trigger_secs: 1,
+            max_idle_secs: 1000,
+        });
+        assert_eq!(c.on_event(5), Some(SweepKind::Lru { cutoff_ts: 0 }));
+    }
+}

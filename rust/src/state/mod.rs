@@ -1,0 +1,11 @@
+//! Worker-local (shared-nothing) state stores: tracked keyed maps, the
+//! capacity-padded vector slab the AOT artifacts consume, and the
+//! forgetting trigger clocks.
+
+pub mod forgetting;
+pub mod tracked;
+pub mod vector_slab;
+
+pub use forgetting::{ForgetClock, SweepKind};
+pub use tracked::TrackedMap;
+pub use vector_slab::VectorSlab;

@@ -1,0 +1,189 @@
+//! `TrackedMap`: a keyed state store that records recency and frequency
+//! metadata per entry, so the LRU/LFU forgetting techniques (Section 5.2)
+//! can sweep it. This is the Rust stand-in for Flink keyed state — each
+//! worker owns its own instances; nothing is shared (shared-nothing).
+
+use std::collections::HashMap;
+
+/// Entry metadata + value.
+#[derive(Debug, Clone)]
+struct Entry<V> {
+    value: V,
+    /// Event-time seconds of the last touch (LRU controller input).
+    last_ts: u64,
+    /// Touch count (LFU controller input).
+    freq: u64,
+}
+
+/// Keyed store with recency/frequency tracking.
+#[derive(Debug, Clone, Default)]
+pub struct TrackedMap<K, V> {
+    map: HashMap<K, Entry<V>>,
+}
+
+impl<K: std::hash::Hash + Eq + Clone, V> TrackedMap<K, V> {
+    pub fn new() -> Self {
+        Self { map: HashMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, k: &K) -> bool {
+        self.map.contains_key(k)
+    }
+
+    /// Read without touching metadata (recommendation path reads should
+    /// not count as "use" — only learning updates do, mirroring the
+    /// paper's "count of users' requests towards items").
+    pub fn peek(&self, k: &K) -> Option<&V> {
+        self.map.get(k).map(|e| &e.value)
+    }
+
+    /// Mutable access that records a touch at `now_ts`.
+    pub fn touch_mut(&mut self, k: &K, now_ts: u64) -> Option<&mut V> {
+        self.map.get_mut(k).map(|e| {
+            e.last_ts = now_ts;
+            e.freq += 1;
+            &mut e.value
+        })
+    }
+
+    /// Insert (or overwrite) with a first touch at `now_ts`.
+    pub fn insert(&mut self, k: K, v: V, now_ts: u64) {
+        self.map.insert(k, Entry { value: v, last_ts: now_ts, freq: 1 });
+    }
+
+    pub fn remove(&mut self, k: &K) -> Option<V> {
+        self.map.remove(k).map(|e| e.value)
+    }
+
+    /// Iterate values without touching.
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
+        self.map.iter().map(|(k, e)| (k, &e.value))
+    }
+
+    pub fn freq(&self, k: &K) -> Option<u64> {
+        self.map.get(k).map(|e| e.freq)
+    }
+
+    pub fn last_ts(&self, k: &K) -> Option<u64> {
+        self.map.get(k).map(|e| e.last_ts)
+    }
+
+    /// Mutate every value in place without touching metadata (used by
+    /// the gradual-forgetting extension to decay model evidence).
+    pub fn for_each_value_mut(&mut self, mut f: impl FnMut(&K, &mut V)) {
+        for (k, e) in self.map.iter_mut() {
+            f(k, &mut e.value);
+        }
+    }
+
+    /// Remove entries for which `pred` returns true; returns removed keys.
+    pub fn retain_or_collect(
+        &mut self,
+        mut keep: impl FnMut(&K, &V) -> bool,
+    ) -> Vec<K> {
+        let dead: Vec<K> = self
+            .map
+            .iter()
+            .filter(|(k, e)| !keep(k, &e.value))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &dead {
+            self.map.remove(k);
+        }
+        dead
+    }
+
+    /// LRU sweep: evict entries idle since before `cutoff_ts`.
+    /// Returns the evicted keys (the caller may need to cascade, e.g.
+    /// DICS removes pair entries for evicted items).
+    pub fn sweep_lru(&mut self, cutoff_ts: u64) -> Vec<K> {
+        let dead: Vec<K> = self
+            .map
+            .iter()
+            .filter(|(_, e)| e.last_ts < cutoff_ts)
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &dead {
+            self.map.remove(k);
+        }
+        dead
+    }
+
+    /// LFU sweep: evict entries with `freq < min_freq`, then reset the
+    /// surviving counters (periodic aging, so frequency reflects the
+    /// current window rather than all history).
+    pub fn sweep_lfu(&mut self, min_freq: u64) -> Vec<K> {
+        let dead: Vec<K> = self
+            .map
+            .iter()
+            .filter(|(_, e)| e.freq < min_freq)
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &dead {
+            self.map.remove(k);
+        }
+        for e in self.map.values_mut() {
+            e.freq = 0;
+        }
+        dead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn touch_updates_metadata() {
+        let mut m: TrackedMap<u64, i32> = TrackedMap::new();
+        m.insert(1, 10, 100);
+        assert_eq!(m.freq(&1), Some(1));
+        *m.touch_mut(&1, 200).unwrap() += 5;
+        assert_eq!(m.peek(&1), Some(&15));
+        assert_eq!(m.freq(&1), Some(2));
+        assert_eq!(m.last_ts(&1), Some(200));
+    }
+
+    #[test]
+    fn peek_does_not_touch() {
+        let mut m: TrackedMap<u64, i32> = TrackedMap::new();
+        m.insert(1, 10, 100);
+        let _ = m.peek(&1);
+        assert_eq!(m.freq(&1), Some(1));
+        assert_eq!(m.last_ts(&1), Some(100));
+    }
+
+    #[test]
+    fn lru_sweep_respects_cutoff() {
+        let mut m: TrackedMap<u64, ()> = TrackedMap::new();
+        m.insert(1, (), 100);
+        m.insert(2, (), 200);
+        m.insert(3, (), 300);
+        m.touch_mut(&1, 400); // rescued by a later touch
+        let dead = m.sweep_lru(250);
+        assert_eq!(dead, vec![2]);
+        assert_eq!(m.len(), 2);
+        assert!(m.contains(&1) && m.contains(&3));
+    }
+
+    #[test]
+    fn lfu_sweep_evicts_cold_and_ages_survivors() {
+        let mut m: TrackedMap<u64, ()> = TrackedMap::new();
+        m.insert(1, (), 0);
+        m.insert(2, (), 0);
+        for _ in 0..5 {
+            m.touch_mut(&1, 1);
+        }
+        let dead = m.sweep_lfu(3);
+        assert_eq!(dead, vec![2]);
+        assert_eq!(m.freq(&1), Some(0)); // aged
+    }
+}

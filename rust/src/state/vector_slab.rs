@@ -1,0 +1,344 @@
+//! `VectorSlab`: the worker-local item matrix as one contiguous, capacity-
+//! padded f32 slab with a validity mask — the exact memory layout the AOT
+//! scoring artifacts consume (`items: (M, K)`, `valid: (M,)`), shared with
+//! the native scoring backend so the two backends are bit-compatible.
+//!
+//! Capacity grows in the artifact bucket sizes (1024/4096/16384, then x4),
+//! so a slab can always be handed to a PJRT executable without reshaping.
+//! Rows are recycled through a free list when forgetting evicts items.
+
+use std::collections::HashMap;
+
+use crate::data::types::ItemId;
+
+/// Artifact capacity buckets (must match `python/compile/aot.py`).
+pub const BUCKETS: [usize; 3] = [1024, 4096, 16384];
+
+/// Round a row count up to the next artifact bucket (or x4 beyond).
+pub fn bucket_for(rows: usize) -> usize {
+    for b in BUCKETS {
+        if rows <= b {
+            return b;
+        }
+    }
+    let mut cap = *BUCKETS.last().unwrap();
+    while cap < rows {
+        cap *= 4;
+    }
+    cap
+}
+
+/// Contiguous (capacity x k) f32 store with id<->row maps, validity mask
+/// and per-row recency/frequency metadata for the forgetting sweeps.
+#[derive(Debug, Clone)]
+pub struct VectorSlab {
+    k: usize,
+    data: Vec<f32>,
+    valid: Vec<f32>,
+    row_of: HashMap<ItemId, usize>,
+    id_of: Vec<Option<ItemId>>,
+    free: Vec<usize>,
+    last_ts: Vec<u64>,
+    freq: Vec<u64>,
+    live: usize,
+    /// Rows `[0, high_water)` have been used at least once; fresh inserts
+    /// take `high_water` in O(1) instead of scanning for a free row.
+    high_water: usize,
+    /// Monotone mutation counter: lets backends cache device-resident
+    /// copies of the slab and re-upload only when it actually changed.
+    version: u64,
+}
+
+impl VectorSlab {
+    pub fn new(k: usize) -> Self {
+        let cap = BUCKETS[0];
+        Self {
+            k,
+            data: vec![0.0; cap * k],
+            valid: vec![0.0; cap],
+            row_of: HashMap::new(),
+            id_of: vec![None; cap],
+            free: Vec::new(),
+            last_ts: vec![0; cap],
+            freq: vec![0; cap],
+            live: 0,
+            high_water: 0,
+            version: 0,
+        }
+    }
+
+    /// Mutation counter (bumped by insert/remove/touch_mut).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Live row count (the paper's items-state "memory" metric).
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Padded capacity (the artifact bucket currently in use).
+    pub fn capacity(&self) -> usize {
+        self.valid.len()
+    }
+
+    pub fn contains(&self, id: ItemId) -> bool {
+        self.row_of.contains_key(&id)
+    }
+
+    pub fn row(&self, id: ItemId) -> Option<usize> {
+        self.row_of.get(&id).copied()
+    }
+
+    pub fn id_at(&self, row: usize) -> Option<ItemId> {
+        self.id_of.get(row).copied().flatten()
+    }
+
+    /// Immutable vector access (no metadata touch).
+    pub fn get(&self, id: ItemId) -> Option<&[f32]> {
+        self.row_of
+            .get(&id)
+            .map(|&r| &self.data[r * self.k..(r + 1) * self.k])
+    }
+
+    /// Mutable vector access recording a learning touch at `now_ts`.
+    pub fn touch_mut(&mut self, id: ItemId, now_ts: u64) -> Option<&mut [f32]> {
+        let r = *self.row_of.get(&id)?;
+        self.last_ts[r] = now_ts;
+        self.freq[r] += 1;
+        self.version += 1;
+        Some(&mut self.data[r * self.k..(r + 1) * self.k])
+    }
+
+    /// Insert a new vector; returns its row. Panics if the id exists.
+    pub fn insert(&mut self, id: ItemId, vec: &[f32], now_ts: u64) -> usize {
+        assert_eq!(vec.len(), self.k);
+        assert!(
+            !self.row_of.contains_key(&id),
+            "insert of existing id {id}"
+        );
+        let row = match self.free.pop() {
+            Some(r) => r,
+            None => {
+                if self.high_water == self.capacity() {
+                    self.grow();
+                }
+                let r = self.high_water;
+                self.high_water += 1;
+                r
+            }
+        };
+        self.data[row * self.k..(row + 1) * self.k].copy_from_slice(vec);
+        self.valid[row] = 1.0;
+        self.id_of[row] = Some(id);
+        self.row_of.insert(id, row);
+        self.last_ts[row] = now_ts;
+        self.freq[row] = 1;
+        self.live += 1;
+        self.version += 1;
+        row
+    }
+
+    /// Remove an id; its row returns to the free list (mask zeroed so the
+    /// scoring artifacts ignore it).
+    pub fn remove(&mut self, id: ItemId) -> bool {
+        let Some(row) = self.row_of.remove(&id) else {
+            return false;
+        };
+        self.valid[row] = 0.0;
+        self.id_of[row] = None;
+        self.data[row * self.k..(row + 1) * self.k].fill(0.0);
+        self.free.push(row);
+        self.live -= 1;
+        self.version += 1;
+        true
+    }
+
+    fn grow(&mut self) {
+        let old = self.capacity();
+        let new = bucket_for(old + 1);
+        self.data.resize(new * self.k, 0.0);
+        self.valid.resize(new, 0.0);
+        self.id_of.resize(new, None);
+        self.last_ts.resize(new, 0);
+        self.freq.resize(new, 0);
+        log::debug!("vector slab grew {old} -> {new} rows");
+    }
+
+    /// The raw (capacity x k) matrix — PJRT artifact input 2.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// The validity mask (capacity,) — PJRT artifact input 3.
+    pub fn valid(&self) -> &[f32] {
+        &self.valid
+    }
+
+    /// Highest ever-used row + 1; scans can stop here instead of at
+    /// `capacity()` (the padding above has never held data).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Iterate live (id, row) pairs.
+    pub fn iter_ids(&self) -> impl Iterator<Item = (ItemId, usize)> + '_ {
+        self.id_of[..self.high_water]
+            .iter()
+            .enumerate()
+            .filter_map(|(r, id)| id.map(|i| (i, r)))
+    }
+
+    /// LRU sweep: evict rows idle since before `cutoff_ts`; returns ids.
+    pub fn sweep_lru(&mut self, cutoff_ts: u64) -> Vec<ItemId> {
+        let dead: Vec<ItemId> = self
+            .iter_ids()
+            .filter(|&(_, r)| self.last_ts[r] < cutoff_ts)
+            .map(|(id, _)| id)
+            .collect();
+        for id in &dead {
+            self.remove(*id);
+        }
+        dead
+    }
+
+    /// Gradual forgetting: scale every live vector by `factor`
+    /// (extension; old evidence fades instead of being evicted).
+    pub fn decay_all(&mut self, factor: f32) {
+        for r in 0..self.high_water {
+            if self.valid[r] == 1.0 {
+                for v in &mut self.data[r * self.k..(r + 1) * self.k] {
+                    *v *= factor;
+                }
+            }
+        }
+        self.version += 1;
+    }
+
+    /// LFU sweep: evict rows with freq < min_freq, age survivors to 0.
+    pub fn sweep_lfu(&mut self, min_freq: u64) -> Vec<ItemId> {
+        let dead: Vec<ItemId> = self
+            .iter_ids()
+            .filter(|&(_, r)| self.freq[r] < min_freq)
+            .map(|(id, _)| id)
+            .collect();
+        for id in &dead {
+            self.remove(*id);
+        }
+        for (_, r) in self.iter_ids().collect::<Vec<_>>() {
+            self.freq[r] = 0;
+        }
+        dead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(k: usize, x: f32) -> Vec<f32> {
+        vec![x; k]
+    }
+
+    #[test]
+    fn bucket_rounding() {
+        assert_eq!(bucket_for(1), 1024);
+        assert_eq!(bucket_for(1024), 1024);
+        assert_eq!(bucket_for(1025), 4096);
+        assert_eq!(bucket_for(16384), 16384);
+        assert_eq!(bucket_for(16385), 65536);
+    }
+
+    #[test]
+    fn insert_get_remove() {
+        let mut s = VectorSlab::new(4);
+        let r = s.insert(7, &v(4, 1.5), 10);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(7).unwrap(), &[1.5; 4]);
+        assert_eq!(s.valid()[r], 1.0);
+        assert_eq!(s.id_at(r), Some(7));
+        assert!(s.remove(7));
+        assert!(!s.remove(7));
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.valid()[r], 0.0);
+        assert_eq!(s.get(7), None);
+    }
+
+    #[test]
+    fn rows_recycled_after_removal() {
+        let mut s = VectorSlab::new(2);
+        let r1 = s.insert(1, &v(2, 1.0), 0);
+        s.remove(1);
+        let r2 = s.insert(2, &v(2, 2.0), 0);
+        assert_eq!(r1, r2);
+        assert_eq!(s.id_at(r2), Some(2));
+    }
+
+    #[test]
+    fn grows_through_buckets() {
+        let mut s = VectorSlab::new(2);
+        for id in 0..1025u64 {
+            s.insert(id, &v(2, id as f32), 0);
+        }
+        assert_eq!(s.capacity(), 4096);
+        assert_eq!(s.len(), 1025);
+        // All originals intact after the grow.
+        assert_eq!(s.get(0).unwrap(), &[0.0, 0.0]);
+        assert_eq!(s.get(1024).unwrap(), &[1024.0, 1024.0]);
+        assert_eq!(s.data().len(), 4096 * 2);
+    }
+
+    #[test]
+    fn touch_updates_freq_and_ts() {
+        let mut s = VectorSlab::new(2);
+        s.insert(5, &v(2, 0.0), 100);
+        s.touch_mut(5, 200).unwrap()[0] = 9.0;
+        assert_eq!(s.get(5).unwrap()[0], 9.0);
+        let dead = s.sweep_lru(150);
+        assert!(dead.is_empty(), "touched row must survive lru sweep");
+        let dead = s.sweep_lru(250);
+        assert_eq!(dead, vec![5]);
+    }
+
+    #[test]
+    fn lfu_sweep() {
+        let mut s = VectorSlab::new(2);
+        s.insert(1, &v(2, 0.0), 0);
+        s.insert(2, &v(2, 0.0), 0);
+        for _ in 0..4 {
+            s.touch_mut(1, 1);
+        }
+        let dead = s.sweep_lfu(3);
+        assert_eq!(dead, vec![2]);
+        assert!(s.contains(1));
+    }
+
+    #[test]
+    fn decay_scales_live_rows_only() {
+        let mut s = VectorSlab::new(2);
+        s.insert(1, &[2.0, 4.0], 0);
+        s.insert(2, &[1.0, 1.0], 0);
+        s.remove(2);
+        let v0 = s.version();
+        s.decay_all(0.5);
+        assert_eq!(s.get(1).unwrap(), &[1.0, 2.0]);
+        assert!(s.version() > v0, "decay must invalidate device caches");
+    }
+
+    #[test]
+    fn mask_zeroed_rows_have_zero_data() {
+        let mut s = VectorSlab::new(3);
+        s.insert(1, &[1.0, 2.0, 3.0], 0);
+        let r = s.row(1).unwrap();
+        s.remove(1);
+        assert_eq!(&s.data()[r * 3..r * 3 + 3], &[0.0, 0.0, 0.0]);
+    }
+}

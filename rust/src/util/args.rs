@@ -1,0 +1,124 @@
+//! Minimal CLI argument parser (offline build has no clap; DESIGN.md §3).
+//! Supports `subcommand --key value --flag` style invocations.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: subcommand, positionals, and `--key value` options
+/// (`--flag` with no value is stored as "true").
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                // `--key=value` or `--key value` or boolean `--key`.
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            args.options.insert(key.to_string(), v);
+                        }
+                        _ => {
+                            args.options
+                                .insert(key.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process's actual command line.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run --dataset ml-like:1000 --ni 4 pos1 --quick");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("dataset"), Some("ml-like:1000"));
+        assert_eq!(a.get_parse::<u64>("ni").unwrap(), Some(4));
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        // A bare word after a flag binds to the flag (use --flag=true to
+        // force boolean + positional ordering).
+        let a = parse("run --quick=true pos1");
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_style() {
+        let a = parse("bench --exp=fig3 --events=500");
+        assert_eq!(a.get("exp"), Some("fig3"));
+        assert_eq!(a.get_parse::<u64>("events").unwrap(), Some(500));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("run --verbose");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn bad_numeric_is_error() {
+        let a = parse("run --ni abc");
+        assert!(a.get_parse::<u64>("ni").is_err());
+    }
+}

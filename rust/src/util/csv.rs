@@ -1,0 +1,110 @@
+//! Tiny CSV writer/reader for experiment results and dataset files.
+//!
+//! Writer: header + typed rows, escaping only when needed. Reader: the
+//! subset used by the MovieLens/Netflix loaders (no embedded newlines).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create<P: AsRef<Path>>(
+        path: P,
+        header: &[&str],
+    ) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(Self { out, cols: header.len() })
+    }
+
+    /// Write one row; panics (debug) if the column count mismatches.
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "csv column count mismatch");
+        let mut first = true;
+        for f in fields {
+            if !first {
+                self.out.write_all(b",")?;
+            }
+            first = false;
+            if f.contains(',') || f.contains('"') || f.contains('\n') {
+                write!(self.out, "\"{}\"", f.replace('"', "\"\""))?;
+            } else {
+                self.out.write_all(f.as_bytes())?;
+            }
+        }
+        self.out.write_all(b"\n")
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Format helpers so experiment code stays terse.
+pub fn f(x: f64) -> String {
+    format!("{x:.6}")
+}
+
+pub fn i(x: u64) -> String {
+    x.to_string()
+}
+
+/// Split one CSV line (no embedded-newline support — the dataset files the
+/// loaders consume never quote newlines).
+pub fn split_line(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                fields.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("streamrec_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "x,y".into()]).unwrap();
+        w.row(&["2".into(), "q\"t".into()]).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2,\"q\"\"t\"\n");
+    }
+
+    #[test]
+    fn split_plain() {
+        assert_eq!(split_line("1,2,3"), vec!["1", "2", "3"]);
+        assert_eq!(split_line("a,\"b,c\",d"), vec!["a", "b,c", "d"]);
+        assert_eq!(split_line("\"x\"\"y\""), vec!["x\"y"]);
+        assert_eq!(split_line(""), vec![""]);
+    }
+}

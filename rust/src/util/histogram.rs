@@ -1,0 +1,179 @@
+//! Log-bucketed histogram for latency/size distributions (offline build has
+//! no hdrhistogram crate; this is the from-scratch substitute).
+//!
+//! Values are u64 (nanoseconds, counts, bytes, ...). Buckets grow
+//! geometrically: bucket i covers [floor(1.25^i), floor(1.25^(i+1))), which
+//! bounds relative quantile error to ~25% while keeping the histogram tiny
+//! and mergeable across workers.
+
+/// Geometric-bucket histogram.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+const GROWTH: f64 = 1.25;
+// 1.25^220 > 2^64, so 224 buckets cover the full u64 range.
+const BUCKETS: usize = 224;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        if v <= 1 {
+            return 0;
+        }
+        // log_1.25(v) without float edge cases dominating: fine for metrics.
+        ((v as f64).ln() / GROWTH.ln()) as usize
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        let b = Self::bucket(v).min(BUCKETS - 1);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in [0,1] -> approximate value (bucket lower bound).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                let lo = GROWTH.powi(i as i32);
+                return lo.min(self.max as f64).max(self.min as f64) as u64;
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one (for cross-worker aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1} p50={} p99={} max={}",
+            self.total,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+        assert_eq!(h.min(), 10);
+        assert_eq!(h.max(), 30);
+    }
+
+    #[test]
+    fn quantile_monotone_and_bounded() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5);
+        let p90 = h.quantile(0.9);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        // ~25% relative bucket error allowed.
+        assert!((p50 as f64) > 3500.0 && (p50 as f64) < 6500.0, "p50={p50}");
+        assert!((p99 as f64) > 7300.0, "p99={p99}");
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        for v in 0..1000u64 {
+            if v % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.quantile(0.5), c.quantile(0.5));
+        assert_eq!(a.max(), c.max());
+    }
+}

@@ -1,0 +1,20 @@
+//! Cross-cutting substrates built from scratch for the offline environment:
+//! PRNG + samplers, JSON, CSV, logging, histograms, and a tiny
+//! property-testing helper (see DESIGN.md §3 for the substitution notes).
+
+pub mod args;
+pub mod csv;
+pub mod histogram;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+
+/// Monotonic nanosecond clock used by all metrics.
+#[inline]
+pub fn now_nanos() -> u64 {
+    use std::time::Instant;
+    use once_cell::sync::Lazy;
+    static START: Lazy<Instant> = Lazy::new(Instant::now);
+    START.elapsed().as_nanos() as u64
+}

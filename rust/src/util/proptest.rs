@@ -1,0 +1,86 @@
+//! Tiny property-testing helper (the offline build has no proptest crate;
+//! DESIGN.md §3). Runs a property over N seeded random cases and, on
+//! failure, reports the first failing seed so the case can be replayed
+//! deterministically with `check_seeded`.
+//!
+//! ```
+//! use streamrec::util::proptest::forall;
+//! forall("add_commutes", 200, |rng| {
+//!     let a = rng.next_bounded(1000) as i64;
+//!     let b = rng.next_bounded(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Run `prop` over `cases` seeded PRNGs; panic with the failing seed on the
+/// first failure (the property itself should panic/assert on violation).
+pub fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Pcg32)) {
+    for case in 0..cases {
+        let seed = splitmix_case_seed(name, case);
+        let mut rng = Pcg32::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut rng),
+        ));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    payload.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (for debugging a forall failure).
+pub fn check_seeded(seed: u64, mut prop: impl FnMut(&mut Pcg32)) {
+    let mut rng = Pcg32::seeded(seed);
+    prop(&mut rng);
+}
+
+fn splitmix_case_seed(name: &str, case: u64) -> u64 {
+    // Stable across runs: hash of the property name + case index.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    super::rng::mix64(h ^ case)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("trivial", 50, |rng| {
+            let x = rng.next_bounded(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn reports_failure_with_seed() {
+        forall("always_fails", 10, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn seeds_stable_across_runs() {
+        assert_eq!(
+            splitmix_case_seed("x", 3),
+            splitmix_case_seed("x", 3)
+        );
+        assert_ne!(
+            splitmix_case_seed("x", 3),
+            splitmix_case_seed("y", 3)
+        );
+    }
+}

@@ -1,0 +1,314 @@
+//! Deterministic PRNG + samplers (no external `rand` crate in the offline
+//! build, so this is a from-scratch substrate; see DESIGN.md §3).
+//!
+//! * [`SplitMix64`] — seeding / stateless hashing.
+//! * [`Pcg32`] — the workhorse generator (PCG-XSH-RR 64/32, O'Neill 2014).
+//! * Gaussian via Box–Muller, Zipf via rejection-inversion (Hörmann &
+//!   Derflinger 1996), the samplers the synthetic dataset generator needs.
+
+/// SplitMix64: tiny, full-period 2^64 generator. Used to expand one user
+/// seed into independent stream seeds and as a stateless integer mixer.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Stateless SplitMix64 finalizer — used as a hash for id scrambling.
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32: small-state, statistically strong, fast. The main
+/// generator behind the synthetic data and model initialization.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Seed from a single value, deriving the stream id via SplitMix64.
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = sm.next_u64();
+        let inc = sm.next_u64();
+        Self::new(s, inc)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, bound) — Lemire's unbiased method.
+    #[inline]
+    pub fn next_bounded(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (bound as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return hi;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the pair's
+    /// second half is discarded — simplicity over throughput here, the
+    /// generator is not on the request path).
+    pub fn next_gaussian(&mut self) -> f64 {
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-12 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_bounded(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipf(n, e) sampler over {0, .., n-1} by rejection-inversion
+/// (Hörmann & Derflinger 1996; same algorithm as rand_distr / Apache
+/// commons' RejectionInversionZipfSampler). Heavy-tailed item popularity
+/// and user activity in the synthetic datasets come from this.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: f64,
+    /// Exponent of the distribution (p(k) ∝ k^-e).
+    exponent: f64,
+    /// Precomputed acceptance threshold (NOT the exponent).
+    s: f64,
+    h_integral_x1: f64,
+    h_integral_n: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, exponent: f64) -> Self {
+        assert!(n >= 1, "Zipf needs n >= 1");
+        assert!(exponent >= 0.0, "Zipf exponent must be >= 0");
+        let nf = n as f64;
+        let h_integral_n = Self::h_integral(nf + 0.5, exponent);
+        let h_integral_x1 = Self::h_integral(1.5, exponent) - 1.0;
+        // Threshold for the fast-accept branch: s = 2 - H^-1(H(2.5) - h(2)).
+        let s = 2.0
+            - Self::h_integral_inverse(
+                Self::h_integral(2.5, exponent) - Self::h(2.0, exponent),
+                exponent,
+            );
+        Self { n: nf, exponent, s, h_integral_x1, h_integral_n }
+    }
+
+    /// H(x) = integral of h(x) = x^-e (log-form for e = 1).
+    fn h_integral(x: f64, e: f64) -> f64 {
+        let log_x = x.ln();
+        helper2((1.0 - e) * log_x) * log_x
+    }
+
+    fn h(x: f64, e: f64) -> f64 {
+        (-e * x.ln()).exp()
+    }
+
+    fn h_integral_inverse(x: f64, e: f64) -> f64 {
+        let mut t = x * (1.0 - e);
+        if t < -1.0 {
+            t = -1.0;
+        }
+        (helper1(t) * x).exp()
+    }
+
+    /// Sample a rank in [0, n): rank 0 is the most popular.
+    pub fn sample(&self, rng: &mut Pcg32) -> u64 {
+        loop {
+            let u = self.h_integral_n
+                + rng.next_f64() * (self.h_integral_x1 - self.h_integral_n);
+            let x = Self::h_integral_inverse(u, self.exponent);
+            let k = (x + 0.5).floor().clamp(1.0, self.n);
+            // Fast accept near the inverse; otherwise the exact check.
+            if k - x <= self.s
+                || u >= Self::h_integral(k + 0.5, self.exponent)
+                    - Self::h(k, self.exponent)
+            {
+                return k as u64 - 1;
+            }
+        }
+    }
+}
+
+/// helper1(x) = log1p(x)/x, stable near 0.
+fn helper1(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.ln_1p() / x
+    } else {
+        1.0 - x * (0.5 - x * (1.0 / 3.0 - 0.25 * x))
+    }
+}
+
+/// helper2(x) = (exp(x)-1)/x, stable near 0.
+fn helper2(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.exp_m1() / x
+    } else {
+        1.0 + x * 0.5 * (1.0 + x / 3.0 * (1.0 + 0.25 * x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg32_deterministic() {
+        let mut a = Pcg32::seeded(42);
+        let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg32_distinct_seeds_diverge() {
+        let mut a = Pcg32::seeded(1);
+        let mut b = Pcg32::seeded(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_mean_close() {
+        let mut rng = Pcg32::seeded(7);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn bounded_is_in_range_and_covers() {
+        let mut rng = Pcg32::seeded(9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.next_bounded(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg32::seeded(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn zipf_rank0_most_popular() {
+        let zipf = Zipf::new(1000, 1.1);
+        let mut rng = Pcg32::seeded(13);
+        let mut counts = vec![0u64; 1000];
+        for _ in 0..200_000 {
+            counts[zipf.sample(&mut rng) as usize] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[500]);
+        // Roughly power-law: count(0)/count(9) ≈ 10^1.1 ≈ 12.6 (loose).
+        let ratio = counts[0] as f64 / counts[9].max(1) as f64;
+        assert!(ratio > 5.0 && ratio < 40.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn zipf_s_zero_is_uniformish() {
+        let zipf = Zipf::new(100, 0.0);
+        let mut rng = Pcg32::seeded(17);
+        let mut counts = vec![0u64; 100];
+        for _ in 0..100_000 {
+            counts[zipf.sample(&mut rng) as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min < 1.5, "max={max} min={min}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::seeded(19);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mix64_distinct() {
+        assert_ne!(mix64(0), mix64(1));
+        assert_ne!(mix64(1), mix64(2));
+    }
+}

@@ -1,0 +1,181 @@
+//! Integration tests: full pipeline runs across configurations, checking
+//! the system-level invariants the paper's claims rest on.
+
+use streamrec::config::{Algorithm, Forgetting, RunConfig, Topology};
+use streamrec::coordinator::{run_pipeline, Router};
+use streamrec::data::synth::{SyntheticConfig, SyntheticStream};
+use streamrec::data::types::Rating;
+use streamrec::util::proptest::forall;
+
+fn events(n: u64, seed: u64) -> Vec<Rating> {
+    SyntheticStream::new(SyntheticConfig::movielens_like(n, seed)).collect()
+}
+
+fn base_cfg(n_i: u64) -> RunConfig {
+    RunConfig {
+        topology: Topology::new(n_i, 0).unwrap(),
+        sample_every: 500,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn every_event_processed_exactly_once_all_topologies() {
+    let evs = events(5000, 1);
+    for n_i in [1u64, 2, 4, 6] {
+        let r = run_pipeline(&base_cfg(n_i), &evs, "once").unwrap();
+        assert_eq!(
+            r.workers.iter().map(|w| w.processed).sum::<u64>(),
+            5000,
+            "n_i={n_i}"
+        );
+        assert_eq!(r.n_workers as u64, n_i * n_i);
+    }
+}
+
+#[test]
+fn worker_load_matches_router_prediction() {
+    // The pipeline must send each event to exactly the worker Algorithm 1
+    // names — cross-check per-worker processed counts against a
+    // host-side replay of the router.
+    let evs = events(4000, 2);
+    let cfg = base_cfg(4);
+    let router = Router::new(cfg.topology);
+    let mut expected = vec![0u64; router.n_c()];
+    for e in &evs {
+        expected[router.route(e.user, e.item)] += 1;
+    }
+    let r = run_pipeline(&cfg, &evs, "router-match").unwrap();
+    let mut got = vec![0u64; router.n_c()];
+    for w in &r.workers {
+        got[w.worker_id] = w.processed;
+    }
+    assert_eq!(got, expected);
+}
+
+#[test]
+fn recall_monotone_data_stays_in_bounds() {
+    let evs = events(6000, 3);
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let mut cfg = base_cfg(2);
+        cfg.algorithm = algo;
+        let r = run_pipeline(&cfg, &evs, "bounds").unwrap();
+        assert!(r.avg_recall >= 0.0 && r.avg_recall <= 1.0);
+        for (_, v) in &r.recall_curve {
+            assert!((0.0..=1.0).contains(v));
+        }
+        // Curve covers the whole stream.
+        assert_eq!(r.recall_curve.last().unwrap().0, 5999);
+    }
+}
+
+#[test]
+fn distributed_runs_are_deterministic() {
+    let evs = events(3000, 4);
+    let a = run_pipeline(&base_cfg(2), &evs, "det-a").unwrap();
+    let b = run_pipeline(&base_cfg(2), &evs, "det-b").unwrap();
+    assert_eq!(a.hits, b.hits, "same seed + same routing => same hits");
+    assert_eq!(a.recall_curve, b.recall_curve);
+    for (wa, wb) in a.workers.iter().zip(b.workers.iter()) {
+        assert_eq!(wa.processed, wb.processed);
+        assert_eq!(wa.state, wb.state);
+    }
+}
+
+#[test]
+fn state_shrinks_as_replication_grows() {
+    // Paper Figs 4/10: per-worker state means fall roughly linearly in
+    // worker count.
+    let evs = events(8000, 5);
+    let mut prev_users = f64::INFINITY;
+    for n_i in [1u64, 2, 4] {
+        let r = run_pipeline(&base_cfg(n_i), &evs, "shrink").unwrap();
+        let users = r.mean_user_state();
+        assert!(
+            users < prev_users,
+            "n_i={n_i}: {users} !< {prev_users}"
+        );
+        prev_users = users;
+    }
+}
+
+#[test]
+fn forgetting_policies_bound_state_and_report_sweeps() {
+    let evs = events(6000, 6);
+    for (policy, forgetting) in [
+        ("lru", Forgetting::Lru { trigger_secs: 10_000, max_idle_secs: 40_000 }),
+        ("lfu", Forgetting::Lfu { trigger_events: 1000, min_freq: 2 }),
+    ] {
+        let mut cfg = base_cfg(2);
+        cfg.forgetting = forgetting;
+        let with = run_pipeline(&cfg, &evs, policy).unwrap();
+        let without = run_pipeline(&base_cfg(2), &evs, "none").unwrap();
+        let sweeps: u64 = with.workers.iter().map(|w| w.sweeps).sum();
+        assert!(sweeps > 0, "{policy}: no sweeps triggered");
+        assert!(
+            with.mean_user_state() <= without.mean_user_state(),
+            "{policy}: state must not grow beyond the non-forgetting run"
+        );
+    }
+}
+
+#[test]
+fn cosine_distributed_beats_capped_central_throughput() {
+    // Fig 14's shape: DICS >> central cosine.
+    let evs = events(4000, 7);
+    let mut cfg = base_cfg(1);
+    cfg.algorithm = Algorithm::Cosine;
+    let central = run_pipeline(&cfg, &evs[..1500], "cos-central").unwrap();
+    let mut cfg = base_cfg(4);
+    cfg.algorithm = Algorithm::Cosine;
+    let dist = run_pipeline(&cfg, &evs, "cos-dist").unwrap();
+    assert!(
+        dist.throughput > central.throughput,
+        "distributed {} !> central {}",
+        dist.throughput,
+        central.throughput
+    );
+}
+
+#[test]
+fn property_pipeline_conserves_events_random_topologies() {
+    forall("pipeline_conservation", 8, |rng| {
+        let n_i = 1 + rng.next_bounded(3);
+        let w = rng.next_bounded(2);
+        let n = 500 + rng.next_bounded(1000);
+        let evs = events(n, rng.next_u64());
+        let cfg = RunConfig {
+            topology: Topology::new(n_i, w).unwrap(),
+            sample_every: 200,
+            ..RunConfig::default()
+        };
+        let r = run_pipeline(&cfg, &evs, "prop").unwrap();
+        assert_eq!(
+            r.workers.iter().map(|x| x.processed).sum::<u64>(),
+            n
+        );
+        assert_eq!(r.events, n);
+        assert!(r.hits <= n);
+    });
+}
+
+#[test]
+fn toml_config_round_trips_through_pipeline() {
+    let toml = r#"
+        [run]
+        algorithm = "cosine"
+        top_n = 5
+        [topology]
+        n_i = 2
+        [forgetting]
+        kind = "lfu"
+        # Per-worker trigger: 2000 events over 4 workers ~= 500 each.
+        trigger_events = 200
+        min_freq = 2
+    "#;
+    let cfg = RunConfig::from_toml(toml).unwrap();
+    let evs = events(2000, 8);
+    let r = run_pipeline(&cfg, &evs, "toml").unwrap();
+    assert_eq!(r.n_workers, 4);
+    assert!(r.workers.iter().map(|w| w.sweeps).sum::<u64>() > 0);
+}

@@ -1,0 +1,187 @@
+//! Integration tests for the AOT/PJRT path: artifact loading, numeric
+//! agreement with the native backend, and the full pipeline over PJRT.
+//!
+//! These tests need `make artifacts` to have run; they fail with an
+//! actionable message otherwise (the Makefile `test` target guarantees
+//! the ordering).
+
+use streamrec::config::{Backend, RunConfig, Topology};
+use streamrec::coordinator::run_pipeline;
+use streamrec::data::synth::{SyntheticConfig, SyntheticStream};
+use streamrec::runtime::{Manifest, NativeBackend, PjrtEngine, ScoringBackend};
+use streamrec::state::VectorSlab;
+use streamrec::util::rng::Pcg32;
+
+fn artifacts_dir() -> String {
+    // Tests run from the crate root.
+    "artifacts".to_string()
+}
+
+fn require_artifacts() -> bool {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+        false
+    }
+}
+
+#[test]
+fn manifest_covers_every_declared_bucket() {
+    if !require_artifacts() {
+        return;
+    }
+    let m = Manifest::load(artifacts_dir()).unwrap();
+    assert_eq!(m.latent_k, 10);
+    assert!(m.topn_overfetch >= 50);
+    for &bucket in &m.m_buckets {
+        for b in &m.b_sizes {
+            assert!(
+                m.find("topn", *b, bucket).is_some(),
+                "missing topn b={b} m={bucket}"
+            );
+            assert!(
+                m.find("recupd", *b, bucket).is_some(),
+                "missing recupd b={b} m={bucket}"
+            );
+        }
+    }
+    for b in &m.b_sizes {
+        assert!(m.find("isgd", *b, 0).is_some());
+    }
+    // Every artifact file exists on disk.
+    for a in &m.artifacts {
+        assert!(a.file.exists(), "{} missing", a.file.display());
+    }
+}
+
+#[test]
+fn pjrt_topn_matches_native_exactly_ordered() {
+    if !require_artifacts() {
+        return;
+    }
+    let mut engine = PjrtEngine::new(&artifacts_dir()).unwrap();
+    let mut native = NativeBackend::new();
+    let mut rng = Pcg32::seeded(99);
+    let k = 10;
+    let mut slab = VectorSlab::new(k);
+    for id in 0..700u64 {
+        let v: Vec<f32> = (0..k).map(|_| rng.next_f32() - 0.5).collect();
+        slab.insert(id, &v, 0);
+    }
+    for trial in 0..5 {
+        let u: Vec<f32> = (0..k).map(|_| rng.next_f32() - 0.5).collect();
+        let got = engine.topn(&u, &slab).unwrap();
+        let want = native.topn(&u, &slab, 50);
+        assert_eq!(got.len(), want.len(), "trial {trial}");
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!(
+                (g.score - w.score).abs() < 1e-4,
+                "trial {trial}: {g:?} vs {w:?}"
+            );
+        }
+        // Rows must agree except where scores tie.
+        for (g, w) in got.iter().zip(want.iter()) {
+            if (g.score - w.score).abs() < 1e-7 && g.row != w.row {
+                continue; // tie, order unspecified
+            }
+            assert_eq!(g.row, w.row, "trial {trial}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_isgd_step_matches_native_to_f32_noise() {
+    if !require_artifacts() {
+        return;
+    }
+    let mut engine = PjrtEngine::new(&artifacts_dir()).unwrap();
+    let mut native = NativeBackend::new();
+    let mut rng = Pcg32::seeded(5);
+    for _ in 0..20 {
+        let mut u1: Vec<f32> = (0..10).map(|_| rng.next_f32() - 0.5).collect();
+        let mut i1: Vec<f32> = (0..10).map(|_| rng.next_f32() - 0.5).collect();
+        let mut u2 = u1.clone();
+        let mut i2 = i1.clone();
+        let e1 = engine.isgd_step(&mut u1, &mut i1, 0.05, 0.01).unwrap();
+        let e2 = native.isgd_step(&mut u2, &mut i2, 0.05, 0.01);
+        assert!((e1 - e2).abs() < 1e-5, "err {e1} vs {e2}");
+        for d in 0..10 {
+            assert!((u1[d] - u2[d]).abs() < 1e-5);
+            assert!((i1[d] - i2[d]).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn pjrt_handles_slab_growth_across_buckets() {
+    if !require_artifacts() {
+        return;
+    }
+    let mut engine = PjrtEngine::new(&artifacts_dir()).unwrap();
+    let mut rng = Pcg32::seeded(6);
+    let k = 10;
+    let mut slab = VectorSlab::new(k);
+    let u: Vec<f32> = (0..k).map(|_| rng.next_f32() - 0.5).collect();
+    // Fill through the first bucket boundary: 1024 -> 4096.
+    for id in 0..1500u64 {
+        let v: Vec<f32> = (0..k).map(|_| rng.next_f32() - 0.5).collect();
+        slab.insert(id, &v, 0);
+        if id == 500 || id == 1400 {
+            let got = engine.topn(&u, &slab).unwrap();
+            assert!(!got.is_empty());
+            // All returned rows must be live.
+            for s in &got {
+                assert!(slab.id_at(s.row).is_some());
+            }
+        }
+    }
+    assert_eq!(slab.capacity(), 4096);
+    assert!(engine.uploads >= 2, "uploads should track slab versions");
+}
+
+#[test]
+fn device_cache_avoids_reupload_for_repeated_queries() {
+    if !require_artifacts() {
+        return;
+    }
+    let mut engine = PjrtEngine::new(&artifacts_dir()).unwrap();
+    let mut rng = Pcg32::seeded(7);
+    let k = 10;
+    let mut slab = VectorSlab::new(k);
+    for id in 0..100u64 {
+        let v: Vec<f32> = (0..k).map(|_| rng.next_f32() - 0.5).collect();
+        slab.insert(id, &v, 0);
+    }
+    let u: Vec<f32> = (0..k).map(|_| rng.next_f32() - 0.5).collect();
+    for _ in 0..5 {
+        engine.topn(&u, &slab).unwrap();
+    }
+    assert_eq!(engine.uploads, 1, "read-only queries must reuse the cache");
+    assert_eq!(engine.exec_calls, 5);
+}
+
+#[test]
+fn full_pipeline_on_pjrt_backend() {
+    if !require_artifacts() {
+        return;
+    }
+    let events: Vec<_> =
+        SyntheticStream::new(SyntheticConfig::netflix_like(1200, 3)).collect();
+    let cfg = RunConfig {
+        backend: Backend::Pjrt,
+        topology: Topology::central(),
+        artifacts_dir: artifacts_dir(),
+        sample_every: 200,
+        ..RunConfig::default()
+    };
+    let pjrt = run_pipeline(&cfg, &events, "pjrt-e2e").unwrap();
+    let cfg_native =
+        RunConfig { backend: Backend::Native, ..cfg };
+    let native = run_pipeline(&cfg_native, &events, "native-e2e").unwrap();
+    assert_eq!(pjrt.events, 1200);
+    // Identical seeds and deterministic routing: recall trajectories agree
+    // up to f32 noise in tie-breaks.
+    let delta = (pjrt.hits as i64 - native.hits as i64).abs();
+    assert!(delta <= 12, "pjrt={} native={}", pjrt.hits, native.hits);
+}
