@@ -1,0 +1,79 @@
+//! Online serving: the read path the paper implies but never ships.
+//!
+//! Spawns a DISGD cluster (n_i = 2 -> 4 shared-nothing workers) and keeps
+//! it alive over the stream: the learning loop ingests rating events
+//! through the Algorithm-1 router while the serving loop answers top-10
+//! queries for a panel of users. Each query fans out to the user's `n_i`
+//! replicas (its grid column), every replica ranks from its *local*
+//! model, and the coordinator merges the lists rank-aware — excluding
+//! items the user has rated on any replica. Live metrics snapshots show
+//! learning progress without stopping anything.
+//!
+//! ```text
+//! cargo run --release --example online_serving
+//! ```
+
+use streamrec::config::{RunConfig, Topology};
+use streamrec::coordinator::Cluster;
+use streamrec::data::DatasetSpec;
+
+fn main() -> anyhow::Result<()> {
+    streamrec::util::logging::init();
+    let events = DatasetSpec::parse("ml-like:30000", 7)?.load()?;
+
+    let cfg = RunConfig {
+        topology: Topology::new(2, 0)?,
+        sample_every: 1000,
+        ..RunConfig::default()
+    };
+    let mut cluster = Cluster::spawn_labeled(&cfg, "online-serving")?;
+    println!(
+        "cluster up: {} workers (n_i={} item rows x {} user columns)",
+        cluster.n_workers(),
+        cluster.router().n_i(),
+        cluster.router().n_ciw()
+    );
+
+    // A small panel of users to serve while the stream runs.
+    let panel: Vec<u64> = {
+        let mut seen = Vec::new();
+        for e in &events {
+            if !seen.contains(&e.user) {
+                seen.push(e.user);
+            }
+            if seen.len() == 3 {
+                break;
+            }
+        }
+        seen
+    };
+    for &u in &panel {
+        println!(
+            "user {u:>6} replicated on workers {:?}",
+            cluster.router().user_workers(u)
+        );
+    }
+
+    for chunk in events.chunks(6000) {
+        cluster.ingest_batch(chunk)?;
+        let live = cluster.metrics()?;
+        println!(
+            "\n-- {} events in, recall {:.4}, {} queries served --",
+            live.processed, live.recall, live.queries
+        );
+        for &u in &panel {
+            let recs = cluster.recommend(u, 10)?;
+            println!("   top-10 for user {u:>6}: {recs:?}");
+        }
+    }
+
+    let report = cluster.finish()?;
+    println!("\nfinal: {}", report.summary());
+    println!(
+        "profile: recommend {:.1}ms / update {:.1}ms across workers",
+        report.workers.iter().map(|w| w.recommend_ns).sum::<u64>() as f64
+            / 1e6,
+        report.workers.iter().map(|w| w.update_ns).sum::<u64>() as f64 / 1e6,
+    );
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Serving-path benchmarks: `Cluster::recommend` latency while the
+//! cluster is under concurrent ingest load, plus the rank-aware replica
+//! merge in isolation.
+//!
+//! The recommend number is the one a latency SLO cares about: each query
+//! queues behind the in-flight events of the user's replicas (per-worker
+//! FIFO), so it includes the queue wait a live system actually pays.
+
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+use streamrec::benchutil::{bench, black_box};
+use streamrec::config::{RunConfig, Topology};
+use streamrec::coordinator::Cluster;
+use streamrec::data::DatasetSpec;
+use streamrec::eval::merge_topn;
+use streamrec::util::histogram::Histogram;
+
+fn main() -> anyhow::Result<()> {
+    println!("== serving-path benchmarks ==");
+
+    // 1) Replica merge in isolation: n_i disjoint ranked lists of 10.
+    for n_i in [2usize, 4, 6] {
+        let lists: Vec<Vec<u64>> = (0..n_i)
+            .map(|r| (0..10u64).map(|i| i * n_i as u64 + r as u64).collect())
+            .collect();
+        let exclude: HashSet<u64> = [3u64, 17, 23].into_iter().collect();
+        bench(
+            &format!("merge_topn/{n_i}x10"),
+            1000,
+            20_000,
+            Duration::from_millis(200),
+            || {
+                black_box(merge_topn(
+                    black_box(&lists),
+                    black_box(&exclude),
+                    10,
+                ));
+            },
+        );
+    }
+
+    // 2) recommend() latency under concurrent ingest, central vs n_i=2/4.
+    let events = DatasetSpec::parse("ml-like:60000", 33)?.load()?;
+    // "session ev/s" = events / (first ingest .. finish) wall clock; the
+    // window deliberately includes the interleaved query round-trips.
+    println!(
+        "\n{:>4} {:>10} {:>12} {:>12} {:>12}",
+        "n_i", "queries", "p50 (us)", "p99 (us)", "session ev/s"
+    );
+    for n_i in [1u64, 2, 4] {
+        let cfg = RunConfig {
+            topology: Topology::new(n_i, 0)?,
+            sample_every: 10_000,
+            ..RunConfig::default()
+        };
+        let mut cluster =
+            Cluster::spawn_labeled(&cfg, &format!("serve-ni{n_i}"))?;
+        // Warm the models with the first half of the stream.
+        let (warm, live) = events.split_at(events.len() / 2);
+        cluster.ingest_batch(warm)?;
+        let hot_user = warm[0].user;
+
+        // Interleave: every chunk of ingest keeps the worker queues busy,
+        // then one timed query rides behind that load.
+        let mut hist = Histogram::new();
+        let mut queries = 0u64;
+        for chunk in live.chunks(250) {
+            cluster.ingest_batch(chunk)?;
+            let t0 = Instant::now();
+            let recs = cluster.recommend(hot_user, 10)?;
+            hist.record(t0.elapsed().as_nanos() as u64);
+            black_box(recs);
+            queries += 1;
+        }
+        let report = cluster.finish()?;
+        println!(
+            "{n_i:>4} {queries:>10} {:>12.1} {:>12.1} {:>12.0}",
+            hist.quantile(0.5) as f64 / 1e3,
+            hist.quantile(0.99) as f64 / 1e3,
+            report.throughput
+        );
+    }
+    Ok(())
+}

@@ -295,6 +295,10 @@ impl StreamingRecommender for CosineModel {
         scored.into_iter().map(|(_, _, p)| p).collect()
     }
 
+    fn rated_items(&self, user: UserId) -> Vec<ItemId> {
+        self.users.peek(&user).cloned().unwrap_or_default()
+    }
+
     fn update(&mut self, event: &Rating) {
         let now = event.ts;
         let item = event.item;
@@ -575,6 +579,8 @@ mod tests {
         m.update(&ev(1, 10, 1));
         assert_eq!(m.users.peek(&1).unwrap().len(), 1);
         assert_eq!(*m.item_count.peek(&10).unwrap(), 2);
+        assert_eq!(m.rated_items(1), vec![10]);
+        assert!(m.rated_items(2).is_empty());
     }
 
     #[test]

@@ -107,6 +107,13 @@ impl StreamingRecommender for IsgdModel {
         self.rec_buf.clone()
     }
 
+    fn rated_items(&self, user: UserId) -> Vec<ItemId> {
+        self.users
+            .peek(&user)
+            .map(|s| s.rated.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
     fn update(&mut self, event: &Rating) {
         let now = event.ts;
         if !self.users.contains(&event.user) {
@@ -203,6 +210,10 @@ mod tests {
         for r in &recs {
             assert!(!(0..5).contains(r), "rated item {r} recommended");
         }
+        let mut rated = m.rated_items(2);
+        rated.sort_unstable();
+        assert_eq!(rated, vec![0, 1, 2, 3, 4]);
+        assert!(m.rated_items(999).is_empty());
     }
 
     #[test]

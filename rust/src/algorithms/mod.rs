@@ -30,6 +30,16 @@ pub trait StreamingRecommender {
     /// prequential loop).
     fn update(&mut self, event: &Rating);
 
+    /// Items `user` has rated *on this replica*. The online query path
+    /// unions these across a user's replicas so the merged top-N can
+    /// exclude items consumed anywhere — a rating lands on exactly one
+    /// worker, so local filtering inside [`Self::recommend`] is not
+    /// enough. Unknown user: empty.
+    fn rated_items(&self, user: UserId) -> Vec<ItemId> {
+        let _ = user;
+        Vec::new()
+    }
+
     /// Current state-entry counts (the paper's memory metric).
     fn state_sizes(&self) -> StateSizes;
 

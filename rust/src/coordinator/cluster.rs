@@ -1,0 +1,573 @@
+//! The long-lived cluster session — the control plane that turns the
+//! crate from a benchmark script into a servable system.
+//!
+//! [`Cluster::spawn`] brings up the shared-nothing workers of Figure 1 and
+//! keeps them alive across an *unbounded* stream: [`Cluster::ingest`]
+//! pushes events through the Algorithm-1 router with backpressure,
+//! [`Cluster::recommend`] is the online serving path (fan a query out to
+//! every replica of the user, merge the per-replica top-N lists),
+//! [`Cluster::metrics`] snapshots live counters without stopping anything,
+//! and [`Cluster::finish`] drains, joins, and returns the final
+//! [`RunReport`] — exactly what the old one-shot `run_pipeline` produced.
+//!
+//! # The worker protocol
+//!
+//! Workers no longer consume a bare event stream; they speak
+//! [`WorkerMsg`]:
+//!
+//! * `Event` — one stream element; prequential test-then-train, the
+//!   learning loop.
+//! * `Query` — answer a recommendation from the local model over a reply
+//!   channel; serving never trains (it may refresh read-side caches in
+//!   the bounded-staleness cosine mode).
+//! * `MetricsSnapshot` — report live counters over a reply channel.
+//!
+//! All three share the per-worker FIFO channel, which gives queries and
+//! snapshots a useful consistency guarantee for free: a query observes
+//! every event ingested before it (per worker), because it queues behind
+//! them.
+//!
+//! # The serving path (replicated-user read)
+//!
+//! A user's state is replicated across the `n_i` workers of its grid
+//! column ([`Router::user_workers`]) — each replica learned from the
+//! *item rows* it owns, so no single worker can rank the whole catalog
+//! for the user. `recommend` therefore fans the query out to all
+//! replicas, gathers each local ranked top-N plus the locally-rated item
+//! set over a reply channel ([`Receiver::recv_n`]), and merges with the
+//! rank-aware [`merge_topn`], excluding items the user rated on *any*
+//! replica.
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::algorithms::build_model;
+use crate::config::RunConfig;
+use crate::coordinator::router::Router;
+use crate::data::types::{ItemId, Rating, StateSizes, UserId};
+use crate::engine::{bounded, spawn, Receiver, Sender, WorkerHandle};
+use crate::eval::{merge_topn, HitSample, Prequential, RunReport, WorkerReport};
+use crate::state::ForgetClock;
+use crate::util::histogram::Histogram;
+
+/// Event envelope: global sequence number + the rating.
+#[derive(Debug, Clone, Copy)]
+struct Envelope {
+    seq: u64,
+    rating: Rating,
+}
+
+/// Everything a worker can be asked to do (the control-plane protocol).
+enum WorkerMsg {
+    /// One stream event (the learning loop).
+    Event(Envelope),
+    /// Online recommendation query (the serving loop). Answered from the
+    /// local model over `reply`; never *trains* the model. (It may
+    /// refresh read-side caches: the bounded-staleness cosine mode
+    /// rebuilds stale neighborhoods on read, so query timing can shift
+    /// *when* those rebuilds happen. ISGD serving is fully read-only.)
+    Query { user: UserId, n: usize, reply: Sender<ReplicaAnswer> },
+    /// Live counter snapshot over `reply`; never blocks the stream for
+    /// longer than one reply-channel send.
+    MetricsSnapshot { reply: Sender<WorkerSnapshot> },
+}
+
+/// One replica's answer to a query. Reply arrival order is irrelevant:
+/// [`merge_topn`]'s key (best rank, votes, item id) is order-independent,
+/// as is the union of the rated sets.
+struct ReplicaAnswer {
+    /// Ranked local top-N (local rated items already excluded).
+    items: Vec<ItemId>,
+    /// Items this user has rated on this replica, for global exclusion.
+    rated: Vec<ItemId>,
+}
+
+/// Message from workers to the collector.
+enum CollectorMsg {
+    /// A batch of prequential outcomes.
+    Hits(Vec<HitSample>),
+    /// Worker finished draining (reports travel via thread join).
+    Done { worker_id: usize },
+}
+
+/// Live per-worker counters — a moment-in-time view of what
+/// [`WorkerReport`] reports at shutdown.
+#[derive(Debug, Clone)]
+pub struct WorkerSnapshot {
+    pub worker_id: usize,
+    /// Events processed so far.
+    pub processed: u64,
+    /// Prequential hits so far.
+    pub hits: u64,
+    /// Serving queries answered so far.
+    pub queries: u64,
+    /// Current state-entry counts.
+    pub state: StateSizes,
+}
+
+/// Live cluster-level snapshot returned by [`Cluster::metrics`].
+#[derive(Debug, Clone)]
+pub struct ClusterMetrics {
+    /// Events accepted by [`Cluster::ingest`] so far.
+    pub ingested: u64,
+    /// Events fully processed across workers (== `ingested` at the moment
+    /// the snapshot is answered, thanks to per-worker FIFO ordering).
+    pub processed: u64,
+    /// Prequential hits so far.
+    pub hits: u64,
+    /// Lifetime online recall so far (hits / processed).
+    pub recall: f64,
+    /// Serving queries answered so far.
+    pub queries: u64,
+    /// Per-worker detail, sorted by worker id.
+    pub workers: Vec<WorkerSnapshot>,
+}
+
+/// A running shared-nothing cluster: ingest, serve, observe, finish.
+pub struct Cluster {
+    label: String,
+    router: Router,
+    worker_txs: Vec<Sender<WorkerMsg>>,
+    handles: Vec<WorkerHandle<Result<WorkerReport>>>,
+    collector: Option<WorkerHandle<(Vec<(u64, f64)>, u64)>>,
+    /// Wall clock starts at the first ingest (matches the old
+    /// `run_pipeline` accounting, which excluded worker spawn).
+    started: Option<Instant>,
+    seq: u64,
+    route_ns: u64,
+}
+
+impl Cluster {
+    /// Start the workers and collector for `cfg`'s topology; the cluster
+    /// stays up until [`Cluster::finish`] (or drop).
+    pub fn spawn(cfg: &RunConfig) -> Result<Self> {
+        Self::spawn_labeled(cfg, "cluster")
+    }
+
+    /// [`Cluster::spawn`] with a report label (experiment harness tag).
+    pub fn spawn_labeled(cfg: &RunConfig, label: &str) -> Result<Self> {
+        let router = Router::new(cfg.topology);
+        let n_c = router.n_c();
+        log::info!(
+            "cluster '{label}': n_i={} -> {} workers, {} backend, \
+             forgetting={}",
+            cfg.topology.n_i,
+            n_c,
+            cfg.backend.name(),
+            cfg.forgetting.name(),
+        );
+
+        // Channels: coordinator -> workers (bounded, backpressured),
+        // workers -> collector (bounded; hit batches are small).
+        let mut worker_txs: Vec<Sender<WorkerMsg>> = Vec::with_capacity(n_c);
+        let mut handles = Vec::with_capacity(n_c);
+        let (col_tx, col_rx) = bounded::<CollectorMsg>(n_c * 4 + 16);
+        for wid in 0..n_c {
+            let (tx, rx) = bounded::<WorkerMsg>(cfg.channel_capacity);
+            worker_txs.push(tx);
+            let cfg = cfg.clone();
+            let col_tx = col_tx.clone();
+            handles.push(spawn(wid, "worker", move || {
+                worker_loop(wid, &cfg, rx, col_tx)
+            }));
+        }
+        drop(col_tx);
+
+        // Collector runs on its own thread so worker hit-batches never
+        // block; it sizes its bitmaps dynamically because a session has no
+        // up-front event count.
+        let recall_window = cfg.recall_window;
+        let sample_every = cfg.sample_every.max(1) as u64;
+        let collector = spawn(usize::MAX, "collector", move || {
+            collect(col_rx, recall_window, sample_every)
+        });
+
+        Ok(Self {
+            label: label.to_string(),
+            router,
+            worker_txs,
+            handles,
+            collector: Some(collector),
+            started: None,
+            seq: 0,
+            route_ns: 0,
+        })
+    }
+
+    /// Number of workers in the cluster.
+    pub fn n_workers(&self) -> usize {
+        self.worker_txs.len()
+    }
+
+    /// The Algorithm-1 router (e.g. to inspect a user's replica set).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Events accepted so far.
+    pub fn ingested(&self) -> u64 {
+        self.seq
+    }
+
+    /// Push one event through the router to its worker. Blocks when the
+    /// target worker's channel is full (backpressure).
+    pub fn ingest(&mut self, rating: Rating) -> Result<()> {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+        let t0 = Instant::now();
+        let target = self.router.route(rating.user, rating.item);
+        self.route_ns += t0.elapsed().as_nanos() as u64;
+        let env = Envelope { seq: self.seq, rating };
+        if self.worker_txs[target].send(WorkerMsg::Event(env)).is_err() {
+            anyhow::bail!("worker {target} died mid-stream");
+        }
+        self.seq += 1;
+        Ok(())
+    }
+
+    /// Ingest a slice of events in stream order.
+    pub fn ingest_batch(&mut self, events: &[Rating]) -> Result<()> {
+        for &rating in events {
+            self.ingest(rating)?;
+        }
+        Ok(())
+    }
+
+    /// Online serving: global top-`n` for `user`, answered while the
+    /// stream is live.
+    ///
+    /// Fans the query out to every replica of the user (its grid column,
+    /// [`Router::user_workers`]); each replica answers from its local
+    /// model over a reply channel; the per-replica ranked lists are merged
+    /// rank-aware into a global top-N that excludes items the user has
+    /// rated on *any* replica. A user unknown to every replica yields an
+    /// empty list (cold start).
+    pub fn recommend(&self, user: UserId, n: usize) -> Result<Vec<ItemId>> {
+        let replicas = self.router.user_workers(user);
+        // Over-fetch per replica: a replica cannot know which of its
+        // candidates the user consumed on *other* replicas, and the global
+        // exclusion below would otherwise under-fill the merged top-N.
+        // (On the PJRT backend the compiled artifact's overfetch bound may
+        // clip very large requests for heavy raters — the replica then
+        // degrades to fewer candidates, it never errors.)
+        let fetch = n.saturating_mul(2);
+        let (reply_tx, reply_rx) = bounded::<ReplicaAnswer>(replicas.len());
+        let mut asked = 0usize;
+        for &wid in &replicas {
+            let msg =
+                WorkerMsg::Query { user, n: fetch, reply: reply_tx.clone() };
+            // A failed send returns (and drops) the message together with
+            // its reply-sender clone, so recv_n below can't deadlock on a
+            // dead replica.
+            if self.worker_txs[wid].send(msg).is_ok() {
+                asked += 1;
+            }
+        }
+        drop(reply_tx);
+        if asked == 0 {
+            anyhow::bail!("no replica of user {user} is alive");
+        }
+        let answers = reply_rx.recv_n(asked);
+        let exclude: HashSet<ItemId> = answers
+            .iter()
+            .flat_map(|a| a.rated.iter().copied())
+            .collect();
+        let lists: Vec<Vec<ItemId>> =
+            answers.into_iter().map(|a| a.items).collect();
+        Ok(merge_topn(&lists, &exclude, n))
+    }
+
+    /// Live metrics without shutdown: every worker answers a snapshot
+    /// probe; the probe queues behind already-ingested events (per-worker
+    /// FIFO), so the aggregate reflects the whole prefix of the stream
+    /// accepted before this call.
+    pub fn metrics(&self) -> Result<ClusterMetrics> {
+        let (reply_tx, reply_rx) =
+            bounded::<WorkerSnapshot>(self.worker_txs.len());
+        let mut asked = 0usize;
+        for tx in &self.worker_txs {
+            let msg = WorkerMsg::MetricsSnapshot { reply: reply_tx.clone() };
+            if tx.send(msg).is_ok() {
+                asked += 1;
+            }
+        }
+        drop(reply_tx);
+        let mut workers = reply_rx.recv_n(asked);
+        workers.sort_by_key(|w| w.worker_id);
+        let processed: u64 = workers.iter().map(|w| w.processed).sum();
+        let hits: u64 = workers.iter().map(|w| w.hits).sum();
+        let queries: u64 = workers.iter().map(|w| w.queries).sum();
+        Ok(ClusterMetrics {
+            ingested: self.seq,
+            processed,
+            hits,
+            recall: hits as f64 / (processed.max(1)) as f64,
+            queries,
+            workers,
+        })
+    }
+
+    /// Drain in-flight events, join workers and collector, and assemble
+    /// the final [`RunReport`] — the same aggregate the one-shot
+    /// `run_pipeline` returns.
+    ///
+    /// Note on `throughput`: the wall-clock window runs from the first
+    /// ingest to this call, so for an interactive session it includes
+    /// serving fan-outs, metrics probes, and caller think-time — it is
+    /// *session* throughput. Only a pure ingest run (what `run_pipeline`
+    /// does) reads as ingest throughput.
+    pub fn finish(mut self) -> Result<RunReport> {
+        let backpressure_ns: u64 =
+            self.worker_txs.iter().map(|tx| tx.metrics().1).sum();
+        // Close worker inputs; workers drain and report via join.
+        self.worker_txs.clear();
+        let mut workers: Vec<WorkerReport> =
+            Vec::with_capacity(self.handles.len());
+        for h in self.handles.drain(..) {
+            workers.push(h.join()??);
+        }
+        let wall_secs = self
+            .started
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        let (recall_curve, hits) = self
+            .collector
+            .take()
+            .expect("collector joined twice")
+            .join()?;
+        workers.sort_by_key(|w| w.worker_id);
+        let events = self.seq;
+        Ok(RunReport {
+            label: self.label.clone(),
+            n_workers: workers.len(),
+            events,
+            hits,
+            wall_secs,
+            throughput: events as f64 / wall_secs.max(1e-9),
+            avg_recall: hits as f64 / events.max(1) as f64,
+            recall_curve,
+            workers,
+            route_ns_per_event: self.route_ns as f64 / events.max(1) as f64,
+            backpressure_ns,
+        })
+    }
+}
+
+/// Worker body: prequential learning loop + serving + snapshots over one
+/// local model.
+fn worker_loop(
+    wid: usize,
+    cfg: &RunConfig,
+    rx: Receiver<WorkerMsg>,
+    col_tx: Sender<CollectorMsg>,
+) -> Result<WorkerReport> {
+    let mut model = build_model(cfg, wid)?;
+    let mut preq = Prequential::new(cfg.top_n, cfg.recall_window);
+    let mut clock = ForgetClock::new(cfg.forgetting);
+    let mut latency = Histogram::new();
+    let mut batch: Vec<HitSample> = Vec::with_capacity(256);
+    let mut processed = 0u64;
+    let mut evicted = 0u64;
+    let mut queries = 0u64;
+    let mut recommend_ns = 0u64;
+    let mut update_ns = 0u64;
+
+    while let Some(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Event(env) => {
+                let out = preq.step(model.as_mut(), &env.rating);
+                latency.record(out.recommend_ns + out.update_ns);
+                recommend_ns += out.recommend_ns;
+                update_ns += out.update_ns;
+                processed += 1;
+                batch.push(HitSample { seq: env.seq, hit: out.hit });
+                if batch.len() >= 256 {
+                    let full = std::mem::replace(
+                        &mut batch,
+                        Vec::with_capacity(256),
+                    );
+                    let _ = col_tx.send(CollectorMsg::Hits(full));
+                }
+                if let Some(kind) = clock.on_event(env.rating.ts) {
+                    evicted += model.sweep(kind);
+                }
+            }
+            WorkerMsg::Query { user, n, reply } => {
+                // Serving never trains the model and never enters the
+                // prequential accounting. (Cosine fast mode may rebuild
+                // read-side neighborhood caches here; see WorkerMsg docs.)
+                queries += 1;
+                let items = model.recommend(user, n);
+                let rated = model.rated_items(user);
+                let _ = reply.send(ReplicaAnswer { items, rated });
+            }
+            WorkerMsg::MetricsSnapshot { reply } => {
+                let _ = reply.send(WorkerSnapshot {
+                    worker_id: wid,
+                    processed,
+                    hits: preq.recall().hits(),
+                    queries,
+                    state: model.state_sizes(),
+                });
+            }
+        }
+    }
+    if !batch.is_empty() {
+        let _ = col_tx.send(CollectorMsg::Hits(batch));
+    }
+    let report = WorkerReport {
+        worker_id: wid,
+        processed,
+        hits: preq.recall().hits(),
+        state: model.state_sizes(),
+        latency,
+        sweeps: clock.sweeps(),
+        evicted,
+        recommend_ns,
+        update_ns,
+    };
+    let _ = col_tx.send(CollectorMsg::Done { worker_id: wid });
+    Ok(report)
+}
+
+/// Collector: reassembles the global prequential curve from per-worker
+/// hit batches. Workers interleave arbitrarily; the moving average is
+/// computed in global sequence order at the end (hit bits are buffered in
+/// a dense bitmap — 1 bit per event — grown on demand because a live
+/// session has no up-front event count).
+fn collect(
+    rx: Receiver<CollectorMsg>,
+    window: usize,
+    sample_every: u64,
+) -> (Vec<(u64, f64)>, u64) {
+    let mut bits: Vec<u8> = Vec::new();
+    let mut seen: Vec<u8> = Vec::new();
+    let mut n_events = 0u64;
+    let mut total_hits = 0u64;
+    while let Some(msg) = rx.recv() {
+        match msg {
+            CollectorMsg::Hits(batch) => {
+                for s in batch {
+                    let (byte, bit) = ((s.seq / 8) as usize, s.seq % 8);
+                    if byte >= bits.len() {
+                        bits.resize(byte + 1, 0);
+                        seen.resize(byte + 1, 0);
+                    }
+                    seen[byte] |= 1 << bit;
+                    if s.hit {
+                        bits[byte] |= 1 << bit;
+                        total_hits += 1;
+                    }
+                    n_events = n_events.max(s.seq + 1);
+                }
+            }
+            CollectorMsg::Done { worker_id } => {
+                log::debug!("worker {worker_id} drained");
+            }
+        }
+    }
+    // Global moving-average curve (skipping unseen slots would hide lost
+    // events — they count as misses, which is the honest accounting).
+    let mut ma = crate::eval::MovingRecall::new(window.max(1));
+    let mut curve = Vec::new();
+    for seq in 0..n_events {
+        let (byte, bit) = ((seq / 8) as usize, seq % 8);
+        debug_assert!(
+            seen[byte] & (1 << bit) != 0,
+            "event {seq} never evaluated"
+        );
+        ma.push(bits[byte] & (1 << bit) != 0);
+        if seq % sample_every == 0 || seq + 1 == n_events {
+            curve.push((seq, ma.value()));
+        }
+    }
+    (curve, total_hits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{RunConfig, Topology};
+    use crate::data::synth::{SyntheticConfig, SyntheticStream};
+
+    fn small_events(n: u64) -> Vec<Rating> {
+        SyntheticStream::new(SyntheticConfig::netflix_like(n, 11)).collect()
+    }
+
+    fn cfg(n_i: u64) -> RunConfig {
+        RunConfig {
+            topology: Topology::new(n_i, 0).unwrap(),
+            sample_every: 100,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn session_interleaves_ingest_serve_metrics() {
+        let events = small_events(3000);
+        let mut cluster = Cluster::spawn_labeled(&cfg(2), "t-session").unwrap();
+        assert_eq!(cluster.n_workers(), 4);
+        let hot = events[0].user;
+        let mut served = 0usize;
+        for chunk in events.chunks(500) {
+            cluster.ingest_batch(chunk).unwrap();
+            let recs = cluster.recommend(hot, 10).unwrap();
+            served += usize::from(!recs.is_empty());
+            let m = cluster.metrics().unwrap();
+            assert_eq!(m.processed, cluster.ingested(), "FIFO snapshot");
+        }
+        assert!(served > 0, "a seen user must eventually get answers");
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, 3000);
+        assert_eq!(
+            report.workers.iter().map(|w| w.processed).sum::<u64>(),
+            3000
+        );
+    }
+
+    #[test]
+    fn metrics_counts_queries_and_monotone_progress() {
+        let events = small_events(1000);
+        let mut cluster = Cluster::spawn(&cfg(2)).unwrap();
+        cluster.ingest_batch(&events[..500]).unwrap();
+        let m1 = cluster.metrics().unwrap();
+        assert_eq!(m1.ingested, 500);
+        assert_eq!(m1.processed, 500);
+        assert_eq!(m1.queries, 0);
+        let _ = cluster.recommend(events[0].user, 10).unwrap();
+        cluster.ingest_batch(&events[500..]).unwrap();
+        let m2 = cluster.metrics().unwrap();
+        assert_eq!(m2.processed, 1000);
+        assert!(m2.hits >= m1.hits);
+        // One fan-out = one answered query per replica of the user.
+        let n_i = 2u64;
+        assert_eq!(m2.queries, n_i);
+        assert_eq!(m2.workers.len(), 4);
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.hits, m2.hits, "final report matches last snapshot");
+    }
+
+    #[test]
+    fn timing_split_is_live() {
+        let events = small_events(2000);
+        let mut cluster = Cluster::spawn(&cfg(1)).unwrap();
+        cluster.ingest_batch(&events).unwrap();
+        let report = cluster.finish().unwrap();
+        let w = &report.workers[0];
+        assert!(w.update_ns > 0, "update half must be measured");
+        assert!(w.recommend_ns > 0, "recommend half must be measured");
+    }
+
+    #[test]
+    fn finish_without_ingest_is_empty_report() {
+        let cluster = Cluster::spawn(&cfg(2)).unwrap();
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, 0);
+        assert_eq!(report.hits, 0);
+        assert!(report.recall_curve.is_empty());
+        assert_eq!(report.n_workers, 4);
+    }
+}

@@ -1,228 +1,36 @@
-//! The distributed pipeline: source -> splitting & replication router ->
-//! shared-nothing workers -> collector (Figure 1 of the paper).
+//! One-shot pipeline runs — the batch compatibility wrapper over the
+//! long-lived [`Cluster`] session API.
 //!
-//! The driver thread plays the Flink source + partitioner: it walks the
-//! timestamp-ordered event stream, routes each `<user, item, rating>`
-//! with Algorithm 1, and pushes it down the target worker's bounded
-//! channel (backpressure included). Each worker owns a full
-//! [`StreamingRecommender`] instance — model state is never shared or
-//! synchronized across workers (the HOGWILD!-style argument the paper
-//! leans on) — runs the prequential evaluator over its local sub-stream,
-//! applies the forgetting policy, and reports hits + state sizes back.
+//! Historically this module *was* the system: `run_pipeline` spun workers
+//! up, drove a full in-memory event slice through the router, and tore
+//! everything down per call. That machinery now lives in
+//! [`crate::coordinator::cluster`]; `run_pipeline` survives unchanged in
+//! signature and semantics as `spawn -> ingest_batch -> finish` so the
+//! experiment harness, examples, benches, and tests keep working.
 //!
-//! The central baseline is the same pipeline with one worker.
-
-use std::time::Instant;
+//! New code that wants online serving or live metrics should hold a
+//! [`Cluster`] instead (see the crate docs for the migration note).
 
 use anyhow::Result;
 
-use crate::algorithms::build_model;
 use crate::config::RunConfig;
-use crate::coordinator::router::Router;
+use crate::coordinator::cluster::Cluster;
 use crate::data::types::Rating;
-use crate::engine::{bounded, spawn, Receiver, Sender};
-use crate::eval::{HitSample, Prequential, RunReport, WorkerReport};
-use crate::state::ForgetClock;
-use crate::util::histogram::Histogram;
-
-/// Event envelope: global sequence number + the rating.
-#[derive(Debug, Clone, Copy)]
-struct Envelope {
-    seq: u64,
-    rating: Rating,
-}
-
-/// Message from workers to the collector.
-enum CollectorMsg {
-    /// A batch of prequential outcomes.
-    Hits(Vec<HitSample>),
-    /// Worker finished draining (reports travel via thread join).
-    Done { worker_id: usize },
-}
+use crate::eval::RunReport;
 
 /// Run one full pipeline over `events`; returns the aggregated report.
 ///
-/// `label` tags the report for the experiment harness.
+/// `label` tags the report for the experiment harness. Equivalent to
+/// [`Cluster::spawn`] + [`Cluster::ingest_batch`] + [`Cluster::finish`].
 pub fn run_pipeline(
     cfg: &RunConfig,
     events: &[Rating],
     label: &str,
 ) -> Result<RunReport> {
-    let router = Router::new(cfg.topology);
-    let n_c = router.n_c();
-    log::info!(
-        "pipeline '{label}': {} events, n_i={} -> {} workers, {} backend, \
-         forgetting={}",
-        events.len(),
-        cfg.topology.n_i,
-        n_c,
-        cfg.backend.name(),
-        cfg.forgetting.name(),
-    );
-
-    // Channels: driver -> workers (bounded, backpressured), workers ->
-    // collector (bounded; hit batches are small).
-    let mut worker_txs: Vec<Sender<Envelope>> = Vec::with_capacity(n_c);
-    let mut handles = Vec::with_capacity(n_c);
-    let (col_tx, col_rx) = bounded::<CollectorMsg>(n_c * 4 + 16);
-
-    for wid in 0..n_c {
-        let (tx, rx) = bounded::<Envelope>(cfg.channel_capacity);
-        worker_txs.push(tx);
-        let cfg = cfg.clone();
-        let col_tx = col_tx.clone();
-        handles.push(spawn(wid, "worker", move || {
-            worker_loop(wid, &cfg, rx, col_tx)
-        }));
-    }
-    drop(col_tx);
-
-    // Collector runs on its own thread so worker hit-batches never block.
-    let n_events = events.len() as u64;
-    let recall_window = cfg.recall_window;
-    let sample_every = cfg.sample_every.max(1) as u64;
-    let collector = spawn(usize::MAX, "collector", move || {
-        collect(col_rx, n_events, recall_window, sample_every)
-    });
-
-    // ---- Drive the stream (the hot loop of the leader). ----
-    let start = Instant::now();
-    let mut route_ns = 0u64;
-    for (seq, &rating) in events.iter().enumerate() {
-        let t0 = Instant::now();
-        let target = router.route(rating.user, rating.item);
-        route_ns += t0.elapsed().as_nanos() as u64;
-        let env = Envelope { seq: seq as u64, rating };
-        if worker_txs[target].send(env).is_err() {
-            anyhow::bail!("worker {target} died mid-stream");
-        }
-    }
-    // Close inputs; workers drain and report.
-    let backpressure_ns: u64 =
-        worker_txs.iter().map(|tx| tx.metrics().1).sum();
-    drop(worker_txs);
-
-    let mut workers: Vec<WorkerReport> = Vec::with_capacity(n_c);
-    for h in handles {
-        workers.push(h.join()??);
-    }
-    let wall_secs = start.elapsed().as_secs_f64();
-    let (recall_curve, hits) = collector.join()?;
-
-    workers.sort_by_key(|w| w.worker_id);
-    let events_u64 = events.len() as u64;
-    Ok(RunReport {
-        label: label.to_string(),
-        n_workers: n_c,
-        events: events_u64,
-        hits,
-        wall_secs,
-        throughput: events_u64 as f64 / wall_secs.max(1e-9),
-        avg_recall: hits as f64 / events_u64.max(1) as f64,
-        recall_curve,
-        workers,
-        route_ns_per_event: route_ns as f64 / events_u64.max(1) as f64,
-        backpressure_ns,
-    })
-}
-
-/// Worker body: prequential loop + forgetting over a local model.
-fn worker_loop(
-    wid: usize,
-    cfg: &RunConfig,
-    rx: Receiver<Envelope>,
-    col_tx: Sender<CollectorMsg>,
-) -> Result<WorkerReport> {
-    let mut model = build_model(cfg, wid)?;
-    let mut preq = Prequential::new(cfg.top_n, cfg.recall_window);
-    let mut clock = ForgetClock::new(cfg.forgetting);
-    let mut latency = Histogram::new();
-    let mut batch: Vec<HitSample> = Vec::with_capacity(256);
-    let mut processed = 0u64;
-    let mut evicted = 0u64;
-    let mut recommend_ns = 0u64; // split kept via latency only; see below
-    let update_ns = 0u64;
-
-    while let Some(env) = rx.recv() {
-        let t0 = Instant::now();
-        let hit = preq.step(model.as_mut(), &env.rating);
-        let dt = t0.elapsed().as_nanos() as u64;
-        latency.record(dt);
-        recommend_ns += dt;
-        processed += 1;
-        batch.push(HitSample { seq: env.seq, hit });
-        if batch.len() >= 256 {
-            let full = std::mem::replace(&mut batch, Vec::with_capacity(256));
-            let _ = col_tx.send(CollectorMsg::Hits(full));
-        }
-        if let Some(kind) = clock.on_event(env.rating.ts) {
-            evicted += model.sweep(kind);
-        }
-    }
-    if !batch.is_empty() {
-        let _ = col_tx.send(CollectorMsg::Hits(batch));
-    }
-    let report = WorkerReport {
-        worker_id: wid,
-        processed,
-        hits: preq.recall().hits(),
-        state: model.state_sizes(),
-        latency,
-        sweeps: clock.sweeps(),
-        evicted,
-        recommend_ns,
-        update_ns,
-    };
-    let _ = col_tx.send(CollectorMsg::Done { worker_id: wid });
-    Ok(report)
-}
-
-/// Collector: reassembles the global prequential curve from per-worker
-/// hit batches. Workers interleave arbitrarily; the moving average is
-/// computed in global sequence order at the end (hit bits are buffered
-/// in a dense bitmap — 1 bit per event).
-fn collect(
-    rx: Receiver<CollectorMsg>,
-    n_events: u64,
-    window: usize,
-    sample_every: u64,
-) -> (Vec<(u64, f64)>, u64) {
-    let mut bits = vec![0u8; (n_events as usize).div_ceil(8)];
-    let mut seen = vec![0u8; (n_events as usize).div_ceil(8)];
-    let mut total_hits = 0u64;
-    while let Some(msg) = rx.recv() {
-        match msg {
-            CollectorMsg::Hits(batch) => {
-                for s in batch {
-                    let (byte, bit) = ((s.seq / 8) as usize, s.seq % 8);
-                    seen[byte] |= 1 << bit;
-                    if s.hit {
-                        bits[byte] |= 1 << bit;
-                        total_hits += 1;
-                    }
-                }
-            }
-            CollectorMsg::Done { worker_id } => {
-                log::debug!("worker {worker_id} drained");
-            }
-        }
-    }
-    // Global moving-average curve (skipping unseen slots would hide lost
-    // events — they count as misses, which is the honest accounting).
-    let mut ma = crate::eval::MovingRecall::new(window.max(1));
-    let mut curve = Vec::new();
-    for seq in 0..n_events {
-        let (byte, bit) = ((seq / 8) as usize, seq % 8);
-        debug_assert!(
-            seen[byte] & (1 << bit) != 0,
-            "event {seq} never evaluated"
-        );
-        ma.push(bits[byte] & (1 << bit) != 0);
-        if seq % sample_every == 0 || seq + 1 == n_events {
-            curve.push((seq, ma.value()));
-        }
-    }
-    (curve, total_hits)
+    log::info!("pipeline '{label}': {} events (one-shot)", events.len());
+    let mut cluster = Cluster::spawn_labeled(cfg, label)?;
+    cluster.ingest_batch(events)?;
+    cluster.finish()
 }
 
 #[cfg(test)]

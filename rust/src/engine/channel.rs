@@ -168,6 +168,24 @@ impl<T> Receiver<T> {
         }
     }
 
+    /// Gather up to `n` messages, blocking as needed; stops early once
+    /// every sender is gone. This is the reply-channel primitive of the
+    /// online query path: the coordinator fans a cloned [`Sender`] out to
+    /// the `k` replicas of a user, drops its own handle, and `recv_n(k)`
+    /// collects exactly the answers that can still arrive — a dead
+    /// replica's queued message is destroyed with its channel, so the
+    /// call degrades to fewer answers instead of deadlocking.
+    pub fn recv_n(&self, n: usize) -> Vec<T> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match self.recv() {
+                Some(v) => out.push(v),
+                None => break,
+            }
+        }
+        out
+    }
+
     /// Drain up to `max` queued messages without blocking (micro-batching
     /// on the worker side — see EXPERIMENTS.md §Perf).
     pub fn recv_batch(&self, out: &mut Vec<T>, max: usize) -> bool {
@@ -293,6 +311,30 @@ mod tests {
         drop(tx);
         buf.clear();
         assert!(!rx.recv_batch(&mut buf, 4));
+    }
+
+    #[test]
+    fn recv_n_collects_replies_and_survives_dropped_senders() {
+        // Fan-out/fan-in shape of the query path: 3 replicas answer, one
+        // "dies" (its sender is dropped without sending).
+        let (tx, rx) = bounded::<u32>(4);
+        let replicas: Vec<Sender<u32>> = (0..4).map(|_| tx.clone()).collect();
+        drop(tx);
+        let mut handles = Vec::new();
+        for (i, rtx) in replicas.into_iter().enumerate() {
+            handles.push(thread::spawn(move || {
+                if i != 2 {
+                    rtx.send(i as u32).unwrap();
+                }
+                // replica 2 drops its sender silently
+            }));
+        }
+        let mut got = rx.recv_n(4);
+        for h in handles {
+            h.join().unwrap();
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 3], "3 answers, no deadlock on the 4th");
     }
 
     #[test]

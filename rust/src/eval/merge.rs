@@ -1,0 +1,131 @@
+//! Rank-aware merge of per-replica top-N lists — the coordinator half of
+//! the replicated-user read path (Section 4). A user's state lives on the
+//! `n_i` workers of its grid column; each replica answers a query with the
+//! ranked top-N of its *local* model, and the coordinator merges those
+//! lists into one global top-N.
+//!
+//! Merge key, per item: `(best rank across replicas, replica votes desc,
+//! item id)`. Best-rank-first preserves each replica's own ordering (an
+//! item a replica ranks above another stays above it unless a different
+//! replica disagrees more strongly), votes reward cross-replica agreement
+//! on ties, and the item-id tail makes the result fully deterministic.
+//!
+//! Items in `exclude` never appear — the caller passes the union of the
+//! user's rated items across *all* replicas, enforcing globally the
+//! "never recommend a consumed item" rule each replica can only enforce
+//! locally (a rating lands on exactly one worker, so the other replicas
+//! of the user have no idea the item was consumed).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::data::types::ItemId;
+
+/// Merge ranked per-replica lists into a global top-`n`.
+///
+/// Returns fewer than `n` items when the union of the (filtered) inputs
+/// is smaller than `n`; empty inputs merge to an empty list.
+pub fn merge_topn(
+    lists: &[Vec<ItemId>],
+    exclude: &HashSet<ItemId>,
+    n: usize,
+) -> Vec<ItemId> {
+    // item -> (best rank, replica votes)
+    let mut best: HashMap<ItemId, (usize, usize)> = HashMap::new();
+    for list in lists {
+        for (rank, &item) in list.iter().enumerate() {
+            if exclude.contains(&item) {
+                continue;
+            }
+            let entry = best.entry(item).or_insert((rank, 0));
+            entry.0 = entry.0.min(rank);
+            entry.1 += 1;
+        }
+    }
+    let mut scored: Vec<(usize, usize, ItemId)> = best
+        .into_iter()
+        .map(|(item, (rank, votes))| (rank, votes, item))
+        .collect();
+    scored.sort_unstable_by(|a, b| {
+        a.0.cmp(&b.0).then(b.1.cmp(&a.1)).then(a.2.cmp(&b.2))
+    });
+    scored.truncate(n);
+    scored.into_iter().map(|(_, _, item)| item).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_exclude() -> HashSet<ItemId> {
+        HashSet::new()
+    }
+
+    #[test]
+    fn single_list_is_identity_up_to_truncation() {
+        let list = vec![5u64, 3, 9, 1, 7];
+        assert_eq!(merge_topn(&[list.clone()], &no_exclude(), 10), list);
+        assert_eq!(merge_topn(&[list], &no_exclude(), 3), vec![5, 3, 9]);
+    }
+
+    #[test]
+    fn empty_inputs_merge_empty() {
+        assert!(merge_topn(&[], &no_exclude(), 10).is_empty());
+        assert!(merge_topn(&[vec![], vec![]], &no_exclude(), 10).is_empty());
+    }
+
+    #[test]
+    fn best_rank_across_replicas_wins() {
+        // Replica A ranks 100 first; replica B ranks 200 first and 100
+        // nowhere. 100 and 200 tie on best rank 0; A also lists 300 at
+        // rank 1, so 300 sorts after both.
+        let a = vec![100u64, 300];
+        let b = vec![200u64];
+        let merged = merge_topn(&[a, b], &no_exclude(), 10);
+        assert_eq!(merged, vec![100, 200, 300]);
+    }
+
+    #[test]
+    fn votes_break_rank_ties() {
+        // 7 appears at rank 1 on two replicas; 8 at rank 1 on one.
+        // 7 must come first among the rank-1 items.
+        let a = vec![1u64, 7];
+        let b = vec![2u64, 7];
+        let c = vec![3u64, 8];
+        let merged = merge_topn(&[a, b, c], &no_exclude(), 10);
+        let pos = |x: u64| merged.iter().position(|&i| i == x).unwrap();
+        assert!(pos(7) < pos(8), "{merged:?}");
+    }
+
+    #[test]
+    fn excluded_items_never_surface() {
+        let exclude: HashSet<ItemId> = [3u64, 9].into_iter().collect();
+        let merged =
+            merge_topn(&[vec![3u64, 1, 9, 2], vec![9u64, 3, 4]], &exclude, 10);
+        assert!(!merged.contains(&3));
+        assert!(!merged.contains(&9));
+        assert_eq!(merged.first(), Some(&1));
+    }
+
+    #[test]
+    fn deterministic_for_identical_inputs() {
+        let lists =
+            vec![vec![4u64, 8, 15], vec![16u64, 23, 42], vec![8u64, 42, 4]];
+        let a = merge_topn(&lists, &no_exclude(), 5);
+        let b = merge_topn(&lists, &no_exclude(), 5);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn no_duplicates_in_merge() {
+        let merged = merge_topn(
+            &[vec![1u64, 2, 3], vec![3u64, 2, 1], vec![2u64, 9]],
+            &no_exclude(),
+            10,
+        );
+        let set: HashSet<ItemId> = merged.iter().copied().collect();
+        assert_eq!(set.len(), merged.len(), "{merged:?}");
+    }
+
+    // The rank-order proptest for the merge lives with the other query-
+    // path properties in rust/tests/integration_cluster.rs.
+}

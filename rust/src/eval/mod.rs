@@ -1,8 +1,10 @@
 //! Evaluation: the prequential online protocol (Algorithm 4) and the
 //! metrics the experiment harness aggregates.
 
+pub mod merge;
 pub mod metrics;
 pub mod prequential;
 
+pub use merge::merge_topn;
 pub use metrics::{RunReport, WorkerReport};
-pub use prequential::{HitSample, MovingRecall, Prequential};
+pub use prequential::{HitSample, MovingRecall, Prequential, StepOutcome};

@@ -3,6 +3,8 @@
 //! recommendation for that user?) and then to train. Recall@N per event
 //! is 0/1; the paper reports a moving average over 5000-event windows.
 
+use std::time::Instant;
+
 use crate::algorithms::StreamingRecommender;
 use crate::data::types::Rating;
 
@@ -83,6 +85,20 @@ pub struct HitSample {
     pub hit: bool,
 }
 
+/// Outcome of one prequential step: the hit bit plus the wall-time split
+/// between the recommend (test) and update (train) halves. The split is
+/// plumbed into `WorkerReport::{recommend_ns, update_ns}` so the profile
+/// shows where a worker's time actually goes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepOutcome {
+    /// Was the rated item inside the pre-update top-N?
+    pub hit: bool,
+    /// Nanoseconds spent in `recommend()`.
+    pub recommend_ns: u64,
+    /// Nanoseconds spent in `update()`.
+    pub update_ns: u64,
+}
+
 /// Prequential evaluator: drives recommend-then-update for one worker.
 pub struct Prequential {
     top_n: usize,
@@ -94,18 +110,23 @@ impl Prequential {
         Self { top_n, recall: MovingRecall::new(window) }
     }
 
-    /// Algorithm 4 for one event. Returns whether the rated item was in
-    /// the top-N list recommended *before* the model update.
+    /// Algorithm 4 for one event. The hit is judged against the top-N list
+    /// recommended *before* the model update; both halves are timed
+    /// separately.
     pub fn step(
         &mut self,
         model: &mut dyn StreamingRecommender,
         event: &Rating,
-    ) -> bool {
+    ) -> StepOutcome {
+        let t0 = Instant::now();
         let recs = model.recommend(event.user, self.top_n);
+        let recommend_ns = t0.elapsed().as_nanos() as u64;
         let hit = recs.contains(&event.item);
         self.recall.push(hit);
+        let t1 = Instant::now();
         model.update(event);
-        hit
+        let update_ns = t1.elapsed().as_nanos() as u64;
+        StepOutcome { hit, recommend_ns, update_ns }
     }
 
     pub fn recall(&self) -> &MovingRecall {
@@ -175,12 +196,32 @@ mod tests {
             update_changes_list_to: Some(vec![7]),
         };
         let mut p = Prequential::new(10, 100);
-        let hit = p.step(&mut model, &Rating::new(1, 7, 5.0, 0));
-        assert!(!hit, "item must be tested against the pre-update model");
+        let out = p.step(&mut model, &Rating::new(1, 7, 5.0, 0));
+        assert!(!out.hit, "item must be tested against the pre-update model");
         assert_eq!(model.updated, vec![7], "update must still happen");
         // Next event: list is now [7].
-        let hit = p.step(&mut model, &Rating::new(1, 7, 5.0, 1));
-        assert!(hit);
+        let out = p.step(&mut model, &Rating::new(1, 7, 5.0, 1));
+        assert!(out.hit);
+    }
+
+    #[test]
+    fn step_reports_both_timing_halves() {
+        let mut model = Scripted {
+            list: vec![1, 2, 3],
+            updated: vec![],
+            update_changes_list_to: None,
+        };
+        let mut p = Prequential::new(10, 100);
+        let mut rec = 0u64;
+        let mut upd = 0u64;
+        for i in 0..50 {
+            let out = p.step(&mut model, &Rating::new(1, 2, 5.0, i));
+            rec += out.recommend_ns;
+            upd += out.update_ns;
+        }
+        // Both halves executed; on a coarse clock individual steps may
+        // read 0 ns, but 50 steps of real work accumulate something.
+        assert!(rec + upd > 0, "timing split must not be dead");
     }
 
     #[test]
@@ -192,7 +233,7 @@ mod tests {
         };
         let mut p = Prequential::new(10, 100);
         // Item 30 is in the scripted list but outside top-10.
-        assert!(!p.step(&mut model, &Rating::new(1, 30, 5.0, 0)));
-        assert!(p.step(&mut model, &Rating::new(1, 5, 5.0, 1)));
+        assert!(!p.step(&mut model, &Rating::new(1, 30, 5.0, 0)).hit);
+        assert!(p.step(&mut model, &Rating::new(1, 5, 5.0, 1)).hit);
     }
 }

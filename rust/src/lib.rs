@@ -25,20 +25,45 @@
 //! The [`runtime`] module loads the AOT artifacts via the PJRT CPU client;
 //! Python never runs on the request path.
 //!
-//! ## Quickstart
+//! ## Quickstart: the `Cluster` session API
+//!
+//! The system is built for *unbounded* streams: spawn the shared-nothing
+//! workers once, then interleave ingest (the learning loop), online
+//! recommendation queries (the serving loop), and live metrics for as
+//! long as the stream lasts. `recommend` fans each query out to all
+//! `n_i` replicas of the user and merges their local top-N lists into a
+//! global top-N (the paper's replicated-user read path).
 //!
 //! ```no_run
 //! use streamrec::config::{RunConfig, Topology};
-//! use streamrec::coordinator::run_pipeline;
+//! use streamrec::coordinator::Cluster;
 //! use streamrec::data::DatasetSpec;
 //!
 //! let events = DatasetSpec::parse("ml-like:50000", 42).unwrap()
 //!     .load().unwrap();
 //! let mut cfg = RunConfig::default();
 //! cfg.topology = Topology::new(2, 0).unwrap(); // n_i=2 -> 4 workers
-//! let report = run_pipeline(&cfg, &events, "quickstart").unwrap();
+//!
+//! let mut cluster = Cluster::spawn(&cfg).unwrap();
+//! let user = events[0].user;
+//! for chunk in events.chunks(10_000) {
+//!     cluster.ingest_batch(chunk).unwrap();          // learning loop
+//!     let recs = cluster.recommend(user, 10).unwrap(); // serving loop
+//!     let live = cluster.metrics().unwrap();           // no shutdown
+//!     println!("recall so far {:.4}, top-10 {recs:?}", live.recall);
+//! }
+//! let report = cluster.finish().unwrap(); // drain + join + final report
 //! println!("{}", report.summary());
 //! ```
+//!
+//! ## Migrating from `run_pipeline`
+//!
+//! The historical one-shot entry point survives with identical signature
+//! and semantics as a thin wrapper — `run_pipeline(&cfg, &events, label)`
+//! is exactly `Cluster::spawn_labeled(&cfg, label)?` +
+//! `ingest_batch(&events)?` + `finish()`. Keep it for batch experiments;
+//! switch to [`coordinator::Cluster`] when you need to query or observe
+//! the system while the stream is live.
 
 pub mod algorithms;
 pub mod benchutil;

@@ -13,8 +13,8 @@ pub mod rng;
 /// Monotonic nanosecond clock used by all metrics.
 #[inline]
 pub fn now_nanos() -> u64 {
+    use std::sync::OnceLock;
     use std::time::Instant;
-    use once_cell::sync::Lazy;
-    static START: Lazy<Instant> = Lazy::new(Instant::now);
-    START.elapsed().as_nanos() as u64
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_nanos() as u64
 }

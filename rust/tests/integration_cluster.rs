@@ -1,0 +1,269 @@
+//! Integration tests for the long-lived `Cluster` session API: the online
+//! serving path (replica fan-out + rank-aware merge), live metrics, and
+//! the compatibility contract with the one-shot `run_pipeline`.
+
+use std::collections::HashSet;
+
+use streamrec::config::{Algorithm, RunConfig, Topology};
+use streamrec::coordinator::{run_pipeline, Cluster, Router};
+use streamrec::data::synth::{SyntheticConfig, SyntheticStream};
+use streamrec::data::types::Rating;
+use streamrec::eval::merge_topn;
+use streamrec::util::proptest::forall;
+
+fn events(n: u64, seed: u64) -> Vec<Rating> {
+    SyntheticStream::new(SyntheticConfig::movielens_like(n, seed)).collect()
+}
+
+fn base_cfg(n_i: u64) -> RunConfig {
+    RunConfig {
+        topology: Topology::new(n_i, 0).unwrap(),
+        sample_every: 500,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn end_to_end_session_on_distributed_topology() {
+    // The acceptance shape: spawn on n_i=2 (4 workers), interleave
+    // ingest / recommend / metrics, then finish.
+    let evs = events(6000, 1);
+    let mut cluster = Cluster::spawn_labeled(&base_cfg(2), "e2e").unwrap();
+    assert_eq!(cluster.n_workers(), 4);
+    let hot = evs[0].user;
+    assert_eq!(cluster.router().user_workers(hot).len(), 2, "n_i replicas");
+
+    let mut answered = 0usize;
+    for chunk in evs.chunks(1000) {
+        cluster.ingest_batch(chunk).unwrap();
+        let recs = cluster.recommend(hot, 10).unwrap();
+        assert!(recs.len() <= 10);
+        answered += usize::from(!recs.is_empty());
+        let m = cluster.metrics().unwrap();
+        assert_eq!(m.processed, cluster.ingested());
+        assert_eq!(m.workers.len(), 4);
+    }
+    assert!(answered > 0, "hot user must get served eventually");
+
+    let report = cluster.finish().unwrap();
+    assert_eq!(report.events, 6000);
+    assert_eq!(report.n_workers, 4);
+    assert_eq!(
+        report.workers.iter().map(|w| w.processed).sum::<u64>(),
+        6000
+    );
+    assert!(report.avg_recall >= 0.0 && report.avg_recall <= 1.0);
+    assert_eq!(report.recall_curve.last().unwrap().0, 5999);
+}
+
+#[test]
+fn merged_topn_excludes_items_rated_on_any_replica() {
+    // A user's ratings land on different replicas (the item row decides),
+    // so no single worker knows the full consumed set — the merge must.
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let mut cfg = base_cfg(2);
+        cfg.algorithm = algo;
+        let evs = events(5000, 2);
+        let mut cluster = Cluster::spawn(&cfg).unwrap();
+        cluster.ingest_batch(&evs).unwrap();
+
+        // Collect the globally-rated set per user from the raw stream.
+        let mut users_seen: Vec<u64> = evs.iter().map(|e| e.user).collect();
+        users_seen.sort_unstable();
+        users_seen.dedup();
+        for &u in users_seen.iter().take(25) {
+            let rated: HashSet<u64> = evs
+                .iter()
+                .filter(|e| e.user == u)
+                .map(|e| e.item)
+                .collect();
+            let recs = cluster.recommend(u, 20).unwrap();
+            for r in &recs {
+                assert!(
+                    !rated.contains(r),
+                    "{}: item {r} rated by user {u} on some replica \
+                     but recommended anyway: {recs:?}",
+                    cfg.algorithm.name()
+                );
+            }
+        }
+        cluster.finish().unwrap();
+    }
+}
+
+#[test]
+fn recommend_is_deterministic_for_fixed_seed() {
+    let evs = events(4000, 3);
+    let run = || {
+        let mut cluster = Cluster::spawn(&base_cfg(2)).unwrap();
+        cluster.ingest_batch(&evs).unwrap();
+        let mut out = Vec::new();
+        for &u in &[evs[0].user, evs[1].user, evs[100].user] {
+            out.push(cluster.recommend(u, 10).unwrap());
+        }
+        cluster.finish().unwrap();
+        out
+    };
+    assert_eq!(run(), run(), "same seed + same stream => same answers");
+}
+
+#[test]
+fn unknown_user_gets_empty_list() {
+    let evs = events(2000, 4);
+    let mut cluster = Cluster::spawn(&base_cfg(2)).unwrap();
+    cluster.ingest_batch(&evs).unwrap();
+    // Synthetic streams draw users from a bounded universe; a huge id is
+    // unknown to every replica.
+    let unknown = u64::MAX - 7;
+    assert!(evs.iter().all(|e| e.user != unknown));
+    let recs = cluster.recommend(unknown, 10).unwrap();
+    assert!(recs.is_empty(), "cold-start user must get an empty list");
+    cluster.finish().unwrap();
+}
+
+#[test]
+fn query_fans_out_over_user_workers() {
+    // One recommend = one answered query on each of the user's n_i
+    // replicas (and nowhere else), observable via per-worker counters.
+    let evs = events(3000, 5);
+    let mut cluster = Cluster::spawn(&base_cfg(2)).unwrap();
+    cluster.ingest_batch(&evs).unwrap();
+    let user = evs[0].user;
+    let replicas: HashSet<usize> =
+        cluster.router().user_workers(user).into_iter().collect();
+    assert_eq!(replicas.len(), 2);
+    let _ = cluster.recommend(user, 10).unwrap();
+    let m = cluster.metrics().unwrap();
+    for w in &m.workers {
+        let expected = u64::from(replicas.contains(&w.worker_id));
+        assert_eq!(
+            w.queries, expected,
+            "worker {} answered {} queries, expected {expected}",
+            w.worker_id, w.queries
+        );
+    }
+    assert_eq!(m.queries, 2);
+    cluster.finish().unwrap();
+}
+
+#[test]
+fn session_report_matches_one_shot_wrapper() {
+    // run_pipeline is now spawn + ingest_batch + finish; a hand-driven
+    // session over the same stream must agree on every deterministic
+    // aggregate.
+    let evs = events(3000, 6);
+    let one_shot = run_pipeline(&base_cfg(2), &evs, "wrap").unwrap();
+    let mut cluster = Cluster::spawn_labeled(&base_cfg(2), "hand").unwrap();
+    for chunk in evs.chunks(700) {
+        cluster.ingest_batch(chunk).unwrap();
+    }
+    let session = cluster.finish().unwrap();
+    assert_eq!(session.events, one_shot.events);
+    assert_eq!(session.hits, one_shot.hits);
+    assert_eq!(session.recall_curve, one_shot.recall_curve);
+    for (a, b) in session.workers.iter().zip(one_shot.workers.iter()) {
+        assert_eq!(a.processed, b.processed);
+        assert_eq!(a.hits, b.hits);
+        assert_eq!(a.state, b.state);
+    }
+}
+
+#[test]
+fn serving_does_not_perturb_learning() {
+    // Interleaving queries must not change what the models learn: the
+    // final report of a query-heavy session equals a silent one. This is
+    // an ISGD (default-config) guarantee — cosine's bounded-staleness
+    // mode rebuilds read caches on query, shifting rebuild timing.
+    let evs = events(3000, 7);
+    let silent = {
+        let mut c = Cluster::spawn(&base_cfg(2)).unwrap();
+        c.ingest_batch(&evs).unwrap();
+        c.finish().unwrap()
+    };
+    let noisy = {
+        let mut c = Cluster::spawn(&base_cfg(2)).unwrap();
+        for chunk in evs.chunks(250) {
+            c.ingest_batch(chunk).unwrap();
+            let _ = c.recommend(chunk[0].user, 10).unwrap();
+            let _ = c.metrics().unwrap();
+        }
+        c.finish().unwrap()
+    };
+    assert_eq!(silent.hits, noisy.hits, "queries must be read-only");
+    assert_eq!(silent.recall_curve, noisy.recall_curve);
+    for (a, b) in silent.workers.iter().zip(noisy.workers.iter()) {
+        assert_eq!(a.state, b.state);
+    }
+}
+
+#[test]
+fn property_merge_of_replica_lists_preserves_rank_order() {
+    // The satellite proptest: merged output is non-decreasing in
+    // best-rank across replicas, and a single replica's list passes
+    // through untouched (minus exclusions, capped at n).
+    forall("cluster_merge_rank_order", 200, |rng| {
+        let n_lists = 1 + rng.next_bounded(4) as usize;
+        let lists: Vec<Vec<u64>> = (0..n_lists)
+            .map(|_| {
+                let len = rng.next_bounded(15) as usize;
+                let mut l = Vec::new();
+                for _ in 0..len {
+                    let item = rng.next_bounded(40);
+                    if !l.contains(&item) {
+                        l.push(item);
+                    }
+                }
+                l
+            })
+            .collect();
+        let exclude: HashSet<u64> =
+            (0..rng.next_bounded(6)).map(|_| rng.next_bounded(40)).collect();
+        let n = 1 + rng.next_bounded(15) as usize;
+        let merged = merge_topn(&lists, &exclude, n);
+
+        assert!(merged.len() <= n);
+        let best_rank = |item: u64| {
+            lists
+                .iter()
+                .filter_map(|l| l.iter().position(|&x| x == item))
+                .min()
+                .expect("merged items come from the inputs")
+        };
+        for pair in merged.windows(2) {
+            assert!(
+                best_rank(pair[0]) <= best_rank(pair[1]),
+                "rank order violated: {merged:?} from {lists:?}"
+            );
+        }
+        for item in &merged {
+            assert!(!exclude.contains(item), "excluded item {item} surfaced");
+        }
+        // Single-replica degenerate case: order preserved exactly.
+        if n_lists == 1 {
+            let want: Vec<u64> = lists[0]
+                .iter()
+                .copied()
+                .filter(|i| !exclude.contains(i))
+                .take(n)
+                .collect();
+            assert_eq!(merged, want);
+        }
+    });
+}
+
+#[test]
+fn router_and_cluster_agree_on_replica_sets() {
+    // The serving path promises fan-out over Router::user_workers; the
+    // cluster's router accessor must expose the same grid the standalone
+    // router computes.
+    let cfg = base_cfg(4);
+    let standalone = Router::new(cfg.topology);
+    let cluster = Cluster::spawn(&cfg).unwrap();
+    for u in 0..50u64 {
+        assert_eq!(
+            cluster.router().user_workers(u),
+            standalone.user_workers(u)
+        );
+    }
+    cluster.finish().unwrap();
+}
