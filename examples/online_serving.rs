@@ -9,6 +9,25 @@
 //! items the user has rated on any replica. Live metrics snapshots show
 //! learning progress without stopping anything.
 //!
+//! # Throughput tuning
+//!
+//! Ingest is micro-batched: `ingest`/`ingest_batch` buffer routed events
+//! per worker and flush a buffer with one bulk channel send once it holds
+//! `ingest_batch_size` events (`engine.ingest_batch_size` in TOML). Two
+//! things to know when tuning it:
+//!
+//! * **The flush-on-query rule** means you can raise it freely without
+//!   losing read-your-writes: every buffer is flushed before a
+//!   `recommend` or `metrics` probe goes out, so a query always observes
+//!   all prior ingest — results are identical at any batch size.
+//! * **Prefer `ingest_batch` over per-event `ingest`** when you already
+//!   hold a slice of events (as below): identical semantics, but the
+//!   buffers fill in one tight routing loop.
+//!
+//! Sweep the knob with `cargo run --release --bench pipeline` (records
+//! `BENCH_ingest.json`); the final report's `backpressure_ns` /
+//! `recv_blocked_ns` / `mean_send_batch` show what the transport paid.
+//!
 //! ```text
 //! cargo run --release --example online_serving
 //! ```
@@ -24,6 +43,9 @@ fn main() -> anyhow::Result<()> {
     let cfg = RunConfig {
         topology: Topology::new(2, 0)?,
         sample_every: 1000,
+        // Micro-batched ingest: flushed early by every recommend/metrics
+        // probe below, so serving freshness is unaffected.
+        ingest_batch_size: 256,
         ..RunConfig::default()
     };
     let mut cluster = Cluster::spawn_labeled(&cfg, "online-serving")?;
@@ -74,6 +96,13 @@ fn main() -> anyhow::Result<()> {
         report.workers.iter().map(|w| w.recommend_ns).sum::<u64>() as f64
             / 1e6,
         report.workers.iter().map(|w| w.update_ns).sum::<u64>() as f64 / 1e6,
+    );
+    println!(
+        "transport: backpressure {:.1}ms, recv wait {:.1}ms, \
+         mean send batch {:.1}",
+        report.backpressure_ns as f64 / 1e6,
+        report.recv_blocked_ns as f64 / 1e6,
+        report.mean_send_batch,
     );
     Ok(())
 }

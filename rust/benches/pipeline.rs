@@ -2,7 +2,10 @@
 //!
 //! * DISGD throughput, central vs n_i ∈ {2,4,6}, ± forgetting (Fig 8)
 //! * DICS throughput, central (capped) vs distributed (Fig 14)
-//! * channel send/recv cost (engine substrate)
+//! * channel send/recv cost, per-message vs bulk (engine substrate)
+//! * `ingest_batch_size` sweep at n_i=2 — the micro-batched data plane's
+//!   headline number; results are recorded in `BENCH_ingest.json`
+//!   (written to the current working directory).
 //!
 //! These are the criterion-equivalent end-to-end benches (the offline
 //! build has no criterion; `benchutil` provides warmup + p50/p99).
@@ -13,12 +16,14 @@ use streamrec::config::{Algorithm, Forgetting, RunConfig, Topology};
 use streamrec::coordinator::run_pipeline;
 use streamrec::data::DatasetSpec;
 use streamrec::engine::bounded;
+use streamrec::util::json::{num, obj, s, to_string, Json};
 
 fn main() -> anyhow::Result<()> {
     println!("== pipeline benchmarks (Fig 8 / Fig 14 shape) ==");
     let events = DatasetSpec::parse("nf-like:30000", 21)?.load()?;
 
-    // Channel substrate cost first (context for the numbers below).
+    // Channel substrate cost first (context for the numbers below):
+    // per-message sends vs bulk send_many + draining recv_many.
     {
         let (tx, rx) = bounded::<u64>(4096);
         let h = std::thread::spawn(move || {
@@ -37,10 +42,89 @@ fn main() -> anyhow::Result<()> {
         let received = h.join().unwrap();
         let dt = t0.elapsed().as_secs_f64();
         println!(
-            "channel/send_recv: {:.1} M msgs/s (received {received})",
+            "channel/send_recv:           {:.1} M msgs/s (received {received})",
             count as f64 / dt / 1e6
         );
     }
+    {
+        let (tx, rx) = bounded::<u64>(4096);
+        let h = std::thread::spawn(move || {
+            let mut n = 0u64;
+            let mut buf = Vec::new();
+            while rx.recv_many(&mut buf, usize::MAX) {
+                n += buf.len() as u64;
+                buf.clear();
+            }
+            n
+        });
+        let t0 = Instant::now();
+        let count = 2_000_000u64;
+        let mut batch = Vec::with_capacity(256);
+        for i in 0..count {
+            batch.push(i);
+            if batch.len() == 256 {
+                tx.send_many(&mut batch).unwrap();
+            }
+        }
+        tx.send_many(&mut batch).unwrap();
+        drop(tx);
+        let received = h.join().unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "channel/send_many@256+drain: {:.1} M msgs/s (received {received})",
+            count as f64 / dt / 1e6
+        );
+    }
+
+    // ingest_batch_size sweep (ISSUE 2 acceptance): ISGD at n_i=2 on the
+    // synthetic stream, one full pipeline per batch size. Recorded in
+    // BENCH_ingest.json so wins stay attributable across PRs.
+    println!(
+        "\n{:>16} {:>12} {:>12} {:>9} {:>14} {:>14}",
+        "ingest_batch", "ev/s", "mean batch", "speedup", "send blocked",
+        "recv wait"
+    );
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    let mut base_thpt = None;
+    for batch_size in [1usize, 8, 64, 256] {
+        let cfg = RunConfig {
+            topology: Topology::new(2, 0)?,
+            sample_every: 10_000,
+            ingest_batch_size: batch_size,
+            ..RunConfig::default()
+        };
+        let r = run_pipeline(&cfg, &events, &format!("bench-bs{batch_size}"))?;
+        if base_thpt.is_none() {
+            base_thpt = Some(r.throughput);
+        }
+        let speedup = r.throughput / base_thpt.unwrap().max(1e-9);
+        println!(
+            "{batch_size:>16} {:>12.0} {:>12.1} {speedup:>8.2}x {:>11.1} ms \
+             {:>11.1} ms",
+            r.throughput,
+            r.mean_send_batch,
+            r.backpressure_ns as f64 / 1e6,
+            r.recv_blocked_ns as f64 / 1e6,
+        );
+        sweep_rows.push(obj(vec![
+            ("ingest_batch_size", num(batch_size as f64)),
+            ("events", num(r.events as f64)),
+            ("throughput_ev_s", num(r.throughput)),
+            ("speedup_vs_unbatched", num(speedup)),
+            ("mean_send_batch", num(r.mean_send_batch)),
+            ("backpressure_ns", num(r.backpressure_ns as f64)),
+            ("recv_blocked_ns", num(r.recv_blocked_ns as f64)),
+        ]));
+    }
+    let doc = obj(vec![
+        ("bench", s("ingest_batch_size sweep")),
+        ("dataset", s("nf-like:30000 (seed 21)")),
+        ("algorithm", s("isgd")),
+        ("n_i", num(2.0)),
+        ("rows", Json::Arr(sweep_rows)),
+    ]);
+    std::fs::write("BENCH_ingest.json", to_string(&doc) + "\n")?;
+    println!("(sweep recorded in BENCH_ingest.json)");
 
     println!(
         "\n{:8} {:>4} {:>10} {:>12} {:>12} {:>10}",

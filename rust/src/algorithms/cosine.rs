@@ -81,6 +81,7 @@ pub struct CosineModel {
     cand_scratch: Vec<ItemId>,
     rated_scratch: HashSet<ItemId>,
     sims_scratch: Vec<(f32, ItemId)>,
+    scored_scratch: Vec<(f32, f32, ItemId)>,
     pub updates: u64,
     /// Neighborhood rebuilds performed (perf counter).
     pub rebuilds: u64,
@@ -110,6 +111,7 @@ impl CosineModel {
             cand_scratch: Vec::new(),
             rated_scratch: HashSet::new(),
             sims_scratch: Vec::new(),
+            scored_scratch: Vec::new(),
             updates: 0,
             rebuilds: 0,
         }
@@ -242,9 +244,11 @@ impl StreamingRecommender for CosineModel {
         let Some(history) = self.users.peek(&user) else {
             return Vec::new();
         };
-        // Detach the rated set and candidate list from &self.
-        let rated = std::mem::take(&mut self.rated_scratch);
-        let mut rated = rated;
+        // Detach the rated set and candidate list from &self. Once
+        // `rated` is a detached local, iterating it while calling
+        // `fresh_neighborhood` (&mut self) is fine — no cloned Vec copy
+        // of it is needed.
+        let mut rated = std::mem::take(&mut self.rated_scratch);
         rated.clear();
         rated.extend(history.iter().copied());
         let mut candidates = std::mem::take(&mut self.cand_scratch);
@@ -263,8 +267,7 @@ impl StreamingRecommender for CosineModel {
         } else {
             // TencentRec-style: candidates come from the *similar-item
             // lists* of the rated items (bounded at |rated| * k).
-            let rated_vec: Vec<ItemId> = rated.iter().copied().collect();
-            for j in rated_vec {
+            for &j in rated.iter() {
                 if let Some(nb) = self.fresh_neighborhood(j) {
                     for &(q, _) in &nb.neighbors {
                         if !rated.contains(&q) {
@@ -277,9 +280,9 @@ impl StreamingRecommender for CosineModel {
         candidates.sort_unstable();
         candidates.dedup();
 
-        let mut scored: Vec<(f32, f32, ItemId)> = Vec::new();
-        for idx in 0..candidates.len() {
-            let p = candidates[idx];
+        let mut scored = std::mem::take(&mut self.scored_scratch);
+        scored.clear();
+        for &p in &candidates {
             let (est, rated_mass) = self.estimate(p, &rated);
             if est > 0.0 {
                 scored.push((est, rated_mass, p));
@@ -288,11 +291,13 @@ impl StreamingRecommender for CosineModel {
         scored.sort_unstable_by(|a, b| {
             b.0.total_cmp(&a.0).then(b.1.total_cmp(&a.1)).then(a.2.cmp(&b.2))
         });
-        scored.truncate(n);
+        let out: Vec<ItemId> =
+            scored.iter().take(n).map(|&(_, _, p)| p).collect();
         // Return the scratch buffers.
         self.cand_scratch = candidates;
         self.rated_scratch = rated;
-        scored.into_iter().map(|(_, _, p)| p).collect()
+        self.scored_scratch = scored;
+        out
     }
 
     fn rated_items(&self, user: UserId) -> Vec<ItemId> {
@@ -318,32 +323,32 @@ impl StreamingRecommender for CosineModel {
         } else {
             *self.dirt.entry(item).or_insert(0) += 1;
         }
-        // Co-occurrence with the user's history, both directions.
-        let history: Vec<ItemId> = self
-            .users
-            .peek(&event.user)
-            .cloned()
-            .unwrap_or_default();
-        for &j in &history {
-            if j == item {
-                continue;
-            }
-            *self
-                .pairs
-                .entry(item)
-                .or_default()
-                .entry(j)
-                .or_insert(0) += 1;
-            *self
-                .pairs
-                .entry(j)
-                .or_default()
-                .entry(item)
-                .or_insert(0) += 1;
-            if self.strict {
-                self.dirty.insert(j);
-            } else {
-                *self.dirt.entry(j).or_insert(0) += 1;
+        // Co-occurrence with the user's history, both directions. The
+        // history borrow (`self.users`) and the graph mutations
+        // (`self.pairs` / `self.dirty` / `self.dirt`) touch disjoint
+        // fields, so no clone of the history is needed.
+        if let Some(history) = self.users.peek(&event.user) {
+            for &j in history {
+                if j == item {
+                    continue;
+                }
+                *self
+                    .pairs
+                    .entry(item)
+                    .or_default()
+                    .entry(j)
+                    .or_insert(0) += 1;
+                *self
+                    .pairs
+                    .entry(j)
+                    .or_default()
+                    .entry(item)
+                    .or_insert(0) += 1;
+                if self.strict {
+                    self.dirty.insert(j);
+                } else {
+                    *self.dirt.entry(j).or_insert(0) += 1;
+                }
             }
         }
         // Append to history (first occurrence only).

@@ -166,6 +166,14 @@ pub struct RunConfig {
     pub cosine_strict: bool,
     /// Bounded channel capacity between router and each worker.
     pub channel_capacity: usize,
+    /// Coordinator-side micro-batch size: `Cluster::ingest` buffers
+    /// routed envelopes per worker and flushes a worker's buffer with one
+    /// bulk channel send once it holds this many events (1 = unbatched,
+    /// event-at-a-time). Read-your-writes ordering is preserved at any
+    /// value: every buffer is flushed before a query or metrics probe is
+    /// sent and in `finish()`. Bench-tuned default; sweep it with
+    /// `cargo run --release --bench pipeline` (BENCH_ingest.json).
+    pub ingest_batch_size: usize,
     /// Emit a recall sample every this many events per worker.
     pub sample_every: usize,
     /// RNG seed for model init.
@@ -189,6 +197,7 @@ impl Default for RunConfig {
             neighbors_k: 10,
             cosine_strict: false,
             channel_capacity: 4096,
+            ingest_batch_size: 64,
             sample_every: 100,
             seed: 42,
             artifacts_dir: "artifacts".to_string(),
@@ -278,6 +287,7 @@ impl RunConfig {
         num!("model.lambda", cfg.lambda, f32);
         num!("model.neighbors_k", cfg.neighbors_k, usize);
         num!("engine.channel_capacity", cfg.channel_capacity, usize);
+        num!("engine.ingest_batch_size", cfg.ingest_batch_size, usize);
         if let Some(v) = get("run.artifacts_dir") {
             cfg.artifacts_dir = v.str()?.to_string();
         }
@@ -446,6 +456,17 @@ mod tests {
         assert_eq!(cfg.latent_k, 10);
         assert!((cfg.eta - 0.05).abs() < 1e-9);
         assert!((cfg.lambda - 0.01).abs() < 1e-9);
+        assert!(cfg.ingest_batch_size >= 1);
+    }
+
+    #[test]
+    fn parses_engine_section() {
+        let cfg = RunConfig::from_toml(
+            "[engine]\nchannel_capacity = 128\ningest_batch_size = 256",
+        )
+        .unwrap();
+        assert_eq!(cfg.channel_capacity, 128);
+        assert_eq!(cfg.ingest_batch_size, 256);
     }
 
     #[test]

@@ -27,6 +27,31 @@
 //! every event ingested before it (per worker), because it queues behind
 //! them.
 //!
+//! # The batched data plane
+//!
+//! The transport is micro-batched end to end, because per-event channel
+//! crossings (one mutex acquisition + one condvar wakeup each) are what
+//! caps ingest throughput once the models are fast:
+//!
+//! * **Coordinator side** — [`Cluster::ingest`] does not send; it appends
+//!   the routed envelope to a per-worker *route buffer* and flushes that
+//!   worker's buffer with one bulk [`Sender::send_many`] (one lock, one
+//!   wakeup) when it reaches `cfg.ingest_batch_size`.
+//! * **Worker side** — the worker loop drains everything queued in one
+//!   critical section ([`Receiver::recv_many`]): wake once, process a
+//!   whole window of envelopes in FIFO order. Prequential accounting
+//!   stays strictly per-event; only the transport is batched.
+//! * **Ordering is batch-size-invariant** — every route buffer is
+//!   flushed before any `Query` or `MetricsSnapshot` is sent and in
+//!   [`Cluster::finish`], so a query still observes every event ingested
+//!   before it and the drain guarantee is untouched. Reports, hit
+//!   sequences, and recommendations are identical for any
+//!   `ingest_batch_size` (property-tested in
+//!   `tests/batching_equivalence.rs`).
+//!
+//! Per-event semantics are unchanged; `ingest_batch_size = 1` degenerates
+//! to the old send-per-event plane.
+//!
 //! # The serving path (replicated-user read)
 //!
 //! A user's state is replicated across the `n_i` workers of its grid
@@ -113,7 +138,8 @@ pub struct ClusterMetrics {
     /// Events accepted by [`Cluster::ingest`] so far.
     pub ingested: u64,
     /// Events fully processed across workers (== `ingested` at the moment
-    /// the snapshot is answered, thanks to per-worker FIFO ordering).
+    /// the snapshot is answered: the probe rides behind the flushed
+    /// buffers on the per-worker FIFO).
     pub processed: u64,
     /// Prequential hits so far.
     pub hits: u64,
@@ -121,6 +147,17 @@ pub struct ClusterMetrics {
     pub recall: f64,
     /// Serving queries answered so far.
     pub queries: u64,
+    /// Total ns senders spent blocked on backpressure so far.
+    pub backpressure_ns: u64,
+    /// Total ns worker receivers spent waiting for messages so far.
+    pub recv_blocked_ns: u64,
+    /// Mean messages per channel send across workers (1.0 = unbatched;
+    /// tracks how much transport cost `ingest_batch_size` amortizes).
+    /// Counts *all* data-channel sends: query/snapshot probes and the
+    /// partial flushes they force are singletons, so probe-heavy
+    /// sessions read lower than their event batching — pure ingest runs
+    /// (the bench) read clean.
+    pub mean_send_batch: f64,
     /// Per-worker detail, sorted by worker id.
     pub workers: Vec<WorkerSnapshot>,
 }
@@ -130,6 +167,12 @@ pub struct Cluster {
     label: String,
     router: Router,
     worker_txs: Vec<Sender<WorkerMsg>>,
+    /// Per-worker route buffers: envelopes accumulate here and move in
+    /// bulk (`send_many`) once a buffer reaches `batch_size` — or earlier
+    /// when a query/metrics probe needs read-your-writes ordering.
+    route_bufs: Vec<Vec<WorkerMsg>>,
+    /// Flush threshold (`cfg.ingest_batch_size`, clamped to >= 1).
+    batch_size: usize,
     handles: Vec<WorkerHandle<Result<WorkerReport>>>,
     collector: Option<WorkerHandle<(Vec<(u64, f64)>, u64)>>,
     /// Wall clock starts at the first ingest (matches the old
@@ -184,10 +227,15 @@ impl Cluster {
             collect(col_rx, recall_window, sample_every)
         });
 
+        let batch_size = cfg.ingest_batch_size.max(1);
+        let route_bufs =
+            (0..n_c).map(|_| Vec::with_capacity(batch_size)).collect();
         Ok(Self {
             label: label.to_string(),
             router,
             worker_txs,
+            route_bufs,
+            batch_size,
             handles,
             collector: Some(collector),
             started: None,
@@ -206,13 +254,21 @@ impl Cluster {
         &self.router
     }
 
-    /// Events accepted so far.
+    /// Events accepted so far (including events still in route buffers —
+    /// they are on the per-worker FIFO before any later query or probe).
     pub fn ingested(&self) -> u64 {
         self.seq
     }
 
-    /// Push one event through the router to its worker. Blocks when the
-    /// target worker's channel is full (backpressure).
+    /// Route one event into its worker's buffer; the buffer moves to the
+    /// worker in one bulk send once it holds `ingest_batch_size` events.
+    /// Blocks only when a flush hits a full worker channel (backpressure).
+    ///
+    /// Error reporting is flush-grained: an `Ok` means the event is
+    /// accepted (buffered or sent), and a dead worker surfaces at the
+    /// flush that hits it — up to `ingest_batch_size - 1` events after
+    /// the death — or at the next query/metrics/finish, whichever comes
+    /// first.
     pub fn ingest(&mut self, rating: Rating) -> Result<()> {
         if self.started.is_none() {
             self.started = Some(Instant::now());
@@ -221,17 +277,44 @@ impl Cluster {
         let target = self.router.route(rating.user, rating.item);
         self.route_ns += t0.elapsed().as_nanos() as u64;
         let env = Envelope { seq: self.seq, rating };
-        if self.worker_txs[target].send(WorkerMsg::Event(env)).is_err() {
-            anyhow::bail!("worker {target} died mid-stream");
-        }
+        self.route_bufs[target].push(WorkerMsg::Event(env));
         self.seq += 1;
+        if self.route_bufs[target].len() >= self.batch_size {
+            self.flush_worker(target)?;
+        }
         Ok(())
     }
 
-    /// Ingest a slice of events in stream order.
+    /// Ingest a slice of events in stream order. The tail that does not
+    /// fill a route buffer stays buffered; it is flushed by the next
+    /// query/metrics probe, the next ingest that fills the buffer, or
+    /// [`Cluster::finish`].
     pub fn ingest_batch(&mut self, events: &[Rating]) -> Result<()> {
         for &rating in events {
             self.ingest(rating)?;
+        }
+        Ok(())
+    }
+
+    /// Bulk-send one worker's route buffer (one lock, one wakeup).
+    fn flush_worker(&mut self, wid: usize) -> Result<()> {
+        if self.route_bufs[wid].is_empty() {
+            return Ok(());
+        }
+        let buf = &mut self.route_bufs[wid];
+        if self.worker_txs[wid].send_many(buf).is_err() {
+            anyhow::bail!("worker {wid} died mid-stream");
+        }
+        Ok(())
+    }
+
+    /// Flush every route buffer. Runs before any `Query` or
+    /// `MetricsSnapshot` send and in [`Cluster::finish`] so reads keep
+    /// their read-your-writes guarantee: the probe queues behind every
+    /// previously ingested event on each per-worker FIFO.
+    fn flush_all(&mut self) -> Result<()> {
+        for wid in 0..self.route_bufs.len() {
+            self.flush_worker(wid)?;
         }
         Ok(())
     }
@@ -245,7 +328,12 @@ impl Cluster {
     /// rank-aware into a global top-N that excludes items the user has
     /// rated on *any* replica. A user unknown to every replica yields an
     /// empty list (cold start).
-    pub fn recommend(&self, user: UserId, n: usize) -> Result<Vec<ItemId>> {
+    ///
+    /// Read-your-writes: all route buffers are flushed first, so the
+    /// query queues behind every previously ingested event — including
+    /// events that were still buffered — on each replica's FIFO.
+    pub fn recommend(&mut self, user: UserId, n: usize) -> Result<Vec<ItemId>> {
+        self.flush_all()?;
         let replicas = self.router.user_workers(user);
         // Over-fetch per replica: a replica cannot know which of its
         // candidates the user consumed on *other* replicas, and the global
@@ -281,10 +369,11 @@ impl Cluster {
     }
 
     /// Live metrics without shutdown: every worker answers a snapshot
-    /// probe; the probe queues behind already-ingested events (per-worker
-    /// FIFO), so the aggregate reflects the whole prefix of the stream
-    /// accepted before this call.
-    pub fn metrics(&self) -> Result<ClusterMetrics> {
+    /// probe; route buffers are flushed first and the probe queues behind
+    /// the flushed events (per-worker FIFO), so the aggregate reflects
+    /// the whole prefix of the stream accepted before this call.
+    pub fn metrics(&mut self) -> Result<ClusterMetrics> {
+        self.flush_all()?;
         let (reply_tx, reply_rx) =
             bounded::<WorkerSnapshot>(self.worker_txs.len());
         let mut asked = 0usize;
@@ -300,14 +389,34 @@ impl Cluster {
         let processed: u64 = workers.iter().map(|w| w.processed).sum();
         let hits: u64 = workers.iter().map(|w| w.hits).sum();
         let queries: u64 = workers.iter().map(|w| w.queries).sum();
+        let chan = self.channel_stats();
         Ok(ClusterMetrics {
             ingested: self.seq,
             processed,
             hits,
             recall: hits as f64 / (processed.max(1)) as f64,
             queries,
+            backpressure_ns: chan.blocked_ns,
+            recv_blocked_ns: chan.recv_blocked_ns,
+            mean_send_batch: chan.mean_send_batch(),
             workers,
         })
+    }
+
+    /// Aggregate channel counters across the per-worker data channels.
+    fn channel_stats(&self) -> crate::engine::ChannelStats {
+        let mut total = crate::engine::ChannelStats::default();
+        for tx in &self.worker_txs {
+            let st = tx.metrics();
+            total.sent += st.sent;
+            total.send_batches += st.send_batches;
+            total.blocked_ns += st.blocked_ns;
+            total.recv_blocked_ns += st.recv_blocked_ns;
+            total.received += st.received;
+            total.recv_batches += st.recv_batches;
+            total.high_water = total.high_water.max(st.high_water);
+        }
+        total
     }
 
     /// Drain in-flight events, join workers and collector, and assemble
@@ -320,8 +429,15 @@ impl Cluster {
     /// *session* throughput. Only a pure ingest run (what `run_pipeline`
     /// does) reads as ingest throughput.
     pub fn finish(mut self) -> Result<RunReport> {
-        let backpressure_ns: u64 =
-            self.worker_txs.iter().map(|tx| tx.metrics().1).sum();
+        // Flush the buffered tail first — the drain guarantee covers every
+        // accepted event. A flush failure means a worker already died; keep
+        // going so the join below surfaces the root cause.
+        if let Err(e) = self.flush_all() {
+            log::warn!("finish: final flush failed ({e}); joining workers");
+        }
+        // Snapshot channel counters before closing (excludes the workers'
+        // final idle wait between last event and shutdown).
+        let chan = self.channel_stats();
         // Close worker inputs; workers drain and report via join.
         self.worker_txs.clear();
         let mut workers: Vec<WorkerReport> =
@@ -351,13 +467,25 @@ impl Cluster {
             recall_curve,
             workers,
             route_ns_per_event: self.route_ns as f64 / events.max(1) as f64,
-            backpressure_ns,
+            backpressure_ns: chan.blocked_ns,
+            recv_blocked_ns: chan.recv_blocked_ns,
+            mean_send_batch: chan.mean_send_batch(),
         })
     }
 }
 
 /// Worker body: prequential learning loop + serving + snapshots over one
 /// local model.
+///
+/// Drain-based: each wakeup moves *everything* queued into a local inbox
+/// in one critical section ([`Receiver::recv_many`]), then works through
+/// it in FIFO order — the train loop stays per-event (prequential
+/// accounting is unchanged) but lock transitions and condvar wakeups are
+/// amortized over the window, and the ISGD/cosine update loops run
+/// back-to-back over a resident inbox instead of interleaving with
+/// channel crossings. Queries and snapshots sit at their FIFO position
+/// inside the drained window, so they observe exactly the events
+/// ingested before them.
 fn worker_loop(
     wid: usize,
     cfg: &RunConfig,
@@ -369,49 +497,54 @@ fn worker_loop(
     let mut clock = ForgetClock::new(cfg.forgetting);
     let mut latency = Histogram::new();
     let mut batch: Vec<HitSample> = Vec::with_capacity(256);
+    let mut inbox: Vec<WorkerMsg> =
+        Vec::with_capacity(cfg.ingest_batch_size.clamp(1, 4096));
     let mut processed = 0u64;
     let mut evicted = 0u64;
     let mut queries = 0u64;
     let mut recommend_ns = 0u64;
     let mut update_ns = 0u64;
 
-    while let Some(msg) = rx.recv() {
-        match msg {
-            WorkerMsg::Event(env) => {
-                let out = preq.step(model.as_mut(), &env.rating);
-                latency.record(out.recommend_ns + out.update_ns);
-                recommend_ns += out.recommend_ns;
-                update_ns += out.update_ns;
-                processed += 1;
-                batch.push(HitSample { seq: env.seq, hit: out.hit });
-                if batch.len() >= 256 {
-                    let full = std::mem::replace(
-                        &mut batch,
-                        Vec::with_capacity(256),
-                    );
-                    let _ = col_tx.send(CollectorMsg::Hits(full));
+    while rx.recv_many(&mut inbox, usize::MAX) {
+        for msg in inbox.drain(..) {
+            match msg {
+                WorkerMsg::Event(env) => {
+                    let out = preq.step(model.as_mut(), &env.rating);
+                    latency.record(out.recommend_ns + out.update_ns);
+                    recommend_ns += out.recommend_ns;
+                    update_ns += out.update_ns;
+                    processed += 1;
+                    batch.push(HitSample { seq: env.seq, hit: out.hit });
+                    if batch.len() >= 256 {
+                        let full = std::mem::replace(
+                            &mut batch,
+                            Vec::with_capacity(256),
+                        );
+                        let _ = col_tx.send(CollectorMsg::Hits(full));
+                    }
+                    if let Some(kind) = clock.on_event(env.rating.ts) {
+                        evicted += model.sweep(kind);
+                    }
                 }
-                if let Some(kind) = clock.on_event(env.rating.ts) {
-                    evicted += model.sweep(kind);
+                WorkerMsg::Query { user, n, reply } => {
+                    // Serving never trains the model and never enters the
+                    // prequential accounting. (Cosine fast mode may
+                    // rebuild read-side neighborhood caches here; see
+                    // WorkerMsg docs.)
+                    queries += 1;
+                    let items = model.recommend(user, n);
+                    let rated = model.rated_items(user);
+                    let _ = reply.send(ReplicaAnswer { items, rated });
                 }
-            }
-            WorkerMsg::Query { user, n, reply } => {
-                // Serving never trains the model and never enters the
-                // prequential accounting. (Cosine fast mode may rebuild
-                // read-side neighborhood caches here; see WorkerMsg docs.)
-                queries += 1;
-                let items = model.recommend(user, n);
-                let rated = model.rated_items(user);
-                let _ = reply.send(ReplicaAnswer { items, rated });
-            }
-            WorkerMsg::MetricsSnapshot { reply } => {
-                let _ = reply.send(WorkerSnapshot {
-                    worker_id: wid,
-                    processed,
-                    hits: preq.recall().hits(),
-                    queries,
-                    state: model.state_sizes(),
-                });
+                WorkerMsg::MetricsSnapshot { reply } => {
+                    let _ = reply.send(WorkerSnapshot {
+                        worker_id: wid,
+                        processed,
+                        hits: preq.recall().hits(),
+                        queries,
+                        state: model.state_sizes(),
+                    });
+                }
             }
         }
     }

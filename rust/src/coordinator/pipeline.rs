@@ -22,6 +22,10 @@ use crate::eval::RunReport;
 ///
 /// `label` tags the report for the experiment harness. Equivalent to
 /// [`Cluster::spawn`] + [`Cluster::ingest_batch`] + [`Cluster::finish`].
+/// Ingest rides the micro-batched data plane (`cfg.ingest_batch_size`
+/// envelopes per bulk channel send); `finish` flushes the buffered tail,
+/// and the report is identical for any batch size (see
+/// `tests/batching_equivalence.rs`).
 pub fn run_pipeline(
     cfg: &RunConfig,
     events: &[Rating],

@@ -7,10 +7,18 @@
 //! Semantics:
 //! * `send` blocks while the queue is at capacity (backpressure), fails
 //!   once the receiver is gone.
+//! * `send_many` moves a whole batch under one lock acquisition and one
+//!   consumer wakeup per capacity window — the micro-batched data plane.
+//!   FIFO order and the capacity bound are preserved exactly: a batch
+//!   larger than the remaining capacity wakes the consumer and waits for
+//!   space, it never overfills the queue.
 //! * `recv` blocks while empty, returns `None` once all senders dropped
 //!   and the queue drained (graceful end-of-stream).
-//! * Per-channel counters: messages sent, nanoseconds blocked on
-//!   backpressure, high-water mark.
+//! * `recv_many` hands the consumer everything queued (up to `max`) in
+//!   one critical section; `try_drain` is its non-blocking sibling.
+//! * Per-channel counters ([`ChannelStats`]): messages/batches sent and
+//!   received, nanoseconds blocked on send-side backpressure *and* on
+//!   receive-side waiting, high-water mark.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -34,9 +42,61 @@ struct Inner<T> {
 /// Shared, lock-free-readable channel counters.
 #[derive(Default)]
 pub struct ChannelMetrics {
+    /// Messages enqueued.
     pub sent: AtomicU64,
+    /// Send operations (`send` counts as a batch of 1); `sent /
+    /// send_batches` is the mean send batch size.
+    pub send_batches: AtomicU64,
+    /// Nanoseconds senders spent blocked on backpressure.
     pub blocked_ns: AtomicU64,
+    /// Nanoseconds the receiver spent waiting for messages.
+    pub recv_blocked_ns: AtomicU64,
+    /// Messages dequeued.
+    pub received: AtomicU64,
+    /// Receive operations (`recv` counts as a batch of 1).
+    pub recv_batches: AtomicU64,
+    /// Deepest queue observed.
     pub high_water: AtomicU64,
+}
+
+/// Moment-in-time snapshot of a channel's counters, readable from either
+/// half (the coordinator reads worker-receiver wait time through its
+/// retained [`Sender`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChannelStats {
+    pub sent: u64,
+    pub send_batches: u64,
+    pub blocked_ns: u64,
+    pub recv_blocked_ns: u64,
+    pub received: u64,
+    pub recv_batches: u64,
+    pub high_water: u64,
+}
+
+impl ChannelStats {
+    /// Mean messages moved per send operation (1.0 = unbatched).
+    pub fn mean_send_batch(&self) -> f64 {
+        self.sent as f64 / self.send_batches.max(1) as f64
+    }
+
+    /// Mean messages moved per receive operation (drain amortization).
+    pub fn mean_recv_batch(&self) -> f64 {
+        self.received as f64 / self.recv_batches.max(1) as f64
+    }
+}
+
+impl ChannelMetrics {
+    fn snapshot(&self) -> ChannelStats {
+        ChannelStats {
+            sent: self.sent.load(Ordering::Relaxed),
+            send_batches: self.send_batches.load(Ordering::Relaxed),
+            blocked_ns: self.blocked_ns.load(Ordering::Relaxed),
+            recv_blocked_ns: self.recv_blocked_ns.load(Ordering::Relaxed),
+            received: self.received.load(Ordering::Relaxed),
+            recv_batches: self.recv_batches.load(Ordering::Relaxed),
+            high_water: self.high_water.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// Sending half (clonable).
@@ -49,7 +109,9 @@ pub struct Receiver<T> {
     shared: Arc<Shared<T>>,
 }
 
-/// Error returned when the receiver has been dropped.
+/// Error returned when the receiver has been dropped. Carries the value
+/// for single sends; bulk sends drop the unsent tail (the consumer is
+/// gone, there is nowhere for it to go).
 #[derive(Debug, PartialEq, Eq)]
 pub struct SendError<T>(pub T);
 
@@ -98,14 +160,74 @@ impl<T> Sender<T> {
         }
         inner.buf.push_back(value);
         let depth = inner.buf.len() as u64;
-        self.shared.metrics.sent.fetch_add(1, Ordering::Relaxed);
-        self.shared
-            .metrics
-            .high_water
-            .fetch_max(depth, Ordering::Relaxed);
         drop(inner);
+        let m = &self.shared.metrics;
+        m.sent.fetch_add(1, Ordering::Relaxed);
+        m.send_batches.fetch_add(1, Ordering::Relaxed);
+        m.high_water.fetch_max(depth, Ordering::Relaxed);
         self.shared.not_empty.notify_one();
         Ok(())
+    }
+
+    /// Bulk send: move every element of `batch` into the queue, draining
+    /// the caller's buffer (its capacity is kept for reuse).
+    ///
+    /// Cost model — the point of the batched data plane: one mutex
+    /// acquisition and one consumer wakeup per *capacity window* instead
+    /// of per message. The capacity bound still holds exactly: when the
+    /// queue fills mid-batch the consumer is woken, the lock is released
+    /// (condvar wait), and the remainder goes out once space frees up, so
+    /// a batch larger than `capacity` degrades gracefully instead of
+    /// deadlocking or overfilling.
+    ///
+    /// On a dead receiver the unsent tail is dropped and `Err` returned;
+    /// FIFO order of everything that was sent is preserved.
+    pub fn send_many(&self, batch: &mut Vec<T>) -> Result<(), SendError<()>> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let mut pushed = 0u64;
+        let mut max_depth = 0u64;
+        let mut blocked_ns = 0u64;
+        let mut iter = batch.drain(..);
+        let mut inner = self.shared.queue.lock().unwrap();
+        let result = 'outer: loop {
+            if !inner.receiver_alive {
+                break 'outer Err(SendError(()));
+            }
+            while inner.buf.len() < self.shared.capacity {
+                match iter.next() {
+                    Some(v) => {
+                        inner.buf.push_back(v);
+                        pushed += 1;
+                    }
+                    None => {
+                        max_depth = max_depth.max(inner.buf.len() as u64);
+                        break 'outer Ok(());
+                    }
+                }
+            }
+            // Queue full with items remaining: hand the window to the
+            // consumer (it may be asleep — wake it while we wait).
+            max_depth = max_depth.max(inner.buf.len() as u64);
+            let start = Instant::now();
+            self.shared.not_empty.notify_one();
+            inner = self.shared.not_full.wait(inner).unwrap();
+            blocked_ns += start.elapsed().as_nanos() as u64;
+        };
+        drop(inner);
+        drop(iter);
+        let m = &self.shared.metrics;
+        if pushed > 0 {
+            m.sent.fetch_add(pushed, Ordering::Relaxed);
+            m.send_batches.fetch_add(1, Ordering::Relaxed);
+            m.high_water.fetch_max(max_depth, Ordering::Relaxed);
+            self.shared.not_empty.notify_one();
+        }
+        if blocked_ns > 0 {
+            m.blocked_ns.fetch_add(blocked_ns, Ordering::Relaxed);
+        }
+        result
     }
 
     /// Non-blocking send; returns the value back if the queue is full.
@@ -115,20 +237,17 @@ impl<T> Sender<T> {
             return Err(SendError(value));
         }
         inner.buf.push_back(value);
-        self.shared.metrics.sent.fetch_add(1, Ordering::Relaxed);
         drop(inner);
+        let m = &self.shared.metrics;
+        m.sent.fetch_add(1, Ordering::Relaxed);
+        m.send_batches.fetch_add(1, Ordering::Relaxed);
         self.shared.not_empty.notify_one();
         Ok(())
     }
 
-    /// Snapshot of this channel's counters.
-    pub fn metrics(&self) -> (u64, u64, u64) {
-        let m = &self.shared.metrics;
-        (
-            m.sent.load(Ordering::Relaxed),
-            m.blocked_ns.load(Ordering::Relaxed),
-            m.high_water.load(Ordering::Relaxed),
-        )
+    /// Snapshot of this channel's counters (both halves).
+    pub fn metrics(&self) -> ChannelStats {
+        self.shared.metrics.snapshot()
     }
 }
 
@@ -158,13 +277,21 @@ impl<T> Receiver<T> {
         loop {
             if let Some(v) = inner.buf.pop_front() {
                 drop(inner);
+                let m = &self.shared.metrics;
+                m.received.fetch_add(1, Ordering::Relaxed);
+                m.recv_batches.fetch_add(1, Ordering::Relaxed);
                 self.shared.not_full.notify_one();
                 return Some(v);
             }
             if inner.senders == 0 {
                 return None;
             }
+            let start = Instant::now();
             inner = self.shared.not_empty.wait(inner).unwrap();
+            self.shared
+                .metrics
+                .recv_blocked_ns
+                .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
     }
 
@@ -186,27 +313,66 @@ impl<T> Receiver<T> {
         out
     }
 
-    /// Drain up to `max` queued messages without blocking (micro-batching
-    /// on the worker side — see EXPERIMENTS.md §Perf).
-    pub fn recv_batch(&self, out: &mut Vec<T>, max: usize) -> bool {
+    /// Draining receive: block until at least one message is queued, then
+    /// move everything queued (up to `max`) into `out` in one critical
+    /// section. Returns `false` once all senders are gone and the queue
+    /// is empty (end-of-stream). This is the worker side of the
+    /// micro-batched data plane: one wakeup, one lock transition, a whole
+    /// window of work.
+    pub fn recv_many(&self, out: &mut Vec<T>, max: usize) -> bool {
         let mut inner = self.shared.queue.lock().unwrap();
         loop {
             if !inner.buf.is_empty() {
+                let mut taken = 0u64;
                 while out.len() < max {
                     match inner.buf.pop_front() {
-                        Some(v) => out.push(v),
+                        Some(v) => {
+                            out.push(v);
+                            taken += 1;
+                        }
                         None => break,
                     }
                 }
                 drop(inner);
+                let m = &self.shared.metrics;
+                m.received.fetch_add(taken, Ordering::Relaxed);
+                m.recv_batches.fetch_add(1, Ordering::Relaxed);
                 self.shared.not_full.notify_all();
                 return true;
             }
             if inner.senders == 0 {
                 return false;
             }
+            let start = Instant::now();
             inner = self.shared.not_empty.wait(inner).unwrap();
+            self.shared
+                .metrics
+                .recv_blocked_ns
+                .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
+    }
+
+    /// Non-blocking drain: move everything currently queued into `out`.
+    /// Returns how many messages were taken (0 = queue was empty; says
+    /// nothing about sender liveness).
+    pub fn try_drain(&self, out: &mut Vec<T>) -> usize {
+        let mut inner = self.shared.queue.lock().unwrap();
+        if inner.buf.is_empty() {
+            return 0;
+        }
+        let taken = inner.buf.len();
+        out.extend(inner.buf.drain(..));
+        drop(inner);
+        let m = &self.shared.metrics;
+        m.received.fetch_add(taken as u64, Ordering::Relaxed);
+        m.recv_batches.fetch_add(1, Ordering::Relaxed);
+        self.shared.not_full.notify_all();
+        taken
+    }
+
+    /// Snapshot of this channel's counters (both halves).
+    pub fn metrics(&self) -> ChannelStats {
+        self.shared.metrics.snapshot()
     }
 }
 
@@ -263,7 +429,7 @@ mod tests {
         let h = thread::spawn(move || {
             // This send must block until the receiver drains one slot.
             tx.send(3).unwrap();
-            tx.metrics().1 // blocked_ns
+            tx.metrics().blocked_ns
         });
         thread::sleep(std::time::Duration::from_millis(20));
         assert_eq!(rx.recv(), Some(1));
@@ -297,20 +463,121 @@ mod tests {
     }
 
     #[test]
-    fn recv_batch_drains_up_to_max() {
+    fn send_many_preserves_fifo_and_drains_caller() {
+        let (tx, rx) = bounded(64);
+        let mut batch: Vec<i32> = (0..10).collect();
+        tx.send_many(&mut batch).unwrap();
+        assert!(batch.is_empty(), "batch must be drained into the queue");
+        assert!(batch.capacity() >= 10, "caller buffer capacity kept");
+        drop(tx);
+        let got: Vec<i32> = std::iter::from_fn(|| rx.recv()).collect();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn send_many_empty_batch_is_free() {
+        let (tx, _rx) = bounded::<i32>(4);
+        tx.send_many(&mut Vec::new()).unwrap();
+        let st = tx.metrics();
+        assert_eq!(st.sent, 0);
+        assert_eq!(st.send_batches, 0);
+    }
+
+    #[test]
+    fn send_many_larger_than_capacity_backpressures() {
+        // A 100-message batch through a 4-slot channel: the consumer must
+        // be woken mid-batch, and every message must arrive in order.
+        let (tx, rx) = bounded(4);
+        let consumer = thread::spawn(move || {
+            let mut got = Vec::new();
+            let mut buf = Vec::new();
+            while rx.recv_many(&mut buf, usize::MAX) {
+                got.append(&mut buf);
+            }
+            (got, rx.metrics())
+        });
+        let mut batch: Vec<u32> = (0..100).collect();
+        tx.send_many(&mut batch).unwrap();
+        let blocked = tx.metrics().blocked_ns;
+        assert!(blocked > 0, "a 100-msg batch must hit the capacity bound");
+        drop(tx);
+        let (got, stats) = consumer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+        assert_eq!(stats.sent, 100);
+        assert_eq!(stats.send_batches, 1, "one bulk op, many windows");
+        assert_eq!(stats.received, 100);
+        assert!(stats.mean_send_batch() > 99.0);
+    }
+
+    #[test]
+    fn send_many_fails_after_receiver_drop() {
+        let (tx, rx) = bounded(4);
+        drop(rx);
+        let mut batch = vec![1, 2, 3];
+        assert_eq!(tx.send_many(&mut batch), Err(SendError(())));
+        assert!(batch.is_empty(), "unsent tail is dropped, not returned");
+    }
+
+    #[test]
+    fn recv_many_drains_up_to_max() {
         let (tx, rx) = bounded(64);
         for i in 0..10 {
             tx.send(i).unwrap();
         }
         let mut buf = Vec::new();
-        assert!(rx.recv_batch(&mut buf, 4));
+        assert!(rx.recv_many(&mut buf, 4));
         assert_eq!(buf, vec![0, 1, 2, 3]);
         buf.clear();
-        assert!(rx.recv_batch(&mut buf, 100));
+        assert!(rx.recv_many(&mut buf, 100));
         assert_eq!(buf.len(), 6);
         drop(tx);
         buf.clear();
-        assert!(!rx.recv_batch(&mut buf, 4));
+        assert!(!rx.recv_many(&mut buf, 4));
+    }
+
+    #[test]
+    fn try_drain_takes_everything_without_blocking() {
+        let (tx, rx) = bounded(64);
+        let mut buf = Vec::new();
+        assert_eq!(rx.try_drain(&mut buf), 0, "empty queue, no block");
+        for i in 0..7 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(rx.try_drain(&mut buf), 7);
+        assert_eq!(buf, (0..7).collect::<Vec<_>>());
+        assert_eq!(rx.try_drain(&mut buf), 0);
+    }
+
+    #[test]
+    fn recv_wait_time_is_recorded() {
+        let (tx, rx) = bounded::<u32>(4);
+        let h = thread::spawn(move || {
+            let v = rx.recv();
+            (v, rx.metrics().recv_blocked_ns)
+        });
+        thread::sleep(std::time::Duration::from_millis(20));
+        tx.send(9).unwrap();
+        let (v, waited_ns) = h.join().unwrap();
+        assert_eq!(v, Some(9));
+        assert!(waited_ns > 0, "receiver wait must be accounted");
+    }
+
+    #[test]
+    fn batch_counters_expose_amortization() {
+        let (tx, rx) = bounded(256);
+        let mut batch: Vec<u32> = (0..64).collect();
+        tx.send_many(&mut batch).unwrap();
+        tx.send(64).unwrap();
+        let mut buf = Vec::new();
+        assert!(rx.recv_many(&mut buf, usize::MAX));
+        assert_eq!(buf.len(), 65);
+        let st = tx.metrics();
+        assert_eq!(st.sent, 65);
+        assert_eq!(st.send_batches, 2);
+        assert!((st.mean_send_batch() - 32.5).abs() < 1e-9);
+        assert_eq!(st.received, 65);
+        assert_eq!(st.recv_batches, 1);
+        assert!((st.mean_recv_batch() - 65.0).abs() < 1e-9);
     }
 
     #[test]
@@ -343,7 +610,7 @@ mod tests {
         for i in 0..5 {
             tx.send(i).unwrap();
         }
-        assert_eq!(tx.metrics().2, 5);
+        assert_eq!(tx.metrics().high_water, 5);
         let _ = rx.recv();
     }
 }

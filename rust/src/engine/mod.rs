@@ -6,5 +6,5 @@
 pub mod channel;
 pub mod worker;
 
-pub use channel::{bounded, Receiver, SendError, Sender};
+pub use channel::{bounded, ChannelStats, Receiver, SendError, Sender};
 pub use worker::{spawn, WorkerHandle};

@@ -48,6 +48,15 @@ pub struct RunReport {
     pub route_ns_per_event: f64,
     /// Total ns senders spent blocked on backpressure.
     pub backpressure_ns: u64,
+    /// Total ns worker receivers spent waiting for messages (the other
+    /// side of the transport: send-side stalls vs receive-side idling
+    /// lets the bench attribute where a win comes from).
+    pub recv_blocked_ns: u64,
+    /// Mean messages per channel send (1.0 = event-at-a-time; higher =
+    /// the `ingest_batch_size` micro-batching is amortizing transport).
+    /// Includes query/snapshot probe singletons, so interactive sessions
+    /// read lower than pure ingest runs.
+    pub mean_send_batch: f64,
 }
 
 impl RunReport {
@@ -136,6 +145,8 @@ mod tests {
             workers: vec![worker(0, 10, 4), worker(1, 20, 6)],
             route_ns_per_event: 1.0,
             backpressure_ns: 0,
+            recv_blocked_ns: 0,
+            mean_send_batch: 1.0,
         };
         assert!((r.mean_user_state() - 15.0).abs() < 1e-9);
         assert!((r.mean_item_state() - 5.0).abs() < 1e-9);

@@ -56,6 +56,32 @@
 //! println!("{}", report.summary());
 //! ```
 //!
+//! ## Throughput tuning
+//!
+//! The ingest data plane is micro-batched: `ingest` routes the event and
+//! appends it to a per-worker buffer; the buffer moves to its worker with
+//! one bulk channel send (one lock, one wakeup) once it holds
+//! `RunConfig::ingest_batch_size` events, and workers drain everything
+//! queued per wakeup. Three rules of thumb:
+//!
+//! * **`ingest_batch_size`** (TOML: `engine.ingest_batch_size`) trades
+//!   per-event transport cost against buffering delay. `1` is the old
+//!   send-per-event plane; larger values amortize the channel crossing
+//!   over the batch. Sweep it for your workload with
+//!   `cargo run --release --bench pipeline` (writes `BENCH_ingest.json`).
+//! * **Flush-on-query** — you never trade consistency for throughput:
+//!   every route buffer is flushed before a `recommend`/`metrics` probe
+//!   is sent and in `finish()`, so reads always observe every prior
+//!   ingest and results are identical for any batch size
+//!   (property-tested in `tests/batching_equivalence.rs`).
+//! * **Prefer `ingest_batch` over per-event `ingest`** when events arrive
+//!   in slices: same semantics, but the routing loop stays hot and
+//!   buffers fill without re-entering the session between events.
+//!
+//! `RunReport::{backpressure_ns, recv_blocked_ns, mean_send_batch}` tell
+//! you which side of the transport (sender stalls vs receiver idling) a
+//! configuration is paying for.
+//!
 //! ## Migrating from `run_pipeline`
 //!
 //! The historical one-shot entry point survives with identical signature

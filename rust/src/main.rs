@@ -133,10 +133,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     let report = run_pipeline(&cfg, &events, &label)?;
     println!("{}", report.summary());
     println!(
-        "latency: {}   route: {:.0} ns/event   backpressure: {:.1} ms",
+        "latency: {}   route: {:.0} ns/event   backpressure: {:.1} ms   \
+         recv wait: {:.1} ms   send batch(mean): {:.1}",
         report.latency().summary(),
         report.route_ns_per_event,
-        report.backpressure_ns as f64 / 1e6
+        report.backpressure_ns as f64 / 1e6,
+        report.recv_blocked_ns as f64 / 1e6,
+        report.mean_send_batch
     );
     for w in &report.workers {
         println!(

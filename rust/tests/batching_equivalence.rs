@@ -1,0 +1,162 @@
+//! Batching-equivalence tests for the micro-batched data plane: the
+//! coordinator's route buffers and bulk channel sends are a *transport*
+//! optimization, so every observable — the prequential hit sequence
+//! (recall curve), per-worker reports, and online recommendations — must
+//! be identical for any `ingest_batch_size` and any ingest chunking.
+//! Also covers the flush-before-query rule: a query or metrics probe
+//! issued mid-buffer must observe every previously ingested event.
+
+use streamrec::config::{Algorithm, RunConfig, Topology};
+use streamrec::coordinator::Cluster;
+use streamrec::data::synth::{SyntheticConfig, SyntheticStream};
+use streamrec::data::types::Rating;
+use streamrec::eval::RunReport;
+use streamrec::util::proptest::forall;
+
+fn events(n: u64, seed: u64) -> Vec<Rating> {
+    SyntheticStream::new(SyntheticConfig::movielens_like(n, seed)).collect()
+}
+
+fn cfg(algo: Algorithm, ingest_batch_size: usize) -> RunConfig {
+    RunConfig {
+        algorithm: algo,
+        topology: Topology::new(2, 0).unwrap(),
+        sample_every: 100,
+        ingest_batch_size,
+        ..RunConfig::default()
+    }
+}
+
+/// Drive one full session: chunked ingest, end-of-stream top-10 probes
+/// for `probes`, then finish.
+fn run_session(
+    evs: &[Rating],
+    cfg: &RunConfig,
+    chunk: usize,
+    probes: &[u64],
+) -> (RunReport, Vec<Vec<u64>>) {
+    let mut cluster = Cluster::spawn(cfg).unwrap();
+    for ch in evs.chunks(chunk.max(1)) {
+        cluster.ingest_batch(ch).unwrap();
+    }
+    let recs = probes
+        .iter()
+        .map(|&u| cluster.recommend(u, 10).unwrap())
+        .collect();
+    (cluster.finish().unwrap(), recs)
+}
+
+fn assert_equivalent(
+    base: &(RunReport, Vec<Vec<u64>>),
+    got: &(RunReport, Vec<Vec<u64>>),
+    label: &str,
+) {
+    let (base_report, base_recs) = base;
+    let (report, recs) = got;
+    assert_eq!(report.events, base_report.events, "{label}: event count");
+    assert_eq!(report.hits, base_report.hits, "{label}: total hits");
+    assert_eq!(
+        report.recall_curve, base_report.recall_curve,
+        "{label}: the per-event hit sequence must be batch-size-invariant"
+    );
+    for (a, b) in report.workers.iter().zip(base_report.workers.iter()) {
+        assert_eq!(a.worker_id, b.worker_id, "{label}: worker order");
+        assert_eq!(a.processed, b.processed, "{label}: per-worker load");
+        assert_eq!(a.hits, b.hits, "{label}: per-worker hits");
+        assert_eq!(a.state, b.state, "{label}: per-worker model state");
+    }
+    assert_eq!(recs, base_recs, "{label}: recommendations");
+}
+
+#[test]
+fn property_session_is_ingest_batch_size_invariant() {
+    // The satellite proptest: an interleaved stream ingested via buffered
+    // micro-batches yields the *identical* RunReport hit sequence and
+    // recommend results as event-at-a-time ingest, for random batch
+    // sizes and random ingest chunkings.
+    let evs = events(2500, 11);
+    let probes = [evs[0].user, evs[1].user, evs[50].user];
+    let base = run_session(&evs, &cfg(Algorithm::Isgd, 1), usize::MAX, &probes);
+    forall("ingest_batch_size_invariance", 8, |rng| {
+        let batch = 1 + rng.next_bounded(300) as usize;
+        let chunk = 1 + rng.next_bounded(700) as usize;
+        let got =
+            run_session(&evs, &cfg(Algorithm::Isgd, batch), chunk, &probes);
+        assert_equivalent(
+            &base,
+            &got,
+            &format!("isgd batch={batch} chunk={chunk}"),
+        );
+    });
+}
+
+#[test]
+fn cosine_session_is_ingest_batch_size_invariant() {
+    // Same contract for the DICS path (its bounded-staleness read caches
+    // rebuild deterministically from per-worker event order, which
+    // batching must not change).
+    let evs = events(1500, 13);
+    let probes = [evs[0].user, evs[2].user];
+    let base =
+        run_session(&evs, &cfg(Algorithm::Cosine, 1), usize::MAX, &probes);
+    for batch in [7usize, 64, 256] {
+        let got =
+            run_session(&evs, &cfg(Algorithm::Cosine, batch), 333, &probes);
+        assert_equivalent(&base, &got, &format!("cosine batch={batch}"));
+    }
+}
+
+#[test]
+fn query_mid_buffer_sees_all_ingested_events() {
+    // ingest_batch_size far larger than the stream: ingest alone never
+    // fills a route buffer, so *only* the flush-before-query rule can
+    // make these events visible. The probe must see all of them.
+    let evs = events(400, 21);
+    let mut buffered = Cluster::spawn(&cfg(Algorithm::Isgd, 100_000)).unwrap();
+    let mut unbatched = Cluster::spawn(&cfg(Algorithm::Isgd, 1)).unwrap();
+    buffered.ingest_batch(&evs).unwrap();
+    unbatched.ingest_batch(&evs).unwrap();
+
+    let m = buffered.metrics().unwrap();
+    assert_eq!(m.ingested, 400);
+    assert_eq!(
+        m.processed, 400,
+        "a metrics probe mid-buffer must flush route buffers first"
+    );
+
+    // Read-your-writes: a recommend issued mid-buffer answers from models
+    // that have seen every prior event — identical to the unbatched
+    // cluster, and never recommending something the user already rated.
+    let user = evs[0].user;
+    let recs = buffered.recommend(user, 10).unwrap();
+    assert_eq!(recs, unbatched.recommend(user, 10).unwrap());
+    for e in evs.iter().filter(|e| e.user == user) {
+        assert!(
+            !recs.contains(&e.item),
+            "item {} was ingested (still buffered) yet recommended",
+            e.item
+        );
+    }
+
+    let br = buffered.finish().unwrap();
+    let ur = unbatched.finish().unwrap();
+    assert_eq!(br.hits, ur.hits);
+    assert_eq!(br.recall_curve, ur.recall_curve);
+}
+
+#[test]
+fn finish_drains_the_buffered_tail() {
+    // A tail smaller than ingest_batch_size must still reach the workers
+    // and the final report (the drain guarantee).
+    let evs = events(10, 5);
+    let mut cluster = Cluster::spawn(&cfg(Algorithm::Isgd, 64)).unwrap();
+    cluster.ingest_batch(&evs).unwrap();
+    assert_eq!(cluster.ingested(), 10);
+    let report = cluster.finish().unwrap();
+    assert_eq!(report.events, 10);
+    assert_eq!(
+        report.workers.iter().map(|w| w.processed).sum::<u64>(),
+        10,
+        "buffered tail must be flushed by finish()"
+    );
+}
