@@ -1,40 +1,66 @@
-//! Online serving: the read path the paper implies but never ships.
+//! Online serving: the read path the paper implies but never ships —
+//! plus a live mid-stream scale-out.
 //!
 //! Spawns a DISGD cluster (n_i = 2 -> 4 shared-nothing workers) and keeps
 //! it alive over the stream: the learning loop ingests rating events
 //! through the Algorithm-1 router while the serving loop answers top-10
 //! queries for a panel of users. Each query fans out to the user's `n_i`
 //! replicas (its grid column), every replica ranks from its *local*
-//! model, and the coordinator merges the lists rank-aware — excluding
-//! items the user has rated on any replica. Live metrics snapshots show
-//! learning progress without stopping anything.
+//! model state, and the coordinator merges the lists rank-aware —
+//! excluding items the user has rated on any replica. Live metrics
+//! snapshots show learning progress without stopping anything.
+//!
+//! Halfway through, load "doubles" and the cluster rescales live to
+//! n_i = 4 (4 -> 16 workers). The spawn config reserves the headroom
+//! with `rescale_max_n_i = 4` (the Flink max-parallelism analog): model
+//! state is partitioned on a fixed 4x4 grid of lanes, so the rescale
+//! moves whole lanes between workers — zero events lost, and the panel's
+//! recommendations immediately after the cutover are identical to the
+//! ones immediately before (see ARCHITECTURE.md and
+//! `tests/rescale_equivalence.rs`).
 //!
 //! # Throughput tuning
 //!
 //! Ingest is micro-batched: `ingest`/`ingest_batch` buffer routed events
 //! per worker and flush a buffer with one bulk channel send once it holds
-//! `ingest_batch_size` events (`engine.ingest_batch_size` in TOML). Two
-//! things to know when tuning it:
-//!
-//! * **The flush-on-query rule** means you can raise it freely without
-//!   losing read-your-writes: every buffer is flushed before a
-//!   `recommend` or `metrics` probe goes out, so a query always observes
-//!   all prior ingest — results are identical at any batch size.
-//! * **Prefer `ingest_batch` over per-event `ingest`** when you already
-//!   hold a slice of events (as below): identical semantics, but the
-//!   buffers fill in one tight routing loop.
-//!
-//! Sweep the knob with `cargo run --release --bench pipeline` (records
-//! `BENCH_ingest.json`); the final report's `backpressure_ns` /
-//! `recv_blocked_ns` / `mean_send_batch` show what the transport paid.
+//! `ingest_batch_size` events (`engine.ingest_batch_size` in TOML). The
+//! flush-on-query rule means raising it never trades away consistency:
+//! every buffer is flushed before a `recommend`/`metrics`/rescale probe,
+//! so reads observe all prior ingest at any batch size. Sweep the knob
+//! with `cargo run --release --bench pipeline` (`BENCH_ingest.json`);
+//! rescale pause costs with `--bench rescale` (`BENCH_rescale.json`).
 //!
 //! ```text
 //! cargo run --release --example online_serving
 //! ```
 
 use streamrec::config::{RunConfig, Topology};
-use streamrec::coordinator::Cluster;
+use streamrec::coordinator::{Cluster, ClusterMetrics};
 use streamrec::data::DatasetSpec;
+
+fn print_metrics(tag: &str, m: &ClusterMetrics) {
+    println!(
+        "   [{tag}] epoch {} | {} workers | processed {} | recall {:.4} | \
+         queries {} | rescales {} ({} bytes moved, {:.2} ms paused)",
+        m.router_epoch,
+        m.workers.len(),
+        m.processed,
+        m.recall,
+        m.queries,
+        m.rescales,
+        m.migrated_bytes,
+        m.rescale_pause_ns as f64 / 1e6,
+    );
+    for w in &m.workers {
+        log::debug!(
+            "      worker {:>2}: {} lanes, {} events, state {:?}",
+            w.worker_id,
+            w.lanes,
+            w.processed,
+            w.state
+        );
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     streamrec::util::logging::init();
@@ -42,6 +68,9 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = RunConfig {
         topology: Topology::new(2, 0)?,
+        // Headroom to grow to n_i = 4 later: state lives on a fixed 4x4
+        // lane grid from the start (16 lanes over however many workers).
+        rescale_max_n_i: 4,
         sample_every: 1000,
         // Micro-batched ingest: flushed early by every recommend/metrics
         // probe below, so serving freshness is unaffected.
@@ -50,10 +79,14 @@ fn main() -> anyhow::Result<()> {
     };
     let mut cluster = Cluster::spawn_labeled(&cfg, "online-serving")?;
     println!(
-        "cluster up: {} workers (n_i={} item rows x {} user columns)",
+        "cluster up: {} workers (n_i={} item rows x {} user columns), \
+         state grid {}x{} ({} lanes)",
         cluster.n_workers(),
         cluster.router().n_i(),
-        cluster.router().n_ciw()
+        cluster.router().n_ciw(),
+        cluster.state_grid().v_i(),
+        cluster.state_grid().v_u(),
+        cluster.state_grid().n_lanes(),
     );
 
     // A small panel of users to serve while the stream runs.
@@ -76,13 +109,55 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    for chunk in events.chunks(6000) {
+    let (first_half, second_half) = events.split_at(events.len() / 2);
+    for chunk in first_half.chunks(5000) {
         cluster.ingest_batch(chunk)?;
         let live = cluster.metrics()?;
+        println!("\n-- {} events in --", live.processed);
+        for &u in &panel {
+            let recs = cluster.recommend(u, 10)?;
+            println!("   top-10 for user {u:>6}: {recs:?}");
+        }
+        print_metrics("live", &live);
+    }
+
+    // ---- Mid-stream scale-out: n_i 2 -> 4 (4 -> 16 workers). ----
+    println!("\n== load doubled: rescaling n_i 2 -> 4 ==");
+    let before = cluster.metrics()?;
+    print_metrics("before", &before);
+    let panel_before: Vec<Vec<u64>> = panel
+        .iter()
+        .map(|&u| cluster.recommend(u, 10))
+        .collect::<Result<_, _>>()?;
+
+    let stats = cluster.rescale(Topology::new(4, 0)?)?;
+    println!(
+        "   cutover: {} -> {} workers, {} lanes / {} bytes moved, \
+         paused {:.2} ms",
+        stats.from_workers,
+        stats.to_workers,
+        stats.lanes_moved,
+        stats.bytes_moved,
+        stats.pause_ns as f64 / 1e6,
+    );
+
+    let after = cluster.metrics()?;
+    print_metrics("after", &after);
+    assert_eq!(after.processed, before.processed, "zero events lost");
+    for (&u, want) in panel.iter().zip(panel_before.iter()) {
+        let got = cluster.recommend(u, 10)?;
+        assert_eq!(&got, want, "user {u}: answers must survive the cutover");
         println!(
-            "\n-- {} events in, recall {:.4}, {} queries served --",
-            live.processed, live.recall, live.queries
+            "   user {u:>6} now on workers {:?} — same top-10 ✓",
+            cluster.router().user_workers(u)
         );
+    }
+
+    // ---- Keep streaming on the larger grid. ----
+    for chunk in second_half.chunks(5000) {
+        cluster.ingest_batch(chunk)?;
+        let live = cluster.metrics()?;
+        println!("\n-- {} events in ({} workers) --", live.processed, live.workers.len());
         for &u in &panel {
             let recs = cluster.recommend(u, 10)?;
             println!("   top-10 for user {u:>6}: {recs:?}");
@@ -92,10 +167,30 @@ fn main() -> anyhow::Result<()> {
     let report = cluster.finish()?;
     println!("\nfinal: {}", report.summary());
     println!(
-        "profile: recommend {:.1}ms / update {:.1}ms across workers",
-        report.workers.iter().map(|w| w.recommend_ns).sum::<u64>() as f64
+        "rescales: {} ({} bytes moved, {:.2} ms total pause); \
+         retired workers kept in the report: {}",
+        report.rescales,
+        report.migrated_bytes,
+        report.rescale_pause_ns as f64 / 1e6,
+        report.retired.len(),
+    );
+    println!(
+        "profile: recommend {:.1}ms / update {:.1}ms across live+retired \
+         workers",
+        report
+            .workers
+            .iter()
+            .chain(report.retired.iter())
+            .map(|w| w.recommend_ns)
+            .sum::<u64>() as f64
             / 1e6,
-        report.workers.iter().map(|w| w.update_ns).sum::<u64>() as f64 / 1e6,
+        report
+            .workers
+            .iter()
+            .chain(report.retired.iter())
+            .map(|w| w.update_ns)
+            .sum::<u64>() as f64
+            / 1e6,
     );
     println!(
         "transport: backpressure {:.1}ms, recv wait {:.1}ms, \

@@ -1,0 +1,89 @@
+//! Rescale-cutover benchmark: how long is the session paused, and how
+//! does that pause scale with the amount of model state that has to
+//! move?
+//!
+//! For each algorithm and each warm-up size the bench spawns an
+//! `n_i = 2` cluster with a 4x4 state-grid ceiling, ingests the prefix,
+//! then measures a scale-out (`n_i 2 -> 4`, 4 -> 16 workers) followed by
+//! a scale-in (`4 -> 2`), recording pause wall-time, bytes moved, and
+//! lanes moved for both directions. Results are written to
+//! `BENCH_rescale.json` (current working directory), mirroring the
+//! `BENCH_ingest.json` convention.
+
+use streamrec::config::{Algorithm, RunConfig, Topology};
+use streamrec::coordinator::Cluster;
+use streamrec::data::DatasetSpec;
+use streamrec::util::json::{num, obj, s, to_string, Json};
+
+fn main() -> anyhow::Result<()> {
+    println!("== rescale benchmarks (pause vs state size) ==");
+    let events = DatasetSpec::parse("nf-like:120000", 33)?.load()?;
+
+    println!(
+        "{:8} {:>9} {:>12} | {:>11} {:>11} {:>7} | {:>11} {:>11}",
+        "algo",
+        "events",
+        "state_bytes",
+        "out_pause",
+        "out_MB/s",
+        "lanes",
+        "in_pause",
+        "in_MB/s"
+    );
+    let mut rows = Vec::new();
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        for &warm in &[5_000usize, 20_000, 80_000] {
+            let cfg = RunConfig {
+                algorithm: algo,
+                topology: Topology::new(2, 0)?,
+                rescale_max_n_i: 4,
+                sample_every: 10_000,
+                ..RunConfig::default()
+            };
+            let mut cluster = Cluster::spawn_labeled(
+                &cfg,
+                &format!("bench-rescale-{}-{warm}", algo.name()),
+            )?;
+            cluster.ingest_batch(&events[..warm])?;
+
+            let out = cluster.rescale(Topology::new(4, 0)?)?;
+            let back = cluster.rescale(Topology::new(2, 0)?)?;
+            let report = cluster.finish()?;
+            assert_eq!(report.events, warm as u64, "bench lost events");
+
+            let mbps = |bytes: u64, ns: u64| {
+                bytes as f64 / 1e6 / (ns as f64 / 1e9).max(1e-9)
+            };
+            println!(
+                "{:8} {:>9} {:>12} | {:>8.2} ms {:>11.1} {:>7} | {:>8.2} ms \
+                 {:>11.1}",
+                algo.name(),
+                warm,
+                out.bytes_moved,
+                out.pause_ns as f64 / 1e6,
+                mbps(out.bytes_moved, out.pause_ns),
+                out.lanes_moved,
+                back.pause_ns as f64 / 1e6,
+                mbps(back.bytes_moved, back.pause_ns),
+            );
+            rows.push(obj(vec![
+                ("algorithm", s(algo.name())),
+                ("warm_events", num(warm as f64)),
+                ("state_bytes", num(out.bytes_moved as f64)),
+                ("lanes", num(out.lanes_moved as f64)),
+                ("scale_out_pause_ns", num(out.pause_ns as f64)),
+                ("scale_in_pause_ns", num(back.pause_ns as f64)),
+                ("scale_in_bytes", num(back.bytes_moved as f64)),
+            ]));
+        }
+    }
+    let doc = obj(vec![
+        ("bench", s("rescale pause vs state size")),
+        ("dataset", s("nf-like:120000 (seed 33)")),
+        ("topologies", s("n_i 2 -> 4 -> 2, state grid 4x4")),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_rescale.json", to_string(&doc) + "\n")?;
+    println!("(recorded in BENCH_rescale.json)");
+    Ok(())
+}

@@ -38,9 +38,16 @@
 
 use std::collections::{HashMap, HashSet};
 
+use anyhow::{bail, Result};
+
 use crate::algorithms::StreamingRecommender;
 use crate::data::types::{ItemId, Rating, StateSizes, UserId};
 use crate::state::{SweepKind, TrackedMap};
+use crate::util::wire::{WireReader, WireWriter};
+
+/// Wire tag identifying a cosine state snapshot (see
+/// [`StreamingRecommender::export_partition`]).
+pub const COSINE_WIRE_TAG: u8 = 2;
 
 /// Cached Equation-7 neighborhood of one item.
 #[derive(Debug, Clone)]
@@ -82,6 +89,7 @@ pub struct CosineModel {
     rated_scratch: HashSet<ItemId>,
     sims_scratch: Vec<(f32, ItemId)>,
     scored_scratch: Vec<(f32, f32, ItemId)>,
+    /// Events processed (diagnostics).
     pub updates: u64,
     /// Neighborhood rebuilds performed (perf counter).
     pub rebuilds: u64,
@@ -98,6 +106,7 @@ impl CosineModel {
         Self::with_mode(neighbors_k, false)
     }
 
+    /// Model with explicit exactness mode (see the `strict` field docs).
     pub fn with_mode(neighbors_k: usize, strict: bool) -> Self {
         Self {
             strict,
@@ -149,13 +158,18 @@ impl CosineModel {
             }
             sims.push((co as f32 / (cp_sqrt * (cq as f32).sqrt()), q));
         }
+        // Total order (sim desc, then item id): equal-similarity partners
+        // would otherwise be ordered by HashMap iteration, which differs
+        // between a model and its migrated copy — the rescale equivalence
+        // guarantee needs rebuilt neighborhoods to be deterministic.
+        let by_sim_then_id = |a: &(f32, ItemId), b: &(f32, ItemId)| {
+            b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
+        };
         if sims.len() > self.neighbors_k {
-            sims.select_nth_unstable_by(self.neighbors_k - 1, |a, b| {
-                b.0.total_cmp(&a.0)
-            });
+            sims.select_nth_unstable_by(self.neighbors_k - 1, by_sim_then_id);
             sims.truncate(self.neighbors_k);
         }
-        sims.sort_unstable_by(|a, b| b.0.total_cmp(&a.0));
+        sims.sort_unstable_by(by_sim_then_id);
         let mass: f32 = sims.iter().map(|(s, _)| s).sum();
         self.topk.insert(
             p,
@@ -371,6 +385,174 @@ impl StreamingRecommender for CosineModel {
         }
     }
 
+    fn export_partition(&self, keep_user: &dyn Fn(UserId) -> bool) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        w.u8(COSINE_WIRE_TAG);
+        w.u32(self.neighbors_k as u32);
+        w.u8(self.strict as u8);
+        w.u64(self.updates);
+        // Item counts, sorted by id for deterministic snapshot bytes.
+        let mut items: Vec<(ItemId, u64, u64, u64)> = self
+            .item_count
+            .iter_meta()
+            .map(|(id, c, ts, freq)| (*id, *c, ts, freq))
+            .collect();
+        items.sort_unstable_by_key(|(id, ..)| *id);
+        w.u32(items.len() as u32);
+        for (id, count, last_ts, freq) in items {
+            w.u64(id);
+            w.u64(count);
+            w.u64(last_ts);
+            w.u64(freq);
+        }
+        // Co-occurrence rows (the symmetric adjacency travels in full;
+        // it is item-side state).
+        let mut rows: Vec<ItemId> = self.pairs.keys().copied().collect();
+        rows.sort_unstable();
+        w.u32(rows.len() as u32);
+        for p in rows {
+            let adj = &self.pairs[&p];
+            let mut partners: Vec<(ItemId, u64)> =
+                adj.iter().map(|(&q, &co)| (q, co)).collect();
+            partners.sort_unstable_by_key(|(q, _)| *q);
+            w.u64(p);
+            w.u32(partners.len() as u32);
+            for (q, co) in partners {
+                w.u64(q);
+                w.u64(co);
+            }
+        }
+        // User histories (insertion order preserved — it is model state:
+        // the co-occurrence loop walks it).
+        let mut users: Vec<(UserId, &Vec<ItemId>, u64, u64)> = self
+            .users
+            .iter_meta()
+            .filter(|(id, ..)| keep_user(**id))
+            .map(|(id, h, ts, freq)| (*id, h, ts, freq))
+            .collect();
+        users.sort_unstable_by_key(|(id, ..)| *id);
+        w.u32(users.len() as u32);
+        for (id, history, last_ts, freq) in users {
+            w.u64(id);
+            w.u64(last_ts);
+            w.u64(freq);
+            w.u64_slice(history);
+        }
+        // Cache state travels too. In fast mode the bounded-staleness
+        // caches are *semantically visible*: a cached neighborhood may
+        // lag the adjacency by up to its dirt budget, and Equation 7
+        // reads serve from the cache — dropping it would make a migrated
+        // model answer *fresher* than the original, breaking the
+        // rescale equivalence guarantee. (Strict mode would get away
+        // with rebuilding, but exporting is cheap and exact for both.)
+        let mut cached: Vec<ItemId> = self.topk.keys().copied().collect();
+        cached.sort_unstable();
+        w.u32(cached.len() as u32);
+        for p in cached {
+            let nb = &self.topk[&p];
+            w.u64(p);
+            w.f32(nb.mass);
+            w.u32(nb.neighbors.len() as u32);
+            for &(q, sim) in &nb.neighbors {
+                w.u64(q);
+                w.f32(sim);
+            }
+        }
+        let mut dirty: Vec<ItemId> = self.dirty.iter().copied().collect();
+        dirty.sort_unstable();
+        w.u64_slice(&dirty);
+        let mut dirt: Vec<(ItemId, u32)> =
+            self.dirt.iter().map(|(&p, &d)| (p, d)).collect();
+        dirt.sort_unstable_by_key(|(p, _)| *p);
+        w.u32(dirt.len() as u32);
+        for (p, d) in dirt {
+            w.u64(p);
+            w.u32(d);
+        }
+        w.into_bytes()
+    }
+
+    fn import_partition(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut r = WireReader::new(bytes);
+        let tag = r.u8()?;
+        if tag != COSINE_WIRE_TAG {
+            bail!("cosine import: wire tag {tag} is not a cosine snapshot");
+        }
+        let k = r.u32()? as usize;
+        if k != self.neighbors_k {
+            bail!(
+                "cosine import: neighborhood k {k} != configured {}",
+                self.neighbors_k
+            );
+        }
+        let strict = r.u8()? != 0;
+        if strict != self.strict {
+            bail!(
+                "cosine import: snapshot strict={strict} != configured {}",
+                self.strict
+            );
+        }
+        self.updates += r.u64()?;
+        let n_items = r.u32()?;
+        for _ in 0..n_items {
+            let id = r.u64()?;
+            let count = r.u64()?;
+            let last_ts = r.u64()?;
+            let freq = r.u64()?;
+            self.item_count.insert_with_meta(id, count, last_ts, freq);
+        }
+        let n_rows = r.u32()?;
+        for _ in 0..n_rows {
+            let p = r.u64()?;
+            let deg = r.u32()?;
+            let row = self.pairs.entry(p).or_default();
+            for _ in 0..deg {
+                let q = r.u64()?;
+                let co = r.u64()?;
+                row.insert(q, co);
+            }
+        }
+        let n_users = r.u32()?;
+        for _ in 0..n_users {
+            let id = r.u64()?;
+            let last_ts = r.u64()?;
+            let freq = r.u64()?;
+            let history = r.u64_slice()?;
+            self.users.insert_with_meta(id, history, last_ts, freq);
+        }
+        // Cache state: restore exactly what the exporter had (see the
+        // export comment — bounded-staleness caches are visible state).
+        let n_cached = r.u32()?;
+        for _ in 0..n_cached {
+            let p = r.u64()?;
+            let mass = r.f32()?;
+            let len = r.u32()?;
+            // Cap the pre-allocation by what the buffer could possibly
+            // hold, so a corrupt length prefix can't balloon memory.
+            let mut neighbors =
+                Vec::with_capacity((len as usize).min(r.remaining() / 12 + 1));
+            for _ in 0..len {
+                let q = r.u64()?;
+                let sim = r.f32()?;
+                neighbors.push((q, sim));
+            }
+            self.topk.insert(p, Neighborhood { neighbors, mass });
+        }
+        for p in r.u64_slice()? {
+            self.dirty.insert(p);
+        }
+        let n_dirt = r.u32()?;
+        for _ in 0..n_dirt {
+            let p = r.u64()?;
+            let d = r.u32()?;
+            self.dirt.insert(p, d);
+        }
+        if !r.is_done() {
+            bail!("cosine import: {} trailing bytes", r.remaining());
+        }
+        Ok(())
+    }
+
     fn sweep(&mut self, kind: SweepKind) -> u64 {
         let (dead_users, dead_items) = match kind {
             SweepKind::Lru { cutoff_ts } => (
@@ -547,7 +729,11 @@ mod tests {
                             .collect()
                     })
                     .unwrap_or_default();
-                sims.sort_unstable_by(|a, b| b.0.total_cmp(&a.0));
+                // Same (sim desc, id asc) order as the cached rebuild so
+                // boundary ties agree.
+                sims.sort_unstable_by(|a, b| {
+                    b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
+                });
                 sims.truncate(k);
                 let den: f32 = sims.iter().map(|(s, _)| s).sum();
                 let num: f32 = sims
@@ -650,6 +836,84 @@ mod tests {
         assert!(total > 0, "zeroed entries must be evicted");
         assert_eq!(m.state_sizes().items, 0);
         assert_eq!(m.state_sizes().aux, 0);
+    }
+
+    #[test]
+    fn export_import_is_exact_for_both_modes() {
+        for strict in [true, false] {
+            let mut m = CosineModel::with_mode(5, strict);
+            let mut ts = 0u64;
+            for u in 0..25u64 {
+                for i in 0..6u64 {
+                    m.update(&ev(u % 9, (u * 3 + i) % 14, ts));
+                    ts += 1;
+                }
+            }
+            // Warm some neighborhood caches so import must not depend on
+            // them being cold on the source side.
+            let _ = m.recommend(3, 10);
+            let snap = m.export_partition(&|_| true);
+            let mut n = CosineModel::with_mode(5, strict);
+            n.import_partition(&snap).unwrap();
+            assert_eq!(n.state_sizes(), m.state_sizes());
+            for u in 0..9u64 {
+                assert_eq!(
+                    n.recommend(u, 10),
+                    m.recommend(u, 10),
+                    "strict={strict} user={u}"
+                );
+                let mut a = n.rated_items(u);
+                let mut b = m.rated_items(u);
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b);
+            }
+            // Future learning agrees too (counts and histories migrated
+            // exactly; caches rebuild deterministically).
+            for step in 0..40u64 {
+                let e = ev(step % 11, (step * 7) % 16, ts + step);
+                m.update(&e);
+                n.update(&e);
+            }
+            for u in 0..11u64 {
+                assert_eq!(n.recommend(u, 10), m.recommend(u, 10));
+            }
+            assert_eq!(
+                m.export_partition(&|_| true),
+                n.export_partition(&|_| true),
+                "re-exported snapshots must be byte-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn cosine_import_rejects_mismatch() {
+        let m = CosineModel::new(10);
+        let snap = m.export_partition(&|_| true);
+        assert!(CosineModel::new(4).import_partition(&snap).is_err());
+        assert!(CosineModel::fast(10).import_partition(&snap).is_err());
+        let mut ok = CosineModel::new(10);
+        assert!(ok.import_partition(&snap).is_ok());
+        assert!(ok.import_partition(&[0xFF]).is_err());
+        assert!(ok.import_partition(&snap[..snap.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn export_user_filter_keeps_item_side_state() {
+        let mut m = CosineModel::new(10);
+        for u in 0..4u64 {
+            m.update(&ev(u, 1, u));
+            m.update(&ev(u, 2, u + 50));
+        }
+        let snap = m.export_partition(&|u| u == 0);
+        let mut n = CosineModel::new(10);
+        n.import_partition(&snap).unwrap();
+        let s = n.state_sizes();
+        assert_eq!(s.users, 1);
+        assert_eq!(s.items, 2);
+        assert_eq!(s.aux, m.state_sizes().aux);
+        assert_eq!(n.rated_items(0), vec![1, 2]);
+        assert!(n.rated_items(1).is_empty());
     }
 
     #[test]

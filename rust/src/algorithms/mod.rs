@@ -45,13 +45,43 @@ pub trait StreamingRecommender {
 
     /// Apply a forgetting sweep; returns the number of evicted entries.
     fn sweep(&mut self, kind: SweepKind) -> u64;
+
+    /// Serialize this model's state into the compact binary framing of
+    /// [`crate::util::wire`], keeping only users selected by `keep_user`
+    /// (item-side state — factor rows, counts, co-occurrence rows — is
+    /// always exported in full: items are not owned by a single user).
+    ///
+    /// This is the export half of live rescaling: the cluster moves whole
+    /// model lanes between workers with `keep_user = |_| true`, and the
+    /// snapshot is *exact* — recency/frequency metadata and the model's
+    /// RNG stream travel with the values, so a migrated model is
+    /// bit-identical to the original for every future recommend, update,
+    /// and sweep.
+    fn export_partition(&self, keep_user: &dyn Fn(UserId) -> bool) -> Vec<u8>;
+
+    /// Merge a snapshot produced by [`Self::export_partition`] into this
+    /// model. Entries present in both sides are overwritten by the
+    /// import, and the imported RNG stream replaces the local one — the
+    /// intended use is loading a snapshot into a freshly-built model of
+    /// the same configuration (the migration path), where this makes the
+    /// result exact. Fails on algorithm/shape mismatch or a corrupt
+    /// snapshot, leaving partially-applied state behind; the cluster
+    /// treats that as fatal for the rescale.
+    fn import_partition(&mut self, bytes: &[u8]) -> anyhow::Result<()>;
 }
 
 /// Construct the configured algorithm (invoked inside a worker thread so
 /// `!Send` backends are legal).
+///
+/// `instance_id` decorrelates the model's init-RNG stream from its
+/// siblings. The cluster passes the *lane* id (the virtual grid cell),
+/// not the physical worker id, so a lane's RNG stream — and therefore
+/// its entire model evolution — is identical wherever the lane is
+/// hosted (the rescale-equivalence requirement). With the default state
+/// grid the lane id and worker id coincide.
 pub fn build_model(
     cfg: &crate::config::RunConfig,
-    worker_id: usize,
+    instance_id: usize,
 ) -> anyhow::Result<Box<dyn StreamingRecommender>> {
     match cfg.algorithm {
         crate::config::Algorithm::Isgd => {
@@ -61,8 +91,8 @@ pub fn build_model(
                 cfg.latent_k,
                 cfg.eta,
                 cfg.lambda,
-                // Decorrelate worker init streams deterministically.
-                cfg.seed ^ crate::util::rng::mix64(worker_id as u64),
+                // Decorrelate per-instance init streams deterministically.
+                cfg.seed ^ crate::util::rng::mix64(instance_id as u64),
                 backend,
             )))
         }

@@ -16,15 +16,22 @@ pub fn black_box<T>(x: T) -> T {
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Case name.
     pub name: String,
+    /// Timed iterations run.
     pub iters: u64,
+    /// Mean ns per iteration (per item for `bench_batch`).
     pub mean_ns: f64,
+    /// Median ns per iteration.
     pub p50_ns: u64,
+    /// 99th-percentile ns per iteration.
     pub p99_ns: u64,
+    /// Iterations (items) per second implied by the mean.
     pub throughput_per_sec: f64,
 }
 
 impl BenchResult {
+    /// Print the one-line result row.
     pub fn report(&self) {
         println!(
             "{:40} {:>12.1} ns/iter  p50={:>10} p99={:>10}  ({:.2e}/s)",

@@ -21,6 +21,7 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// Parse a config string (`isgd`/`disgd`, `cosine`/`dics`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "isgd" | "disgd" => Ok(Self::Isgd),
@@ -29,6 +30,7 @@ impl Algorithm {
         }
     }
 
+    /// Canonical name used in reports and labels.
     pub fn name(&self) -> &'static str {
         match self {
             Self::Isgd => "isgd",
@@ -49,6 +51,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Parse a config string (`native` | `pjrt`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "native" => Ok(Self::Native),
@@ -57,6 +60,7 @@ impl Backend {
         }
     }
 
+    /// Canonical name used in reports and logs.
     pub fn name(&self) -> &'static str {
         match self {
             Self::Native => "native",
@@ -72,20 +76,36 @@ pub enum Forgetting {
     None,
     /// Least-recently-used: every `trigger_secs` of event time, evict
     /// entries idle for more than `max_idle_secs`.
-    Lru { trigger_secs: u64, max_idle_secs: u64 },
+    Lru {
+        /// Event-time seconds between sweep scans.
+        trigger_secs: u64,
+        /// Entries idle longer than this are evicted.
+        max_idle_secs: u64,
+    },
     /// Least-frequently-used: every `trigger_events` processed records,
     /// evict entries with frequency below `min_freq` (tuned aggressively
     /// for memory, per the paper).
-    Lfu { trigger_events: u64, min_freq: u64 },
+    Lfu {
+        /// Processed-record count between sweep scans.
+        trigger_events: u64,
+        /// Entries touched fewer times than this are evicted.
+        min_freq: u64,
+    },
     /// Gradual forgetting (the paper's future-work extension, Section 6):
     /// every `trigger_events` records, multiplicatively decay the model —
     /// ISGD shrinks latent vectors toward 0, DICS decays co-occurrence
     /// counts (entries reaching 0 are evicted). Old evidence fades
     /// instead of being cut off, trading eviction cliffs for smoothness.
-    Decay { trigger_events: u64, factor: f32 },
+    Decay {
+        /// Processed-record count between decay applications.
+        trigger_events: u64,
+        /// Multiplicative factor applied to model evidence (`0 < f < 1`).
+        factor: f32,
+    },
 }
 
 impl Forgetting {
+    /// Canonical policy name used in reports and labels.
     pub fn name(&self) -> &'static str {
         match self {
             Self::None => "none",
@@ -106,6 +126,8 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// Build a topology from the replication factor and spare-worker
+    /// knob; `n_i` must be at least 1.
     pub fn new(n_i: u64, w: u64) -> Result<Self> {
         if n_i == 0 {
             bail!("n_i must be >= 1");
@@ -136,6 +158,7 @@ impl Topology {
         self.n_c() / self.n_i
     }
 
+    /// True for the single-worker (central baseline) topology.
     pub fn is_central(&self) -> bool {
         self.n_c() == 1
     }
@@ -144,9 +167,13 @@ impl Topology {
 /// Complete run configuration for one pipeline execution.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Which streaming recommender to run.
     pub algorithm: Algorithm,
+    /// Numeric backend for the ISGD hot path.
     pub backend: Backend,
+    /// Worker-grid topology (Section 4).
     pub topology: Topology,
+    /// Forgetting technique bounding state growth (Section 5.2).
     pub forgetting: Forgetting,
     /// Recommendation-list size N (paper: 10).
     pub top_n: usize,
@@ -180,6 +207,20 @@ pub struct RunConfig {
     pub seed: u64,
     /// Directory holding the AOT artifacts (for Backend::Pjrt).
     pub artifacts_dir: String,
+    /// Rescale ceiling (TOML: `rescale.max_n_i`) — the `n_i` of the
+    /// virtual *state grid* that model state is partitioned on (the
+    /// Flink max-parallelism analog). `0` (default) pins the state grid
+    /// to the spawn topology: behavior is identical to a cluster without
+    /// rescaling, and `Cluster::rescale` can move to any topology whose
+    /// grid divides the spawn grid (scale-in and back). A non-zero value
+    /// fixes a finer grid so the cluster can later grow beyond its spawn
+    /// size, at the cost of model granularity being that of the ceiling
+    /// grid from the first event. See docs/CONFIG.md.
+    pub rescale_max_n_i: u64,
+    /// Spare-worker ceiling companion to `rescale_max_n_i` (TOML:
+    /// `rescale.max_w`): the state grid gets `max_n_i + max_w` user
+    /// columns. Ignored while `rescale_max_n_i = 0`.
+    pub rescale_max_w: u64,
 }
 
 impl Default for RunConfig {
@@ -201,6 +242,8 @@ impl Default for RunConfig {
             sample_every: 100,
             seed: 42,
             artifacts_dir: "artifacts".to_string(),
+            rescale_max_n_i: 0,
+            rescale_max_w: 0,
         }
     }
 }
@@ -286,8 +329,13 @@ impl RunConfig {
         num!("model.eta", cfg.eta, f32);
         num!("model.lambda", cfg.lambda, f32);
         num!("model.neighbors_k", cfg.neighbors_k, usize);
+        if let Some(v) = get("model.cosine_strict") {
+            cfg.cosine_strict = v.bool()?;
+        }
         num!("engine.channel_capacity", cfg.channel_capacity, usize);
         num!("engine.ingest_batch_size", cfg.ingest_batch_size, usize);
+        num!("rescale.max_n_i", cfg.rescale_max_n_i, u64);
+        num!("rescale.max_w", cfg.rescale_max_w, u64);
         if let Some(v) = get("run.artifacts_dir") {
             cfg.artifacts_dir = v.str()?.to_string();
         }
@@ -298,13 +346,18 @@ impl RunConfig {
 /// A parsed TOML-subset scalar.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
+    /// A double-quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` | `false`.
     Bool(bool),
 }
 
 impl TomlValue {
+    /// The string value, or an error for any other type.
     pub fn str(&self) -> Result<&str> {
         match self {
             TomlValue::Str(s) => Ok(s),
@@ -312,6 +365,7 @@ impl TomlValue {
         }
     }
 
+    /// The integer value, or an error for any other type.
     pub fn int(&self) -> Result<i64> {
         match self {
             TomlValue::Int(i) => Ok(*i),
@@ -319,6 +373,15 @@ impl TomlValue {
         }
     }
 
+    /// The boolean value, or an error for any other type.
+    pub fn bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(anyhow!("expected boolean, got {other:?}")),
+        }
+    }
+
+    /// The numeric value (int or float widened to f64), or an error.
     pub fn num(&self) -> Result<f64> {
         match self {
             TomlValue::Int(i) => Ok(*i as f64),
@@ -467,6 +530,25 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.channel_capacity, 128);
         assert_eq!(cfg.ingest_batch_size, 256);
+    }
+
+    #[test]
+    fn parses_rescale_section() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.rescale_max_n_i, 0, "default: grid = spawn topology");
+        assert_eq!(cfg.rescale_max_w, 0);
+        let cfg = RunConfig::from_toml("[rescale]\nmax_n_i = 4\nmax_w = 1")
+            .unwrap();
+        assert_eq!(cfg.rescale_max_n_i, 4);
+        assert_eq!(cfg.rescale_max_w, 1);
+    }
+
+    #[test]
+    fn parses_cosine_strict_bool() {
+        let cfg =
+            RunConfig::from_toml("[model]\ncosine_strict = true").unwrap();
+        assert!(cfg.cosine_strict);
+        assert!(RunConfig::from_toml("[model]\ncosine_strict = 1").is_err());
     }
 
     #[test]

@@ -7,25 +7,32 @@
 //! [`Cluster::recommend`] is the online serving path (fan a query out to
 //! every replica of the user, merge the per-replica top-N lists),
 //! [`Cluster::metrics`] snapshots live counters without stopping anything,
-//! and [`Cluster::finish`] drains, joins, and returns the final
+//! [`Cluster::rescale`] migrates the running system to a different worker
+//! topology without losing an event or a bit of model state, and
+//! [`Cluster::finish`] drains, joins, and returns the final
 //! [`RunReport`] — exactly what the old one-shot `run_pipeline` produced.
 //!
 //! # The worker protocol
 //!
 //! Workers no longer consume a bare event stream; they speak
-//! [`WorkerMsg`]:
+//! `WorkerMsg` (the crate-private control-plane enum):
 //!
 //! * `Event` — one stream element; prequential test-then-train, the
 //!   learning loop.
-//! * `Query` — answer a recommendation from the local model over a reply
+//! * `Query` — answer a recommendation from the local models over a reply
 //!   channel; serving never trains (it may refresh read-side caches in
 //!   the bounded-staleness cosine mode).
 //! * `MetricsSnapshot` — report live counters over a reply channel.
+//! * `Export` — terminal: serialize every hosted lane, reply with the
+//!   snapshots, and drain out (the first half of a migration).
+//! * `Import` — install a lane snapshot (the second half; always queued
+//!   ahead of any post-rescale event on the same FIFO).
 //!
-//! All three share the per-worker FIFO channel, which gives queries and
-//! snapshots a useful consistency guarantee for free: a query observes
-//! every event ingested before it (per worker), because it queues behind
-//! them.
+//! All messages share the per-worker FIFO channel, which gives queries,
+//! snapshots, and migrations a useful consistency guarantee for free: a
+//! probe observes every event ingested before it (per worker), because it
+//! queues behind them — and an `Export` therefore snapshots state that
+//! reflects the *entire* accepted prefix of the stream.
 //!
 //! # The batched data plane
 //!
@@ -42,7 +49,7 @@
 //!   whole window of envelopes in FIFO order. Prequential accounting
 //!   stays strictly per-event; only the transport is batched.
 //! * **Ordering is batch-size-invariant** — every route buffer is
-//!   flushed before any `Query` or `MetricsSnapshot` is sent and in
+//!   flushed before any `Query`/`MetricsSnapshot`/`Export` is sent and in
 //!   [`Cluster::finish`], so a query still observes every event ingested
 //!   before it and the drain guarantee is untouched. Reports, hit
 //!   sequences, and recommendations are identical for any
@@ -52,27 +59,64 @@
 //! Per-event semantics are unchanged; `ingest_batch_size = 1` degenerates
 //! to the old send-per-event plane.
 //!
+//! # Lanes: state partitioning vs worker placement
+//!
+//! Model state is not owned by workers directly. It is partitioned on the
+//! fixed virtual [`StateGrid`] into *lanes* — one independent model per
+//! virtual grid cell — and each physical worker hosts the group of lanes
+//! the current topology assigns to it ([`StateGrid::owner`]). With the
+//! default configuration the state grid equals the spawn topology, every
+//! worker hosts exactly one lane, and the system is indistinguishable
+//! from the paper's. The indirection earns its keep at
+//! [`Cluster::rescale`]: changing topology *moves whole lanes* between
+//! workers instead of splitting or merging model state, which makes
+//! migration exact — see ARCHITECTURE.md for the full walkthrough.
+//!
+//! # The rescale protocol (pause → flush → drain → migrate → resume)
+//!
+//! 1. **Pause**: `rescale(&mut self, ..)` holds the only handle to the
+//!    session, so no ingest or query can interleave with the cutover.
+//! 2. **Flush**: every route buffer is bulk-sent, so each worker's FIFO
+//!    holds the complete accepted prefix of the stream.
+//! 3. **Drain**: an `Export` probe queues behind those events on every
+//!    FIFO; each worker finishes its prefix, serializes its lanes
+//!    ([`StreamingRecommender::export_partition`] — factor rows, rated
+//!    sets, co-occurrence rows, caches, RNG stream), replies, and exits.
+//!    The old workers' final reports are retained (`retired`) so no
+//!    `processed`/`hits` accounting is lost.
+//! 4. **Migrate**: a fresh [`Router`] is installed with its epoch bumped,
+//!    new workers spawn, and every lane snapshot is sent as an `Import`
+//!    to the worker that owns the lane under the new topology.
+//! 5. **Resume**: subsequent `ingest` routes through the new grid; FIFO
+//!    order guarantees every `Import` lands before the first new event.
+//!
+//! Zero event loss and before/after recommendation equality are
+//! property-tested in `tests/rescale_equivalence.rs`; the pause-time cost
+//! is measured by `benches/rescale.rs`.
+//!
 //! # The serving path (replicated-user read)
 //!
 //! A user's state is replicated across the `n_i` workers of its grid
 //! column ([`Router::user_workers`]) — each replica learned from the
 //! *item rows* it owns, so no single worker can rank the whole catalog
 //! for the user. `recommend` therefore fans the query out to all
-//! replicas, gathers each local ranked top-N plus the locally-rated item
-//! set over a reply channel ([`Receiver::recv_n`]), and merges with the
-//! rank-aware [`merge_topn`], excluding items the user rated on *any*
-//! replica.
+//! replicas, gathers each replica's per-lane ranked top-N lists plus the
+//! locally-rated item sets over a reply channel ([`Receiver::recv_n`]),
+//! and merges with the rank-aware [`merge_topn`], excluding items the
+//! user rated on *any* replica. Because the per-lane lists are invariant
+//! under lane placement, the merged answer is identical before and after
+//! any rescale.
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::algorithms::build_model;
-use crate::config::RunConfig;
-use crate::coordinator::router::Router;
+use crate::algorithms::{build_model, StreamingRecommender};
+use crate::config::{RunConfig, Topology};
+use crate::coordinator::router::{Router, StateGrid};
 use crate::data::types::{ItemId, Rating, StateSizes, UserId};
-use crate::engine::{bounded, spawn, Receiver, Sender, WorkerHandle};
+use crate::engine::{bounded, spawn, ChannelStats, Receiver, Sender, WorkerHandle};
 use crate::eval::{merge_topn, HitSample, Prequential, RunReport, WorkerReport};
 use crate::state::ForgetClock;
 use crate::util::histogram::Histogram;
@@ -84,12 +128,23 @@ struct Envelope {
     rating: Rating,
 }
 
+/// One serialized lane: the virtual-cell id plus the model snapshot.
+struct LaneSnapshot {
+    lane: u64,
+    bytes: Vec<u8>,
+}
+
+/// A retiring worker's reply to `Export`: every lane it hosted.
+struct WorkerExport {
+    lanes: Vec<LaneSnapshot>,
+}
+
 /// Everything a worker can be asked to do (the control-plane protocol).
 enum WorkerMsg {
     /// One stream event (the learning loop).
     Event(Envelope),
     /// Online recommendation query (the serving loop). Answered from the
-    /// local model over `reply`; never *trains* the model. (It may
+    /// local lane models over `reply`; never *trains* them. (It may
     /// refresh read-side caches: the bounded-staleness cosine mode
     /// rebuilds stale neighborhoods on read, so query timing can shift
     /// *when* those rebuilds happen. ISGD serving is fully read-only.)
@@ -97,14 +152,28 @@ enum WorkerMsg {
     /// Live counter snapshot over `reply`; never blocks the stream for
     /// longer than one reply-channel send.
     MetricsSnapshot { reply: Sender<WorkerSnapshot> },
+    /// Terminal migration probe: serialize every hosted lane, send the
+    /// snapshots over `reply`, then drain out and report. Queued behind
+    /// all prior events (FIFO), so the snapshot covers the full accepted
+    /// prefix of the stream.
+    Export { reply: Sender<WorkerExport> },
+    /// Install a lane snapshot produced by a retiring worker's `Export`.
+    /// Sent before any post-rescale event on the same FIFO, so imported
+    /// state is in place before new learning touches the lane.
+    Import { lane: u64, bytes: Vec<u8> },
 }
 
-/// One replica's answer to a query. Reply arrival order is irrelevant:
+/// One replica's answer to a query: the ranked local top-N of every lane
+/// of the user's grid column hosted here, plus the union of the user's
+/// locally-rated items. Reply arrival order is irrelevant:
 /// [`merge_topn`]'s key (best rank, votes, item id) is order-independent,
-/// as is the union of the rated sets.
+/// as is the union of the rated sets — and the *lists themselves* are
+/// per-lane, so the merged result does not depend on how lanes are
+/// currently placed on workers (the rescale equivalence guarantee).
 struct ReplicaAnswer {
-    /// Ranked local top-N (local rated items already excluded).
-    items: Vec<ItemId>,
+    /// Ranked local top-N per hosted lane of the user's column (local
+    /// rated items already excluded; empty lists elided).
+    lists: Vec<Vec<ItemId>>,
     /// Items this user has rated on this replica, for global exclusion.
     rated: Vec<ItemId>,
 }
@@ -121,6 +190,8 @@ enum CollectorMsg {
 /// [`WorkerReport`] reports at shutdown.
 #[derive(Debug, Clone)]
 pub struct WorkerSnapshot {
+    /// Session-unique worker id (ids keep counting across rescale
+    /// generations, so retired and live workers never collide).
     pub worker_id: usize,
     /// Events processed so far.
     pub processed: u64,
@@ -128,7 +199,10 @@ pub struct WorkerSnapshot {
     pub hits: u64,
     /// Serving queries answered so far.
     pub queries: u64,
-    /// Current state-entry counts.
+    /// Lane models currently hosted (1 per worker in the default
+    /// grid-equals-topology configuration).
+    pub lanes: u64,
+    /// Current state-entry counts (summed over hosted lanes).
     pub state: StateSizes,
 }
 
@@ -137,34 +211,75 @@ pub struct WorkerSnapshot {
 pub struct ClusterMetrics {
     /// Events accepted by [`Cluster::ingest`] so far.
     pub ingested: u64,
-    /// Events fully processed across workers (== `ingested` at the moment
-    /// the snapshot is answered: the probe rides behind the flushed
-    /// buffers on the per-worker FIFO).
+    /// Events fully processed across workers, including workers retired
+    /// by earlier rescales (== `ingested` at the moment the snapshot is
+    /// answered: the probe rides behind the flushed buffers on the
+    /// per-worker FIFO).
     pub processed: u64,
-    /// Prequential hits so far.
+    /// Prequential hits so far (including retired workers).
     pub hits: u64,
     /// Lifetime online recall so far (hits / processed).
     pub recall: f64,
-    /// Serving queries answered so far.
+    /// Serving queries answered so far (including retired workers).
     pub queries: u64,
     /// Total ns senders spent blocked on backpressure so far.
     pub backpressure_ns: u64,
     /// Total ns worker receivers spent waiting for messages so far.
     pub recv_blocked_ns: u64,
-    /// Mean messages per channel send across workers (1.0 = unbatched;
+    /// Mean messages per channel send (1.0 = unbatched;
     /// tracks how much transport cost `ingest_batch_size` amortizes).
     /// Counts *all* data-channel sends: query/snapshot probes and the
     /// partial flushes they force are singletons, so probe-heavy
     /// sessions read lower than their event batching — pure ingest runs
     /// (the bench) read clean.
     pub mean_send_batch: f64,
-    /// Per-worker detail, sorted by worker id.
+    /// Completed [`Cluster::rescale`] calls.
+    pub rescales: u64,
+    /// Total serialized lane bytes moved by rescales.
+    pub migrated_bytes: u64,
+    /// Total ns the session spent inside rescale cutovers (ingest and
+    /// serving are paused for exactly this long, summed).
+    pub rescale_pause_ns: u64,
+    /// Current topology version: 0 at spawn, +1 per rescale.
+    pub router_epoch: u64,
+    /// Per-live-worker detail, sorted by worker id (retired workers'
+    /// totals are folded into the aggregates above; their final reports
+    /// appear in [`RunReport::retired`] after [`Cluster::finish`]).
     pub workers: Vec<WorkerSnapshot>,
 }
 
-/// A running shared-nothing cluster: ingest, serve, observe, finish.
+/// Outcome of one [`Cluster::rescale`]: what moved and what it cost.
+#[derive(Debug, Clone)]
+pub struct RescaleReport {
+    /// Topology before the rescale.
+    pub from: Topology,
+    /// Topology after the rescale.
+    pub to: Topology,
+    /// Worker count before.
+    pub from_workers: usize,
+    /// Worker count after.
+    pub to_workers: usize,
+    /// Lane snapshots migrated (only lanes that had state; untouched
+    /// virtual cells have nothing to move).
+    pub lanes_moved: u64,
+    /// Serialized state bytes moved.
+    pub bytes_moved: u64,
+    /// Wall-clock ns the cutover took — the window during which ingest
+    /// and serving were paused.
+    pub pause_ns: u64,
+    /// Router epoch now live (bumped by this rescale).
+    pub epoch: u64,
+}
+
+/// A running shared-nothing cluster: ingest, serve, observe, rescale,
+/// finish.
 pub struct Cluster {
     label: String,
+    /// Configuration echo; worker generations spawned by rescale reuse it
+    /// (only the topology changes across generations).
+    cfg: RunConfig,
+    /// The fixed virtual grid state is partitioned on (see [`StateGrid`]).
+    grid: StateGrid,
     router: Router,
     worker_txs: Vec<Sender<WorkerMsg>>,
     /// Per-worker route buffers: envelopes accumulate here and move in
@@ -175,11 +290,25 @@ pub struct Cluster {
     batch_size: usize,
     handles: Vec<WorkerHandle<Result<WorkerReport>>>,
     collector: Option<WorkerHandle<(Vec<(u64, f64)>, u64)>>,
+    /// Master clone handed to each worker generation; dropped in
+    /// [`Cluster::finish`] so the collector sees end-of-stream only after
+    /// the last generation drained.
+    col_tx: Option<Sender<CollectorMsg>>,
+    /// Final reports of workers retired by rescales.
+    retired: Vec<WorkerReport>,
+    /// Channel counters of retired worker generations (their channels are
+    /// gone; the totals must survive into metrics/finish).
+    chan_base: ChannelStats,
+    /// Next session-unique worker id.
+    next_ord: usize,
     /// Wall clock starts at the first ingest (matches the old
     /// `run_pipeline` accounting, which excluded worker spawn).
     started: Option<Instant>,
     seq: u64,
     route_ns: u64,
+    rescales: u64,
+    migrated_bytes: u64,
+    rescale_pause_ns: u64,
 }
 
 impl Cluster {
@@ -191,32 +320,24 @@ impl Cluster {
 
     /// [`Cluster::spawn`] with a report label (experiment harness tag).
     pub fn spawn_labeled(cfg: &RunConfig, label: &str) -> Result<Self> {
+        let grid = StateGrid::for_config(cfg)?;
         let router = Router::new(cfg.topology);
         let n_c = router.n_c();
         log::info!(
-            "cluster '{label}': n_i={} -> {} workers, {} backend, \
-             forgetting={}",
+            "cluster '{label}': n_i={} -> {} workers, state grid {}x{} \
+             ({} lanes), {} backend, forgetting={}",
             cfg.topology.n_i,
             n_c,
+            grid.v_i(),
+            grid.v_u(),
+            grid.n_lanes(),
             cfg.backend.name(),
             cfg.forgetting.name(),
         );
 
         // Channels: coordinator -> workers (bounded, backpressured),
         // workers -> collector (bounded; hit batches are small).
-        let mut worker_txs: Vec<Sender<WorkerMsg>> = Vec::with_capacity(n_c);
-        let mut handles = Vec::with_capacity(n_c);
         let (col_tx, col_rx) = bounded::<CollectorMsg>(n_c * 4 + 16);
-        for wid in 0..n_c {
-            let (tx, rx) = bounded::<WorkerMsg>(cfg.channel_capacity);
-            worker_txs.push(tx);
-            let cfg = cfg.clone();
-            let col_tx = col_tx.clone();
-            handles.push(spawn(wid, "worker", move || {
-                worker_loop(wid, &cfg, rx, col_tx)
-            }));
-        }
-        drop(col_tx);
 
         // Collector runs on its own thread so worker hit-batches never
         // block; it sizes its bitmaps dynamically because a session has no
@@ -228,30 +349,72 @@ impl Cluster {
         });
 
         let batch_size = cfg.ingest_batch_size.max(1);
-        let route_bufs =
-            (0..n_c).map(|_| Vec::with_capacity(batch_size)).collect();
-        Ok(Self {
+        let mut cluster = Self {
             label: label.to_string(),
+            cfg: cfg.clone(),
+            grid,
             router,
-            worker_txs,
-            route_bufs,
+            worker_txs: Vec::new(),
+            route_bufs: Vec::new(),
             batch_size,
-            handles,
+            handles: Vec::new(),
             collector: Some(collector),
+            col_tx: Some(col_tx),
+            retired: Vec::new(),
+            chan_base: ChannelStats::default(),
+            next_ord: 0,
             started: None,
             seq: 0,
             route_ns: 0,
-        })
+            rescales: 0,
+            migrated_bytes: 0,
+            rescale_pause_ns: 0,
+        };
+        cluster.spawn_generation(n_c);
+        Ok(cluster)
     }
 
-    /// Number of workers in the cluster.
+    /// Spawn `n_c` workers for the current topology, assigning each a
+    /// session-unique id and a clone of the collector sender.
+    fn spawn_generation(&mut self, n_c: usize) {
+        let col_tx = self
+            .col_tx
+            .as_ref()
+            .expect("spawn_generation after finish")
+            .clone();
+        self.worker_txs = Vec::with_capacity(n_c);
+        self.handles = Vec::with_capacity(n_c);
+        self.route_bufs =
+            (0..n_c).map(|_| Vec::with_capacity(self.batch_size)).collect();
+        let grid = self.grid;
+        for _ in 0..n_c {
+            let ord = self.next_ord;
+            self.next_ord += 1;
+            let (tx, rx) = bounded::<WorkerMsg>(self.cfg.channel_capacity);
+            self.worker_txs.push(tx);
+            let cfg = self.cfg.clone();
+            let col_tx = col_tx.clone();
+            self.handles.push(spawn(ord, "worker", move || {
+                worker_loop(ord, &cfg, grid, rx, col_tx)
+            }));
+        }
+    }
+
+    /// Number of workers in the cluster (current topology).
     pub fn n_workers(&self) -> usize {
         self.worker_txs.len()
     }
 
-    /// The Algorithm-1 router (e.g. to inspect a user's replica set).
+    /// The Algorithm-1 router for the *current* topology (e.g. to inspect
+    /// a user's replica set). Its [`Router::epoch`] advances on every
+    /// rescale, so cached routing decisions can be revalidated.
     pub fn router(&self) -> &Router {
         &self.router
+    }
+
+    /// The fixed virtual state grid lanes are partitioned on.
+    pub fn state_grid(&self) -> StateGrid {
+        self.grid
     }
 
     /// Events accepted so far (including events still in route buffers —
@@ -308,10 +471,10 @@ impl Cluster {
         Ok(())
     }
 
-    /// Flush every route buffer. Runs before any `Query` or
-    /// `MetricsSnapshot` send and in [`Cluster::finish`] so reads keep
-    /// their read-your-writes guarantee: the probe queues behind every
-    /// previously ingested event on each per-worker FIFO.
+    /// Flush every route buffer. Runs before any `Query`,
+    /// `MetricsSnapshot`, or `Export` send and in [`Cluster::finish`] so
+    /// reads keep their read-your-writes guarantee: the probe queues
+    /// behind every previously ingested event on each per-worker FIFO.
     fn flush_all(&mut self) -> Result<()> {
         for wid in 0..self.route_bufs.len() {
             self.flush_worker(wid)?;
@@ -324,23 +487,28 @@ impl Cluster {
     ///
     /// Fans the query out to every replica of the user (its grid column,
     /// [`Router::user_workers`]); each replica answers from its local
-    /// model over a reply channel; the per-replica ranked lists are merged
-    /// rank-aware into a global top-N that excludes items the user has
-    /// rated on *any* replica. A user unknown to every replica yields an
-    /// empty list (cold start).
+    /// lane models over a reply channel; the per-lane ranked lists are
+    /// merged rank-aware into a global top-N that excludes items the user
+    /// has rated on *any* replica. A user unknown to every replica yields
+    /// an empty list (cold start).
     ///
     /// Read-your-writes: all route buffers are flushed first, so the
     /// query queues behind every previously ingested event — including
     /// events that were still buffered — on each replica's FIFO.
+    ///
+    /// Rescale-invariant: the merged answer depends only on the per-lane
+    /// lists, not on how lanes are placed on workers, so the same session
+    /// state yields the same answer under any topology
+    /// (property-tested in `tests/rescale_equivalence.rs`).
     pub fn recommend(&mut self, user: UserId, n: usize) -> Result<Vec<ItemId>> {
         self.flush_all()?;
         let replicas = self.router.user_workers(user);
-        // Over-fetch per replica: a replica cannot know which of its
-        // candidates the user consumed on *other* replicas, and the global
-        // exclusion below would otherwise under-fill the merged top-N.
-        // (On the PJRT backend the compiled artifact's overfetch bound may
-        // clip very large requests for heavy raters — the replica then
-        // degrades to fewer candidates, it never errors.)
+        // Over-fetch per lane: a lane cannot know which of its candidates
+        // the user consumed on *other* lanes, and the global exclusion
+        // below would otherwise under-fill the merged top-N. (On the PJRT
+        // backend the compiled artifact's overfetch bound may clip very
+        // large requests for heavy raters — the lane then degrades to
+        // fewer candidates, it never errors.)
         let fetch = n.saturating_mul(2);
         let (reply_tx, reply_rx) = bounded::<ReplicaAnswer>(replicas.len());
         let mut asked = 0usize;
@@ -364,18 +532,20 @@ impl Cluster {
             .flat_map(|a| a.rated.iter().copied())
             .collect();
         let lists: Vec<Vec<ItemId>> =
-            answers.into_iter().map(|a| a.items).collect();
+            answers.into_iter().flat_map(|a| a.lists).collect();
         Ok(merge_topn(&lists, &exclude, n))
     }
 
     /// Live metrics without shutdown: every worker answers a snapshot
     /// probe; route buffers are flushed first and the probe queues behind
     /// the flushed events (per-worker FIFO), so the aggregate reflects
-    /// the whole prefix of the stream accepted before this call.
+    /// the whole prefix of the stream accepted before this call. Workers
+    /// retired by earlier rescales contribute their final totals to the
+    /// aggregates.
     pub fn metrics(&mut self) -> Result<ClusterMetrics> {
         self.flush_all()?;
         let (reply_tx, reply_rx) =
-            bounded::<WorkerSnapshot>(self.worker_txs.len());
+            bounded::<WorkerSnapshot>(self.worker_txs.len().max(1));
         let mut asked = 0usize;
         for tx in &self.worker_txs {
             let msg = WorkerMsg::MetricsSnapshot { reply: reply_tx.clone() };
@@ -386,9 +556,14 @@ impl Cluster {
         drop(reply_tx);
         let mut workers = reply_rx.recv_n(asked);
         workers.sort_by_key(|w| w.worker_id);
-        let processed: u64 = workers.iter().map(|w| w.processed).sum();
-        let hits: u64 = workers.iter().map(|w| w.hits).sum();
-        let queries: u64 = workers.iter().map(|w| w.queries).sum();
+        let mut processed: u64 = workers.iter().map(|w| w.processed).sum();
+        let mut hits: u64 = workers.iter().map(|w| w.hits).sum();
+        let mut queries: u64 = workers.iter().map(|w| w.queries).sum();
+        for w in &self.retired {
+            processed += w.processed;
+            hits += w.hits;
+            queries += w.queries;
+        }
         let chan = self.channel_stats();
         Ok(ClusterMetrics {
             ingested: self.seq,
@@ -399,24 +574,154 @@ impl Cluster {
             backpressure_ns: chan.blocked_ns,
             recv_blocked_ns: chan.recv_blocked_ns,
             mean_send_batch: chan.mean_send_batch(),
+            rescales: self.rescales,
+            migrated_bytes: self.migrated_bytes,
+            rescale_pause_ns: self.rescale_pause_ns,
+            router_epoch: self.router.epoch(),
             workers,
         })
     }
 
-    /// Aggregate channel counters across the per-worker data channels.
-    fn channel_stats(&self) -> crate::engine::ChannelStats {
-        let mut total = crate::engine::ChannelStats::default();
+    /// Aggregate channel counters: retired generations' totals plus the
+    /// live per-worker data channels.
+    fn channel_stats(&self) -> ChannelStats {
+        let mut total = self.chan_base;
         for tx in &self.worker_txs {
-            let st = tx.metrics();
-            total.sent += st.sent;
-            total.send_batches += st.send_batches;
-            total.blocked_ns += st.blocked_ns;
-            total.recv_blocked_ns += st.recv_blocked_ns;
-            total.received += st.received;
-            total.recv_batches += st.recv_batches;
-            total.high_water = total.high_water.max(st.high_water);
+            total.absorb(&tx.metrics());
         }
         total
+    }
+
+    /// Live elastic rescale: migrate the running session to
+    /// `new_topology` with zero event loss and exact model state.
+    ///
+    /// The new topology must be compatible with the session's
+    /// [`StateGrid`] (its `n_i` divides the grid's rows and its `n_ciw`
+    /// the grid's columns) — with the default grid that means any
+    /// topology whose grid divides the spawn grid; set `rescale.max_n_i`
+    /// at spawn to reserve headroom for scaling *out* beyond the spawn
+    /// size. See the module docs for the cutover protocol and
+    /// ARCHITECTURE.md for the design.
+    ///
+    /// Costs one full pause of the session (no ingest or serving while
+    /// state moves); the report says how long and how many bytes. After
+    /// an error the session should be considered lost (workers may
+    /// already be retired) — [`Cluster::finish`] will surface the root
+    /// cause.
+    pub fn rescale(&mut self, new_topology: Topology) -> Result<RescaleReport> {
+        let t0 = Instant::now();
+        if !self.grid.supports(new_topology) {
+            anyhow::bail!(
+                "topology n_i={} n_ciw={} does not divide the state grid \
+                 {}x{}; spawn with rescale.max_n_i to reserve headroom",
+                new_topology.n_i,
+                new_topology.n_ciw(),
+                self.grid.v_i(),
+                self.grid.v_u(),
+            );
+        }
+        let from = self.cfg.topology;
+        let from_workers = self.worker_txs.len();
+        log::info!(
+            "cluster '{}': rescale n_i {} -> {} ({} -> {} workers)",
+            self.label,
+            from.n_i,
+            new_topology.n_i,
+            from_workers,
+            new_topology.n_c(),
+        );
+
+        // Pause + flush: push every buffered event onto its FIFO so the
+        // Export probe below queues behind the complete accepted prefix.
+        self.flush_all()?;
+
+        // Drain + export: each worker finishes its queue, snapshots its
+        // lanes, replies, and exits.
+        let (reply_tx, reply_rx) =
+            bounded::<WorkerExport>(from_workers.max(1));
+        let mut asked = 0usize;
+        for tx in &self.worker_txs {
+            if tx.send(WorkerMsg::Export { reply: reply_tx.clone() }).is_ok() {
+                asked += 1;
+            }
+        }
+        drop(reply_tx);
+        if asked != from_workers {
+            anyhow::bail!(
+                "rescale: {} of {from_workers} workers already dead",
+                from_workers - asked
+            );
+        }
+        let exports = reply_rx.recv_n(asked);
+        if exports.len() != asked {
+            anyhow::bail!(
+                "rescale: only {} of {asked} workers exported state \
+                 (a worker died mid-drain)",
+                exports.len()
+            );
+        }
+
+        // Retire the old generation: fold its channel counters into the
+        // base, close its channels, and keep its final reports.
+        self.chan_base = self.channel_stats();
+        self.worker_txs.clear();
+        self.route_bufs.clear();
+        for h in self.handles.drain(..) {
+            self.retired.push(h.join()??);
+        }
+
+        // Install the new topology (epoch bump) and spawn the new
+        // generation.
+        self.router =
+            Router::with_epoch(new_topology, self.router.epoch() + 1);
+        self.cfg.topology = new_topology;
+        let n_c = self.router.n_c();
+        self.spawn_generation(n_c);
+
+        // Re-route every lane to its owner under the new grid. Imports go
+        // out before resume, so FIFO order puts them ahead of any
+        // post-rescale event.
+        let mut lanes_moved = 0u64;
+        let mut bytes_moved = 0u64;
+        for export in exports {
+            for snap in export.lanes {
+                let target = self.grid.owner(snap.lane, &self.router);
+                lanes_moved += 1;
+                bytes_moved += snap.bytes.len() as u64;
+                let msg =
+                    WorkerMsg::Import { lane: snap.lane, bytes: snap.bytes };
+                if self.worker_txs[target].send(msg).is_err() {
+                    anyhow::bail!(
+                        "rescale: new worker {target} died during import"
+                    );
+                }
+            }
+        }
+
+        let pause_ns = t0.elapsed().as_nanos() as u64;
+        self.rescales += 1;
+        self.migrated_bytes += bytes_moved;
+        self.rescale_pause_ns += pause_ns;
+        let report = RescaleReport {
+            from,
+            to: new_topology,
+            from_workers,
+            to_workers: n_c,
+            lanes_moved,
+            bytes_moved,
+            pause_ns,
+            epoch: self.router.epoch(),
+        };
+        log::info!(
+            "cluster '{}': rescale done — {} lanes / {} bytes moved in \
+             {:.1} ms (epoch {})",
+            self.label,
+            lanes_moved,
+            bytes_moved,
+            pause_ns as f64 / 1e6,
+            report.epoch,
+        );
+        Ok(report)
     }
 
     /// Drain in-flight events, join workers and collector, and assemble
@@ -425,9 +730,9 @@ impl Cluster {
     ///
     /// Note on `throughput`: the wall-clock window runs from the first
     /// ingest to this call, so for an interactive session it includes
-    /// serving fan-outs, metrics probes, and caller think-time — it is
-    /// *session* throughput. Only a pure ingest run (what `run_pipeline`
-    /// does) reads as ingest throughput.
+    /// serving fan-outs, metrics probes, rescale pauses, and caller
+    /// think-time — it is *session* throughput. Only a pure ingest run
+    /// (what `run_pipeline` does) reads as ingest throughput.
     pub fn finish(mut self) -> Result<RunReport> {
         // Flush the buffered tail first — the drain guarantee covers every
         // accepted event. A flush failure means a worker already died; keep
@@ -440,8 +745,8 @@ impl Cluster {
         let chan = self.channel_stats();
         // Close worker inputs; workers drain and report via join.
         self.worker_txs.clear();
-        let mut workers: Vec<WorkerReport> =
-            Vec::with_capacity(self.handles.len());
+        let n_workers = self.handles.len();
+        let mut workers: Vec<WorkerReport> = Vec::with_capacity(n_workers);
         for h in self.handles.drain(..) {
             workers.push(h.join()??);
         }
@@ -449,16 +754,21 @@ impl Cluster {
             .started
             .map(|t| t.elapsed().as_secs_f64())
             .unwrap_or(0.0);
+        // Drop the master collector sender only after every generation's
+        // workers are gone; the collector then sees end-of-stream.
+        drop(self.col_tx.take());
         let (recall_curve, hits) = self
             .collector
             .take()
             .expect("collector joined twice")
             .join()?;
         workers.sort_by_key(|w| w.worker_id);
+        let mut retired = std::mem::take(&mut self.retired);
+        retired.sort_by_key(|w| w.worker_id);
         let events = self.seq;
         Ok(RunReport {
             label: self.label.clone(),
-            n_workers: workers.len(),
+            n_workers,
             events,
             hits,
             wall_secs,
@@ -466,16 +776,22 @@ impl Cluster {
             avg_recall: hits as f64 / events.max(1) as f64,
             recall_curve,
             workers,
+            retired,
             route_ns_per_event: self.route_ns as f64 / events.max(1) as f64,
             backpressure_ns: chan.blocked_ns,
             recv_blocked_ns: chan.recv_blocked_ns,
             mean_send_batch: chan.mean_send_batch(),
+            rescales: self.rescales,
+            migrated_bytes: self.migrated_bytes,
+            rescale_pause_ns: self.rescale_pause_ns,
         })
     }
 }
 
-/// Worker body: prequential learning loop + serving + snapshots over one
-/// local model.
+/// Worker body: prequential learning loop + serving + snapshots +
+/// migration over the worker's hosted *lanes* (one independent model per
+/// virtual grid cell; exactly one lane per worker in the default
+/// grid-equals-topology configuration).
 ///
 /// Drain-based: each wakeup moves *everything* queued into a local inbox
 /// in one critical section ([`Receiver::recv_many`]), then works through
@@ -485,14 +801,20 @@ impl Cluster {
 /// back-to-back over a resident inbox instead of interleaving with
 /// channel crossings. Queries and snapshots sit at their FIFO position
 /// inside the drained window, so they observe exactly the events
-/// ingested before them.
+/// ingested before them. `Export` is terminal: reply, then drain out.
+///
+/// Lane models are built lazily on first touch, seeded by *lane id* (not
+/// worker id) so a lane's RNG stream — and therefore its entire model
+/// evolution — is identical wherever the lane is hosted.
 fn worker_loop(
-    wid: usize,
+    ord: usize,
     cfg: &RunConfig,
+    grid: StateGrid,
     rx: Receiver<WorkerMsg>,
     col_tx: Sender<CollectorMsg>,
 ) -> Result<WorkerReport> {
-    let mut model = build_model(cfg, wid)?;
+    let mut lanes: BTreeMap<u64, Box<dyn StreamingRecommender>> =
+        BTreeMap::new();
     let mut preq = Prequential::new(cfg.top_n, cfg.recall_window);
     let mut clock = ForgetClock::new(cfg.forgetting);
     let mut latency = Histogram::new();
@@ -504,11 +826,23 @@ fn worker_loop(
     let mut queries = 0u64;
     let mut recommend_ns = 0u64;
     let mut update_ns = 0u64;
+    let mut exported = false;
 
-    while rx.recv_many(&mut inbox, usize::MAX) {
+    'drain: while rx.recv_many(&mut inbox, usize::MAX) {
         for msg in inbox.drain(..) {
             match msg {
                 WorkerMsg::Event(env) => {
+                    let lane_id =
+                        grid.lane(env.rating.user, env.rating.item);
+                    // Single hot-path lookup (entry), not contains+get.
+                    let model = match lanes.entry(lane_id) {
+                        std::collections::btree_map::Entry::Vacant(v) => {
+                            v.insert(build_model(cfg, lane_id as usize)?)
+                        }
+                        std::collections::btree_map::Entry::Occupied(o) => {
+                            o.into_mut()
+                        }
+                    };
                     let out = preq.step(model.as_mut(), &env.rating);
                     latency.record(out.recommend_ns + out.update_ns);
                     recommend_ns += out.recommend_ns;
@@ -523,27 +857,64 @@ fn worker_loop(
                         let _ = col_tx.send(CollectorMsg::Hits(full));
                     }
                     if let Some(kind) = clock.on_event(env.rating.ts) {
-                        evicted += model.sweep(kind);
+                        for model in lanes.values_mut() {
+                            evicted += model.sweep(kind);
+                        }
                     }
                 }
                 WorkerMsg::Query { user, n, reply } => {
-                    // Serving never trains the model and never enters the
+                    // Serving never trains the models and never enters the
                     // prequential accounting. (Cosine fast mode may
                     // rebuild read-side neighborhood caches here; see
-                    // WorkerMsg docs.)
+                    // WorkerMsg docs.) Every hosted lane of the user's
+                    // grid column answers with its own ranked list.
                     queries += 1;
-                    let items = model.recommend(user, n);
-                    let rated = model.rated_items(user);
-                    let _ = reply.send(ReplicaAnswer { items, rated });
+                    let col = grid.user_col(user);
+                    let mut lists = Vec::new();
+                    let mut rated = Vec::new();
+                    for (lane_id, model) in lanes.iter_mut() {
+                        if grid.lane_col(*lane_id) != col {
+                            continue;
+                        }
+                        let items = model.recommend(user, n);
+                        if !items.is_empty() {
+                            lists.push(items);
+                        }
+                        rated.extend(model.rated_items(user));
+                    }
+                    let _ = reply.send(ReplicaAnswer { lists, rated });
                 }
                 WorkerMsg::MetricsSnapshot { reply } => {
                     let _ = reply.send(WorkerSnapshot {
-                        worker_id: wid,
+                        worker_id: ord,
                         processed,
                         hits: preq.recall().hits(),
                         queries,
-                        state: model.state_sizes(),
+                        lanes: lanes.len() as u64,
+                        state: sum_state(&lanes),
                     });
+                }
+                WorkerMsg::Import { lane, bytes } => {
+                    if !lanes.contains_key(&lane) {
+                        lanes.insert(lane, build_model(cfg, lane as usize)?);
+                    }
+                    lanes.get_mut(&lane).unwrap().import_partition(&bytes)?;
+                }
+                WorkerMsg::Export { reply } => {
+                    // Terminal: everything ingested before this probe has
+                    // been processed (FIFO), so the snapshots cover the
+                    // complete accepted prefix. The coordinator sends
+                    // nothing after Export, so breaking out drops no work.
+                    let out: Vec<LaneSnapshot> = lanes
+                        .iter()
+                        .map(|(id, model)| LaneSnapshot {
+                            lane: *id,
+                            bytes: model.export_partition(&|_| true),
+                        })
+                        .collect();
+                    exported = true;
+                    let _ = reply.send(WorkerExport { lanes: out });
+                    break 'drain;
                 }
             }
         }
@@ -552,18 +923,36 @@ fn worker_loop(
         let _ = col_tx.send(CollectorMsg::Hits(batch));
     }
     let report = WorkerReport {
-        worker_id: wid,
+        worker_id: ord,
         processed,
         hits: preq.recall().hits(),
-        state: model.state_sizes(),
+        // An exported worker handed its state off; reporting it again
+        // would double-count entries that now live on the new workers.
+        state: if exported {
+            StateSizes::default()
+        } else {
+            sum_state(&lanes)
+        },
         latency,
         sweeps: clock.sweeps(),
         evicted,
         recommend_ns,
         update_ns,
     };
-    let _ = col_tx.send(CollectorMsg::Done { worker_id: wid });
+    let _ = col_tx.send(CollectorMsg::Done { worker_id: ord });
     Ok(report)
+}
+
+/// Sum state-entry counts across a worker's hosted lanes.
+fn sum_state(lanes: &BTreeMap<u64, Box<dyn StreamingRecommender>>) -> StateSizes {
+    let mut total = StateSizes::default();
+    for model in lanes.values() {
+        let s = model.state_sizes();
+        total.users += s.users;
+        total.items += s.items;
+        total.aux += s.aux;
+    }
+    total
 }
 
 /// Collector: reassembles the global prequential curve from per-worker
@@ -679,6 +1068,8 @@ mod tests {
         let n_i = 2u64;
         assert_eq!(m2.queries, n_i);
         assert_eq!(m2.workers.len(), 4);
+        assert_eq!(m2.rescales, 0);
+        assert_eq!(m2.router_epoch, 0);
         let report = cluster.finish().unwrap();
         assert_eq!(report.hits, m2.hits, "final report matches last snapshot");
     }
@@ -702,5 +1093,95 @@ mod tests {
         assert_eq!(report.hits, 0);
         assert!(report.recall_curve.is_empty());
         assert_eq!(report.n_workers, 4);
+        assert!(report.retired.is_empty());
+        assert_eq!(report.rescales, 0);
+    }
+
+    #[test]
+    fn rescale_scale_in_and_out_loses_nothing() {
+        // Spawn at n_i=2 with a 4x4 state-grid ceiling, scale out to
+        // n_i=4, back in to n_i=1, and out again — every event must be
+        // processed exactly once and the final report must account for
+        // every generation.
+        let events = small_events(2400);
+        let mut c = cfg(2);
+        c.rescale_max_n_i = 4;
+        let mut cluster = Cluster::spawn_labeled(&c, "t-rescale").unwrap();
+        assert_eq!(cluster.n_workers(), 4);
+        assert_eq!(cluster.state_grid().n_lanes(), 16);
+
+        cluster.ingest_batch(&events[..800]).unwrap();
+        let r1 = cluster.rescale(Topology::new(4, 0).unwrap()).unwrap();
+        assert_eq!(r1.from_workers, 4);
+        assert_eq!(r1.to_workers, 16);
+        assert_eq!(r1.epoch, 1);
+        assert!(r1.bytes_moved > 0);
+        assert_eq!(cluster.n_workers(), 16);
+        let m = cluster.metrics().unwrap();
+        assert_eq!(m.processed, 800, "no events lost in scale-out");
+        assert_eq!(m.rescales, 1);
+        assert_eq!(m.router_epoch, 1);
+
+        cluster.ingest_batch(&events[800..1600]).unwrap();
+        let r2 = cluster.rescale(Topology::new(1, 0).unwrap()).unwrap();
+        assert_eq!(r2.to_workers, 1);
+        let m = cluster.metrics().unwrap();
+        assert_eq!(m.processed, 1600, "no events lost in scale-in");
+        assert_eq!(m.workers.len(), 1);
+        // The single worker hosts every lane the stream has touched
+        // (lanes are built lazily, so count the distinct virtual cells).
+        let touched: std::collections::HashSet<(u64, u64)> = events[..1600]
+            .iter()
+            .map(|e| (e.item % 4, e.user % 4))
+            .collect();
+        assert_eq!(m.workers[0].lanes, touched.len() as u64);
+
+        cluster.ingest_batch(&events[1600..]).unwrap();
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, 2400);
+        assert_eq!(report.rescales, 2);
+        assert!(report.migrated_bytes >= r1.bytes_moved + r2.bytes_moved);
+        let total: u64 = report
+            .workers
+            .iter()
+            .chain(report.retired.iter())
+            .map(|w| w.processed)
+            .sum();
+        assert_eq!(total, 2400, "live + retired workers cover the stream");
+        // 4 + 16 retired, 1 live.
+        assert_eq!(report.retired.len(), 20);
+        assert_eq!(report.n_workers, 1);
+    }
+
+    #[test]
+    fn rescale_rejects_incompatible_topology() {
+        let mut c = cfg(2);
+        c.rescale_max_n_i = 4;
+        let mut cluster = Cluster::spawn(&c).unwrap();
+        let err =
+            cluster.rescale(Topology::new(3, 0).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("state grid"), "{err}");
+        // Session is still healthy after a rejected (pre-flight) rescale.
+        cluster.ingest_batch(&small_events(100)).unwrap();
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, 100);
+    }
+
+    #[test]
+    fn default_grid_allows_divisor_rescale_only() {
+        // Without a ceiling the state grid equals the spawn topology:
+        // n_i=4 can host n_i in {1, 2, 4} but not grow to 8.
+        let events = small_events(600);
+        let mut cluster = Cluster::spawn(&cfg(4)).unwrap();
+        cluster.ingest_batch(&events).unwrap();
+        assert!(cluster.rescale(Topology::new(8, 0).unwrap()).is_err());
+        cluster.rescale(Topology::new(2, 0).unwrap()).unwrap();
+        assert_eq!(cluster.n_workers(), 4);
+        let m = cluster.metrics().unwrap();
+        assert_eq!(m.processed, 600);
+        cluster.rescale(Topology::new(4, 0).unwrap()).unwrap();
+        assert_eq!(cluster.n_workers(), 16);
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, 600);
     }
 }

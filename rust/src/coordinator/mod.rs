@@ -1,13 +1,14 @@
 //! The paper's system contribution: the splitting & replication router
 //! (Algorithm 1), the long-lived [`Cluster`] session that drives
-//! shared-nothing streaming recommenders (Figures 1-2) and serves online
-//! queries over the user replicas, and the one-shot [`run_pipeline`]
+//! shared-nothing streaming recommenders (Figures 1-2), serves online
+//! queries over the user replicas, and rescales live via lane migration
+//! on the virtual [`StateGrid`], and the one-shot [`run_pipeline`]
 //! compatibility wrapper.
 
 pub mod cluster;
 pub mod pipeline;
 pub mod router;
 
-pub use cluster::{Cluster, ClusterMetrics, WorkerSnapshot};
+pub use cluster::{Cluster, ClusterMetrics, RescaleReport, WorkerSnapshot};
 pub use pipeline::run_pipeline;
-pub use router::{Router, WorkerId};
+pub use router::{Router, StateGrid, WorkerId};

@@ -50,25 +50,45 @@ pub struct Router {
     n_i: u64,
     n_ciw: u64,
     n_c: u64,
+    epoch: u64,
 }
 
 impl Router {
+    /// Router for `topology` at epoch 0 (the spawn-time grid).
     pub fn new(topology: Topology) -> Self {
+        Self::with_epoch(topology, 0)
+    }
+
+    /// Router for `topology` stamped with a topology `epoch`. Every
+    /// [`Cluster::rescale`](crate::coordinator::Cluster::rescale) installs
+    /// a fresh router with the epoch bumped by one, so any externally
+    /// cached routing decision (a replica set from
+    /// [`Router::user_workers`], a worker id from [`Router::route`]) can
+    /// be revalidated cheaply: same epoch ⇒ still valid.
+    pub fn with_epoch(topology: Topology, epoch: u64) -> Self {
         let n_i = topology.n_i;
         let n_ciw = topology.n_ciw();
         let n_c = topology.n_c();
         debug_assert_eq!(n_i * n_ciw, n_c, "grid must tile the cluster");
-        Self { n_i, n_ciw, n_c }
+        Self { n_i, n_ciw, n_c, epoch }
     }
 
+    /// Topology version: 0 at spawn, +1 per rescale.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Total worker count `n_c`.
     pub fn n_c(&self) -> usize {
         self.n_c as usize
     }
 
+    /// Item splits / replication factor `n_i` (grid rows).
     pub fn n_i(&self) -> u64 {
         self.n_i
     }
 
+    /// Workers per item split `n_ciw` (grid columns).
     pub fn n_ciw(&self) -> u64 {
         self.n_ciw
     }
@@ -112,6 +132,125 @@ impl Router {
         (0..self.n_i)
             .map(|y| (user_hash + y * self.n_ciw) as WorkerId)
             .collect()
+    }
+}
+
+/// The *state grid*: the fixed virtual `v_i x v_u` grid that model state
+/// is partitioned on, independent of how many physical workers currently
+/// exist — the mechanism that makes live rescaling exact.
+///
+/// This is the same trick Flink's key groups / max-parallelism use: pick
+/// the finest partitioning once at spawn, make it the unit of state
+/// ownership ("lane"), and let every physical topology own a *group* of
+/// lanes. An event `<user, item>` belongs to lane
+/// `(item mod v_i, user mod v_u)` forever; a physical grid of
+/// `n_i x n_ciw` workers hosts lane `(a, b)` on worker
+/// `(a mod n_i, b mod n_ciw)`. Rescaling then never splits or merges
+/// model state — it *moves whole lanes*, which is exact by construction:
+/// the same lane models process the same events and answer the same
+/// queries regardless of which worker they live on.
+///
+/// A physical topology is compatible iff `n_i` divides `v_i` and `n_ciw`
+/// divides `v_u` — that makes the physical route
+/// ([`Router::route`]) agree with lane ownership:
+/// `(i mod v_i) mod n_i == i mod n_i` exactly when `n_i | v_i`.
+///
+/// By default (`rescale.max_n_i = 0`) the state grid equals the spawn
+/// topology, which reproduces the paper's behavior bit-for-bit and allows
+/// rescaling to any divisor topology. Setting `rescale.max_n_i` (the
+/// Flink "max parallelism" analog) fixes a finer grid so the cluster can
+/// later grow *beyond* its spawn size; the trade-off is that model
+/// granularity is that of the finest grid from the start (documented in
+/// ARCHITECTURE.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StateGrid {
+    v_i: u64,
+    v_u: u64,
+}
+
+impl StateGrid {
+    /// Build a `v_i x v_u` state grid (both must be >= 1).
+    pub fn new(v_i: u64, v_u: u64) -> anyhow::Result<Self> {
+        if v_i == 0 || v_u == 0 {
+            anyhow::bail!("state grid dimensions must be >= 1");
+        }
+        Ok(Self { v_i, v_u })
+    }
+
+    /// State grid for a run: the spawn topology itself unless
+    /// `rescale.max_n_i` fixes a finer ceiling grid (which the spawn
+    /// topology must then divide).
+    pub fn for_config(cfg: &crate::config::RunConfig) -> anyhow::Result<Self> {
+        let t = cfg.topology;
+        if cfg.rescale_max_n_i == 0 {
+            return Self::new(t.n_i, t.n_ciw());
+        }
+        let v_i = cfg.rescale_max_n_i;
+        let v_u = cfg.rescale_max_n_i + cfg.rescale_max_w;
+        let grid = Self::new(v_i, v_u)?;
+        if !grid.supports(t) {
+            anyhow::bail!(
+                "spawn topology n_i={} n_ciw={} does not divide the \
+                 rescale ceiling grid {}x{} (rescale.max_n_i/max_w)",
+                t.n_i,
+                t.n_ciw(),
+                v_i,
+                v_u,
+            );
+        }
+        Ok(grid)
+    }
+
+    /// Item-split count of the virtual grid (rows).
+    pub fn v_i(&self) -> u64 {
+        self.v_i
+    }
+
+    /// User-slice count of the virtual grid (columns).
+    pub fn v_u(&self) -> u64 {
+        self.v_u
+    }
+
+    /// Total lane count `v_i * v_u`.
+    pub fn n_lanes(&self) -> u64 {
+        self.v_i * self.v_u
+    }
+
+    /// Lane id owning the `<user, item>` pair: `row * v_u + col`.
+    #[inline]
+    pub fn lane(&self, user: UserId, item: ItemId) -> u64 {
+        (item % self.v_i) * self.v_u + user % self.v_u
+    }
+
+    /// Grid row (item split) of a lane id.
+    #[inline]
+    pub fn lane_row(&self, lane: u64) -> u64 {
+        lane / self.v_u
+    }
+
+    /// Grid column (user slice) of a lane id.
+    #[inline]
+    pub fn lane_col(&self, lane: u64) -> u64 {
+        lane % self.v_u
+    }
+
+    /// The virtual column every replica of `user` lives in.
+    #[inline]
+    pub fn user_col(&self, user: UserId) -> u64 {
+        user % self.v_u
+    }
+
+    /// Can a cluster with this state grid run physical topology `t`?
+    pub fn supports(&self, t: Topology) -> bool {
+        self.v_i % t.n_i == 0 && self.v_u % t.n_ciw() == 0
+    }
+
+    /// Physical worker hosting `lane` under `router`'s topology.
+    #[inline]
+    pub fn owner(&self, lane: u64, router: &Router) -> WorkerId {
+        let row = self.lane_row(lane) % router.n_i();
+        let col = self.lane_col(lane) % router.n_ciw();
+        (row * router.n_ciw() + col) as WorkerId
     }
 }
 
@@ -202,6 +341,73 @@ mod tests {
                 "every worker must receive load (n_i={n_i} w={w})"
             );
         });
+    }
+
+    #[test]
+    fn state_grid_owner_agrees_with_physical_route() {
+        // The load-bearing rescale invariant: for every compatible
+        // physical topology, the worker Algorithm 1 routes an event to
+        // IS the worker hosting the event's lane.
+        forall("grid_owner_vs_route", 300, |rng| {
+            let v_i = 1 + rng.next_bounded(8);
+            let v_u_extra = rng.next_bounded(4);
+            let v_u = v_i + v_u_extra;
+            let grid = StateGrid::new(v_i, v_u).unwrap();
+            // Random compatible topology: divisors of (v_i, v_u).
+            let n_i = divisor_of(v_i, rng);
+            let n_ciw = divisor_of(v_u, rng);
+            let w = n_ciw.saturating_sub(n_i);
+            if n_i + w != n_ciw {
+                return; // Topology encodes n_ciw = n_i + w; skip others.
+            }
+            let r = Router::new(Topology::new(n_i, w).unwrap());
+            assert!(grid.supports(Topology::new(n_i, w).unwrap()));
+            for _ in 0..64 {
+                let u = rng.next_u64();
+                let i = rng.next_u64();
+                let lane = grid.lane(u, i);
+                assert!(lane < grid.n_lanes());
+                assert_eq!(
+                    grid.owner(lane, &r),
+                    r.route(u, i),
+                    "v=({v_i},{v_u}) topo=({n_i},{w})"
+                );
+            }
+        });
+    }
+
+    fn divisor_of(n: u64, rng: &mut crate::util::rng::Pcg32) -> u64 {
+        let divs: Vec<u64> = (1..=n).filter(|d| n % d == 0).collect();
+        divs[rng.next_bounded(divs.len() as u64) as usize]
+    }
+
+    #[test]
+    fn state_grid_default_equals_spawn_topology() {
+        use crate::config::RunConfig;
+        let mut cfg = RunConfig {
+            topology: Topology::new(2, 0).unwrap(),
+            ..RunConfig::default()
+        };
+        let grid = StateGrid::for_config(&cfg).unwrap();
+        assert_eq!((grid.v_i(), grid.v_u()), (2, 2));
+        assert_eq!(grid.n_lanes(), 4);
+        // Ceiling grid: finer than spawn, must be divisible.
+        cfg.rescale_max_n_i = 4;
+        let grid = StateGrid::for_config(&cfg).unwrap();
+        assert_eq!((grid.v_i(), grid.v_u()), (4, 4));
+        assert!(grid.supports(Topology::new(1, 0).unwrap()));
+        assert!(grid.supports(Topology::new(4, 0).unwrap()));
+        assert!(!grid.supports(Topology::new(3, 0).unwrap()));
+        // Spawn topology that does not divide the ceiling is rejected.
+        cfg.topology = Topology::new(3, 0).unwrap();
+        assert!(StateGrid::for_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn router_epoch_round_trips() {
+        let t = Topology::new(2, 0).unwrap();
+        assert_eq!(Router::new(t).epoch(), 0);
+        assert_eq!(Router::with_epoch(t, 7).epoch(), 7);
     }
 
     #[test]

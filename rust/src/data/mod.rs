@@ -15,13 +15,33 @@ use types::Rating;
 #[derive(Debug, Clone)]
 pub enum DatasetSpec {
     /// Synthetic MovieLens-25M-shaped stream.
-    MovielensLike { events: u64, seed: u64 },
+    MovielensLike {
+        /// Events to generate.
+        events: u64,
+        /// Generator seed.
+        seed: u64,
+    },
     /// Synthetic Netflix-shaped stream.
-    NetflixLike { events: u64, seed: u64 },
+    NetflixLike {
+        /// Events to generate.
+        events: u64,
+        /// Generator seed.
+        seed: u64,
+    },
     /// Real MovieLens ratings.csv.
-    MovielensCsv { path: String, limit: Option<u64> },
+    MovielensCsv {
+        /// Path to `ratings.csv`.
+        path: String,
+        /// Optional cap on loaded events.
+        limit: Option<u64>,
+    },
     /// Real Netflix combined_data file.
-    NetflixFile { path: String, limit: Option<u64> },
+    NetflixFile {
+        /// Path to a `combined_data_N.txt` file.
+        path: String,
+        /// Optional cap on loaded events.
+        limit: Option<u64>,
+    },
 }
 
 impl DatasetSpec {
@@ -59,6 +79,7 @@ impl DatasetSpec {
         }
     }
 
+    /// Dataset id used in report labels and result files.
     pub fn name(&self) -> String {
         match self {
             Self::MovielensLike { .. } => "ml-like".into(),

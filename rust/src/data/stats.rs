@@ -8,11 +8,17 @@ use crate::data::types::Rating;
 /// Table 1 row for one dataset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DatasetStats {
+    /// Dataset id.
     pub name: String,
+    /// Total (filtered) rating events.
     pub ratings: u64,
+    /// Distinct users.
     pub users: u64,
+    /// Distinct items.
     pub items: u64,
+    /// `ratings / users`.
     pub avg_ratings_per_user: f64,
+    /// `ratings / items`.
     pub avg_ratings_per_item: f64,
     /// 1 - |R| / (|U| * |I|), as a percentage.
     pub sparsity_pct: f64,

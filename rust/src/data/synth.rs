@@ -99,6 +99,7 @@ pub struct SyntheticStream {
 }
 
 impl SyntheticStream {
+    /// Build the generator for `cfg` (permutations shuffled up front).
     pub fn new(cfg: SyntheticConfig) -> Self {
         let mut rng = Pcg32::seeded(cfg.seed);
         let mut item_perm: Vec<u64> = (0..cfg.items).collect();
@@ -117,6 +118,7 @@ impl SyntheticStream {
         }
     }
 
+    /// The generator parameters this stream was built with.
     pub fn config(&self) -> &SyntheticConfig {
         &self.cfg
     }

@@ -11,7 +11,9 @@ pub type ItemId = u64;
 /// and the LRU forgetting clock.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Rating {
+    /// The user who produced the feedback.
     pub user: UserId,
+    /// The item the feedback is about.
     pub item: ItemId,
     /// Raw rating. The streaming algorithms are positive-only/binary
     /// (Section 5.2 filters to 5-star feedback), but the raw value is kept
@@ -22,6 +24,7 @@ pub struct Rating {
 }
 
 impl Rating {
+    /// Convenience constructor in field order.
     pub fn new(user: UserId, item: ItemId, rating: f32, ts: u64) -> Self {
         Self { user, item, rating, ts }
     }
@@ -40,6 +43,7 @@ pub struct StateSizes {
 }
 
 impl StateSizes {
+    /// Total entries across all three stores.
     pub fn total(&self) -> u64 {
         self.users + self.items + self.aux
     }

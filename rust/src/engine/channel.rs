@@ -64,12 +64,19 @@ pub struct ChannelMetrics {
 /// retained [`Sender`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ChannelStats {
+    /// Messages enqueued.
     pub sent: u64,
+    /// Send operations (`send` counts as a batch of 1).
     pub send_batches: u64,
+    /// Nanoseconds senders spent blocked on backpressure.
     pub blocked_ns: u64,
+    /// Nanoseconds the receiver spent waiting for messages.
     pub recv_blocked_ns: u64,
+    /// Messages dequeued.
     pub received: u64,
+    /// Receive operations (`recv` counts as a batch of 1).
     pub recv_batches: u64,
+    /// Deepest queue observed.
     pub high_water: u64,
 }
 
@@ -82,6 +89,20 @@ impl ChannelStats {
     /// Mean messages moved per receive operation (drain amortization).
     pub fn mean_recv_batch(&self) -> f64 {
         self.received as f64 / self.recv_batches.max(1) as f64
+    }
+
+    /// Accumulate another snapshot into this one — used to aggregate
+    /// across a cluster's per-worker channels and, under rescaling,
+    /// across worker *generations* (retired channels' counters would
+    /// otherwise vanish from the final report).
+    pub fn absorb(&mut self, other: &ChannelStats) {
+        self.sent += other.sent;
+        self.send_batches += other.send_batches;
+        self.blocked_ns += other.blocked_ns;
+        self.recv_blocked_ns += other.recv_blocked_ns;
+        self.received += other.received;
+        self.recv_batches += other.recv_batches;
+        self.high_water = self.high_water.max(other.high_water);
     }
 }
 

@@ -12,6 +12,7 @@ pub struct WorkerHandle<R> {
 }
 
 impl<R> WorkerHandle<R> {
+    /// The id this worker was spawned with.
     pub fn id(&self) -> usize {
         self.id
     }

@@ -9,20 +9,25 @@ use crate::util::histogram::Histogram;
 /// Final report from one worker thread.
 #[derive(Debug, Clone)]
 pub struct WorkerReport {
+    /// Session-unique worker id (ids keep counting across rescale
+    /// generations).
     pub worker_id: usize,
     /// Events processed by this worker.
     pub processed: u64,
     /// Prequential hits.
     pub hits: u64,
-    /// Final state-entry counts.
+    /// Final state-entry counts (zero for workers retired by a rescale:
+    /// their state was exported to the next generation).
     pub state: StateSizes,
     /// Per-event processing latency (recommend + update), nanoseconds.
     pub latency: Histogram,
-    /// Forgetting sweeps run / entries evicted.
+    /// Forgetting sweeps run.
     pub sweeps: u64,
+    /// Entries evicted by forgetting sweeps.
     pub evicted: u64,
-    /// Nanoseconds spent inside recommend() / update() (profile split).
+    /// Nanoseconds spent inside recommend() (profile split).
     pub recommend_ns: u64,
+    /// Nanoseconds spent inside update() (profile split).
     pub update_ns: u64,
 }
 
@@ -31,8 +36,12 @@ pub struct WorkerReport {
 pub struct RunReport {
     /// Configuration echo (algorithm, n_i, forgetting, backend, dataset).
     pub label: String,
+    /// Worker count of the *final* topology (rescales may have changed it
+    /// since spawn; earlier generations are in [`RunReport::retired`]).
     pub n_workers: usize,
+    /// Total events ingested.
     pub events: u64,
+    /// Total prequential hits.
     pub hits: u64,
     /// Wall-clock seconds for the full stream.
     pub wall_secs: f64,
@@ -42,8 +51,17 @@ pub struct RunReport {
     pub avg_recall: f64,
     /// Moving-average recall curve: (global sequence, recall@N).
     pub recall_curve: Vec<(u64, f64)>,
-    /// Per-worker final reports (state-size distributions etc.).
+    /// Per-worker final reports for the final topology (state-size
+    /// distributions etc.).
     pub workers: Vec<WorkerReport>,
+    /// Final reports of workers retired by [`Cluster::rescale`] cutovers
+    /// (their state was exported, so `state` reads zero; `processed`,
+    /// `hits`, latency and timing splits are their lifetime totals —
+    /// summing `processed` over `workers` + `retired` accounts for every
+    /// ingested event exactly once).
+    ///
+    /// [`Cluster::rescale`]: crate::coordinator::Cluster::rescale
+    pub retired: Vec<WorkerReport>,
     /// Router time per event (ns, driver side).
     pub route_ns_per_event: f64,
     /// Total ns senders spent blocked on backpressure.
@@ -57,6 +75,12 @@ pub struct RunReport {
     /// Includes query/snapshot probe singletons, so interactive sessions
     /// read lower than pure ingest runs.
     pub mean_send_batch: f64,
+    /// Completed rescale cutovers during the session.
+    pub rescales: u64,
+    /// Total serialized lane bytes moved by rescales.
+    pub migrated_bytes: u64,
+    /// Total ns spent inside rescale cutovers (ingest/serving paused).
+    pub rescale_pause_ns: u64,
 }
 
 impl RunReport {
@@ -65,10 +89,12 @@ impl RunReport {
         mean(self.workers.iter().map(|w| w.state.users as f64))
     }
 
+    /// Mean of per-worker item-state sizes.
     pub fn mean_item_state(&self) -> f64 {
         mean(self.workers.iter().map(|w| w.state.items as f64))
     }
 
+    /// Mean of per-worker auxiliary-state sizes (DICS pair entries).
     pub fn mean_aux_state(&self) -> f64 {
         mean(self.workers.iter().map(|w| w.state.aux as f64))
     }
@@ -143,10 +169,14 @@ mod tests {
             avg_recall: 0.2,
             recall_curve: vec![],
             workers: vec![worker(0, 10, 4), worker(1, 20, 6)],
+            retired: vec![],
             route_ns_per_event: 1.0,
             backpressure_ns: 0,
             recv_blocked_ns: 0,
             mean_send_batch: 1.0,
+            rescales: 0,
+            migrated_bytes: 0,
+            rescale_pause_ns: 0,
         };
         assert!((r.mean_user_state() - 15.0).abs() < 1e-9);
         assert!((r.mean_item_state() - 5.0).abs() < 1e-9);

@@ -21,6 +21,7 @@ pub struct MovingRecall {
 }
 
 impl MovingRecall {
+    /// Empty window of the given size (>= 1).
     pub fn new(window: usize) -> Self {
         assert!(window >= 1);
         Self {
@@ -34,6 +35,7 @@ impl MovingRecall {
         }
     }
 
+    /// Record one binary prequential outcome.
     pub fn push(&mut self, hit: bool) {
         if self.filled == self.window {
             if self.buf[self.next] {
@@ -69,10 +71,12 @@ impl MovingRecall {
         }
     }
 
+    /// Lifetime outcomes recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Lifetime hits recorded.
     pub fn hits(&self) -> u64 {
         self.hits
     }
@@ -81,7 +85,9 @@ impl MovingRecall {
 /// One evaluated event: global stream sequence number + hit bit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HitSample {
+    /// Global stream sequence number of the evaluated event.
     pub seq: u64,
+    /// Was the rated item inside the pre-update top-N?
     pub hit: bool,
 }
 
@@ -106,6 +112,7 @@ pub struct Prequential {
 }
 
 impl Prequential {
+    /// Evaluator judging hits against top-`top_n` with a moving window.
     pub fn new(top_n: usize, window: usize) -> Self {
         Self { top_n, recall: MovingRecall::new(window) }
     }
@@ -129,6 +136,7 @@ impl Prequential {
         StepOutcome { hit, recommend_ns, update_ns }
     }
 
+    /// The recall accumulator (moving window + lifetime counters).
     pub fn recall(&self) -> &MovingRecall {
         &self.recall
     }
@@ -165,6 +173,12 @@ mod tests {
         }
         fn sweep(&mut self, _k: SweepKind) -> u64 {
             0
+        }
+        fn export_partition(&self, _f: &dyn Fn(UserId) -> bool) -> Vec<u8> {
+            Vec::new()
+        }
+        fn import_partition(&mut self, _bytes: &[u8]) -> anyhow::Result<()> {
+            Ok(())
         }
     }
 

@@ -18,14 +18,18 @@ use crate::util::csv::CsvWriter;
 /// Forgetting policy selector used in run keys.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Policy {
+    /// No forgetting (the paper's base configuration).
     None,
+    /// Least-recently-used eviction.
     Lru,
+    /// Least-frequently-used eviction.
     Lfu,
     /// Gradual forgetting — the paper's future-work extension.
     Decay,
 }
 
 impl Policy {
+    /// Canonical policy name used in labels and CSV columns.
     pub fn name(&self) -> &'static str {
         match self {
             Policy::None => "none",
@@ -39,13 +43,18 @@ impl Policy {
 /// Cache key for one pipeline run.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct RunKey {
+    /// Algorithm under test.
     pub algo: Algorithm,
+    /// Dataset id ("ml-like" | "nf-like").
     pub dataset: String,
+    /// Replication factor (1 = central baseline).
     pub n_i: u64,
+    /// Forgetting policy.
     pub policy: Policy,
 }
 
 impl RunKey {
+    /// Human-readable run label, e.g. `isgd-ml-like-ni4-lru`.
     pub fn label(&self) -> String {
         let topo = if self.n_i == 1 {
             "central".to_string()
@@ -64,19 +73,24 @@ impl RunKey {
 
 /// Experiment context: datasets, run cache, output directory, scale knobs.
 pub struct ExpContext {
+    /// Directory results are written under (`results/<exp>/`).
     pub out_dir: PathBuf,
+    /// Stream length per dataset.
     pub events: u64,
     /// Event cap for the central cosine baseline (the paper's central
     /// ML-25M job was killed after 11 days at 8356 records; we cap it
     /// instead and report partial throughput the same way).
     pub central_cosine_cap: u64,
+    /// Dataset + model seed.
     pub seed: u64,
+    /// Scoring backend every run uses.
     pub backend: Backend,
     datasets: HashMap<String, Vec<Rating>>,
     cache: HashMap<RunKey, RunReport>,
 }
 
 impl ExpContext {
+    /// Context writing under `out_dir` with `events`-long streams.
     pub fn new(out_dir: &str, events: u64, seed: u64) -> Self {
         Self {
             out_dir: PathBuf::from(out_dir),
@@ -257,11 +271,14 @@ pub fn write_throughput(
     Ok(())
 }
 
+/// CSV header for recall-curve files.
 pub const RECALL_HEADER: [&str; 6] =
     ["dataset", "config", "n_i", "policy", "seq", "recall_ma"];
+/// CSV header for per-worker state-distribution files.
 pub const STATE_HEADER: [&str; 8] = [
     "dataset", "config", "n_i", "policy", "worker", "users", "items", "aux",
 ];
+/// CSV header for throughput files.
 pub const THROUGHPUT_HEADER: [&str; 8] = [
     "dataset", "config", "n_i", "policy", "events", "wall_secs",
     "events_per_sec", "avg_recall",

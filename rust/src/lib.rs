@@ -9,6 +9,11 @@
 //! cluster without any state synchronization, and bounds unbounded stream
 //! state with LRU/LFU forgetting.
 //!
+//! Two companion documents go deeper than this page: `ARCHITECTURE.md`
+//! (the worker grid, the control/data planes, the ordering guarantees,
+//! and the rescale protocol, with diagrams) and `docs/CONFIG.md` (every
+//! TOML knob with defaults, ranges, and the paper section it maps to).
+//!
 //! ## Architecture (three layers)
 //!
 //! * **Layer 3 (this crate)** — the coordinator: a from-scratch
@@ -29,31 +34,49 @@
 //!
 //! The system is built for *unbounded* streams: spawn the shared-nothing
 //! workers once, then interleave ingest (the learning loop), online
-//! recommendation queries (the serving loop), and live metrics for as
-//! long as the stream lasts. `recommend` fans each query out to all
-//! `n_i` replicas of the user and merges their local top-N lists into a
-//! global top-N (the paper's replicated-user read path).
+//! recommendation queries (the serving loop), live metrics, and — when
+//! load changes — live rescaling, for as long as the stream lasts.
+//! `recommend` fans each query out to all replicas of the user and merges
+//! their local top-N lists into a global top-N (the paper's
+//! replicated-user read path). `rescale` migrates the running system to a
+//! new worker topology with zero event loss and exact model state.
 //!
-//! ```no_run
+//! This example compiles and runs as a doc-test (`cargo test --doc`):
+//!
+//! ```
+//! # fn main() -> anyhow::Result<()> {
 //! use streamrec::config::{RunConfig, Topology};
 //! use streamrec::coordinator::Cluster;
 //! use streamrec::data::DatasetSpec;
 //!
-//! let events = DatasetSpec::parse("ml-like:50000", 42).unwrap()
-//!     .load().unwrap();
+//! let events = DatasetSpec::parse("ml-like:4000", 42)?.load()?;
 //! let mut cfg = RunConfig::default();
-//! cfg.topology = Topology::new(2, 0).unwrap(); // n_i=2 -> 4 workers
+//! cfg.topology = Topology::new(2, 0)?; // spawn at n_i=2 -> 4 workers
+//! cfg.rescale_max_n_i = 4;             // reserve headroom to grow to n_i=4
 //!
-//! let mut cluster = Cluster::spawn(&cfg).unwrap();
+//! let mut cluster = Cluster::spawn(&cfg)?;
 //! let user = events[0].user;
-//! for chunk in events.chunks(10_000) {
-//!     cluster.ingest_batch(chunk).unwrap();          // learning loop
-//!     let recs = cluster.recommend(user, 10).unwrap(); // serving loop
-//!     let live = cluster.metrics().unwrap();           // no shutdown
-//!     println!("recall so far {:.4}, top-10 {recs:?}", live.recall);
-//! }
-//! let report = cluster.finish().unwrap(); // drain + join + final report
-//! println!("{}", report.summary());
+//! let (first_half, rest) = events.split_at(events.len() / 2);
+//!
+//! cluster.ingest_batch(first_half)?;               // learning loop
+//! let recs = cluster.recommend(user, 10)?;         // serving loop
+//! let live = cluster.metrics()?;                   // live counters
+//! assert_eq!(live.processed, cluster.ingested());
+//!
+//! // Live elastic rescale: 4 -> 16 workers. Zero events lost, model
+//! // state moves exactly — the same query answers the same way.
+//! let stats = cluster.rescale(Topology::new(4, 0)?)?;
+//! assert_eq!(cluster.n_workers(), 16);
+//! assert_eq!(cluster.recommend(user, 10)?, recs);
+//!
+//! cluster.ingest_batch(rest)?;
+//! let report = cluster.finish()?;                  // drain + join + report
+//! assert_eq!(report.events, events.len() as u64);
+//! assert_eq!(report.rescales, 1);
+//! println!("{} (paused {:.2} ms for the rescale)",
+//!          report.summary(), stats.pause_ns as f64 / 1e6);
+//! # Ok(())
+//! # }
 //! ```
 //!
 //! ## Throughput tuning
@@ -82,14 +105,33 @@
 //! you which side of the transport (sender stalls vs receiver idling) a
 //! configuration is paying for.
 //!
+//! ## Elastic rescaling
+//!
+//! Model state is partitioned on a fixed virtual *state grid* into
+//! *lanes* (one independent model per virtual cell); physical workers
+//! host groups of lanes. [`coordinator::Cluster::rescale`] moves whole
+//! lanes between workers — never splitting or merging model state — so a
+//! topology change is exact: zero event loss, identical recommendations,
+//! identical recall curves (property-tested in
+//! `tests/rescale_equivalence.rs`; pause cost measured by
+//! `benches/rescale.rs`, recorded in `BENCH_rescale.json`).
+//!
+//! By default the state grid equals the spawn topology (no behavior
+//! change vs the paper; rescale can shrink to any divisor topology and
+//! grow back). To grow *beyond* the spawn size, reserve headroom at
+//! spawn with `rescale.max_n_i` — the Flink "max parallelism" analog.
+//! See `ARCHITECTURE.md` for the full protocol and the trade-off.
+//!
 //! ## Migrating from `run_pipeline`
 //!
 //! The historical one-shot entry point survives with identical signature
 //! and semantics as a thin wrapper — `run_pipeline(&cfg, &events, label)`
 //! is exactly `Cluster::spawn_labeled(&cfg, label)?` +
 //! `ingest_batch(&events)?` + `finish()`. Keep it for batch experiments;
-//! switch to [`coordinator::Cluster`] when you need to query or observe
-//! the system while the stream is live.
+//! switch to [`coordinator::Cluster`] when you need to query, observe, or
+//! rescale the system while the stream is live.
+
+#![warn(missing_docs)]
 
 pub mod algorithms;
 pub mod benchutil;

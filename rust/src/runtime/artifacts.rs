@@ -12,7 +12,9 @@ use crate::util::json::Json;
 /// One lowered artifact variant.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Artifact id, e.g. `topn_b1_m1024`.
     pub name: String,
+    /// Absolute path of the HLO-text file.
     pub file: PathBuf,
     /// "topn" | "isgd" | "recupd".
     pub kind: String,
@@ -29,11 +31,17 @@ pub struct ArtifactMeta {
 /// Parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest (and artifacts) live in.
     pub dir: PathBuf,
+    /// Latent dimension the artifacts were compiled for.
     pub latent_k: usize,
+    /// Over-fetched top-N length compiled into the scoring artifacts.
     pub topn_overfetch: usize,
+    /// Item-capacity buckets compiled (ascending).
     pub m_buckets: Vec<usize>,
+    /// User-batch sizes compiled.
     pub b_sizes: Vec<usize>,
+    /// Every lowered variant.
     pub artifacts: Vec<ArtifactMeta>,
 }
 

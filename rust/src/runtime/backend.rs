@@ -17,12 +17,15 @@ use crate::state::VectorSlab;
 /// A scored candidate: worker-local slab row + score.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Scored {
+    /// Slab row of the candidate item.
     pub row: usize,
+    /// Dot-product score `u . row`.
     pub score: f32,
 }
 
 /// The numeric contract of Algorithm 2 (scoring + the fused ISGD step).
 pub trait ScoringBackend {
+    /// Backend name for reports ("native" | "pjrt").
     fn name(&self) -> &'static str;
 
     /// Top-`n` valid slab rows by `u . row` (descending). `n` is the
@@ -43,6 +46,7 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Fresh backend with an empty scratch heap.
     pub fn new() -> Self {
         Self::default()
     }

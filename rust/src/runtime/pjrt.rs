@@ -24,9 +24,11 @@ pub struct PjrtEngine {
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
     /// Device-resident copy of the item slab: (version, capacity, buffers).
     items_cache: Option<ItemsCache>,
-    /// Counters for EXPERIMENTS.md §Perf.
+    /// Executions run (counter for EXPERIMENTS.md §Perf).
     pub exec_calls: u64,
+    /// Slab uploads to device (counter for EXPERIMENTS.md §Perf).
     pub uploads: u64,
+    /// Artifacts compiled (counter for EXPERIMENTS.md §Perf).
     pub compile_count: u64,
 }
 
@@ -59,6 +61,7 @@ impl PjrtEngine {
         })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -214,10 +217,13 @@ pub struct PjrtBackend {
     engine: PjrtEngine,
     native: NativeBackend,
     max_bucket: usize,
+    /// Times the backend fell back to native (state outgrew the compiled
+    /// buckets, or an execute failed).
     pub fallbacks: u64,
 }
 
 impl PjrtBackend {
+    /// Engine + native fallback over the artifacts in `artifacts_dir`.
     pub fn new(artifacts_dir: &str) -> Result<Self> {
         let engine = PjrtEngine::new(artifacts_dir)?;
         let max_bucket =
@@ -230,6 +236,7 @@ impl PjrtBackend {
         })
     }
 
+    /// The underlying engine (perf counters, manifest).
     pub fn engine(&self) -> &PjrtEngine {
         &self.engine
     }

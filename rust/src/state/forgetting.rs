@@ -15,12 +15,21 @@ use crate::config::Forgetting;
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SweepKind {
     /// Evict entries with `last_ts < cutoff_ts`.
-    Lru { cutoff_ts: u64 },
+    Lru {
+        /// Entries last touched before this event time are evicted.
+        cutoff_ts: u64,
+    },
     /// Evict entries with `freq < min_freq`.
-    Lfu { min_freq: u64 },
+    Lfu {
+        /// Entries touched fewer times than this are evicted.
+        min_freq: u64,
+    },
     /// Gradual forgetting: multiplicatively decay model evidence
     /// (extension; Section 6 future work).
-    Decay { factor: f32 },
+    Decay {
+        /// Multiplicative decay factor.
+        factor: f32,
+    },
 }
 
 /// Per-worker trigger clock.
@@ -33,14 +42,17 @@ pub struct ForgetClock {
 }
 
 impl ForgetClock {
+    /// Fresh clock for `policy` (no sweeps yet).
     pub fn new(policy: Forgetting) -> Self {
         Self { policy, events_since_sweep: 0, last_sweep_ts: 0, sweeps: 0 }
     }
 
+    /// The policy this clock drives.
     pub fn policy(&self) -> Forgetting {
         self.policy
     }
 
+    /// Sweeps triggered so far.
     pub fn sweeps(&self) -> u64 {
         self.sweeps
     }

@@ -22,18 +22,22 @@ pub struct TrackedMap<K, V> {
 }
 
 impl<K: std::hash::Hash + Eq + Clone, V> TrackedMap<K, V> {
+    /// Empty store.
     pub fn new() -> Self {
         Self { map: HashMap::new() }
     }
 
+    /// Live entry count.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when no entries are live.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// True if `k` is live.
     pub fn contains(&self, k: &K) -> bool {
         self.map.contains_key(k)
     }
@@ -59,6 +63,7 @@ impl<K: std::hash::Hash + Eq + Clone, V> TrackedMap<K, V> {
         self.map.insert(k, Entry { value: v, last_ts: now_ts, freq: 1 });
     }
 
+    /// Remove an entry, returning its value.
     pub fn remove(&mut self, k: &K) -> Option<V> {
         self.map.remove(k).map(|e| e.value)
     }
@@ -68,10 +73,26 @@ impl<K: std::hash::Hash + Eq + Clone, V> TrackedMap<K, V> {
         self.map.iter().map(|(k, e)| (k, &e.value))
     }
 
+    /// Iterate `(key, value, last_ts, freq)` without touching — the
+    /// export half of state migration (metadata must travel with the
+    /// value or the first post-migration LRU/LFU sweep would treat every
+    /// migrated entry as brand new).
+    pub fn iter_meta(&self) -> impl Iterator<Item = (&K, &V, u64, u64)> {
+        self.map.iter().map(|(k, e)| (k, &e.value, e.last_ts, e.freq))
+    }
+
+    /// Insert (or overwrite) with explicit recency/frequency metadata —
+    /// the import half of state migration.
+    pub fn insert_with_meta(&mut self, k: K, v: V, last_ts: u64, freq: u64) {
+        self.map.insert(k, Entry { value: v, last_ts, freq });
+    }
+
+    /// Touch count of an entry (LFU input).
     pub fn freq(&self, k: &K) -> Option<u64> {
         self.map.get(k).map(|e| e.freq)
     }
 
+    /// Last-touch event time of an entry (LRU input).
     pub fn last_ts(&self, k: &K) -> Option<u64> {
         self.map.get(k).map(|e| e.last_ts)
     }
@@ -159,6 +180,20 @@ mod tests {
         let _ = m.peek(&1);
         assert_eq!(m.freq(&1), Some(1));
         assert_eq!(m.last_ts(&1), Some(100));
+    }
+
+    #[test]
+    fn meta_roundtrip_for_migration() {
+        let mut m: TrackedMap<u64, i32> = TrackedMap::new();
+        m.insert(1, 10, 100);
+        m.touch_mut(&1, 250);
+        let mut n: TrackedMap<u64, i32> = TrackedMap::new();
+        for (k, v, ts, freq) in m.iter_meta() {
+            n.insert_with_meta(*k, *v, ts, freq);
+        }
+        assert_eq!(n.peek(&1), Some(&10));
+        assert_eq!(n.last_ts(&1), Some(250));
+        assert_eq!(n.freq(&1), Some(2));
     }
 
     #[test]

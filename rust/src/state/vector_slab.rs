@@ -50,6 +50,7 @@ pub struct VectorSlab {
 }
 
 impl VectorSlab {
+    /// Empty slab of `k`-dimensional rows at the smallest bucket size.
     pub fn new(k: usize) -> Self {
         let cap = BUCKETS[0];
         Self {
@@ -72,6 +73,7 @@ impl VectorSlab {
         self.version
     }
 
+    /// Latent dimension of every row.
     pub fn k(&self) -> usize {
         self.k
     }
@@ -81,6 +83,7 @@ impl VectorSlab {
         self.live
     }
 
+    /// True when no rows are live.
     pub fn is_empty(&self) -> bool {
         self.live == 0
     }
@@ -90,14 +93,17 @@ impl VectorSlab {
         self.valid.len()
     }
 
+    /// True if `id` has a live row.
     pub fn contains(&self, id: ItemId) -> bool {
         self.row_of.contains_key(&id)
     }
 
+    /// Slab row of a live id.
     pub fn row(&self, id: ItemId) -> Option<usize> {
         self.row_of.get(&id).copied()
     }
 
+    /// Id living at `row` (None for free or out-of-range rows).
     pub fn id_at(&self, row: usize) -> Option<ItemId> {
         self.id_of.get(row).copied().flatten()
     }
@@ -144,6 +150,29 @@ impl VectorSlab {
         self.freq[row] = 1;
         self.live += 1;
         self.version += 1;
+        row
+    }
+
+    /// Recency/frequency metadata of a live id, for state export (the
+    /// forgetting sweeps key off these, so migration must carry them).
+    pub fn meta(&self, id: ItemId) -> Option<(u64, u64)> {
+        self.row_of.get(&id).map(|&r| (self.last_ts[r], self.freq[r]))
+    }
+
+    /// Insert with explicit metadata — the import half of state
+    /// migration. Same row-assignment policy as [`VectorSlab::insert`],
+    /// so importing rows in export (row) order preserves their relative
+    /// order, which keeps score-tie behavior in the top-N scan
+    /// deterministic across a migration.
+    pub fn insert_with_meta(
+        &mut self,
+        id: ItemId,
+        vec: &[f32],
+        last_ts: u64,
+        freq: u64,
+    ) -> usize {
+        let row = self.insert(id, vec, last_ts);
+        self.freq[row] = freq;
         row
     }
 
@@ -306,6 +335,18 @@ mod tests {
         assert!(dead.is_empty(), "touched row must survive lru sweep");
         let dead = s.sweep_lru(250);
         assert_eq!(dead, vec![5]);
+    }
+
+    #[test]
+    fn insert_with_meta_preserves_sweep_inputs() {
+        let mut s = VectorSlab::new(2);
+        s.insert_with_meta(5, &[1.0, 2.0], 300, 7);
+        assert_eq!(s.meta(5), Some((300, 7)));
+        assert_eq!(s.meta(6), None);
+        // A migrated row must survive exactly the sweeps the original
+        // would have survived.
+        assert!(s.sweep_lru(300).is_empty());
+        assert_eq!(s.sweep_lru(301), vec![5]);
     }
 
     #[test]

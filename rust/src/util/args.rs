@@ -9,8 +9,11 @@ use anyhow::{bail, Result};
 /// (`--flag` with no value is stored as "true").
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First bare word, if any.
     pub subcommand: Option<String>,
+    /// Bare words after the subcommand.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` / bare `--flag` (stored as "true").
     pub options: BTreeMap<String, String>,
 }
 
@@ -53,14 +56,17 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Raw option value.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Option value with a default.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Parsed option value (None when absent, Err on a bad parse).
     pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
     where
         T::Err: std::fmt::Display,
@@ -74,6 +80,7 @@ impl Args {
         }
     }
 
+    /// Boolean flag (`--key`, `--key=true|1|yes`).
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }

@@ -45,16 +45,18 @@ impl CsvWriter {
         self.out.write_all(b"\n")
     }
 
+    /// Flush buffered rows to disk.
     pub fn flush(&mut self) -> std::io::Result<()> {
         self.out.flush()
     }
 }
 
-/// Format helpers so experiment code stays terse.
+/// Format helper (6-decimal float) so experiment code stays terse.
 pub fn f(x: f64) -> String {
     format!("{x:.6}")
 }
 
+/// Format helper (integer) so experiment code stays terse.
 pub fn i(x: u64) -> String {
     x.to_string()
 }

@@ -27,6 +27,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Self {
             counts: vec![0; BUCKETS],
@@ -46,6 +47,7 @@ impl Histogram {
         ((v as f64).ln() / GROWTH.ln()) as usize
     }
 
+    /// Record one sample.
     #[inline]
     pub fn record(&mut self, v: u64) {
         let b = Self::bucket(v).min(BUCKETS - 1);
@@ -56,10 +58,12 @@ impl Histogram {
         self.max = self.max.max(v);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Exact mean of all recorded samples (not bucketed).
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             return 0.0;
@@ -67,6 +71,7 @@ impl Histogram {
         self.sum as f64 / self.total as f64
     }
 
+    /// Smallest recorded sample (0 when empty).
     pub fn min(&self) -> u64 {
         if self.total == 0 {
             0
@@ -75,6 +80,7 @@ impl Histogram {
         }
     }
 
+    /// Largest recorded sample.
     pub fn max(&self) -> u64 {
         self.max
     }

@@ -10,15 +10,22 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` | `false`.
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, so serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -26,10 +33,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -37,6 +46,7 @@ impl Json {
         }
     }
 
+    /// Element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -44,6 +54,7 @@ impl Json {
         }
     }
 
+    /// Member lookup, if this is an object.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -64,9 +75,12 @@ impl Json {
     }
 }
 
+/// Parse failure with the byte offset it occurred at.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// What the parser expected.
     pub msg: String,
 }
 
@@ -266,14 +280,17 @@ pub struct JsonWriter {
 }
 
 impl JsonWriter {
+    /// Empty writer.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Consume the writer, returning the serialized document.
     pub fn finish(self) -> String {
         self.out
     }
 
+    /// Append one value (recursively).
     pub fn write_value(&mut self, v: &Json) {
         match v {
             Json::Null => self.out.push_str("null"),
@@ -337,19 +354,22 @@ pub fn to_string(v: &Json) -> String {
     w.finish()
 }
 
-/// Convenience constructors for building result objects.
+/// Convenience constructor: object from (key, value) pairs.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Convenience constructor: number.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// Convenience constructor: string.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// Convenience constructor: array of numbers.
 pub fn arr_f64(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
 }

@@ -9,6 +9,7 @@ pub mod json;
 pub mod logging;
 pub mod proptest;
 pub mod rng;
+pub mod wire;
 
 /// Monotonic nanosecond clock used by all metrics.
 #[inline]

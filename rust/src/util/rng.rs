@@ -14,10 +14,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Generator starting at `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -46,6 +48,7 @@ pub struct Pcg32 {
 }
 
 impl Pcg32 {
+    /// Generator from a (seed, stream-id) pair — PCG's standard init.
     pub fn new(seed: u64, stream: u64) -> Self {
         let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
         rng.next_u32();
@@ -62,6 +65,19 @@ impl Pcg32 {
         Self::new(s, inc)
     }
 
+    /// Raw `(state, inc)` words — the generator's complete state, used by
+    /// the migration path to serialize a model's RNG so rescaled workers
+    /// continue the *same* random stream (bit-identical future draws).
+    pub fn snapshot(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from a [`Pcg32::snapshot`] pair.
+    pub fn restore(state: u64, inc: u64) -> Self {
+        Self { state, inc }
+    }
+
+    /// Next 32 random bits (the native PCG output).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -73,6 +89,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 random bits (two native outputs).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
@@ -145,6 +162,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Sampler over `{0, .., n-1}` with exponent `e >= 0`.
     pub fn new(n: u64, exponent: f64) -> Self {
         assert!(n >= 1, "Zipf needs n >= 1");
         assert!(exponent >= 0.0, "Zipf exponent must be >= 0");
@@ -222,6 +240,19 @@ mod tests {
     fn pcg32_deterministic() {
         let mut a = Pcg32::seeded(42);
         let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg32_snapshot_restore_continues_stream() {
+        let mut a = Pcg32::seeded(99);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let (state, inc) = a.snapshot();
+        let mut b = Pcg32::restore(state, inc);
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }

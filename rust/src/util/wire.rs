@@ -1,0 +1,237 @@
+//! Compact little-endian binary framing for state migration (the
+//! rescale path serializes whole model lanes; JSON would be ~4x the
+//! bytes for the f32-heavy ISGD state and parsing cost scales with the
+//! pause the migration is trying to keep short).
+//!
+//! The format is deliberately primitive: fixed-width scalars, `u32`
+//! length prefixes for variable-length sections, no alignment, no
+//! compression. Every reader method is bounds-checked and returns a
+//! typed error instead of panicking, so a corrupt or truncated snapshot
+//! surfaces as an `Err` at import time rather than a worker panic.
+
+/// Error raised by [`WireReader`] on truncated or malformed input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    /// Byte offset the failed read started at.
+    pub pos: usize,
+    /// Human-readable description of what was expected.
+    pub msg: String,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire decode error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Append-only encoder over a growable byte buffer.
+#[derive(Debug, Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    /// Fresh empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Consume the writer, returning the encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Append one byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `u32` (little endian).
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64` (little endian).
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f32` bit pattern (little endian); round-trips NaNs and
+    /// signed zeros exactly, which "bit-identical migration" requires.
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u32`-length-prefixed slice of f32s.
+    pub fn f32_slice(&mut self, vs: &[f32]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.f32(v);
+        }
+    }
+
+    /// Append a `u32`-length-prefixed slice of u64s.
+    pub fn u64_slice(&mut self, vs: &[u64]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.u64(v);
+        }
+    }
+}
+
+/// Bounds-checked decoder over an encoded byte slice.
+#[derive(Debug)]
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    /// Start decoding `buf` from offset 0.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True once every byte has been consumed.
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError {
+                pos: self.pos,
+                msg: format!(
+                    "need {n} bytes for {what}, {} left",
+                    self.remaining()
+                ),
+            });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4, "u32")?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8, "u64")?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Read a little-endian `f32` bit pattern.
+    pub fn f32(&mut self) -> Result<f32, WireError> {
+        let b = self.take(4, "f32")?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a `u32`-length-prefixed f32 slice.
+    pub fn f32_slice(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(self.remaining() / 4 + 1));
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Read a `u32`-length-prefixed u64 slice.
+    pub fn u64_slice(&mut self) -> Result<Vec<u64>, WireError> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(self.remaining() / 8 + 1));
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = WireWriter::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.f32(-0.0);
+        w.f32(f32::NAN);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        // Bit-exact: signed zero and NaN payload survive.
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(r.f32().unwrap().is_nan());
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let mut w = WireWriter::new();
+        w.f32_slice(&[1.5, -2.25, 3.0]);
+        w.u64_slice(&[9, 8, 7, 6]);
+        w.f32_slice(&[]);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        assert_eq!(r.f32_slice().unwrap(), vec![1.5, -2.25, 3.0]);
+        assert_eq!(r.u64_slice().unwrap(), vec![9, 8, 7, 6]);
+        assert_eq!(r.f32_slice().unwrap(), Vec::<f32>::new());
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn truncated_input_errors_instead_of_panicking() {
+        let mut w = WireWriter::new();
+        w.u64(42);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes[..5]);
+        let err = r.u64().unwrap_err();
+        assert_eq!(err.pos, 0);
+        assert!(err.to_string().contains("need 8 bytes"));
+    }
+
+    #[test]
+    fn hostile_length_prefix_does_not_overallocate() {
+        // A length prefix claiming 2^32-1 elements over a 4-byte body
+        // must fail cleanly (and the with_capacity guard keeps the
+        // attempted allocation proportional to the real buffer).
+        let mut w = WireWriter::new();
+        w.u32(u32::MAX);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        assert!(r.f32_slice().is_err());
+    }
+}

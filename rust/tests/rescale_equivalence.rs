@@ -1,0 +1,223 @@
+//! Migration-correctness properties for `Cluster::rescale`.
+//!
+//! The two acceptance properties, verified for ISGD and cosine:
+//!
+//! * **Zero event loss** — for any split point in the stream and any
+//!   old→new topology pair, the per-worker `processed` totals (live +
+//!   retired generations) always sum to the number of ingested events.
+//! * **Exact state migration** — a migrated user's `recommend` result
+//!   immediately after a rescale equals the result immediately before,
+//!   and a session that rescales mid-stream produces the *same* hit
+//!   sequence, recall curve, and answers as one that never rescales
+//!   (lanes evolve identically wherever they are hosted).
+
+use streamrec::config::{Algorithm, RunConfig, Topology};
+use streamrec::coordinator::Cluster;
+use streamrec::data::synth::{SyntheticConfig, SyntheticStream};
+use streamrec::data::types::Rating;
+use streamrec::util::proptest::forall;
+
+fn events(n: u64, seed: u64) -> Vec<Rating> {
+    SyntheticStream::new(SyntheticConfig::netflix_like(n, seed)).collect()
+}
+
+/// Config with a 4x4 state-grid ceiling so every topology in {1, 2, 4}
+/// is reachable from every other.
+fn ceiling_cfg(algo: Algorithm, n_i: u64) -> RunConfig {
+    RunConfig {
+        algorithm: algo,
+        topology: Topology::new(n_i, 0).unwrap(),
+        rescale_max_n_i: 4,
+        sample_every: 200,
+        ..RunConfig::default()
+    }
+}
+
+/// First `k` distinct users of a slice, in stream order.
+fn panel(evs: &[Rating], k: usize) -> Vec<u64> {
+    let mut users = Vec::new();
+    for e in evs {
+        if !users.contains(&e.user) {
+            users.push(e.user);
+            if users.len() == k {
+                break;
+            }
+        }
+    }
+    users
+}
+
+#[test]
+fn property_any_split_any_topology_pair_is_exact() {
+    // For random (algorithm, split point, old topology, new topology):
+    // (a) no events are lost across the cutover, and (b) every probed
+    // user's top-10 immediately after the rescale equals the top-10
+    // immediately before.
+    let evs = events(2500, 77);
+    forall("rescale_split_topo_pairs", 8, |rng| {
+        let algo = if rng.next_bounded(2) == 0 {
+            Algorithm::Isgd
+        } else {
+            Algorithm::Cosine
+        };
+        let topos = [1u64, 2, 4];
+        let from = topos[rng.next_bounded(3) as usize];
+        let to = topos[rng.next_bounded(3) as usize];
+        let split = 200 + rng.next_bounded(evs.len() as u64 - 400) as usize;
+
+        let mut cluster =
+            Cluster::spawn_labeled(&ceiling_cfg(algo, from), "t-prop")
+                .unwrap();
+        cluster.ingest_batch(&evs[..split]).unwrap();
+
+        let users = panel(&evs[..split], 6);
+        let before: Vec<Vec<u64>> = users
+            .iter()
+            .map(|&u| cluster.recommend(u, 10).unwrap())
+            .collect();
+
+        let stats = cluster.rescale(Topology::new(to, 0).unwrap()).unwrap();
+        assert_eq!(stats.from.n_i, from);
+        assert_eq!(stats.to.n_i, to);
+
+        // (a) zero loss at the cutover.
+        let m = cluster.metrics().unwrap();
+        assert_eq!(
+            m.processed, split as u64,
+            "events lost: algo={algo:?} {from}->{to} split={split}"
+        );
+        // (b) serving is bit-identical across the cutover.
+        for (u, want) in users.iter().zip(before.iter()) {
+            let got = cluster.recommend(*u, 10).unwrap();
+            assert_eq!(
+                &got, want,
+                "user {u} answer changed: algo={algo:?} {from}->{to} \
+                 split={split}"
+            );
+        }
+
+        // Rest of the stream + final accounting.
+        cluster.ingest_batch(&evs[split..]).unwrap();
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, evs.len() as u64);
+        let total: u64 = report
+            .workers
+            .iter()
+            .chain(report.retired.iter())
+            .map(|w| w.processed)
+            .sum();
+        assert_eq!(total, evs.len() as u64, "per-worker sums must cover all");
+        assert_eq!(report.rescales, 1);
+    });
+}
+
+#[test]
+fn rescaled_session_equals_never_rescaled_session() {
+    // The strongest form of migration correctness: a session that scales
+    // out mid-stream is *semantically invisible* — identical hits, recall
+    // curve, and answers to a session that never rescaled. (Both sessions
+    // issue the same query sequence; cosine's read-side caches are part
+    // of the migrated state, so even its bounded-staleness reads agree.)
+    let evs = events(3000, 13);
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let users = panel(&evs, 5);
+        let run = |rescale_at: Option<usize>| {
+            let mut cluster =
+                Cluster::spawn_labeled(&ceiling_cfg(algo, 2), "t-equiv")
+                    .unwrap();
+            let split = rescale_at.unwrap_or(evs.len() / 2);
+            cluster.ingest_batch(&evs[..split]).unwrap();
+            // Same probe sequence in both runs.
+            let mid: Vec<Vec<u64>> = users
+                .iter()
+                .map(|&u| cluster.recommend(u, 10).unwrap())
+                .collect();
+            if rescale_at.is_some() {
+                cluster.rescale(Topology::new(4, 0).unwrap()).unwrap();
+            }
+            cluster.ingest_batch(&evs[split..]).unwrap();
+            let end: Vec<Vec<u64>> = users
+                .iter()
+                .map(|&u| cluster.recommend(u, 10).unwrap())
+                .collect();
+            let report = cluster.finish().unwrap();
+            (mid, end, report)
+        };
+        let (mid_a, end_a, rep_a) = run(None);
+        let (mid_b, end_b, rep_b) = run(Some(evs.len() / 2));
+        assert_eq!(mid_a, mid_b, "{algo:?}: pre-rescale answers");
+        assert_eq!(
+            end_a, end_b,
+            "{algo:?}: answers after learning on the new topology"
+        );
+        assert_eq!(rep_a.hits, rep_b.hits, "{algo:?}: hit totals");
+        assert_eq!(
+            rep_a.recall_curve, rep_b.recall_curve,
+            "{algo:?}: recall curves"
+        );
+        assert_eq!(rep_a.events, rep_b.events);
+        assert_eq!(rep_b.rescales, 1);
+        assert!(rep_b.migrated_bytes > 0);
+    }
+}
+
+#[test]
+fn round_trip_out_and_back_preserves_answers() {
+    // n_i 2 -> 4 -> 2: answers are stable at every boundary and the
+    // second rescale lands the state back on a 4-worker layout.
+    let evs = events(2000, 5);
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let mut cluster =
+            Cluster::spawn_labeled(&ceiling_cfg(algo, 2), "t-round").unwrap();
+        cluster.ingest_batch(&evs[..1200]).unwrap();
+        let users = panel(&evs[..1200], 6);
+        let want: Vec<Vec<u64>> = users
+            .iter()
+            .map(|&u| cluster.recommend(u, 10).unwrap())
+            .collect();
+
+        cluster.rescale(Topology::new(4, 0).unwrap()).unwrap();
+        assert_eq!(cluster.n_workers(), 16);
+        for (u, w) in users.iter().zip(want.iter()) {
+            assert_eq!(&cluster.recommend(*u, 10).unwrap(), w, "{algo:?} out");
+        }
+
+        cluster.rescale(Topology::new(2, 0).unwrap()).unwrap();
+        assert_eq!(cluster.n_workers(), 4);
+        for (u, w) in users.iter().zip(want.iter()) {
+            assert_eq!(&cluster.recommend(*u, 10).unwrap(), w, "{algo:?} back");
+        }
+
+        let m = cluster.metrics().unwrap();
+        assert_eq!(m.processed, 1200);
+        assert_eq!(m.rescales, 2);
+        assert_eq!(m.router_epoch, 2);
+
+        cluster.ingest_batch(&evs[1200..]).unwrap();
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, 2000);
+        let total: u64 = report
+            .workers
+            .iter()
+            .chain(report.retired.iter())
+            .map(|w| w.processed)
+            .sum();
+        assert_eq!(total, 2000);
+    }
+}
+
+#[test]
+fn rescale_of_empty_cluster_is_cheap_and_sound() {
+    // No state yet: the cutover moves nothing and the session works
+    // normally afterwards.
+    let mut cluster =
+        Cluster::spawn(&ceiling_cfg(Algorithm::Isgd, 2)).unwrap();
+    let stats = cluster.rescale(Topology::new(4, 0).unwrap()).unwrap();
+    assert_eq!(stats.lanes_moved, 0, "lazily-built lanes: nothing to move");
+    assert_eq!(stats.bytes_moved, 0);
+    let evs = events(500, 3);
+    cluster.ingest_batch(&evs).unwrap();
+    let report = cluster.finish().unwrap();
+    assert_eq!(report.events, 500);
+    assert_eq!(report.n_workers, 16);
+}
