@@ -19,6 +19,16 @@
 //! ones immediately before (see ARCHITECTURE.md and
 //! `tests/rescale_equivalence.rs`).
 //!
+//! Then, three quarters through the stream, chaos strikes: a worker is
+//! killed mid-event (a deterministic injected panic via
+//! `fault.chaos_kill_seq`). Because the session runs with
+//! `fault.checkpoint_interval` set, the supervisor detects the crash,
+//! respawns the worker, restores its lanes from their latest
+//! checkpoints, and replays the missing suffix from the replay log —
+//! the demo asserts that not a single event was lost and serving just
+//! keeps answering (see `tests/fault_tolerance.rs` for the
+//! exactly-once proof).
+//!
 //! # Throughput tuning
 //!
 //! Ingest is micro-batched: `ingest`/`ingest_batch` buffer routed events
@@ -66,6 +76,9 @@ fn main() -> anyhow::Result<()> {
     streamrec::util::logging::init();
     let events = DatasetSpec::parse("ml-like:30000", 7)?.load()?;
 
+    // Chaos: kill whichever worker processes the event at 3/4 of the
+    // stream — reproducibly, mid-serving, on the post-rescale topology.
+    let kill_at = events.len() as u64 * 3 / 4;
     let cfg = RunConfig {
         topology: Topology::new(2, 0)?,
         // Headroom to grow to n_i = 4 later: state lives on a fixed 4x4
@@ -75,6 +88,10 @@ fn main() -> anyhow::Result<()> {
         // Micro-batched ingest: flushed early by every recommend/metrics
         // probe below, so serving freshness is unaffected.
         ingest_batch_size: 256,
+        // Fault tolerance: checkpoint every lane every 256 of its events
+        // so the injected crash below is recovered exactly-once.
+        fault_checkpoint_interval: 256,
+        fault_chaos_kill_seq: Some(kill_at),
         ..RunConfig::default()
     };
     let mut cluster = Cluster::spawn_labeled(&cfg, "online-serving")?;
@@ -153,16 +170,39 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // ---- Keep streaming on the larger grid. ----
+    // ---- Keep streaming on the larger grid — a chaos kill is armed at
+    // event {kill_at}; ingest and serving must not notice. ----
+    println!(
+        "\n== chaos armed: the worker processing event {kill_at} will \
+         panic ==",
+    );
+    let mut seen_recovery = false;
     for chunk in second_half.chunks(5000) {
         cluster.ingest_batch(chunk)?;
         let live = cluster.metrics()?;
         println!("\n-- {} events in ({} workers) --", live.processed, live.workers.len());
+        assert_eq!(
+            live.processed,
+            cluster.ingested(),
+            "every accepted event is processed — even across a crash"
+        );
+        if live.recoveries > 0 && !seen_recovery {
+            seen_recovery = true;
+            println!(
+                "   !! worker crashed at event {kill_at} and was recovered: \
+                 {} events replayed from the log, paused {:.2} ms \
+                 ({} checkpoint bytes banked)",
+                live.replayed_events,
+                live.recovery_pause_ns as f64 / 1e6,
+                live.checkpoint_bytes,
+            );
+        }
         for &u in &panel {
             let recs = cluster.recommend(u, 10)?;
             println!("   top-10 for user {u:>6}: {recs:?}");
         }
     }
+    assert!(seen_recovery, "the injected kill must have fired");
 
     let report = cluster.finish()?;
     println!("\nfinal: {}", report.summary());
@@ -174,6 +214,15 @@ fn main() -> anyhow::Result<()> {
         report.rescale_pause_ns as f64 / 1e6,
         report.retired.len(),
     );
+    println!(
+        "recoveries: {} ({} events replayed, {:.2} ms total pause, \
+         {} checkpoint bytes)",
+        report.recoveries,
+        report.replayed_events,
+        report.recovery_pause_ns as f64 / 1e6,
+        report.checkpoint_bytes,
+    );
+    assert_eq!(report.events, events.len() as u64, "zero loss end to end");
     println!(
         "profile: recommend {:.1}ms / update {:.1}ms across live+retired \
          workers",

@@ -1,0 +1,96 @@
+//! Recovery-pause benchmark: when a worker dies, how long does the
+//! supervisor take to bring its lanes back, and how does that pause
+//! scale with state size and checkpoint cadence?
+//!
+//! For each algorithm, warm-up size, and `fault.checkpoint_interval`
+//! the bench spawns an `n_i = 2` fault-tolerant cluster, ingests the
+//! prefix, and injects a deterministic chaos kill on the stream's last
+//! event. The next probe detects the crash and the supervisor recovers
+//! the worker (respawn + checkpoint restore + watermark-filtered
+//! replay); the bench records the recovery pause, the replayed-event
+//! count, and the checkpoint volume. A smaller interval means more
+//! checkpoint traffic but a shorter replay — this bench is the knob's
+//! price list. Results are written to `BENCH_recovery.json` (current
+//! working directory), mirroring the `BENCH_rescale.json` convention.
+
+use streamrec::config::{Algorithm, RunConfig, Topology};
+use streamrec::coordinator::Cluster;
+use streamrec::data::DatasetSpec;
+use streamrec::util::json::{num, obj, s, to_string, Json};
+
+fn main() -> anyhow::Result<()> {
+    println!("== recovery benchmarks (pause vs state size) ==");
+    let events = DatasetSpec::parse("nf-like:120000", 33)?.load()?;
+
+    println!(
+        "{:8} {:>9} {:>9} | {:>11} {:>9} {:>13}",
+        "algo", "events", "ckpt_ivl", "pause", "replayed", "ckpt_bytes"
+    );
+    let mut rows = Vec::new();
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        for &warm in &[5_000usize, 20_000, 80_000] {
+            for &interval in &[512u64, 8_192] {
+                let cfg = RunConfig {
+                    algorithm: algo,
+                    topology: Topology::new(2, 0)?,
+                    sample_every: 10_000,
+                    fault_checkpoint_interval: interval,
+                    fault_replay_log_capacity: 1 << 17,
+                    // Kill the worker that processes the last event —
+                    // maximal state, maximal post-checkpoint suffix.
+                    fault_chaos_kill_seq: Some(warm as u64 - 1),
+                    ..RunConfig::default()
+                };
+                let mut cluster = Cluster::spawn_labeled(
+                    &cfg,
+                    &format!(
+                        "bench-recovery-{}-{warm}-{interval}",
+                        algo.name()
+                    ),
+                )?;
+                cluster.ingest_batch(&events[..warm])?;
+                // The metrics probe forces crash detection if the ingest
+                // flushes have not already tripped over it.
+                let m = cluster.metrics()?;
+                assert_eq!(m.recoveries, 1, "bench kill must have fired");
+                assert_eq!(m.processed, warm as u64, "bench lost events");
+                let report = cluster.finish()?;
+                assert_eq!(report.events, warm as u64);
+
+                println!(
+                    "{:8} {:>9} {:>9} | {:>8.2} ms {:>9} {:>13}",
+                    algo.name(),
+                    warm,
+                    interval,
+                    m.recovery_pause_ns as f64 / 1e6,
+                    m.replayed_events,
+                    m.checkpoint_bytes,
+                );
+                rows.push(obj(vec![
+                    ("algorithm", s(algo.name())),
+                    ("warm_events", num(warm as f64)),
+                    ("checkpoint_interval", num(interval as f64)),
+                    (
+                        "recovery_pause_ns",
+                        num(m.recovery_pause_ns as f64),
+                    ),
+                    ("replayed_events", num(m.replayed_events as f64)),
+                    ("checkpoint_bytes", num(m.checkpoint_bytes as f64)),
+                ]));
+            }
+        }
+    }
+    let doc = obj(vec![
+        ("bench", s("recovery pause vs state size")),
+        ("dataset", s("nf-like:120000 (seed 33)")),
+        (
+            "scenario",
+            s("n_i 2 (4 workers), kill the worker processing the last \
+               event, recover via checkpoint restore + replay"),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_recovery.json", to_string(&doc) + "\n")?;
+    println!("(recorded in BENCH_recovery.json)");
+    Ok(())
+}

@@ -137,20 +137,24 @@ impl CosineModel {
         co as f32 / ((cp as f32).sqrt() * (cq as f32).sqrt())
     }
 
-    /// Rebuild the top-k neighborhood of `p` from its adjacency.
-    fn rebuild(&mut self, p: ItemId) {
+    /// Fill `sims` with `p`'s top-k `(sim, partner)` pairs from the
+    /// adjacency, in (sim desc, then item id) order — the one similarity
+    /// scan behind cache rebuilds *and* strict frozen reads. The total
+    /// order matters: equal-similarity partners would otherwise be
+    /// ordered by HashMap iteration, which differs between a model and
+    /// its migrated copy — the rescale/recovery equivalence guarantees
+    /// need this scan to be deterministic, and the two callers must
+    /// never diverge.
+    fn collect_topk(&self, p: ItemId, sims: &mut Vec<(f32, ItemId)>) {
+        sims.clear();
         let Some(adj) = self.pairs.get(&p) else {
-            self.topk.remove(&p);
             return;
         };
         let cp = self.item_count.peek(&p).copied().unwrap_or(0);
         if cp == 0 {
-            self.topk.remove(&p);
             return;
         }
         let cp_sqrt = (cp as f32).sqrt();
-        let sims = &mut self.sims_scratch;
-        sims.clear();
         for (&q, &co) in adj {
             let cq = self.item_count.peek(&q).copied().unwrap_or(0);
             if cq == 0 {
@@ -158,10 +162,6 @@ impl CosineModel {
             }
             sims.push((co as f32 / (cp_sqrt * (cq as f32).sqrt()), q));
         }
-        // Total order (sim desc, then item id): equal-similarity partners
-        // would otherwise be ordered by HashMap iteration, which differs
-        // between a model and its migrated copy — the rescale equivalence
-        // guarantee needs rebuilt neighborhoods to be deterministic.
         let by_sim_then_id = |a: &(f32, ItemId), b: &(f32, ItemId)| {
             b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
         };
@@ -170,6 +170,18 @@ impl CosineModel {
             sims.truncate(self.neighbors_k);
         }
         sims.sort_unstable_by(by_sim_then_id);
+    }
+
+    /// Rebuild the top-k neighborhood of `p` from its adjacency.
+    fn rebuild(&mut self, p: ItemId) {
+        if self.pairs.get(&p).is_none()
+            || self.item_count.peek(&p).copied().unwrap_or(0) == 0
+        {
+            self.topk.remove(&p);
+            return;
+        }
+        let mut sims = std::mem::take(&mut self.sims_scratch);
+        self.collect_topk(p, &mut sims);
         let mass: f32 = sims.iter().map(|(s, _)| s).sum();
         self.topk.insert(
             p,
@@ -178,6 +190,7 @@ impl CosineModel {
                 mass,
             },
         );
+        self.sims_scratch = sims;
         self.rebuilds += 1;
     }
 
@@ -226,6 +239,51 @@ impl CosineModel {
         (num / nb.mass, num)
     }
 
+    /// Equation 7 for `p` without touching caches — the serving-path
+    /// sibling of [`CosineModel::estimate`]. Strict mode recomputes the
+    /// top-k from the adjacency on the fly (same values its always-fresh
+    /// cache would hold); fast mode serves the cached neighborhood
+    /// exactly as-is. Neither rebuilds nor clears dirt, so serving never
+    /// moves the serialized state that checkpoints and migrations ship.
+    fn estimate_frozen(
+        &mut self,
+        p: ItemId,
+        rated: &HashSet<ItemId>,
+    ) -> (f32, f32) {
+        if self.strict {
+            // The same deterministic scan `rebuild` uses, into the same
+            // scratch buffer — just never cached (no visible state
+            // moves; scratch is not serialized).
+            let mut sims = std::mem::take(&mut self.sims_scratch);
+            self.collect_topk(p, &mut sims);
+            let mass: f32 = sims.iter().map(|(s, _)| s).sum();
+            let num: f32 = sims
+                .iter()
+                .filter(|(_, q)| rated.contains(q))
+                .map(|(s, _)| s)
+                .sum();
+            self.sims_scratch = sims;
+            if mass <= 0.0 {
+                return (0.0, 0.0);
+            }
+            (num / mass, num)
+        } else {
+            let Some(nb) = self.topk.get(&p) else {
+                return (0.0, 0.0);
+            };
+            if nb.mass <= 0.0 {
+                return (0.0, 0.0);
+            }
+            let num: f32 = nb
+                .neighbors
+                .iter()
+                .filter(|(q, _)| rated.contains(q))
+                .map(|(_, s)| s)
+                .sum();
+            (num / nb.mass, num)
+        }
+    }
+
     /// Total pair-adjacency entries (the paper's "complex structures in
     /// the state" — the dominant memory term of DICS).
     fn pair_entries(&self) -> u64 {
@@ -249,12 +307,16 @@ impl CosineModel {
     }
 }
 
-impl StreamingRecommender for CosineModel {
-    fn name(&self) -> &'static str {
-        "cosine"
-    }
-
-    fn recommend(&mut self, user: UserId, n: usize) -> Vec<ItemId> {
+impl CosineModel {
+    /// The one candidate-generation + Equation-7 scoring pipeline behind
+    /// both read paths. `frozen = false` is the training read
+    /// ([`StreamingRecommender::recommend`]): neighborhoods due for
+    /// maintenance are rebuilt on the way. `frozen = true` is the
+    /// serving read ([`StreamingRecommender::serve`]): strict mode
+    /// recomputes freshness on the fly without caching, fast mode serves
+    /// the caches exactly as-is — no *visible* state moves (the scratch
+    /// buffers are reused by both paths; they are not serialized state).
+    fn rank(&mut self, user: UserId, n: usize, frozen: bool) -> Vec<ItemId> {
         let Some(history) = self.users.peek(&user) else {
             return Vec::new();
         };
@@ -268,7 +330,8 @@ impl StreamingRecommender for CosineModel {
         let mut candidates = std::mem::take(&mut self.cand_scratch);
         candidates.clear();
         if self.strict {
-            // Exact: every co-occurrence partner of a rated item.
+            // Exact: every co-occurrence partner of a rated item (pure
+            // read in both modes).
             for j in rated.iter() {
                 if let Some(adj) = self.pairs.get(j) {
                     for &q in adj.keys() {
@@ -282,7 +345,12 @@ impl StreamingRecommender for CosineModel {
             // TencentRec-style: candidates come from the *similar-item
             // lists* of the rated items (bounded at |rated| * k).
             for &j in rated.iter() {
-                if let Some(nb) = self.fresh_neighborhood(j) {
+                let nb = if frozen {
+                    self.topk.get(&j)
+                } else {
+                    self.fresh_neighborhood(j)
+                };
+                if let Some(nb) = nb {
                     for &(q, _) in &nb.neighbors {
                         if !rated.contains(&q) {
                             candidates.push(q);
@@ -297,7 +365,11 @@ impl StreamingRecommender for CosineModel {
         let mut scored = std::mem::take(&mut self.scored_scratch);
         scored.clear();
         for &p in &candidates {
-            let (est, rated_mass) = self.estimate(p, &rated);
+            let (est, rated_mass) = if frozen {
+                self.estimate_frozen(p, &rated)
+            } else {
+                self.estimate(p, &rated)
+            };
             if est > 0.0 {
                 scored.push((est, rated_mass, p));
             }
@@ -312,6 +384,29 @@ impl StreamingRecommender for CosineModel {
         self.rated_scratch = rated;
         self.scored_scratch = scored;
         out
+    }
+}
+
+impl StreamingRecommender for CosineModel {
+    fn name(&self) -> &'static str {
+        "cosine"
+    }
+
+    fn recommend(&mut self, user: UserId, n: usize) -> Vec<ItemId> {
+        self.rank(user, n, false)
+    }
+
+    /// Frozen serving read (see the trait docs): identical scoring
+    /// pipeline to [`StreamingRecommender::recommend`], but stale
+    /// neighborhoods are served as-is instead of rebuilt, and strict
+    /// mode recomputes freshness on the fly without caching — no visible
+    /// state moves. Fast-mode cache freshness is driven entirely by the
+    /// (event-deterministic) prequential training path, which keeps
+    /// serving answers replayable after a crash; the price is that a
+    /// rarely-trained item's cached neighborhood is served at whatever
+    /// staleness the training traffic left it.
+    fn serve(&mut self, user: UserId, n: usize) -> Vec<ItemId> {
+        self.rank(user, n, true)
     }
 
     fn rated_items(&self, user: UserId) -> Vec<ItemId> {
@@ -883,6 +978,58 @@ mod tests {
                 n.export_partition(&|_| true),
                 "re-exported snapshots must be byte-identical"
             );
+        }
+    }
+
+    #[test]
+    fn serve_is_a_pure_read_in_both_modes() {
+        // The serving path must not move anything export_partition ships
+        // (the crash-replay exactness requirement): byte-identical
+        // snapshots and zero rebuilds across any number of serves.
+        for strict in [true, false] {
+            let mut m = CosineModel::with_mode(5, strict);
+            let mut ts = 0;
+            for u in 0..20u64 {
+                for i in 0..5u64 {
+                    m.update(&ev(u % 7, (u * 3 + i) % 11, ts));
+                    ts += 1;
+                }
+            }
+            let before = m.export_partition(&|_| true);
+            let rebuilds_before = m.rebuilds;
+            for u in 0..7u64 {
+                let _ = m.serve(u, 10);
+            }
+            assert_eq!(m.rebuilds, rebuilds_before, "strict={strict}");
+            assert_eq!(
+                m.export_partition(&|_| true),
+                before,
+                "strict={strict}: serving moved visible state"
+            );
+        }
+    }
+
+    #[test]
+    fn serve_matches_recommend_on_fresh_caches() {
+        for strict in [true, false] {
+            let mut m = CosineModel::with_mode(5, strict);
+            let mut ts = 0;
+            for u in 0..20u64 {
+                for i in 0..5u64 {
+                    m.update(&ev(u % 7, (u * 3 + i) % 11, ts));
+                    ts += 1;
+                }
+            }
+            for u in 0..7u64 {
+                // recommend refreshes whatever is due, then the frozen
+                // read over the now-fresh caches agrees exactly.
+                let via_recommend = m.recommend(u, 10);
+                let via_serve = m.serve(u, 10);
+                assert_eq!(
+                    via_serve, via_recommend,
+                    "strict={strict} user={u}"
+                );
+            }
         }
     }
 

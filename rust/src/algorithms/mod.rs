@@ -26,6 +26,24 @@ pub trait StreamingRecommender {
     /// prequential protocol's behaviour).
     fn recommend(&mut self, user: UserId, n: usize) -> Vec<ItemId>;
 
+    /// The *serving-path* read: like [`Self::recommend`], but it must
+    /// not mutate any **visible** (serialized) model state. The online
+    /// query path calls this, and two guarantees depend on the
+    /// distinction: queries never perturb what the models learn, and
+    /// crash recovery can rebuild a worker by replaying *events* alone —
+    /// if a query could move state that `export_partition` ships (e.g.
+    /// read-triggered cache maintenance), a replayed timeline without
+    /// the query would diverge from the original.
+    ///
+    /// The default delegates to [`Self::recommend`], which is correct
+    /// for models whose recommend only touches unserialized scratch
+    /// (ISGD). Models with read-triggered maintenance of visible state
+    /// (cosine's bounded-staleness neighborhood caches) override this
+    /// with a frozen read.
+    fn serve(&mut self, user: UserId, n: usize) -> Vec<ItemId> {
+        self.recommend(user, n)
+    }
+
     /// Learn from one feedback element (the training half of the
     /// prequential loop).
     fn update(&mut self, event: &Rating);

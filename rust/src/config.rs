@@ -221,6 +221,33 @@ pub struct RunConfig {
     /// `rescale.max_w`): the state grid gets `max_n_i + max_w` user
     /// columns. Ignored while `rescale_max_n_i = 0`.
     pub rescale_max_w: u64,
+    /// Per-lane checkpoint cadence for crash recovery (TOML:
+    /// `fault.checkpoint_interval`): a worker checkpoints a lane after
+    /// this many events applied to it (plus one eager checkpoint on the
+    /// lane's first event). `0` (default) disables fault tolerance
+    /// entirely — no checkpoints, no replay log, and a worker death is a
+    /// loud session error, exactly the pre-fault-tolerance behavior.
+    pub fault_checkpoint_interval: u64,
+    /// Capacity of the coordinator-side replay log in envelopes (TOML:
+    /// `fault.replay_log_capacity`). The log keeps the most recent
+    /// accepted events so a recovery can replay the suffix past a lane's
+    /// latest checkpoint; if an event needed for recovery was already
+    /// evicted, recovery fails loudly instead of losing it. Unused while
+    /// `fault_checkpoint_interval = 0`.
+    pub fault_replay_log_capacity: usize,
+    /// Deterministic chaos injection (TOML: `fault.chaos_kill_seq`, `-1`
+    /// = off): the worker that processes this global stream sequence
+    /// number panics right before applying it. Exactly one worker
+    /// processes any seq, so this kills one worker, reproducibly, at an
+    /// exact stream position — the fault-tolerance test harness.
+    pub fault_chaos_kill_seq: Option<u64>,
+    /// Chaos refinement (TOML: `fault.chaos_kill_in_checkpoint`): defer
+    /// the injected panic from the event itself to the worker's next
+    /// checkpoint attempt at/after it — the "kill during checkpoint"
+    /// torture case (the half-taken checkpoint must never be used).
+    /// With fault tolerance off there are no checkpoints, so this
+    /// degenerates to the plain event kill.
+    pub fault_chaos_kill_in_checkpoint: bool,
 }
 
 impl Default for RunConfig {
@@ -244,6 +271,10 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".to_string(),
             rescale_max_n_i: 0,
             rescale_max_w: 0,
+            fault_checkpoint_interval: 0,
+            fault_replay_log_capacity: 65_536,
+            fault_chaos_kill_seq: None,
+            fault_chaos_kill_in_checkpoint: false,
         }
     }
 }
@@ -336,6 +367,24 @@ impl RunConfig {
         num!("engine.ingest_batch_size", cfg.ingest_batch_size, usize);
         num!("rescale.max_n_i", cfg.rescale_max_n_i, u64);
         num!("rescale.max_w", cfg.rescale_max_w, u64);
+        num!(
+            "fault.checkpoint_interval",
+            cfg.fault_checkpoint_interval,
+            u64
+        );
+        num!(
+            "fault.replay_log_capacity",
+            cfg.fault_replay_log_capacity,
+            usize
+        );
+        if let Some(v) = get("fault.chaos_kill_seq") {
+            let seq = v.int()?;
+            cfg.fault_chaos_kill_seq =
+                if seq < 0 { None } else { Some(seq as u64) };
+        }
+        if let Some(v) = get("fault.chaos_kill_in_checkpoint") {
+            cfg.fault_chaos_kill_in_checkpoint = v.bool()?;
+        }
         if let Some(v) = get("run.artifacts_dir") {
             cfg.artifacts_dir = v.str()?.to_string();
         }
@@ -541,6 +590,28 @@ mod tests {
             .unwrap();
         assert_eq!(cfg.rescale_max_n_i, 4);
         assert_eq!(cfg.rescale_max_w, 1);
+    }
+
+    #[test]
+    fn parses_fault_section() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.fault_checkpoint_interval, 0, "default: FT off");
+        assert_eq!(cfg.fault_replay_log_capacity, 65_536);
+        assert_eq!(cfg.fault_chaos_kill_seq, None);
+        assert!(!cfg.fault_chaos_kill_in_checkpoint);
+        let cfg = RunConfig::from_toml(
+            "[fault]\ncheckpoint_interval = 512\nreplay_log_capacity = 4096\n\
+             chaos_kill_seq = 99\nchaos_kill_in_checkpoint = true",
+        )
+        .unwrap();
+        assert_eq!(cfg.fault_checkpoint_interval, 512);
+        assert_eq!(cfg.fault_replay_log_capacity, 4096);
+        assert_eq!(cfg.fault_chaos_kill_seq, Some(99));
+        assert!(cfg.fault_chaos_kill_in_checkpoint);
+        // -1 is the explicit "off" spelling for the chaos kill.
+        let cfg =
+            RunConfig::from_toml("[fault]\nchaos_kill_seq = -1").unwrap();
+        assert_eq!(cfg.fault_chaos_kill_seq, None);
     }
 
     #[test]

@@ -12,27 +12,24 @@
 //! [`Cluster::finish`] drains, joins, and returns the final
 //! [`RunReport`] — exactly what the old one-shot `run_pipeline` produced.
 //!
-//! # The worker protocol
+//! This module is deliberately thin: it owns routing, the per-worker
+//! route buffers, and the session lifecycle. The worker loop itself —
+//! the `WorkerMsg` protocol, the per-lane models, checkpointing — lives
+//! in `engine/actor.rs`, and worker spawning, liveness, crash
+//! detection, and recovery live in `coordinator/supervisor.rs`.
 //!
-//! Workers no longer consume a bare event stream; they speak
-//! `WorkerMsg` (the crate-private control-plane enum):
+//! # The worker protocol (`engine/actor.rs`)
 //!
-//! * `Event` — one stream element; prequential test-then-train, the
-//!   learning loop.
-//! * `Query` — answer a recommendation from the local models over a reply
-//!   channel; serving never trains (it may refresh read-side caches in
-//!   the bounded-staleness cosine mode).
-//! * `MetricsSnapshot` — report live counters over a reply channel.
-//! * `Export` — terminal: serialize every hosted lane, reply with the
-//!   snapshots, and drain out (the first half of a migration).
-//! * `Import` — install a lane snapshot (the second half; always queued
-//!   ahead of any post-rescale event on the same FIFO).
-//!
-//! All messages share the per-worker FIFO channel, which gives queries,
-//! snapshots, and migrations a useful consistency guarantee for free: a
-//! probe observes every event ingested before it (per worker), because it
-//! queues behind them — and an `Export` therefore snapshots state that
-//! reflects the *entire* accepted prefix of the stream.
+//! Workers speak `WorkerMsg`: `Event` (prequential test-then-train),
+//! `Query` (serve from local lanes over a reply channel),
+//! `MetricsSnapshot` (live counters), `Export` (terminal: serialize
+//! every hosted lane and drain out), and `Import` (install a lane frame
+//! ahead of any later event). All messages share the per-worker FIFO
+//! channel, which gives queries, snapshots, and migrations a useful
+//! consistency guarantee for free: a probe observes every event ingested
+//! before it (per worker), because it queues behind them — and an
+//! `Export` therefore snapshots state that reflects the *entire*
+//! accepted prefix of the stream.
 //!
 //! # The batched data plane
 //!
@@ -56,9 +53,6 @@
 //!   `ingest_batch_size` (property-tested in
 //!   `tests/batching_equivalence.rs`).
 //!
-//! Per-event semantics are unchanged; `ingest_batch_size = 1` degenerates
-//! to the old send-per-event plane.
-//!
 //! # Lanes: state partitioning vs worker placement
 //!
 //! Model state is not owned by workers directly. It is partitioned on the
@@ -67,10 +61,11 @@
 //! the current topology assigns to it ([`StateGrid::owner`]). With the
 //! default configuration the state grid equals the spawn topology, every
 //! worker hosts exactly one lane, and the system is indistinguishable
-//! from the paper's. The indirection earns its keep at
-//! [`Cluster::rescale`]: changing topology *moves whole lanes* between
-//! workers instead of splitting or merging model state, which makes
-//! migration exact — see ARCHITECTURE.md for the full walkthrough.
+//! from the paper's. The indirection earns its keep twice: at
+//! [`Cluster::rescale`], which *moves whole lanes* between workers
+//! instead of splitting or merging model state, and at crash recovery,
+//! which restores whole lanes from their checkpoints — see
+//! ARCHITECTURE.md for the full walkthrough.
 //!
 //! # The rescale protocol (pause → flush → drain → migrate → resume)
 //!
@@ -79,11 +74,15 @@
 //! 2. **Flush**: every route buffer is bulk-sent, so each worker's FIFO
 //!    holds the complete accepted prefix of the stream.
 //! 3. **Drain**: an `Export` probe queues behind those events on every
-//!    FIFO; each worker finishes its prefix, serializes its lanes
-//!    ([`StreamingRecommender::export_partition`] — factor rows, rated
-//!    sets, co-occurrence rows, caches, RNG stream), replies, and exits.
-//!    The old workers' final reports are retained (`retired`) so no
-//!    `processed`/`hits` accounting is lost.
+//!    FIFO; each worker finishes its prefix, serializes its lanes (lane
+//!    frames wrapping
+//!    [`StreamingRecommender::export_partition`](crate::algorithms::StreamingRecommender::export_partition)
+//!    — factor rows, rated sets, co-occurrence rows, caches, RNG stream,
+//!    plus the lane's forgetting clock and watermark), replies, and
+//!    exits. The old workers' final reports are retained (`retired`) so
+//!    no `processed`/`hits` accounting is lost. A worker that dies
+//!    during the drain is recovered and re-asked (fault-tolerant
+//!    sessions).
 //! 4. **Migrate**: a fresh [`Router`] is installed with its epoch bumped,
 //!    new workers spawn, and every lane snapshot is sent as an `Import`
 //!    to the worker that owns the lane under the new topology.
@@ -93,6 +92,23 @@
 //! Zero event loss and before/after recommendation equality are
 //! property-tested in `tests/rescale_equivalence.rs`; the pause-time cost
 //! is measured by `benches/rescale.rs`.
+//!
+//! # Fault tolerance (checkpoint / replay, exactly-once)
+//!
+//! With `fault.checkpoint_interval > 0`, workers checkpoint each lane
+//! every N events (the same lane-frame format rescaling uses, stamped
+//! with the lane's high-watermark `seq`), and the coordinator keeps a
+//! bounded replay log of recent envelopes. A worker crash — detected by
+//! a failed send, a liveness scan, or a panic at join — is then
+//! *invisible*: the supervisor respawns the worker, restores its lanes
+//! from their latest checkpoints, replays the watermark-filtered suffix
+//! from the log, and resumes. Replayed events re-evaluate to identical
+//! prequential outcomes (lane state is deterministic), and the collector
+//! deduplicates by global sequence number, so a recovered session's
+//! hits, recall curve, and answers are byte-identical to a never-crashed
+//! run (`tests/fault_tolerance.rs`; recovery pause is measured by
+//! `benches/recovery.rs`). With the default `fault.checkpoint_interval
+//! = 0` a worker death is what it always was: a loud session error.
 //!
 //! # The serving path (replicated-user read)
 //!
@@ -105,106 +121,22 @@
 //! and merges with the rank-aware [`merge_topn`], excluding items the
 //! user rated on *any* replica. Because the per-lane lists are invariant
 //! under lane placement, the merged answer is identical before and after
-//! any rescale.
+//! any rescale — or any crash recovery.
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::HashSet;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::algorithms::{build_model, StreamingRecommender};
 use crate::config::{RunConfig, Topology};
 use crate::coordinator::router::{Router, StateGrid};
-use crate::data::types::{ItemId, Rating, StateSizes, UserId};
-use crate::engine::{bounded, spawn, ChannelStats, Receiver, Sender, WorkerHandle};
-use crate::eval::{merge_topn, HitSample, Prequential, RunReport, WorkerReport};
-use crate::state::ForgetClock;
-use crate::util::histogram::Histogram;
+use crate::coordinator::supervisor::Supervisor;
+use crate::data::types::{ItemId, Rating, UserId};
+use crate::engine::actor::{CollectorMsg, Envelope, WorkerMsg};
+use crate::engine::{bounded, spawn, Receiver, Sender, WorkerHandle};
+use crate::eval::{merge_topn, RunReport, WorkerReport};
 
-/// Event envelope: global sequence number + the rating.
-#[derive(Debug, Clone, Copy)]
-struct Envelope {
-    seq: u64,
-    rating: Rating,
-}
-
-/// One serialized lane: the virtual-cell id plus the model snapshot.
-struct LaneSnapshot {
-    lane: u64,
-    bytes: Vec<u8>,
-}
-
-/// A retiring worker's reply to `Export`: every lane it hosted.
-struct WorkerExport {
-    lanes: Vec<LaneSnapshot>,
-}
-
-/// Everything a worker can be asked to do (the control-plane protocol).
-enum WorkerMsg {
-    /// One stream event (the learning loop).
-    Event(Envelope),
-    /// Online recommendation query (the serving loop). Answered from the
-    /// local lane models over `reply`; never *trains* them. (It may
-    /// refresh read-side caches: the bounded-staleness cosine mode
-    /// rebuilds stale neighborhoods on read, so query timing can shift
-    /// *when* those rebuilds happen. ISGD serving is fully read-only.)
-    Query { user: UserId, n: usize, reply: Sender<ReplicaAnswer> },
-    /// Live counter snapshot over `reply`; never blocks the stream for
-    /// longer than one reply-channel send.
-    MetricsSnapshot { reply: Sender<WorkerSnapshot> },
-    /// Terminal migration probe: serialize every hosted lane, send the
-    /// snapshots over `reply`, then drain out and report. Queued behind
-    /// all prior events (FIFO), so the snapshot covers the full accepted
-    /// prefix of the stream.
-    Export { reply: Sender<WorkerExport> },
-    /// Install a lane snapshot produced by a retiring worker's `Export`.
-    /// Sent before any post-rescale event on the same FIFO, so imported
-    /// state is in place before new learning touches the lane.
-    Import { lane: u64, bytes: Vec<u8> },
-}
-
-/// One replica's answer to a query: the ranked local top-N of every lane
-/// of the user's grid column hosted here, plus the union of the user's
-/// locally-rated items. Reply arrival order is irrelevant:
-/// [`merge_topn`]'s key (best rank, votes, item id) is order-independent,
-/// as is the union of the rated sets — and the *lists themselves* are
-/// per-lane, so the merged result does not depend on how lanes are
-/// currently placed on workers (the rescale equivalence guarantee).
-struct ReplicaAnswer {
-    /// Ranked local top-N per hosted lane of the user's column (local
-    /// rated items already excluded; empty lists elided).
-    lists: Vec<Vec<ItemId>>,
-    /// Items this user has rated on this replica, for global exclusion.
-    rated: Vec<ItemId>,
-}
-
-/// Message from workers to the collector.
-enum CollectorMsg {
-    /// A batch of prequential outcomes.
-    Hits(Vec<HitSample>),
-    /// Worker finished draining (reports travel via thread join).
-    Done { worker_id: usize },
-}
-
-/// Live per-worker counters — a moment-in-time view of what
-/// [`WorkerReport`] reports at shutdown.
-#[derive(Debug, Clone)]
-pub struct WorkerSnapshot {
-    /// Session-unique worker id (ids keep counting across rescale
-    /// generations, so retired and live workers never collide).
-    pub worker_id: usize,
-    /// Events processed so far.
-    pub processed: u64,
-    /// Prequential hits so far.
-    pub hits: u64,
-    /// Serving queries answered so far.
-    pub queries: u64,
-    /// Lane models currently hosted (1 per worker in the default
-    /// grid-equals-topology configuration).
-    pub lanes: u64,
-    /// Current state-entry counts (summed over hosted lanes).
-    pub state: StateSizes,
-}
+pub use crate::engine::actor::WorkerSnapshot;
 
 /// Live cluster-level snapshot returned by [`Cluster::metrics`].
 #[derive(Debug, Clone)]
@@ -214,13 +146,19 @@ pub struct ClusterMetrics {
     /// Events fully processed across workers, including workers retired
     /// by earlier rescales (== `ingested` at the moment the snapshot is
     /// answered: the probe rides behind the flushed buffers on the
-    /// per-worker FIFO).
+    /// per-worker FIFO — and a recovered worker's restored + replayed
+    /// lanes cover its predecessor's work exactly).
     pub processed: u64,
     /// Prequential hits so far (including retired workers).
     pub hits: u64,
     /// Lifetime online recall so far (hits / processed).
     pub recall: f64,
-    /// Serving queries answered so far (including retired workers).
+    /// Serving queries answered so far (including retired workers). A
+    /// serving-traffic diagnostic, not an exactly-once counter: a
+    /// crashed worker's tally is not checkpointed (it can dip after a
+    /// recovery), and a recovery retry re-asks the surviving replicas of
+    /// an in-flight fan-out (it can also count a little high around a
+    /// crash).
     pub queries: u64,
     /// Total ns senders spent blocked on backpressure so far.
     pub backpressure_ns: u64,
@@ -240,6 +178,16 @@ pub struct ClusterMetrics {
     /// Total ns the session spent inside rescale cutovers (ingest and
     /// serving are paused for exactly this long, summed).
     pub rescale_pause_ns: u64,
+    /// Completed crash recoveries (0 unless `fault.checkpoint_interval`
+    /// is set and a worker actually died).
+    pub recoveries: u64,
+    /// Total serialized lane-frame bytes received as checkpoints.
+    pub checkpoint_bytes: u64,
+    /// Envelopes re-sent from the replay log by crash recoveries.
+    pub replayed_events: u64,
+    /// Total ns spent inside crash recoveries (reap + respawn + restore
+    /// + replay).
+    pub recovery_pause_ns: u64,
     /// Current topology version: 0 at spawn, +1 per rescale.
     pub router_epoch: u64,
     /// Per-live-worker detail, sorted by worker id (retired workers'
@@ -272,7 +220,7 @@ pub struct RescaleReport {
 }
 
 /// A running shared-nothing cluster: ingest, serve, observe, rescale,
-/// finish.
+/// recover, finish.
 pub struct Cluster {
     label: String,
     /// Configuration echo; worker generations spawned by rescale reuse it
@@ -281,26 +229,23 @@ pub struct Cluster {
     /// The fixed virtual grid state is partitioned on (see [`StateGrid`]).
     grid: StateGrid,
     router: Router,
-    worker_txs: Vec<Sender<WorkerMsg>>,
+    /// Owns the worker slots: spawn/respawn, liveness, checkpoints,
+    /// replay, recovery.
+    sup: Supervisor,
     /// Per-worker route buffers: envelopes accumulate here and move in
     /// bulk (`send_many`) once a buffer reaches `batch_size` — or earlier
     /// when a query/metrics probe needs read-your-writes ordering.
     route_bufs: Vec<Vec<WorkerMsg>>,
     /// Flush threshold (`cfg.ingest_batch_size`, clamped to >= 1).
     batch_size: usize,
-    handles: Vec<WorkerHandle<Result<WorkerReport>>>,
     collector: Option<WorkerHandle<(Vec<(u64, f64)>, u64)>>,
-    /// Master clone handed to each worker generation; dropped in
-    /// [`Cluster::finish`] so the collector sees end-of-stream only after
-    /// the last generation drained.
+    /// Master clone handed to the supervisor (which clones it into each
+    /// worker generation); dropped in [`Cluster::finish`] so the
+    /// collector sees end-of-stream only after the last generation
+    /// drained.
     col_tx: Option<Sender<CollectorMsg>>,
     /// Final reports of workers retired by rescales.
     retired: Vec<WorkerReport>,
-    /// Channel counters of retired worker generations (their channels are
-    /// gone; the totals must survive into metrics/finish).
-    chan_base: ChannelStats,
-    /// Next session-unique worker id.
-    next_ord: usize,
     /// Wall clock starts at the first ingest (matches the old
     /// `run_pipeline` accounting, which excluded worker spawn).
     started: Option<Instant>,
@@ -325,7 +270,7 @@ impl Cluster {
         let n_c = router.n_c();
         log::info!(
             "cluster '{label}': n_i={} -> {} workers, state grid {}x{} \
-             ({} lanes), {} backend, forgetting={}",
+             ({} lanes), {} backend, forgetting={}, fault tolerance={}",
             cfg.topology.n_i,
             n_c,
             grid.v_i(),
@@ -333,6 +278,11 @@ impl Cluster {
             grid.n_lanes(),
             cfg.backend.name(),
             cfg.forgetting.name(),
+            if cfg.fault_checkpoint_interval > 0 {
+                "on"
+            } else {
+                "off"
+            },
         );
 
         // Channels: coordinator -> workers (bounded, backpressured),
@@ -354,15 +304,12 @@ impl Cluster {
             cfg: cfg.clone(),
             grid,
             router,
-            worker_txs: Vec::new(),
+            sup: Supervisor::new(cfg, grid, col_tx.clone()),
             route_bufs: Vec::new(),
             batch_size,
-            handles: Vec::new(),
             collector: Some(collector),
             col_tx: Some(col_tx),
             retired: Vec::new(),
-            chan_base: ChannelStats::default(),
-            next_ord: 0,
             started: None,
             seq: 0,
             route_ns: 0,
@@ -370,39 +317,15 @@ impl Cluster {
             migrated_bytes: 0,
             rescale_pause_ns: 0,
         };
-        cluster.spawn_generation(n_c);
+        cluster.sup.spawn_generation(n_c);
+        cluster.route_bufs =
+            (0..n_c).map(|_| Vec::with_capacity(batch_size)).collect();
         Ok(cluster)
-    }
-
-    /// Spawn `n_c` workers for the current topology, assigning each a
-    /// session-unique id and a clone of the collector sender.
-    fn spawn_generation(&mut self, n_c: usize) {
-        let col_tx = self
-            .col_tx
-            .as_ref()
-            .expect("spawn_generation after finish")
-            .clone();
-        self.worker_txs = Vec::with_capacity(n_c);
-        self.handles = Vec::with_capacity(n_c);
-        self.route_bufs =
-            (0..n_c).map(|_| Vec::with_capacity(self.batch_size)).collect();
-        let grid = self.grid;
-        for _ in 0..n_c {
-            let ord = self.next_ord;
-            self.next_ord += 1;
-            let (tx, rx) = bounded::<WorkerMsg>(self.cfg.channel_capacity);
-            self.worker_txs.push(tx);
-            let cfg = self.cfg.clone();
-            let col_tx = col_tx.clone();
-            self.handles.push(spawn(ord, "worker", move || {
-                worker_loop(ord, &cfg, grid, rx, col_tx)
-            }));
-        }
     }
 
     /// Number of workers in the cluster (current topology).
     pub fn n_workers(&self) -> usize {
-        self.worker_txs.len()
+        self.sup.n_workers()
     }
 
     /// The Algorithm-1 router for the *current* topology (e.g. to inspect
@@ -431,7 +354,8 @@ impl Cluster {
     /// accepted (buffered or sent), and a dead worker surfaces at the
     /// flush that hits it — up to `ingest_batch_size - 1` events after
     /// the death — or at the next query/metrics/finish, whichever comes
-    /// first.
+    /// first. On a fault-tolerant session a dead worker does not surface
+    /// at all: the flush recovers it and the stream continues.
     pub fn ingest(&mut self, rating: Rating) -> Result<()> {
         if self.started.is_none() {
             self.started = Some(Instant::now());
@@ -440,6 +364,13 @@ impl Cluster {
         let target = self.router.route(rating.user, rating.item);
         self.route_ns += t0.elapsed().as_nanos() as u64;
         let env = Envelope { seq: self.seq, rating };
+        if self.sup.enabled() {
+            // Fault bookkeeping: every *accepted* envelope enters the
+            // replay log before it can reach a worker, so nothing a
+            // crash destroys (queued or buffered) is ever unrecoverable.
+            let lane = self.grid.lane(rating.user, rating.item);
+            self.sup.record_ingest(env, lane);
+        }
         self.route_bufs[target].push(WorkerMsg::Event(env));
         self.seq += 1;
         if self.route_bufs[target].len() >= self.batch_size {
@@ -459,16 +390,10 @@ impl Cluster {
         Ok(())
     }
 
-    /// Bulk-send one worker's route buffer (one lock, one wakeup).
+    /// Bulk-send one worker's route buffer (one lock, one wakeup). A dead
+    /// worker is recovered in place when fault tolerance is on.
     fn flush_worker(&mut self, wid: usize) -> Result<()> {
-        if self.route_bufs[wid].is_empty() {
-            return Ok(());
-        }
-        let buf = &mut self.route_bufs[wid];
-        if self.worker_txs[wid].send_many(buf).is_err() {
-            anyhow::bail!("worker {wid} died mid-stream");
-        }
-        Ok(())
+        self.sup.send_event_batch(wid, &mut self.route_bufs[wid], &self.router)
     }
 
     /// Flush every route buffer. Runs before any `Query`,
@@ -480,6 +405,50 @@ impl Cluster {
             self.flush_worker(wid)?;
         }
         Ok(())
+    }
+
+    /// One fan-out probe round shared by [`Cluster::recommend`] and
+    /// [`Cluster::metrics`]: flush every route buffer (read-your-writes),
+    /// send `make(reply)` to each target worker — recovering dead workers
+    /// first on fault-tolerant sessions, skipping them otherwise — and
+    /// gather the replies.
+    ///
+    /// Returns `Ok(None)` when a worker died *after* its probe was queued
+    /// (the reply channel died with it) and was healed: the caller
+    /// retries, and the restored worker answers over the same accepted
+    /// prefix. An empty reply set means no targeted worker was alive
+    /// (only possible without fault tolerance).
+    fn probe_round<T>(
+        &mut self,
+        targets: &[usize],
+        make: &dyn Fn(Sender<T>) -> WorkerMsg,
+    ) -> Result<Option<Vec<T>>> {
+        let enabled = self.sup.enabled();
+        self.flush_all()?;
+        let (reply_tx, reply_rx) = bounded::<T>(targets.len().max(1));
+        let mut asked = 0usize;
+        for &wid in targets {
+            let msg = make(reply_tx.clone());
+            if enabled {
+                self.sup.send_probe(wid, msg, &self.router)?;
+                asked += 1;
+            } else if self.sup.probe(wid, msg) {
+                // A failed send returns (and drops) the message together
+                // with its reply-sender clone, so recv_n below can't
+                // deadlock on a dead worker.
+                asked += 1;
+            }
+        }
+        drop(reply_tx);
+        if asked == 0 {
+            return Ok(Some(Vec::new()));
+        }
+        let replies = reply_rx.recv_n(asked);
+        if replies.len() < asked && enabled {
+            self.sup.heal(&self.router)?;
+            return Ok(None);
+        }
+        Ok(Some(replies))
     }
 
     /// Online serving: global top-`n` for `user`, answered while the
@@ -496,13 +465,12 @@ impl Cluster {
     /// query queues behind every previously ingested event — including
     /// events that were still buffered — on each replica's FIFO.
     ///
-    /// Rescale-invariant: the merged answer depends only on the per-lane
-    /// lists, not on how lanes are placed on workers, so the same session
-    /// state yields the same answer under any topology
-    /// (property-tested in `tests/rescale_equivalence.rs`).
+    /// Rescale- and recovery-invariant: the merged answer depends only on
+    /// the per-lane lists, not on how lanes are placed on workers, so the
+    /// same session state yields the same answer under any topology and
+    /// across any crash recovery (property-tested in
+    /// `tests/rescale_equivalence.rs` and `tests/fault_tolerance.rs`).
     pub fn recommend(&mut self, user: UserId, n: usize) -> Result<Vec<ItemId>> {
-        self.flush_all()?;
-        let replicas = self.router.user_workers(user);
         // Over-fetch per lane: a lane cannot know which of its candidates
         // the user consumed on *other* lanes, and the global exclusion
         // below would otherwise under-fill the merged top-N. (On the PJRT
@@ -510,30 +478,26 @@ impl Cluster {
         // large requests for heavy raters — the lane then degrades to
         // fewer candidates, it never errors.)
         let fetch = n.saturating_mul(2);
-        let (reply_tx, reply_rx) = bounded::<ReplicaAnswer>(replicas.len());
-        let mut asked = 0usize;
-        for &wid in &replicas {
-            let msg =
-                WorkerMsg::Query { user, n: fetch, reply: reply_tx.clone() };
-            // A failed send returns (and drops) the message together with
-            // its reply-sender clone, so recv_n below can't deadlock on a
-            // dead replica.
-            if self.worker_txs[wid].send(msg).is_ok() {
-                asked += 1;
+        for _attempt in 0..3 {
+            let replicas = self.router.user_workers(user);
+            let answers = match self.probe_round(&replicas, &|reply| {
+                WorkerMsg::Query { user, n: fetch, reply }
+            })? {
+                Some(answers) => answers,
+                None => continue, // a replica died mid-probe; healed, retry
+            };
+            if answers.is_empty() {
+                anyhow::bail!("no replica of user {user} is alive");
             }
+            let exclude: HashSet<ItemId> = answers
+                .iter()
+                .flat_map(|a| a.rated.iter().copied())
+                .collect();
+            let lists: Vec<Vec<ItemId>> =
+                answers.into_iter().flat_map(|a| a.lists).collect();
+            return Ok(merge_topn(&lists, &exclude, n));
         }
-        drop(reply_tx);
-        if asked == 0 {
-            anyhow::bail!("no replica of user {user} is alive");
-        }
-        let answers = reply_rx.recv_n(asked);
-        let exclude: HashSet<ItemId> = answers
-            .iter()
-            .flat_map(|a| a.rated.iter().copied())
-            .collect();
-        let lists: Vec<Vec<ItemId>> =
-            answers.into_iter().flat_map(|a| a.lists).collect();
-        Ok(merge_topn(&lists, &exclude, n))
+        anyhow::bail!("recommend: replicas kept dying across 3 recoveries")
     }
 
     /// Live metrics without shutdown: every worker answers a snapshot
@@ -541,55 +505,50 @@ impl Cluster {
     /// the flushed events (per-worker FIFO), so the aggregate reflects
     /// the whole prefix of the stream accepted before this call. Workers
     /// retired by earlier rescales contribute their final totals to the
-    /// aggregates.
+    /// aggregates; a crashed-and-recovered worker's replacement reports
+    /// its restored counters, so `processed == ingested` holds across
+    /// recoveries too.
     pub fn metrics(&mut self) -> Result<ClusterMetrics> {
-        self.flush_all()?;
-        let (reply_tx, reply_rx) =
-            bounded::<WorkerSnapshot>(self.worker_txs.len().max(1));
-        let mut asked = 0usize;
-        for tx in &self.worker_txs {
-            let msg = WorkerMsg::MetricsSnapshot { reply: reply_tx.clone() };
-            if tx.send(msg).is_ok() {
-                asked += 1;
+        for _attempt in 0..3 {
+            let targets: Vec<usize> = (0..self.sup.n_workers()).collect();
+            let mut workers = match self.probe_round(&targets, &|reply| {
+                WorkerMsg::MetricsSnapshot { reply }
+            })? {
+                Some(workers) => workers,
+                None => continue, // a worker died mid-probe; healed, retry
+            };
+            workers.sort_by_key(|w| w.worker_id);
+            let mut processed: u64 = workers.iter().map(|w| w.processed).sum();
+            let mut hits: u64 = workers.iter().map(|w| w.hits).sum();
+            let mut queries: u64 = workers.iter().map(|w| w.queries).sum();
+            for w in &self.retired {
+                processed += w.processed;
+                hits += w.hits;
+                queries += w.queries;
             }
+            let chan = self.sup.channel_stats();
+            let fault = self.sup.stats();
+            return Ok(ClusterMetrics {
+                ingested: self.seq,
+                processed,
+                hits,
+                recall: hits as f64 / (processed.max(1)) as f64,
+                queries,
+                backpressure_ns: chan.blocked_ns,
+                recv_blocked_ns: chan.recv_blocked_ns,
+                mean_send_batch: chan.mean_send_batch(),
+                rescales: self.rescales,
+                migrated_bytes: self.migrated_bytes,
+                rescale_pause_ns: self.rescale_pause_ns,
+                recoveries: fault.recoveries,
+                checkpoint_bytes: fault.checkpoint_bytes,
+                replayed_events: fault.replayed_events,
+                recovery_pause_ns: fault.recovery_pause_ns,
+                router_epoch: self.router.epoch(),
+                workers,
+            });
         }
-        drop(reply_tx);
-        let mut workers = reply_rx.recv_n(asked);
-        workers.sort_by_key(|w| w.worker_id);
-        let mut processed: u64 = workers.iter().map(|w| w.processed).sum();
-        let mut hits: u64 = workers.iter().map(|w| w.hits).sum();
-        let mut queries: u64 = workers.iter().map(|w| w.queries).sum();
-        for w in &self.retired {
-            processed += w.processed;
-            hits += w.hits;
-            queries += w.queries;
-        }
-        let chan = self.channel_stats();
-        Ok(ClusterMetrics {
-            ingested: self.seq,
-            processed,
-            hits,
-            recall: hits as f64 / (processed.max(1)) as f64,
-            queries,
-            backpressure_ns: chan.blocked_ns,
-            recv_blocked_ns: chan.recv_blocked_ns,
-            mean_send_batch: chan.mean_send_batch(),
-            rescales: self.rescales,
-            migrated_bytes: self.migrated_bytes,
-            rescale_pause_ns: self.rescale_pause_ns,
-            router_epoch: self.router.epoch(),
-            workers,
-        })
-    }
-
-    /// Aggregate channel counters: retired generations' totals plus the
-    /// live per-worker data channels.
-    fn channel_stats(&self) -> ChannelStats {
-        let mut total = self.chan_base;
-        for tx in &self.worker_txs {
-            total.absorb(&tx.metrics());
-        }
-        total
+        anyhow::bail!("metrics: workers kept dying across 3 recoveries")
     }
 
     /// Live elastic rescale: migrate the running session to
@@ -604,10 +563,11 @@ impl Cluster {
     /// ARCHITECTURE.md for the design.
     ///
     /// Costs one full pause of the session (no ingest or serving while
-    /// state moves); the report says how long and how many bytes. After
-    /// an error the session should be considered lost (workers may
-    /// already be retired) — [`Cluster::finish`] will surface the root
-    /// cause.
+    /// state moves); the report says how long and how many bytes. On a
+    /// fault-tolerant session a worker crash before or during the drain
+    /// is recovered and the cutover proceeds; otherwise — or after an
+    /// unrecoverable error — the session should be considered lost and
+    /// [`Cluster::finish`] will surface the root cause.
     pub fn rescale(&mut self, new_topology: Topology) -> Result<RescaleReport> {
         let t0 = Instant::now();
         if !self.grid.supports(new_topology) {
@@ -621,7 +581,7 @@ impl Cluster {
             );
         }
         let from = self.cfg.topology;
-        let from_workers = self.worker_txs.len();
+        let from_workers = self.sup.n_workers();
         log::info!(
             "cluster '{}': rescale n_i {} -> {} ({} -> {} workers)",
             self.label,
@@ -633,50 +593,34 @@ impl Cluster {
 
         // Pause + flush: push every buffered event onto its FIFO so the
         // Export probe below queues behind the complete accepted prefix.
+        // (A worker found dead here is recovered by the flush itself.)
         self.flush_all()?;
 
         // Drain + export: each worker finishes its queue, snapshots its
-        // lanes, replies, and exits.
-        let (reply_tx, reply_rx) =
-            bounded::<WorkerExport>(from_workers.max(1));
-        let mut asked = 0usize;
-        for tx in &self.worker_txs {
-            if tx.send(WorkerMsg::Export { reply: reply_tx.clone() }).is_ok() {
-                asked += 1;
-            }
-        }
-        drop(reply_tx);
-        if asked != from_workers {
-            anyhow::bail!(
-                "rescale: {} of {from_workers} workers already dead",
-                from_workers - asked
-            );
-        }
-        let exports = reply_rx.recv_n(asked);
-        if exports.len() != asked {
-            anyhow::bail!(
-                "rescale: only {} of {asked} workers exported state \
-                 (a worker died mid-drain)",
-                exports.len()
-            );
-        }
+        // lanes, replies, and exits (crash-proof on fault-tolerant
+        // sessions: a worker dying mid-drain is recovered and re-asked).
+        let exports = self.sup.export_all(&self.router)?;
+
+        // The exports double as fresh checkpoints (counters zeroed to the
+        // new generation's baseline), so recovery stays exact across the
+        // cutover without waiting for new periodic checkpoints.
+        self.sup.install_rescale_checkpoints(&exports);
 
         // Retire the old generation: fold its channel counters into the
         // base, close its channels, and keep its final reports.
-        self.chan_base = self.channel_stats();
-        self.worker_txs.clear();
-        self.route_bufs.clear();
-        for h in self.handles.drain(..) {
-            self.retired.push(h.join()??);
-        }
+        let mut retiring = self.sup.retire_generation()?;
+        self.retired.append(&mut retiring);
 
         // Install the new topology (epoch bump) and spawn the new
         // generation.
         self.router =
             Router::with_epoch(new_topology, self.router.epoch() + 1);
         self.cfg.topology = new_topology;
+        self.sup.set_topology(new_topology);
         let n_c = self.router.n_c();
-        self.spawn_generation(n_c);
+        self.sup.spawn_generation(n_c);
+        self.route_bufs =
+            (0..n_c).map(|_| Vec::with_capacity(self.batch_size)).collect();
 
         // Re-route every lane to its owner under the new grid. Imports go
         // out before resume, so FIFO order puts them ahead of any
@@ -688,9 +632,12 @@ impl Cluster {
                 let target = self.grid.owner(snap.lane, &self.router);
                 lanes_moved += 1;
                 bytes_moved += snap.bytes.len() as u64;
-                let msg =
-                    WorkerMsg::Import { lane: snap.lane, bytes: snap.bytes };
-                if self.worker_txs[target].send(msg).is_err() {
+                let msg = WorkerMsg::Import {
+                    lane: snap.lane,
+                    bytes: snap.bytes,
+                    restore_counters: false,
+                };
+                if !self.sup.probe(target, msg) {
                     anyhow::bail!(
                         "rescale: new worker {target} died during import"
                     );
@@ -726,36 +673,42 @@ impl Cluster {
 
     /// Drain in-flight events, join workers and collector, and assemble
     /// the final [`RunReport`] — the same aggregate the one-shot
-    /// `run_pipeline` returns.
+    /// `run_pipeline` returns. A worker that panics during the final
+    /// drain of a fault-tolerant session is recovered, drained, and
+    /// reported by its replacement.
     ///
     /// Note on `throughput`: the wall-clock window runs from the first
     /// ingest to this call, so for an interactive session it includes
-    /// serving fan-outs, metrics probes, rescale pauses, and caller
-    /// think-time — it is *session* throughput. Only a pure ingest run
-    /// (what `run_pipeline` does) reads as ingest throughput.
+    /// serving fan-outs, metrics probes, rescale pauses, recovery pauses,
+    /// and caller think-time — it is *session* throughput. Only a pure
+    /// ingest run (what `run_pipeline` does) reads as ingest throughput.
     pub fn finish(mut self) -> Result<RunReport> {
         // Flush the buffered tail first — the drain guarantee covers every
-        // accepted event. A flush failure means a worker already died; keep
-        // going so the join below surfaces the root cause.
+        // accepted event. With fault tolerance on, the flush itself
+        // recovers dead workers, so an error here is terminal; without
+        // it, keep going so the join below surfaces the root cause.
         if let Err(e) = self.flush_all() {
+            if self.sup.enabled() {
+                return Err(e);
+            }
             log::warn!("finish: final flush failed ({e}); joining workers");
         }
-        // Snapshot channel counters before closing (excludes the workers'
-        // final idle wait between last event and shutdown).
-        let chan = self.channel_stats();
-        // Close worker inputs; workers drain and report via join.
-        self.worker_txs.clear();
-        let n_workers = self.handles.len();
-        let mut workers: Vec<WorkerReport> = Vec::with_capacity(n_workers);
-        for h in self.handles.drain(..) {
-            workers.push(h.join()??);
-        }
+        let n_workers = self.sup.n_workers();
+        // Close worker inputs; workers drain and report via join. A panic
+        // in the final drain is recovered (respawn + restore + replay)
+        // and the replacement joined instead. Each channel's counters are
+        // folded into the retained base at the moment its input closes —
+        // that still excludes the workers' final idle wait, but includes
+        // any final-drain recovery's replacement channel.
+        let mut workers = self.sup.finish_join(&self.router)?;
+        let chan = self.sup.channel_stats();
         let wall_secs = self
             .started
             .map(|t| t.elapsed().as_secs_f64())
             .unwrap_or(0.0);
-        // Drop the master collector sender only after every generation's
+        // Drop every collector sender only after the last generation's
         // workers are gone; the collector then sees end-of-stream.
+        self.sup.close_collector();
         drop(self.col_tx.take());
         let (recall_curve, hits) = self
             .collector
@@ -766,6 +719,7 @@ impl Cluster {
         let mut retired = std::mem::take(&mut self.retired);
         retired.sort_by_key(|w| w.worker_id);
         let events = self.seq;
+        let fault = self.sup.stats();
         Ok(RunReport {
             label: self.label.clone(),
             n_workers,
@@ -784,175 +738,12 @@ impl Cluster {
             rescales: self.rescales,
             migrated_bytes: self.migrated_bytes,
             rescale_pause_ns: self.rescale_pause_ns,
+            recoveries: fault.recoveries,
+            checkpoint_bytes: fault.checkpoint_bytes,
+            replayed_events: fault.replayed_events,
+            recovery_pause_ns: fault.recovery_pause_ns,
         })
     }
-}
-
-/// Worker body: prequential learning loop + serving + snapshots +
-/// migration over the worker's hosted *lanes* (one independent model per
-/// virtual grid cell; exactly one lane per worker in the default
-/// grid-equals-topology configuration).
-///
-/// Drain-based: each wakeup moves *everything* queued into a local inbox
-/// in one critical section ([`Receiver::recv_many`]), then works through
-/// it in FIFO order — the train loop stays per-event (prequential
-/// accounting is unchanged) but lock transitions and condvar wakeups are
-/// amortized over the window, and the ISGD/cosine update loops run
-/// back-to-back over a resident inbox instead of interleaving with
-/// channel crossings. Queries and snapshots sit at their FIFO position
-/// inside the drained window, so they observe exactly the events
-/// ingested before them. `Export` is terminal: reply, then drain out.
-///
-/// Lane models are built lazily on first touch, seeded by *lane id* (not
-/// worker id) so a lane's RNG stream — and therefore its entire model
-/// evolution — is identical wherever the lane is hosted.
-fn worker_loop(
-    ord: usize,
-    cfg: &RunConfig,
-    grid: StateGrid,
-    rx: Receiver<WorkerMsg>,
-    col_tx: Sender<CollectorMsg>,
-) -> Result<WorkerReport> {
-    let mut lanes: BTreeMap<u64, Box<dyn StreamingRecommender>> =
-        BTreeMap::new();
-    let mut preq = Prequential::new(cfg.top_n, cfg.recall_window);
-    let mut clock = ForgetClock::new(cfg.forgetting);
-    let mut latency = Histogram::new();
-    let mut batch: Vec<HitSample> = Vec::with_capacity(256);
-    let mut inbox: Vec<WorkerMsg> =
-        Vec::with_capacity(cfg.ingest_batch_size.clamp(1, 4096));
-    let mut processed = 0u64;
-    let mut evicted = 0u64;
-    let mut queries = 0u64;
-    let mut recommend_ns = 0u64;
-    let mut update_ns = 0u64;
-    let mut exported = false;
-
-    'drain: while rx.recv_many(&mut inbox, usize::MAX) {
-        for msg in inbox.drain(..) {
-            match msg {
-                WorkerMsg::Event(env) => {
-                    let lane_id =
-                        grid.lane(env.rating.user, env.rating.item);
-                    // Single hot-path lookup (entry), not contains+get.
-                    let model = match lanes.entry(lane_id) {
-                        std::collections::btree_map::Entry::Vacant(v) => {
-                            v.insert(build_model(cfg, lane_id as usize)?)
-                        }
-                        std::collections::btree_map::Entry::Occupied(o) => {
-                            o.into_mut()
-                        }
-                    };
-                    let out = preq.step(model.as_mut(), &env.rating);
-                    latency.record(out.recommend_ns + out.update_ns);
-                    recommend_ns += out.recommend_ns;
-                    update_ns += out.update_ns;
-                    processed += 1;
-                    batch.push(HitSample { seq: env.seq, hit: out.hit });
-                    if batch.len() >= 256 {
-                        let full = std::mem::replace(
-                            &mut batch,
-                            Vec::with_capacity(256),
-                        );
-                        let _ = col_tx.send(CollectorMsg::Hits(full));
-                    }
-                    if let Some(kind) = clock.on_event(env.rating.ts) {
-                        for model in lanes.values_mut() {
-                            evicted += model.sweep(kind);
-                        }
-                    }
-                }
-                WorkerMsg::Query { user, n, reply } => {
-                    // Serving never trains the models and never enters the
-                    // prequential accounting. (Cosine fast mode may
-                    // rebuild read-side neighborhood caches here; see
-                    // WorkerMsg docs.) Every hosted lane of the user's
-                    // grid column answers with its own ranked list.
-                    queries += 1;
-                    let col = grid.user_col(user);
-                    let mut lists = Vec::new();
-                    let mut rated = Vec::new();
-                    for (lane_id, model) in lanes.iter_mut() {
-                        if grid.lane_col(*lane_id) != col {
-                            continue;
-                        }
-                        let items = model.recommend(user, n);
-                        if !items.is_empty() {
-                            lists.push(items);
-                        }
-                        rated.extend(model.rated_items(user));
-                    }
-                    let _ = reply.send(ReplicaAnswer { lists, rated });
-                }
-                WorkerMsg::MetricsSnapshot { reply } => {
-                    let _ = reply.send(WorkerSnapshot {
-                        worker_id: ord,
-                        processed,
-                        hits: preq.recall().hits(),
-                        queries,
-                        lanes: lanes.len() as u64,
-                        state: sum_state(&lanes),
-                    });
-                }
-                WorkerMsg::Import { lane, bytes } => {
-                    if !lanes.contains_key(&lane) {
-                        lanes.insert(lane, build_model(cfg, lane as usize)?);
-                    }
-                    lanes.get_mut(&lane).unwrap().import_partition(&bytes)?;
-                }
-                WorkerMsg::Export { reply } => {
-                    // Terminal: everything ingested before this probe has
-                    // been processed (FIFO), so the snapshots cover the
-                    // complete accepted prefix. The coordinator sends
-                    // nothing after Export, so breaking out drops no work.
-                    let out: Vec<LaneSnapshot> = lanes
-                        .iter()
-                        .map(|(id, model)| LaneSnapshot {
-                            lane: *id,
-                            bytes: model.export_partition(&|_| true),
-                        })
-                        .collect();
-                    exported = true;
-                    let _ = reply.send(WorkerExport { lanes: out });
-                    break 'drain;
-                }
-            }
-        }
-    }
-    if !batch.is_empty() {
-        let _ = col_tx.send(CollectorMsg::Hits(batch));
-    }
-    let report = WorkerReport {
-        worker_id: ord,
-        processed,
-        hits: preq.recall().hits(),
-        // An exported worker handed its state off; reporting it again
-        // would double-count entries that now live on the new workers.
-        state: if exported {
-            StateSizes::default()
-        } else {
-            sum_state(&lanes)
-        },
-        latency,
-        sweeps: clock.sweeps(),
-        evicted,
-        recommend_ns,
-        update_ns,
-    };
-    let _ = col_tx.send(CollectorMsg::Done { worker_id: ord });
-    Ok(report)
-}
-
-/// Sum state-entry counts across a worker's hosted lanes.
-fn sum_state(lanes: &BTreeMap<u64, Box<dyn StreamingRecommender>>) -> StateSizes {
-    let mut total = StateSizes::default();
-    for model in lanes.values() {
-        let s = model.state_sizes();
-        total.users += s.users;
-        total.items += s.items;
-        total.aux += s.aux;
-    }
-    total
 }
 
 /// Collector: reassembles the global prequential curve from per-worker
@@ -960,6 +751,12 @@ fn sum_state(lanes: &BTreeMap<u64, Box<dyn StreamingRecommender>>) -> StateSizes
 /// computed in global sequence order at the end (hit bits are buffered in
 /// a dense bitmap — 1 bit per event — grown on demand because a live
 /// session has no up-front event count).
+///
+/// Idempotent by sequence number: a crash recovery replays the suffix
+/// past the dead worker's checkpoints, so an outcome can arrive twice.
+/// Replay is deterministic (same lane state ⇒ same outcome), so the
+/// first arrival stands and duplicates are dropped — `total_hits` and
+/// the curve are exactly those of a never-crashed run.
 fn collect(
     rx: Receiver<CollectorMsg>,
     window: usize,
@@ -978,9 +775,14 @@ fn collect(
                         bits.resize(byte + 1, 0);
                         seen.resize(byte + 1, 0);
                     }
-                    seen[byte] |= 1 << bit;
+                    let mask = 1u8 << bit;
+                    if seen[byte] & mask != 0 {
+                        // Duplicate from a recovery replay.
+                        continue;
+                    }
+                    seen[byte] |= mask;
                     if s.hit {
-                        bits[byte] |= 1 << bit;
+                        bits[byte] |= mask;
                         total_hits += 1;
                     }
                     n_events = n_events.max(s.seq + 1);
@@ -1069,6 +871,7 @@ mod tests {
         assert_eq!(m2.queries, n_i);
         assert_eq!(m2.workers.len(), 4);
         assert_eq!(m2.rescales, 0);
+        assert_eq!(m2.recoveries, 0);
         assert_eq!(m2.router_epoch, 0);
         let report = cluster.finish().unwrap();
         assert_eq!(report.hits, m2.hits, "final report matches last snapshot");
@@ -1095,6 +898,8 @@ mod tests {
         assert_eq!(report.n_workers, 4);
         assert!(report.retired.is_empty());
         assert_eq!(report.rescales, 0);
+        assert_eq!(report.recoveries, 0);
+        assert_eq!(report.checkpoint_bytes, 0);
     }
 
     #[test]
@@ -1183,5 +988,122 @@ mod tests {
         assert_eq!(cluster.n_workers(), 16);
         let report = cluster.finish().unwrap();
         assert_eq!(report.events, 600);
+    }
+
+    #[test]
+    fn crash_recovery_mid_stream_is_exactly_once() {
+        let events = small_events(2000);
+        let mut c = cfg(2);
+        c.fault_checkpoint_interval = 32;
+        c.fault_chaos_kill_seq = Some(700);
+        let mut cluster = Cluster::spawn_labeled(&c, "t-fault").unwrap();
+        cluster.ingest_batch(&events[..1000]).unwrap();
+        let m = cluster.metrics().unwrap();
+        assert_eq!(m.ingested, 1000);
+        assert_eq!(m.processed, 1000, "no event lost across the crash");
+        assert_eq!(m.recoveries, 1, "exactly one worker died");
+        // The killed event itself was never applied pre-crash, so the
+        // replay is never empty.
+        assert!(m.replayed_events >= 1, "{}", m.replayed_events);
+        assert!(m.checkpoint_bytes > 0, "checkpoints flowed");
+        assert_eq!(m.workers.len(), 4, "replacement fills the slot");
+        cluster.ingest_batch(&events[1000..]).unwrap();
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, 2000);
+        assert_eq!(report.recoveries, 1);
+        assert!(report.recovery_pause_ns > 0);
+        let total: u64 =
+            report.workers.iter().map(|w| w.processed).sum();
+        assert_eq!(total, 2000, "restored counters + replay cover all");
+    }
+
+    #[test]
+    fn crash_channel_counters_never_regress() {
+        // Satellite guarantee: the dead worker's ChannelStats fold into
+        // the base via `absorb`, so transport totals stay monotone
+        // across a recovery.
+        let events = small_events(1500);
+        let mut c = cfg(2);
+        c.fault_checkpoint_interval = 64;
+        c.fault_chaos_kill_seq = Some(900);
+        let mut cluster = Cluster::spawn(&c).unwrap();
+        cluster.ingest_batch(&events[..800]).unwrap();
+        let m1 = cluster.metrics().unwrap();
+        assert_eq!(m1.recoveries, 0);
+        cluster.ingest_batch(&events[800..]).unwrap();
+        let m2 = cluster.metrics().unwrap();
+        assert_eq!(m2.recoveries, 1);
+        assert!(
+            m2.recv_blocked_ns >= m1.recv_blocked_ns,
+            "recv wait must not regress: {} -> {}",
+            m1.recv_blocked_ns,
+            m2.recv_blocked_ns
+        );
+        assert!(m2.backpressure_ns >= m1.backpressure_ns);
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, 1500);
+    }
+
+    #[test]
+    fn crash_during_final_drain_is_recovered() {
+        // The kill seq is the very last event: the worker dies while
+        // draining after finish() closed the inputs, so the panic
+        // surfaces at join — and the replacement still reports.
+        let events = small_events(1200);
+        let mut c = cfg(2);
+        c.fault_checkpoint_interval = 16;
+        c.fault_chaos_kill_seq = Some(1199);
+        let mut cluster = Cluster::spawn(&c).unwrap();
+        cluster.ingest_batch(&events).unwrap();
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, 1200);
+        assert_eq!(report.recoveries, 1);
+        let total: u64 =
+            report.workers.iter().map(|w| w.processed).sum();
+        assert_eq!(total, 1200);
+    }
+
+    #[test]
+    fn crash_without_fault_tolerance_is_loud() {
+        // Default config: no checkpoints, no replay log — a worker death
+        // is an unrecoverable, explicit session error (the old contract).
+        let events = small_events(1000);
+        let mut c = cfg(2);
+        c.fault_chaos_kill_seq = Some(300);
+        let mut cluster = Cluster::spawn(&c).unwrap();
+        let ingested = cluster.ingest_batch(&events);
+        let finished = cluster.finish();
+        let err = match (ingested, finished) {
+            (Err(e), _) => e,
+            (Ok(()), Err(e)) => e,
+            (Ok(()), Ok(_)) => panic!("a killed worker must surface"),
+        };
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("chaos") || msg.contains("died"),
+            "root cause surfaced: {msg}"
+        );
+    }
+
+    #[test]
+    fn replay_log_exhaustion_fails_loudly_not_silently() {
+        // A replay log too small to cover the checkpoint gap must turn
+        // recovery into an explicit error — never a silent event loss.
+        let events = small_events(1200);
+        let mut c = cfg(1);
+        c.fault_checkpoint_interval = 100_000; // effectively: first-event checkpoints only
+        c.fault_replay_log_capacity = 8;
+        c.fault_chaos_kill_seq = Some(1000);
+        let mut cluster = Cluster::spawn(&c).unwrap();
+        let ingested = cluster.ingest_batch(&events);
+        let finished = match ingested {
+            Err(e) => Err(e),
+            Ok(()) => cluster.finish().map(|_| ()),
+        };
+        let err = finished.expect_err("recovery must refuse to lose events");
+        assert!(
+            format!("{err:#}").contains("replay log"),
+            "actionable error: {err:#}"
+        );
     }
 }

@@ -1,13 +1,15 @@
 //! The paper's system contribution: the splitting & replication router
 //! (Algorithm 1), the long-lived [`Cluster`] session that drives
 //! shared-nothing streaming recommenders (Figures 1-2), serves online
-//! queries over the user replicas, and rescales live via lane migration
-//! on the virtual [`StateGrid`], and the one-shot [`run_pipeline`]
-//! compatibility wrapper.
+//! queries over the user replicas, rescales live via lane migration
+//! on the virtual [`StateGrid`], and survives worker crashes via the
+//! supervisor's checkpoint/replay recovery — plus the one-shot
+//! [`run_pipeline`] compatibility wrapper.
 
 pub mod cluster;
 pub mod pipeline;
 pub mod router;
+pub(crate) mod supervisor;
 
 pub use cluster::{Cluster, ClusterMetrics, RescaleReport, WorkerSnapshot};
 pub use pipeline::run_pipeline;

@@ -1,0 +1,843 @@
+//! The worker supervisor: spawn/respawn, liveness, checkpoints, and
+//! exactly-once crash recovery.
+//!
+//! The [`Cluster`](crate::coordinator::Cluster) owns the *session* —
+//! routing, buffering, the public API. This module owns the *workers*:
+//! it spawns each generation's [`WorkerActor`]s, detects crashes (a
+//! failed channel send, a [`WorkerHandle::is_finished`] liveness scan,
+//! or a panic surfacing at join), and brings a crashed worker back so
+//! the session never notices.
+//!
+//! # The recovery contract
+//!
+//! With `fault.checkpoint_interval > 0` the supervisor maintains, on the
+//! coordinator side:
+//!
+//! * a **checkpoint store** — the latest lane frame of every lane,
+//!   pushed by workers over a dedicated channel (non-blocking on the
+//!   worker side, drained here on every flush), each stamped with the
+//!   lane's high-watermark `seq`;
+//! * a **bounded replay log** — the last `fault.replay_log_capacity`
+//!   accepted envelopes, in global order. An envelope may be evicted
+//!   once a checkpoint covers it; evicting an *uncovered* envelope is
+//!   remembered per lane, and a recovery that would need it fails loudly
+//!   instead of silently losing an event.
+//!
+//! Recovery of a dead worker slot is then: reap (fold its channel
+//! counters into the retained base so transport totals never regress,
+//! join the thread, log the panic) → respawn (a fresh actor with chaos
+//! disarmed) → restore (send every owned lane's latest checkpoint as an
+//! `Import` that also restores the lane's counters) → replay (walk the
+//! log once, re-sending each owned lane's suffix past its checkpoint
+//! watermark). FIFO ordering puts imports before replay and replay
+//! before any future event, and the per-lane watermark filters both
+//! here and in the actor, so every event is applied **exactly once** —
+//! a recovered session's hits, recall curve, and answers are
+//! byte-identical to a never-crashed run
+//! (`tests/fault_tolerance.rs`).
+//!
+//! With fault tolerance disabled (the default), a worker death is what
+//! it always was: a loud, unrecoverable session error.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{RunConfig, Topology};
+use crate::coordinator::router::{Router, StateGrid};
+use crate::engine::actor::{
+    lane_frame_watermark, zero_lane_frame_counters, ChaosPolicy,
+    CheckpointMsg, CollectorMsg, Envelope, WorkerActor, WorkerExport,
+    WorkerMsg,
+};
+use crate::engine::{bounded, spawn, ChannelStats, Receiver, Sender, WorkerHandle};
+use crate::eval::WorkerReport;
+
+/// Cumulative fault-tolerance counters, surfaced in `ClusterMetrics` and
+/// `RunReport`.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct FaultStats {
+    /// Completed crash recoveries.
+    pub(crate) recoveries: u64,
+    /// Total serialized lane-frame bytes received as checkpoints.
+    pub(crate) checkpoint_bytes: u64,
+    /// Envelopes re-sent from the replay log by recoveries.
+    pub(crate) replayed_events: u64,
+    /// Total ns spent inside recovery (reap + respawn + restore +
+    /// replay) — the fault-tolerance analog of `rescale_pause_ns`.
+    pub(crate) recovery_pause_ns: u64,
+}
+
+/// One physical worker slot of the current generation. `tx`/`handle`
+/// become `None` only while the slot is being reaped or at shutdown.
+struct WorkerSlot {
+    /// Session-unique worker id (keeps counting across generations and
+    /// recoveries).
+    ord: usize,
+    tx: Option<Sender<WorkerMsg>>,
+    handle: Option<WorkerHandle<Result<WorkerReport>>>,
+    /// Root cause captured when this slot's worker was reaped. The slot
+    /// keeps it only while unrecovered (fault tolerance off), so a later
+    /// `finish` can still surface *why* the session is dead even though
+    /// the join already consumed the panic.
+    cause: Option<String>,
+    /// Consecutive recoveries of this slot within [`RESPAWN_WINDOW`]
+    /// (carried into the replacement slot). A deterministic failure —
+    /// one the restored worker re-hits on replay — would otherwise turn
+    /// the ingest path into a silent infinite crash/recover loop; the
+    /// probe paths are already bounded by their retry counts.
+    respawns: u32,
+    /// When this slot was last respawned by a recovery.
+    last_respawn: Option<Instant>,
+}
+
+/// Consecutive same-slot recoveries tolerated within [`RESPAWN_WINDOW`]
+/// before the supervisor gives up loudly.
+const RESPAWN_LIMIT: u32 = 8;
+
+/// Rolling window for [`RESPAWN_LIMIT`]: respawns further apart than
+/// this are treated as independent incidents, not a crash loop.
+const RESPAWN_WINDOW: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// Latest checkpoint of one lane.
+struct Checkpoint {
+    /// High-watermark seq the frame covers (`None` = frame predates any
+    /// event; replay starts from zero).
+    watermark: Option<u64>,
+    /// The encoded lane frame.
+    bytes: Vec<u8>,
+}
+
+/// Bounded ring of the most recently accepted envelopes.
+struct ReplayLog {
+    buf: VecDeque<Envelope>,
+    capacity: usize,
+}
+
+impl ReplayLog {
+    fn new(capacity: usize) -> Self {
+        Self { buf: VecDeque::new(), capacity: capacity.max(1) }
+    }
+
+    /// Append; returns the envelope evicted to make room, if any.
+    fn push(&mut self, env: Envelope) -> Option<Envelope> {
+        let evicted = if self.buf.len() >= self.capacity {
+            self.buf.pop_front()
+        } else {
+            None
+        };
+        self.buf.push_back(env);
+        evicted
+    }
+}
+
+/// Spawns, watches, checkpoints, and recovers the worker plane.
+pub(crate) struct Supervisor {
+    /// Configuration echo; the topology field tracks rescales.
+    cfg: RunConfig,
+    grid: StateGrid,
+    /// Master collector sender cloned into every spawned actor; dropped
+    /// at shutdown so the collector sees end-of-stream.
+    col_tx: Option<Sender<CollectorMsg>>,
+    /// Checkpoint channel: cloned into actors, drained here.
+    ckpt_tx: Sender<CheckpointMsg>,
+    ckpt_rx: Receiver<CheckpointMsg>,
+    slots: Vec<WorkerSlot>,
+    /// lane → latest checkpoint.
+    store: BTreeMap<u64, Checkpoint>,
+    replay: ReplayLog,
+    /// Per lane: newest ingested seq + 1 (0 = the lane has no events).
+    /// Sized `n_lanes` when fault tolerance is enabled, empty otherwise.
+    lane_last: Vec<u64>,
+    /// lane → newest replay-log eviction not covered by any checkpoint.
+    /// A recovery whose replay floor is at or below this seq would lose
+    /// events and fails loudly instead.
+    lost: BTreeMap<u64, u64>,
+    /// Armed chaos policy for freshly spawned generations; disarmed for
+    /// good by the first recovery (the kill fired).
+    chaos: ChaosPolicy,
+    next_ord: usize,
+    /// Channel counters of dead/retired channels, folded in so totals
+    /// never regress (`ChannelStats::absorb`).
+    chan_base: ChannelStats,
+    stats: FaultStats,
+}
+
+impl Supervisor {
+    /// Supervisor for a fresh session. Spawn the first generation with
+    /// [`Supervisor::spawn_generation`].
+    pub(crate) fn new(
+        cfg: &RunConfig,
+        grid: StateGrid,
+        col_tx: Sender<CollectorMsg>,
+    ) -> Self {
+        let enabled = cfg.fault_checkpoint_interval > 0;
+        let (ckpt_tx, ckpt_rx) =
+            bounded::<CheckpointMsg>(grid.n_lanes() as usize + 64);
+        Self {
+            cfg: cfg.clone(),
+            grid,
+            col_tx: Some(col_tx),
+            ckpt_tx,
+            ckpt_rx,
+            slots: Vec::new(),
+            store: BTreeMap::new(),
+            replay: ReplayLog::new(cfg.fault_replay_log_capacity),
+            lane_last: vec![0; if enabled { grid.n_lanes() as usize } else { 0 }],
+            lost: BTreeMap::new(),
+            chaos: ChaosPolicy::from_config(cfg),
+            next_ord: 0,
+            chan_base: ChannelStats::default(),
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// Is checkpoint/replay fault tolerance on (`fault.checkpoint_interval
+    /// > 0`)?
+    pub(crate) fn enabled(&self) -> bool {
+        self.cfg.fault_checkpoint_interval > 0
+    }
+
+    /// Cumulative fault-tolerance counters.
+    pub(crate) fn stats(&self) -> FaultStats {
+        self.stats
+    }
+
+    /// Track a rescale's topology change (respawned actors inherit it).
+    pub(crate) fn set_topology(&mut self, t: Topology) {
+        self.cfg.topology = t;
+    }
+
+    /// Workers in the current generation.
+    pub(crate) fn n_workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Spawn a fresh generation of `n_c` workers (the previous one must
+    /// have been retired).
+    pub(crate) fn spawn_generation(&mut self, n_c: usize) {
+        debug_assert!(self.slots.is_empty(), "previous generation not retired");
+        let chaos = self.chaos;
+        let mut slots = Vec::with_capacity(n_c);
+        for _ in 0..n_c {
+            slots.push(self.spawn_slot(chaos));
+        }
+        self.slots = slots;
+    }
+
+    fn spawn_slot(&mut self, chaos: ChaosPolicy) -> WorkerSlot {
+        let ord = self.next_ord;
+        self.next_ord += 1;
+        let (tx, rx) = bounded::<WorkerMsg>(self.cfg.channel_capacity);
+        let col_tx = self
+            .col_tx
+            .as_ref()
+            .expect("spawn after shutdown")
+            .clone();
+        let ckpt_tx = if self.enabled() {
+            Some(self.ckpt_tx.clone())
+        } else {
+            None
+        };
+        let actor = WorkerActor::new(
+            ord,
+            self.cfg.clone(),
+            self.grid,
+            rx,
+            col_tx,
+            ckpt_tx,
+            chaos,
+        );
+        let handle = spawn(ord, "worker", move || actor.run());
+        WorkerSlot {
+            ord,
+            tx: Some(tx),
+            handle: Some(handle),
+            cause: None,
+            respawns: 0,
+            last_respawn: None,
+        }
+    }
+
+    /// Bookkeep one accepted envelope (fault-tolerant sessions only):
+    /// remember the lane's newest seq and append to the replay log,
+    /// tracking any eviction that no checkpoint covers.
+    pub(crate) fn record_ingest(&mut self, env: Envelope, lane: u64) {
+        self.lane_last[lane as usize] = env.seq + 1;
+        if let Some(evicted) = self.replay.push(env) {
+            let elane =
+                self.grid.lane(evicted.rating.user, evicted.rating.item);
+            let covered = self
+                .store
+                .get(&elane)
+                .and_then(|c| c.watermark)
+                .is_some_and(|w| evicted.seq <= w);
+            if !covered {
+                self.lost.insert(elane, evicted.seq);
+            }
+        }
+    }
+
+    /// Absorb every checkpoint queued by the workers (non-blocking).
+    pub(crate) fn drain_checkpoints(&mut self) {
+        let mut buf: Vec<CheckpointMsg> = Vec::new();
+        if self.ckpt_rx.try_drain(&mut buf) == 0 {
+            return;
+        }
+        for msg in buf {
+            self.stats.checkpoint_bytes += msg.bytes.len() as u64;
+            let watermark = lane_frame_watermark(&msg.bytes);
+            log::trace!(
+                "checkpoint: lane {} from worker {} ({} bytes, watermark {:?})",
+                msg.lane,
+                msg.ord,
+                msg.bytes.len(),
+                watermark,
+            );
+            self.store_checkpoint(msg.lane, watermark, msg.bytes);
+        }
+    }
+
+    /// Adopt a frame as a lane's checkpoint — monotone in the watermark:
+    /// a stale frame (e.g. one a retiring generation queued before its
+    /// export, drained after the rescale installed fresher zero-counter
+    /// frames) must never overwrite a newer snapshot of the lane, or a
+    /// later recovery would restore pre-baseline counters and replay an
+    /// already-covered prefix.
+    fn store_checkpoint(
+        &mut self,
+        lane: u64,
+        watermark: Option<u64>,
+        bytes: Vec<u8>,
+    ) {
+        if let Some(existing) = self.store.get(&lane) {
+            // Option ordering: None < Some(_), so a watermark-less frame
+            // never replaces a real one.
+            if watermark < existing.watermark {
+                return;
+            }
+        }
+        if let Some(w) = watermark {
+            // The lane is covered again up to `w`: forget older
+            // uncovered evictions.
+            if self.lost.get(&lane).is_some_and(|&s| s <= w) {
+                self.lost.remove(&lane);
+            }
+        }
+        self.store.insert(lane, Checkpoint { watermark, bytes });
+    }
+
+    /// Bulk-send one worker's route buffer; a dead worker is recovered
+    /// (when enabled) and the dropped batch is covered by the replay —
+    /// the buffered envelopes were accepted, so they are in the log with
+    /// seqs past every checkpoint watermark.
+    pub(crate) fn send_event_batch(
+        &mut self,
+        wid: usize,
+        buf: &mut Vec<WorkerMsg>,
+        router: &Router,
+    ) -> Result<()> {
+        if buf.is_empty() {
+            return Ok(());
+        }
+        if self.enabled() {
+            self.drain_checkpoints();
+        }
+        let sent = match &self.slots[wid].tx {
+            Some(tx) => tx.send_many(buf).is_ok(),
+            None => false,
+        };
+        if sent {
+            return Ok(());
+        }
+        // `send_many` drains the caller's buffer even on failure; make
+        // that true for the closed-slot arm too, then recover.
+        buf.clear();
+        self.recover(wid, router)
+    }
+
+    /// Send a probe (`Query`/`MetricsSnapshot`), recovering a dead worker
+    /// once and re-sending. Fault-tolerant sessions only.
+    pub(crate) fn send_probe(
+        &mut self,
+        wid: usize,
+        msg: WorkerMsg,
+        router: &Router,
+    ) -> Result<()> {
+        let msg = match &self.slots[wid].tx {
+            Some(tx) => match tx.send(msg) {
+                Ok(()) => return Ok(()),
+                Err(e) => e.0,
+            },
+            None => msg,
+        };
+        self.recover(wid, router)?;
+        let sent = self
+            .slots[wid]
+            .tx
+            .as_ref()
+            .is_some_and(|tx| tx.send(msg).is_ok());
+        if !sent {
+            bail!("worker {wid} died again immediately after recovery");
+        }
+        Ok(())
+    }
+
+    /// Fire-and-forget send; `false` if the worker is gone (the old,
+    /// non-recovering behavior — used when fault tolerance is off, and
+    /// for rescale imports to freshly spawned workers).
+    pub(crate) fn probe(&self, wid: usize, msg: WorkerMsg) -> bool {
+        self.slots[wid]
+            .tx
+            .as_ref()
+            .is_some_and(|tx| tx.send(msg).is_ok())
+    }
+
+    /// Liveness scan: recover every worker whose thread has exited.
+    /// Returns how many were recovered. Call only with empty route
+    /// buffers (probes/flushes do that) — recovery replays from the log,
+    /// so a still-buffered envelope would be delivered twice.
+    pub(crate) fn heal(&mut self, router: &Router) -> Result<u64> {
+        let mut recovered = 0u64;
+        for wid in 0..self.slots.len() {
+            let dead = match (&self.slots[wid].tx, &self.slots[wid].handle) {
+                (Some(_), Some(h)) => h.is_finished(),
+                _ => true,
+            };
+            if dead {
+                self.recover(wid, router)?;
+                recovered += 1;
+            }
+        }
+        Ok(recovered)
+    }
+
+    /// Reap a dead worker and bring its slot back: fold channel
+    /// counters, join (logging the panic), respawn, restore from
+    /// checkpoints, replay the suffix.
+    fn recover(&mut self, wid: usize, router: &Router) -> Result<()> {
+        if let Some(tx) = self.slots[wid].tx.take() {
+            // Satellite guarantee: a crashed generation's transport
+            // counters survive into metrics/finish via the absorb path.
+            self.chan_base.absorb(&tx.metrics());
+        }
+        let ord = self.slots[wid].ord;
+        let cause = match self.slots[wid].handle.take() {
+            Some(h) => match h.join() {
+                Err(panic) => panic.to_string(),
+                Ok(Err(e)) => format!("worker error: {e}"),
+                Ok(Ok(_)) => {
+                    // A clean exit needs every sender gone — impossible
+                    // while this supervisor holds one. Drop the report:
+                    // the replacement re-owns the lanes and their
+                    // checkpointed counters.
+                    log::error!(
+                        "worker {ord} exited cleanly mid-session (bug?)"
+                    );
+                    "exited cleanly mid-session".to_string()
+                }
+            },
+            None => "already reaped".to_string(),
+        };
+        log::warn!("supervisor: worker {ord} (slot {wid}) is down — {cause}");
+        self.slots[wid].cause = Some(cause.clone());
+        if !self.enabled() {
+            bail!(
+                "worker {ord} died mid-stream ({cause}); fault tolerance is \
+                 disabled (set fault.checkpoint_interval > 0 to enable \
+                 checkpoint/replay recovery)"
+            );
+        }
+        self.respawn_restore(wid, router)
+    }
+
+    /// Respawn a slot and rebuild its lanes: latest checkpoint of every
+    /// owned lane (counters restored), then the watermark-filtered
+    /// suffix from the replay log.
+    fn respawn_restore(&mut self, wid: usize, router: &Router) -> Result<()> {
+        // Both callers gate on the knob before dispatching here (recover
+        // bails with the panic cause, finish_join re-raises the panic).
+        debug_assert!(self.enabled(), "respawn_restore with fault tolerance off");
+        let t0 = Instant::now();
+        // Absorb everything queued — including the dead worker's final
+        // checkpoints (queued messages survive a dropped sender).
+        self.drain_checkpoints();
+
+        // Plan the restore *before* touching the slot: per owned lane,
+        // check replay availability, stage the checkpoint to import, and
+        // compute the replay floor (first seq the checkpoint does not
+        // cover). If the replay log cannot cover a lane, bail while the
+        // slot still holds the dead worker — every later session
+        // operation then keeps failing loudly, instead of an innocent-
+        // looking empty replacement silently losing model state.
+        let grid = self.grid;
+        let mut imports: Vec<(u64, Vec<u8>)> = Vec::new();
+        let mut floors: BTreeMap<u64, u64> = BTreeMap::new();
+        for lane in 0..grid.n_lanes() {
+            if grid.owner(lane, router) != wid {
+                continue;
+            }
+            let last = self.lane_last.get(lane as usize).copied().unwrap_or(0);
+            let ckpt = self.store.get(&lane);
+            if last == 0 && ckpt.is_none() {
+                continue; // the lane never existed
+            }
+            let start = ckpt.and_then(|c| c.watermark).map_or(0, |w| w + 1);
+            if let Some(&lost) = self.lost.get(&lane) {
+                if start <= lost {
+                    bail!(
+                        "recovery impossible: the replay log (capacity {}) \
+                         evicted event {lost} of lane {lane}, which no \
+                         checkpoint covers — raise fault.replay_log_capacity \
+                         or lower fault.checkpoint_interval",
+                        self.replay.capacity
+                    );
+                }
+            }
+            if let Some(c) = ckpt {
+                imports.push((lane, c.bytes.clone()));
+            }
+            if last > start {
+                floors.insert(lane, start);
+            }
+        }
+
+        // Crash-loop guard: a failure the restored worker deterministically
+        // re-hits on replay (a real model bug, a poisoned input) would
+        // otherwise crash/recover forever with only warnings as evidence.
+        let now = Instant::now();
+        let recent = self.slots[wid]
+            .last_respawn
+            .is_some_and(|t| now.duration_since(t) < RESPAWN_WINDOW);
+        let respawns =
+            if recent { self.slots[wid].respawns + 1 } else { 1 };
+        if respawns > RESPAWN_LIMIT {
+            bail!(
+                "worker slot {wid} died {respawns} times within {:?} — the \
+                 failure recurs after restore + replay, so it is not \
+                 recoverable by respawning (likely a deterministic bug)",
+                RESPAWN_WINDOW
+            );
+        }
+
+        // The injected kill (if any) has fired; never arm a replacement,
+        // or the replayed suffix would re-trigger it.
+        self.chaos = ChaosPolicy::none();
+        let mut slot = self.spawn_slot(ChaosPolicy::none());
+        slot.respawns = respawns;
+        slot.last_respawn = Some(now);
+        self.slots[wid] = slot;
+
+        // Restore phase: install the staged checkpoints (counters
+        // restored — the crashed worker's report is gone, the replacement
+        // re-owns them).
+        let restored = imports.len() as u64;
+        let mut restored_bytes = 0u64;
+        for (lane, bytes) in imports {
+            restored_bytes += bytes.len() as u64;
+            let msg = WorkerMsg::Import { lane, bytes, restore_counters: true };
+            let sent = self.slots[wid]
+                .tx
+                .as_ref()
+                .is_some_and(|tx| tx.send(msg).is_ok());
+            if !sent {
+                bail!("replacement worker {wid} died during restore");
+            }
+        }
+
+        // Replay phase: one pass over the log in global order, re-sending
+        // each owned lane's suffix. FIFO puts all of it behind the
+        // imports and ahead of any future event.
+        let mut replayed = 0u64;
+        for env in self.replay.buf.iter() {
+            let lane = grid.lane(env.rating.user, env.rating.item);
+            let floor = match floors.get(&lane) {
+                Some(&f) => f,
+                None => continue,
+            };
+            if env.seq < floor {
+                continue;
+            }
+            let sent = self.slots[wid]
+                .tx
+                .as_ref()
+                .is_some_and(|tx| tx.send(WorkerMsg::Event(*env)).is_ok());
+            if !sent {
+                bail!("replacement worker {wid} died during replay");
+            }
+            replayed += 1;
+        }
+        let pause_ns = t0.elapsed().as_nanos() as u64;
+        self.stats.recoveries += 1;
+        self.stats.replayed_events += replayed;
+        self.stats.recovery_pause_ns += pause_ns;
+        log::info!(
+            "supervisor: slot {wid} recovered as worker {} — {restored} \
+             lanes restored ({restored_bytes} bytes), {replayed} events \
+             replayed in {:.2} ms",
+            self.slots[wid].ord,
+            pause_ns as f64 / 1e6,
+        );
+        Ok(())
+    }
+
+    /// Fan an `Export` out to every worker and gather all replies,
+    /// recovering workers that die before or during the drain — the
+    /// rescale's first half, made crash-proof. Every returned export
+    /// covers the complete accepted prefix of the stream.
+    pub(crate) fn export_all(
+        &mut self,
+        router: &Router,
+    ) -> Result<Vec<WorkerExport>> {
+        let n = self.slots.len();
+        let mut exports: Vec<Option<WorkerExport>> = Vec::new();
+        exports.resize_with(n, || None);
+        let mut pending: Vec<usize> = (0..n).collect();
+        let mut rounds = 0usize;
+        while !pending.is_empty() {
+            rounds += 1;
+            if rounds > n + 2 {
+                bail!("rescale: workers keep dying during the export drain");
+            }
+            let (reply_tx, reply_rx) =
+                bounded::<WorkerExport>(pending.len().max(1));
+            for &wid in &pending {
+                let msg = WorkerMsg::Export { reply: reply_tx.clone() };
+                if !self.probe(wid, msg) {
+                    if !self.enabled() {
+                        bail!("rescale: worker {wid} already dead");
+                    }
+                    self.recover(wid, router)?;
+                    let msg = WorkerMsg::Export { reply: reply_tx.clone() };
+                    if !self.probe(wid, msg) {
+                        bail!(
+                            "rescale: worker {wid} died again after recovery"
+                        );
+                    }
+                }
+            }
+            drop(reply_tx);
+            let answers = reply_rx.recv_n(pending.len());
+            for ex in answers {
+                let wid = self
+                    .slots
+                    .iter()
+                    .position(|s| s.ord == ex.ord)
+                    .ok_or_else(|| {
+                        anyhow!("export from unknown worker {}", ex.ord)
+                    })?;
+                exports[wid] = Some(ex);
+            }
+            pending.retain(|&wid| exports[wid].is_none());
+            if !pending.is_empty() {
+                // Died mid-drain, after events but before the export
+                // reply. Recover (restore + replay rebuilds the same
+                // prefix) and ask again next round.
+                if !self.enabled() {
+                    bail!(
+                        "rescale: {} of {n} workers died mid-drain",
+                        pending.len()
+                    );
+                }
+                for &wid in &pending {
+                    self.recover(wid, router)?;
+                }
+            }
+        }
+        Ok(exports.into_iter().flatten().collect())
+    }
+
+    /// Adopt a rescale's exports as the lanes' current checkpoints, with
+    /// counters zeroed to match the importing generation's fresh
+    /// baselines (the retiring generation keeps its totals in its
+    /// retired reports). Keeps recovery exact across the cutover without
+    /// waiting for the new workers' first periodic checkpoints.
+    pub(crate) fn install_rescale_checkpoints(
+        &mut self,
+        exports: &[WorkerExport],
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        // First absorb everything the retiring generation queued during
+        // its export drain — every one of its `try_send`s happened before
+        // its `Export` reply, so after `export_all` returns the channel
+        // holds the old generation's complete checkpoint tail. Draining
+        // now (before the zero-counter installs below, and before the new
+        // generation exists) guarantees no stale old-baseline frame can
+        // land on top of a fresh one later.
+        self.drain_checkpoints();
+        for export in exports {
+            for snap in &export.lanes {
+                // Deliberate copy: the new owner imports the original
+                // frame (counters intact but ignored), while the store
+                // needs the zero-counter variant — two necessarily
+                // distinct buffers, alive together only for the already
+                // stop-the-world cutover.
+                let mut bytes = snap.bytes.clone();
+                zero_lane_frame_counters(&mut bytes);
+                let watermark = lane_frame_watermark(&bytes);
+                self.store_checkpoint(snap.lane, watermark, bytes);
+            }
+        }
+    }
+
+    /// Retire the current generation after its exports are in hand: fold
+    /// channel counters into the base, close every input, join every
+    /// worker, and return their final reports.
+    pub(crate) fn retire_generation(&mut self) -> Result<Vec<WorkerReport>> {
+        self.chan_base = self.channel_stats();
+        let slots = std::mem::take(&mut self.slots);
+        let mut reports = Vec::with_capacity(slots.len());
+        for mut slot in slots {
+            drop(slot.tx.take());
+            let handle = slot.handle.take().expect("slot joined twice");
+            reports.push(handle.join()??);
+        }
+        Ok(reports)
+    }
+
+    /// Shutdown path: close every input and join, recovering (and then
+    /// draining) any worker that panics during its final drain so its
+    /// lanes' events still land in exactly one report.
+    pub(crate) fn finish_join(
+        &mut self,
+        router: &Router,
+    ) -> Result<Vec<WorkerReport>> {
+        let mut reports = Vec::with_capacity(self.slots.len());
+        for wid in 0..self.slots.len() {
+            let mut attempts = 0;
+            loop {
+                if let Some(tx) = self.slots[wid].tx.take() {
+                    // Fold the channel's counters before closing it, so
+                    // the final report's transport totals include every
+                    // channel — including replacements spawned by a
+                    // final-drain recovery, whose traffic would otherwise
+                    // vanish with the dropped sender.
+                    self.chan_base.absorb(&tx.metrics());
+                }
+                let handle = match self.slots[wid].handle.take() {
+                    Some(h) => h,
+                    // Already reaped: an earlier unrecovered crash (fault
+                    // tolerance off) consumed the handle; re-surface the
+                    // root cause captured at reap time — the flush that
+                    // detected the death may have had its error merely
+                    // logged by the caller.
+                    None => {
+                        let cause = self.slots[wid]
+                            .cause
+                            .clone()
+                            .unwrap_or_else(|| "cause unknown".to_string());
+                        bail!(
+                            "worker slot {wid} crashed earlier ({cause}) and \
+                             could not be recovered (fault tolerance is \
+                             disabled)"
+                        );
+                    }
+                };
+                match handle.join() {
+                    Ok(result) => {
+                        reports.push(result?);
+                        break;
+                    }
+                    Err(panic) => {
+                        if !self.enabled() {
+                            // The old contract: surface the panic itself.
+                            return Err(panic);
+                        }
+                        attempts += 1;
+                        if attempts > 2 {
+                            return Err(panic.context(format!(
+                                "worker slot {wid} keeps dying in the final \
+                                 drain"
+                            )));
+                        }
+                        log::warn!(
+                            "finish: {panic}; recovering worker slot {wid}"
+                        );
+                        self.respawn_restore(wid, router)?;
+                    }
+                }
+            }
+        }
+        self.slots.clear();
+        Ok(reports)
+    }
+
+    /// Aggregate channel counters: dead/retired channels' totals plus
+    /// the live per-worker data channels.
+    pub(crate) fn channel_stats(&self) -> ChannelStats {
+        let mut total = self.chan_base;
+        for slot in &self.slots {
+            if let Some(tx) = &slot.tx {
+                total.absorb(&tx.metrics());
+            }
+        }
+        total
+    }
+
+    /// Drop the supervisor's collector sender so the collector can see
+    /// end-of-stream once the cluster's master clone goes too.
+    pub(crate) fn close_collector(&mut self) {
+        self.col_tx = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::types::Rating;
+
+    fn env(seq: u64, user: u64, item: u64) -> Envelope {
+        Envelope { seq, rating: Rating::new(user, item, 5.0, seq) }
+    }
+
+    #[test]
+    fn replay_log_ring_evicts_in_fifo_order() {
+        let mut log = ReplayLog::new(3);
+        assert!(log.push(env(0, 1, 1)).is_none());
+        assert!(log.push(env(1, 1, 1)).is_none());
+        assert!(log.push(env(2, 1, 1)).is_none());
+        let evicted = log.push(env(3, 1, 1)).expect("over capacity");
+        assert_eq!(evicted.seq, 0);
+        assert_eq!(log.buf.front().unwrap().seq, 1);
+        assert_eq!(log.buf.back().unwrap().seq, 3);
+    }
+
+    #[test]
+    fn uncovered_evictions_are_remembered_and_cleared() {
+        let cfg = RunConfig {
+            fault_checkpoint_interval: 8,
+            fault_replay_log_capacity: 2,
+            ..RunConfig::default()
+        };
+        let grid = StateGrid::for_config(&cfg).unwrap(); // 1x1: lane 0
+        let (col_tx, _col_rx) = bounded::<CollectorMsg>(4);
+        let mut sup = Supervisor::new(&cfg, grid, col_tx);
+        sup.record_ingest(env(0, 1, 1), 0);
+        sup.record_ingest(env(1, 1, 1), 0);
+        assert!(sup.lost.is_empty(), "nothing evicted yet");
+        sup.record_ingest(env(2, 1, 1), 0);
+        assert_eq!(sup.lost.get(&0), Some(&0), "seq 0 evicted uncovered");
+        sup.record_ingest(env(3, 1, 1), 0);
+        assert_eq!(sup.lost.get(&0), Some(&1), "newest uncovered wins");
+        assert_eq!(sup.lane_last[0], 4);
+        // A checkpoint at/above the uncovered seq clears the lane.
+        sup.store_checkpoint(0, Some(1), Vec::new());
+        assert_eq!(sup.lost.get(&0), None, "watermark 1 covers seq 1");
+        sup.record_ingest(env(4, 1, 1), 0);
+        // seq 2 was evicted; watermark 1 < 2, uncovered again.
+        assert_eq!(sup.lost.get(&0), Some(&2));
+        sup.store_checkpoint(0, Some(3), Vec::new());
+        assert_eq!(sup.lost.get(&0), None, "watermark 3 covers seq 2");
+        sup.record_ingest(env(5, 1, 1), 0);
+        // seq 3 evicted, covered by watermark 3: nothing is recorded.
+        assert_eq!(sup.lost.get(&0), None);
+        // Monotonicity: a stale frame never replaces a fresher snapshot.
+        sup.store_checkpoint(0, Some(2), vec![9]);
+        assert_eq!(sup.store.get(&0).unwrap().watermark, Some(3));
+        assert!(sup.store.get(&0).unwrap().bytes.is_empty());
+    }
+}

@@ -1,0 +1,777 @@
+//! The supervised worker actor — the engine-side half of the worker
+//! plane.
+//!
+//! Historically the worker loop lived inside `coordinator/cluster.rs`;
+//! this module extracts it into a real runtime layer: a [`WorkerActor`]
+//! owns the inbound event FIFO, the control-message protocol
+//! ([`WorkerMsg`]), and the per-lane models it hosts, and the
+//! coordinator-side [`Supervisor`](crate::coordinator::supervisor) owns
+//! spawning, liveness, checkpoints, and crash recovery.
+//!
+//! # Lanes
+//!
+//! Model state is partitioned on the fixed virtual
+//! [`StateGrid`](crate::coordinator::router::StateGrid) into *lanes* —
+//! one independent model per virtual grid cell. The actor hosts the
+//! group of lanes the current topology assigns to its worker. Each
+//! [`Lane`] carries everything that must be placement-independent:
+//!
+//! * the model itself (built lazily on first touch, seeded by *lane* id
+//!   so its RNG stream is identical wherever it is hosted),
+//! * its [`ForgetClock`] — the forgetting *trigger* is per-lane, so a
+//!   lane's sweep cadence is a function of its own event stream alone
+//!   (this is what makes sweeps survive rescales and recoveries), and
+//! * its counters and high-watermark `seq` (the last event applied).
+//!
+//! # Checkpoints and the lane frame
+//!
+//! With fault tolerance enabled (`fault.checkpoint_interval > 0`) the
+//! actor periodically serializes each lane into a *lane frame* — a
+//! fixed-size header (watermark, counters, clock state) followed by the
+//! model's [`export_partition`](crate::algorithms::StreamingRecommender)
+//! bytes — and hands it to the supervisor over a dedicated channel. The
+//! send is non-blocking (`try_send`): a full channel defers the
+//! checkpoint to the next event instead of ever stalling the learning
+//! loop (or deadlocking against coordinator backpressure). The same
+//! frame format is what `Export`/`Import` move during a rescale, so one
+//! serialization path serves both migration and recovery.
+//!
+//! # Chaos
+//!
+//! [`ChaosPolicy`] injects a deterministic panic — before processing a
+//! chosen global sequence number, or during the first checkpoint attempt
+//! at/after it — so fault-tolerance tests can kill any worker at any
+//! stream position reproducibly. A disarmed policy costs one `Option`
+//! compare per event.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::algorithms::{build_model, StreamingRecommender};
+use crate::config::RunConfig;
+use crate::coordinator::router::StateGrid;
+use crate::data::types::{ItemId, Rating, StateSizes, UserId};
+use crate::engine::{Receiver, Sender};
+use crate::eval::{HitSample, Prequential, WorkerReport};
+use crate::state::ForgetClock;
+use crate::util::histogram::Histogram;
+use crate::util::wire::{WireError, WireReader, WireWriter};
+
+/// Event envelope: global sequence number + the rating.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Envelope {
+    /// Global stream sequence number (assigned at ingest).
+    pub(crate) seq: u64,
+    /// The stream element.
+    pub(crate) rating: Rating,
+}
+
+/// One serialized lane: the virtual-cell id plus its lane frame
+/// (watermark + counters + clock + model partition).
+pub(crate) struct LaneSnapshot {
+    /// Virtual grid cell id.
+    pub(crate) lane: u64,
+    /// Encoded lane frame (see the module docs).
+    pub(crate) bytes: Vec<u8>,
+}
+
+/// A retiring worker's reply to `Export`: every lane it hosted.
+pub(crate) struct WorkerExport {
+    /// Session-unique id of the worker that answered (the supervisor
+    /// maps it back to a slot when collecting a fan-out of exports).
+    pub(crate) ord: usize,
+    /// One snapshot per hosted lane.
+    pub(crate) lanes: Vec<LaneSnapshot>,
+}
+
+/// A periodic lane checkpoint, worker → supervisor.
+pub(crate) struct CheckpointMsg {
+    /// Worker that took the checkpoint (logging only).
+    pub(crate) ord: usize,
+    /// Virtual grid cell the frame snapshots.
+    pub(crate) lane: u64,
+    /// Encoded lane frame.
+    pub(crate) bytes: Vec<u8>,
+}
+
+/// Everything a worker can be asked to do (the control-plane protocol).
+pub(crate) enum WorkerMsg {
+    /// One stream event (the learning loop).
+    Event(Envelope),
+    /// Online recommendation query (the serving loop). Answered from the
+    /// local lane models over `reply` via the frozen
+    /// [`serve`](crate::algorithms::StreamingRecommender::serve) read:
+    /// never trains them and never moves serialized state (bounded-
+    /// staleness caches are served as-is), so query timing cannot
+    /// perturb the event timeline that crash recovery replays.
+    Query {
+        /// User to recommend for.
+        user: UserId,
+        /// Per-lane list length to return.
+        n: usize,
+        /// Reply channel back to the coordinator.
+        reply: Sender<ReplicaAnswer>,
+    },
+    /// Live counter snapshot over `reply`; never blocks the stream for
+    /// longer than one reply-channel send.
+    MetricsSnapshot {
+        /// Reply channel back to the coordinator.
+        reply: Sender<WorkerSnapshot>,
+    },
+    /// Terminal migration probe: serialize every hosted lane, send the
+    /// snapshots over `reply`, then drain out and report. Queued behind
+    /// all prior events (FIFO), so the snapshot covers the full accepted
+    /// prefix of the stream.
+    Export {
+        /// Reply channel back to the coordinator.
+        reply: Sender<WorkerExport>,
+    },
+    /// Install a lane frame produced by `Export` (rescale) or by a
+    /// checkpoint (crash recovery). Always queued ahead of any
+    /// subsequent event on the same FIFO, so the state is in place
+    /// before new learning touches the lane.
+    Import {
+        /// Virtual grid cell to install.
+        lane: u64,
+        /// Encoded lane frame.
+        bytes: Vec<u8>,
+        /// `true` on the recovery path: the frame's counters become the
+        /// lane's counters (the crashed worker's report is gone, so the
+        /// replacement must re-own them). `false` on the rescale path:
+        /// the retiring worker keeps its totals in its retired report,
+        /// and the importing worker counts from zero.
+        restore_counters: bool,
+    },
+}
+
+/// One replica's answer to a query: the ranked local top-N of every lane
+/// of the user's grid column hosted here, plus the union of the user's
+/// locally-rated items. Reply arrival order is irrelevant:
+/// [`merge_topn`](crate::eval::merge_topn)'s key (best rank, votes, item
+/// id) is order-independent, as is the union of the rated sets — and the
+/// *lists themselves* are per-lane, so the merged result does not depend
+/// on how lanes are currently placed on workers (the rescale-equivalence
+/// guarantee).
+pub(crate) struct ReplicaAnswer {
+    /// Ranked local top-N per hosted lane of the user's column (local
+    /// rated items already excluded; empty lists elided).
+    pub(crate) lists: Vec<Vec<ItemId>>,
+    /// Items this user has rated on this replica, for global exclusion.
+    pub(crate) rated: Vec<ItemId>,
+}
+
+/// Message from workers to the collector.
+pub(crate) enum CollectorMsg {
+    /// A batch of prequential outcomes.
+    Hits(Vec<HitSample>),
+    /// Worker finished draining (reports travel via thread join).
+    Done {
+        /// Session-unique id of the drained worker.
+        worker_id: usize,
+    },
+}
+
+/// Live per-worker counters — a moment-in-time view of what
+/// [`WorkerReport`] reports at shutdown.
+#[derive(Debug, Clone)]
+pub struct WorkerSnapshot {
+    /// Session-unique worker id (ids keep counting across rescale
+    /// generations and crash recoveries, so retired, crashed, and live
+    /// workers never collide).
+    pub worker_id: usize,
+    /// Events processed so far (summed over hosted lanes; a worker
+    /// respawned by crash recovery resumes its lanes' checkpointed
+    /// counters, so the aggregate never regresses).
+    pub processed: u64,
+    /// Prequential hits so far.
+    pub hits: u64,
+    /// Serving queries answered so far. A serving-traffic diagnostic,
+    /// not an exactly-once counter: it is not checkpointed (a crash
+    /// loses the dead worker's tally), and a recovery retry re-asks the
+    /// surviving replicas of an in-flight fan-out (so it can also count
+    /// a little high around a crash).
+    pub queries: u64,
+    /// Lane models currently hosted (1 per worker in the default
+    /// grid-equals-topology configuration).
+    pub lanes: u64,
+    /// Current state-entry counts (summed over hosted lanes).
+    pub state: StateSizes,
+}
+
+/// Deterministic fault injection: panic a worker at an exact stream
+/// position. Exactly one worker processes any given global sequence
+/// number, so "kill at seq S" kills exactly one worker, reproducibly,
+/// wherever the routing places S.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ChaosPolicy {
+    /// Panic before applying the event with this global seq.
+    kill_at_seq: Option<u64>,
+    /// Defer the panic to the first checkpoint attempt at/after the kill
+    /// seq (the "kill during checkpoint" torture: the half-taken
+    /// checkpoint must never reach the supervisor).
+    in_checkpoint: bool,
+}
+
+impl ChaosPolicy {
+    /// No injected faults (the production policy, and what respawned
+    /// workers get — a fired kill never re-fires on replay).
+    pub(crate) fn none() -> Self {
+        Self { kill_at_seq: None, in_checkpoint: false }
+    }
+
+    /// Policy from the `[fault]` chaos knobs.
+    pub(crate) fn from_config(cfg: &RunConfig) -> Self {
+        Self {
+            kill_at_seq: cfg.fault_chaos_kill_seq,
+            in_checkpoint: cfg.fault_chaos_kill_in_checkpoint,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The lane frame: watermark + counters + clock + model partition.
+// ---------------------------------------------------------------------
+
+/// Lane frame format version.
+const LANE_FRAME_VERSION: u8 = 1;
+
+/// Fixed header size: version(1) + has_watermark(1) + watermark(8) +
+/// processed/hits/evicted/sweeps (4×8) + clock triple (3×8).
+pub(crate) const LANE_FRAME_HEADER: usize = 2 + 8 + 4 * 8 + 3 * 8;
+
+/// Byte range of the four baseline-relative counters inside the header
+/// (`processed`, `hits`, `evicted`, `sweeps`) — the supervisor zeroes
+/// this range when it converts a rescale export into a checkpoint, so a
+/// later recovery restores counters consistent with the importing
+/// generation's zero baseline.
+const LANE_FRAME_COUNTERS: std::ops::Range<usize> = 10..42;
+
+/// Decoded lane frame header + the nested model partition bytes.
+pub(crate) struct LaneFrame<'a> {
+    /// Global seq of the last event applied to the lane (`None` only for
+    /// a lane that was imported and never touched since).
+    pub(crate) watermark: Option<u64>,
+    /// Events applied since the lane's counter baseline.
+    pub(crate) processed: u64,
+    /// Prequential hits since the baseline.
+    pub(crate) hits: u64,
+    /// Entries evicted by forgetting sweeps since the baseline.
+    pub(crate) evicted: u64,
+    /// Forgetting sweeps run since the baseline.
+    pub(crate) sweeps: u64,
+    /// [`ForgetClock::state`] triple (lifetime, travels verbatim).
+    pub(crate) clock: (u64, u64, u64),
+    /// The model's `export_partition` bytes.
+    pub(crate) model: &'a [u8],
+}
+
+/// Encode one lane into its wire frame.
+fn encode_lane_frame(lane: &Lane) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u8(LANE_FRAME_VERSION);
+    w.u8(u8::from(lane.watermark.is_some()));
+    w.u64(lane.watermark.unwrap_or(0));
+    w.u64(lane.processed);
+    w.u64(lane.hits);
+    w.u64(lane.evicted);
+    w.u64(lane.sweeps);
+    let (ev, ts, sw) = lane.clock.state();
+    w.u64(ev);
+    w.u64(ts);
+    w.u64(sw);
+    w.bytes(&lane.model.export_partition(&|_| true));
+    w.into_bytes()
+}
+
+/// Decode a lane frame (bounds-checked; a truncated or version-skewed
+/// frame surfaces as an `Err`, never a panic).
+pub(crate) fn decode_lane_frame(bytes: &[u8]) -> Result<LaneFrame<'_>, WireError> {
+    let mut r = WireReader::new(bytes);
+    let version = r.u8()?;
+    if version != LANE_FRAME_VERSION {
+        return Err(WireError {
+            pos: 0,
+            msg: format!(
+                "lane frame version {version}, expected {LANE_FRAME_VERSION}"
+            ),
+        });
+    }
+    let has_watermark = r.u8()? != 0;
+    let watermark_raw = r.u64()?;
+    let processed = r.u64()?;
+    let hits = r.u64()?;
+    let evicted = r.u64()?;
+    let sweeps = r.u64()?;
+    let clock = (r.u64()?, r.u64()?, r.u64()?);
+    Ok(LaneFrame {
+        watermark: has_watermark.then_some(watermark_raw),
+        processed,
+        hits,
+        evicted,
+        sweeps,
+        clock,
+        model: r.rest(),
+    })
+}
+
+/// Peek a frame's watermark without decoding the model payload. `None`
+/// for malformed frames too — the caller then replays from scratch,
+/// which is safe (just slower).
+pub(crate) fn lane_frame_watermark(bytes: &[u8]) -> Option<u64> {
+    if bytes.len() < LANE_FRAME_HEADER || bytes[0] != LANE_FRAME_VERSION {
+        return None;
+    }
+    if bytes[1] == 0 {
+        return None;
+    }
+    let mut raw = [0u8; 8];
+    raw.copy_from_slice(&bytes[2..10]);
+    Some(u64::from_le_bytes(raw))
+}
+
+/// Zero the baseline-relative counters of an encoded frame in place (the
+/// rescale-export → checkpoint conversion). No-op on malformed frames.
+pub(crate) fn zero_lane_frame_counters(bytes: &mut [u8]) {
+    if bytes.len() >= LANE_FRAME_HEADER && bytes[0] == LANE_FRAME_VERSION {
+        bytes[LANE_FRAME_COUNTERS].fill(0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// The lane and the actor.
+// ---------------------------------------------------------------------
+
+/// One hosted lane: the model plus everything placement-independent
+/// that must travel with it.
+struct Lane {
+    model: Box<dyn StreamingRecommender>,
+    /// Per-lane forgetting trigger: advances only on this lane's events,
+    /// so the sweep cadence is identical wherever the lane is hosted.
+    clock: ForgetClock,
+    /// Events applied since the counter baseline (zero at lane build and
+    /// at a rescale import; restored verbatim by a recovery import).
+    processed: u64,
+    /// Prequential hits since the baseline.
+    hits: u64,
+    /// Entries evicted by sweeps since the baseline.
+    evicted: u64,
+    /// Sweeps run since the baseline.
+    sweeps: u64,
+    /// Global seq of the last event applied.
+    watermark: Option<u64>,
+    /// Events applied since the last checkpoint attempt that was either
+    /// accepted by the supervisor or deliberately deferred (full
+    /// channel); the next periodic checkpoint is due at
+    /// `fault.checkpoint_interval`.
+    since_ckpt: u64,
+    /// Whether any checkpoint (or import, which is one) covers the lane.
+    checkpointed: bool,
+}
+
+impl Lane {
+    fn new(cfg: &RunConfig, lane_id: u64) -> Result<Self> {
+        Ok(Self {
+            model: build_model(cfg, lane_id as usize)?,
+            clock: ForgetClock::new(cfg.forgetting),
+            processed: 0,
+            hits: 0,
+            evicted: 0,
+            sweeps: 0,
+            watermark: None,
+            since_ckpt: 0,
+            checkpointed: false,
+        })
+    }
+}
+
+/// A supervised worker: owns the event FIFO, the control messages, and
+/// the per-lane models of one physical worker. Constructed on the
+/// coordinator side, consumed by [`WorkerActor::run`] inside the worker
+/// thread (models and backends are built in-thread; PJRT handles are
+/// `!Send`).
+pub(crate) struct WorkerActor {
+    ord: usize,
+    cfg: RunConfig,
+    grid: StateGrid,
+    rx: Receiver<WorkerMsg>,
+    col_tx: Sender<CollectorMsg>,
+    /// `Some` iff fault tolerance is enabled; checkpoints flow here.
+    ckpt_tx: Option<Sender<CheckpointMsg>>,
+    chaos: ChaosPolicy,
+}
+
+impl WorkerActor {
+    /// Assemble an actor for one worker slot.
+    pub(crate) fn new(
+        ord: usize,
+        cfg: RunConfig,
+        grid: StateGrid,
+        rx: Receiver<WorkerMsg>,
+        col_tx: Sender<CollectorMsg>,
+        ckpt_tx: Option<Sender<CheckpointMsg>>,
+        chaos: ChaosPolicy,
+    ) -> Self {
+        Self { ord, cfg, grid, rx, col_tx, ckpt_tx, chaos }
+    }
+
+    /// The worker body: prequential learning loop + serving + snapshots
+    /// + checkpoints + migration over the hosted lanes.
+    ///
+    /// Drain-based: each wakeup moves *everything* queued into a local
+    /// inbox in one critical section ([`Receiver::recv_many`]), then
+    /// works through it in FIFO order — the train loop stays per-event
+    /// (prequential accounting is unchanged) but lock transitions and
+    /// condvar wakeups are amortized over the window. Queries and
+    /// snapshots sit at their FIFO position inside the drained window,
+    /// so they observe exactly the events ingested before them.
+    /// `Export` is terminal: reply, then drain out.
+    pub(crate) fn run(self) -> Result<WorkerReport> {
+        let WorkerActor { ord, cfg, grid, rx, col_tx, ckpt_tx, chaos } = self;
+        let ckpt_interval = cfg.fault_checkpoint_interval.max(1);
+        let mut lanes: BTreeMap<u64, Lane> = BTreeMap::new();
+        let mut preq = Prequential::new(cfg.top_n, cfg.recall_window);
+        let mut latency = Histogram::new();
+        let mut batch: Vec<HitSample> = Vec::with_capacity(256);
+        let mut inbox: Vec<WorkerMsg> =
+            Vec::with_capacity(cfg.ingest_batch_size.clamp(1, 4096));
+        let mut queries = 0u64;
+        let mut recommend_ns = 0u64;
+        let mut update_ns = 0u64;
+        let mut exported = false;
+        // Armed once the chaos kill seq passes in `in_checkpoint` mode;
+        // the next checkpoint attempt then panics mid-checkpoint.
+        let mut chaos_ckpt_armed = false;
+
+        'drain: while rx.recv_many(&mut inbox, usize::MAX) {
+            for msg in inbox.drain(..) {
+                match msg {
+                    WorkerMsg::Event(env) => {
+                        if chaos.kill_at_seq == Some(env.seq) {
+                            // The in-checkpoint variant needs a checkpoint
+                            // path to fire in; without fault tolerance
+                            // there are no checkpoints, so it degenerates
+                            // to the plain event kill instead of silently
+                            // never firing.
+                            if chaos.in_checkpoint && ckpt_tx.is_some() {
+                                chaos_ckpt_armed = true;
+                            } else {
+                                panic!(
+                                    "chaos: injected crash on worker {ord} \
+                                     before event seq {}",
+                                    env.seq
+                                );
+                            }
+                        }
+                        let lane_id =
+                            grid.lane(env.rating.user, env.rating.item);
+                        let lane = lane_entry(&mut lanes, &cfg, lane_id)?;
+                        // Watermark filter (exactly-once): an event at or
+                        // below the lane's high-water seq was already
+                        // applied before the snapshot this lane was
+                        // restored from — re-applying it would double-
+                        // train. The supervisor already filters its
+                        // replay, so this is a defensive second fence.
+                        if lane.watermark.is_some_and(|w| env.seq <= w) {
+                            continue;
+                        }
+                        let out = preq.step(lane.model.as_mut(), &env.rating);
+                        latency.record(out.recommend_ns + out.update_ns);
+                        recommend_ns += out.recommend_ns;
+                        update_ns += out.update_ns;
+                        lane.processed += 1;
+                        if out.hit {
+                            lane.hits += 1;
+                        }
+                        lane.watermark = Some(env.seq);
+                        lane.since_ckpt += 1;
+                        batch.push(HitSample { seq: env.seq, hit: out.hit });
+                        if batch.len() >= 256 {
+                            let full = std::mem::replace(
+                                &mut batch,
+                                Vec::with_capacity(256),
+                            );
+                            let _ = col_tx.send(CollectorMsg::Hits(full));
+                        }
+                        if let Some(kind) = lane.clock.on_event(env.rating.ts)
+                        {
+                            lane.sweeps += 1;
+                            lane.evicted += lane.model.sweep(kind);
+                        }
+                        // Periodic per-lane checkpoint: eagerly on the
+                        // lane's first event (a tiny frame buys replay-
+                        // from-checkpoint instead of replay-from-zero),
+                        // then every `fault.checkpoint_interval` events.
+                        if let Some(tx) = &ckpt_tx {
+                            if !lane.checkpointed
+                                || lane.since_ckpt >= ckpt_interval
+                            {
+                                let bytes = encode_lane_frame(lane);
+                                if chaos_ckpt_armed {
+                                    panic!(
+                                        "chaos: injected crash on worker \
+                                         {ord} during checkpoint of lane \
+                                         {lane_id}"
+                                    );
+                                }
+                                // The frame's watermark covers every
+                                // outcome evaluated so far on this worker;
+                                // hand the buffered hit samples to the
+                                // collector *before* the checkpoint can
+                                // land. Otherwise a crash right after the
+                                // handoff loses samples at or below the
+                                // watermark, which the replay (it starts
+                                // past the watermark) can never
+                                // regenerate.
+                                if !batch.is_empty() {
+                                    let full = std::mem::replace(
+                                        &mut batch,
+                                        Vec::with_capacity(256),
+                                    );
+                                    let _ =
+                                        col_tx.send(CollectorMsg::Hits(full));
+                                }
+                                // Never block the learning loop on a slow
+                                // supervisor: a full channel defers the
+                                // checkpoint to the next event.
+                                let msg = CheckpointMsg {
+                                    ord,
+                                    lane: lane_id,
+                                    bytes,
+                                };
+                                if tx.try_send(msg).is_ok() {
+                                    lane.since_ckpt = 0;
+                                    lane.checkpointed = true;
+                                } else if lane.checkpointed {
+                                    // Channel full. Re-encoding the whole
+                                    // model every event until the
+                                    // coordinator drains would be
+                                    // pathological; defer a full interval
+                                    // instead — the later frame covers
+                                    // strictly more anyway. (A lane with
+                                    // no checkpoint at all keeps retrying:
+                                    // its frame is still tiny and the
+                                    // eager first checkpoint is what caps
+                                    // replay-from-zero windows.)
+                                    lane.since_ckpt = 0;
+                                }
+                            }
+                        }
+                    }
+                    WorkerMsg::Query { user, n, reply } => {
+                        // Serving never trains the models and never moves
+                        // *visible* model state (`serve` is the frozen
+                        // read — see the StreamingRecommender trait docs):
+                        // query timing can therefore never perturb the
+                        // event-replay timeline crash recovery rebuilds
+                        // from. Every hosted lane of the user's grid
+                        // column answers with its own ranked list.
+                        queries += 1;
+                        let col = grid.user_col(user);
+                        let mut lists = Vec::new();
+                        let mut rated = Vec::new();
+                        for (lane_id, lane) in lanes.iter_mut() {
+                            if grid.lane_col(*lane_id) != col {
+                                continue;
+                            }
+                            let items = lane.model.serve(user, n);
+                            if !items.is_empty() {
+                                lists.push(items);
+                            }
+                            rated.extend(lane.model.rated_items(user));
+                        }
+                        let _ = reply.send(ReplicaAnswer { lists, rated });
+                    }
+                    WorkerMsg::MetricsSnapshot { reply } => {
+                        let _ = reply.send(WorkerSnapshot {
+                            worker_id: ord,
+                            processed: lanes
+                                .values()
+                                .map(|l| l.processed)
+                                .sum(),
+                            hits: lanes.values().map(|l| l.hits).sum(),
+                            queries,
+                            lanes: lanes.len() as u64,
+                            state: sum_state(&lanes),
+                        });
+                    }
+                    WorkerMsg::Import { lane, bytes, restore_counters } => {
+                        let slot = lane_entry(&mut lanes, &cfg, lane)?;
+                        let frame = decode_lane_frame(&bytes)?;
+                        slot.model.import_partition(frame.model)?;
+                        let (ev, ts, sw) = frame.clock;
+                        slot.clock.restore(ev, ts, sw);
+                        slot.watermark = frame.watermark;
+                        if restore_counters {
+                            slot.processed = frame.processed;
+                            slot.hits = frame.hits;
+                            slot.evicted = frame.evicted;
+                            slot.sweeps = frame.sweeps;
+                        }
+                        // The imported frame *is* a checkpoint of this
+                        // lane (the supervisor stores it), so the next
+                        // periodic one is an interval away.
+                        slot.since_ckpt = 0;
+                        slot.checkpointed = true;
+                    }
+                    WorkerMsg::Export { reply } => {
+                        // Terminal: everything ingested before this probe
+                        // has been processed (FIFO), so the snapshots cover
+                        // the complete accepted prefix. The coordinator
+                        // sends nothing after Export, so breaking out drops
+                        // no work.
+                        let out: Vec<LaneSnapshot> = lanes
+                            .iter()
+                            .map(|(id, lane)| LaneSnapshot {
+                                lane: *id,
+                                bytes: encode_lane_frame(lane),
+                            })
+                            .collect();
+                        exported = true;
+                        let _ = reply.send(WorkerExport { ord, lanes: out });
+                        break 'drain;
+                    }
+                }
+            }
+        }
+        if !batch.is_empty() {
+            let _ = col_tx.send(CollectorMsg::Hits(batch));
+        }
+        let report = WorkerReport {
+            worker_id: ord,
+            processed: lanes.values().map(|l| l.processed).sum(),
+            hits: lanes.values().map(|l| l.hits).sum(),
+            queries,
+            // An exported worker handed its state off; reporting it again
+            // would double-count entries that now live on the new workers.
+            state: if exported {
+                StateSizes::default()
+            } else {
+                sum_state(&lanes)
+            },
+            latency,
+            sweeps: lanes.values().map(|l| l.sweeps).sum(),
+            evicted: lanes.values().map(|l| l.evicted).sum(),
+            recommend_ns,
+            update_ns,
+        };
+        let _ = col_tx.send(CollectorMsg::Done { worker_id: ord });
+        Ok(report)
+    }
+}
+
+/// Fetch-or-build the lane hosting cell `id` (one map lookup via the
+/// entry API — shared by the event hot path and the import path so lane
+/// construction can never diverge between them).
+fn lane_entry<'a>(
+    lanes: &'a mut BTreeMap<u64, Lane>,
+    cfg: &RunConfig,
+    id: u64,
+) -> Result<&'a mut Lane> {
+    Ok(match lanes.entry(id) {
+        std::collections::btree_map::Entry::Vacant(v) => {
+            v.insert(Lane::new(cfg, id)?)
+        }
+        std::collections::btree_map::Entry::Occupied(o) => o.into_mut(),
+    })
+}
+
+/// Sum state-entry counts across a worker's hosted lanes.
+fn sum_state(lanes: &BTreeMap<u64, Lane>) -> StateSizes {
+    let mut total = StateSizes::default();
+    for lane in lanes.values() {
+        let s = lane.model.state_sizes();
+        total.users += s.users;
+        total.items += s.items;
+        total.aux += s.aux;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Forgetting;
+
+    fn test_lane() -> Lane {
+        let cfg = RunConfig {
+            forgetting: Forgetting::Lfu { trigger_events: 10, min_freq: 1 },
+            ..RunConfig::default()
+        };
+        let mut lane = Lane::new(&cfg, 3).unwrap();
+        lane.model.update(&Rating::new(1, 2, 5.0, 0));
+        lane.model.update(&Rating::new(4, 2, 4.0, 1));
+        lane.processed = 2;
+        lane.hits = 1;
+        lane.evicted = 7;
+        lane.sweeps = 2;
+        lane.watermark = Some(41);
+        lane.clock.restore(5, 100, 2);
+        lane
+    }
+
+    #[test]
+    fn lane_frame_round_trips_header_and_model() {
+        let lane = test_lane();
+        let bytes = encode_lane_frame(&lane);
+        assert!(bytes.len() > LANE_FRAME_HEADER, "model payload present");
+        let frame = decode_lane_frame(&bytes).unwrap();
+        assert_eq!(frame.watermark, Some(41));
+        assert_eq!(frame.processed, 2);
+        assert_eq!(frame.hits, 1);
+        assert_eq!(frame.evicted, 7);
+        assert_eq!(frame.sweeps, 2);
+        assert_eq!(frame.clock, (5, 100, 2));
+        assert_eq!(frame.model, &bytes[LANE_FRAME_HEADER..]);
+        assert_eq!(lane_frame_watermark(&bytes), Some(41));
+    }
+
+    #[test]
+    fn zero_counters_keeps_watermark_clock_and_model() {
+        let lane = test_lane();
+        let mut bytes = encode_lane_frame(&lane);
+        let model_before = bytes[LANE_FRAME_HEADER..].to_vec();
+        zero_lane_frame_counters(&mut bytes);
+        let frame = decode_lane_frame(&bytes).unwrap();
+        assert_eq!(frame.processed, 0);
+        assert_eq!(frame.hits, 0);
+        assert_eq!(frame.evicted, 0);
+        assert_eq!(frame.sweeps, 0);
+        assert_eq!(frame.watermark, Some(41), "watermark untouched");
+        assert_eq!(frame.clock, (5, 100, 2), "clock untouched");
+        assert_eq!(frame.model, &model_before[..], "model untouched");
+    }
+
+    #[test]
+    fn malformed_frames_error_cleanly() {
+        assert!(decode_lane_frame(&[]).is_err());
+        assert!(decode_lane_frame(&[9; 4]).is_err(), "bad version");
+        let lane = test_lane();
+        let bytes = encode_lane_frame(&lane);
+        assert!(decode_lane_frame(&bytes[..LANE_FRAME_HEADER - 1]).is_err());
+        assert_eq!(lane_frame_watermark(&bytes[..4]), None);
+        // Zeroing a malformed frame is a no-op, not a panic.
+        let mut short = bytes[..8].to_vec();
+        zero_lane_frame_counters(&mut short);
+        assert_eq!(&short[..], &bytes[..8]);
+    }
+
+    #[test]
+    fn header_constant_matches_encoder() {
+        // A lane with an empty model still encodes a full header; the
+        // constant is what the in-place patch helpers rely on.
+        let lane = test_lane();
+        let bytes = encode_lane_frame(&lane);
+        let model_len = lane.model.export_partition(&|_| true).len();
+        assert_eq!(bytes.len(), LANE_FRAME_HEADER + model_len);
+    }
+
+    #[test]
+    fn chaos_policy_defaults_off() {
+        let p = ChaosPolicy::from_config(&RunConfig::default());
+        assert_eq!(p.kill_at_seq, None);
+        assert!(!p.in_checkpoint);
+        let p = ChaosPolicy::none();
+        assert_eq!(p.kill_at_seq, None);
+    }
+}

@@ -1,10 +1,17 @@
 //! Shared-nothing mini stream engine: bounded channels with backpressure
-//! (the "network") and worker-thread harnesses (the "task slots"). This is
-//! the substrate the paper gets from Apache Flink 1.8.1, rebuilt from
-//! scratch (DESIGN.md §2, S1).
+//! (the "network"), worker-thread harnesses (the "task slots"), and the
+//! supervised worker actor that runs inside them (the worker loop, its
+//! control protocol, and per-lane checkpointing). This is the substrate
+//! the paper gets from Apache Flink 1.8.1, rebuilt from scratch
+//! (DESIGN.md §2, S1).
 
+// The actor module is crate-private runtime machinery (its protocol
+// types are pub(crate)); only the live-metrics snapshot type is public,
+// re-exported here and through `coordinator::cluster`.
+pub(crate) mod actor;
 pub mod channel;
 pub mod worker;
 
+pub use actor::WorkerSnapshot;
 pub use channel::{bounded, ChannelStats, Receiver, SendError, Sender};
 pub use worker::{spawn, WorkerHandle};

@@ -17,6 +17,13 @@ impl<R> WorkerHandle<R> {
         self.id
     }
 
+    /// True once the worker thread has exited — cleanly *or* by panic.
+    /// This is the supervisor's cheap liveness probe: it never blocks,
+    /// so a whole generation can be scanned between stream events.
+    pub fn is_finished(&self) -> bool {
+        self.handle.is_finished()
+    }
+
     /// Join, converting a worker panic into an error with the worker id.
     pub fn join(self) -> anyhow::Result<R> {
         self.handle.join().map_err(|p| {
@@ -54,6 +61,15 @@ mod tests {
         let h = spawn(3, "t", || 40 + 2);
         assert_eq!(h.id(), 3);
         assert_eq!(h.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn is_finished_tracks_thread_exit() {
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let h = spawn(1, "t", move || rx.recv().ok());
+        assert!(!h.is_finished(), "worker is parked on the channel");
+        tx.send(()).unwrap();
+        h.join().unwrap();
     }
 
     #[test]

@@ -16,6 +16,9 @@ pub struct WorkerReport {
     pub processed: u64,
     /// Prequential hits.
     pub hits: u64,
+    /// Serving queries answered by this worker (so a retired
+    /// generation's query traffic survives into the aggregates).
+    pub queries: u64,
     /// Final state-entry counts (zero for workers retired by a rescale:
     /// their state was exported to the next generation).
     pub state: StateSizes,
@@ -81,6 +84,18 @@ pub struct RunReport {
     pub migrated_bytes: u64,
     /// Total ns spent inside rescale cutovers (ingest/serving paused).
     pub rescale_pause_ns: u64,
+    /// Completed crash recoveries (0 unless `fault.checkpoint_interval`
+    /// was set and a worker actually died — a recovered session's hits,
+    /// recall curve, and answers are identical to a never-crashed run).
+    pub recoveries: u64,
+    /// Total serialized lane-frame bytes received as checkpoints.
+    pub checkpoint_bytes: u64,
+    /// Envelopes replayed from the coordinator's log by recoveries.
+    pub replayed_events: u64,
+    /// Total ns spent inside crash recoveries (respawn + restore +
+    /// replay) — the fault-tolerance analog of `rescale_pause_ns`,
+    /// measured by `benches/recovery.rs`.
+    pub recovery_pause_ns: u64,
 }
 
 impl RunReport {
@@ -148,6 +163,7 @@ mod tests {
             worker_id: id,
             processed: 10,
             hits: 2,
+            queries: 0,
             state: StateSizes { users, items, aux: 0 },
             latency: Histogram::new(),
             sweeps: 0,
@@ -177,6 +193,10 @@ mod tests {
             rescales: 0,
             migrated_bytes: 0,
             rescale_pause_ns: 0,
+            recoveries: 0,
+            checkpoint_bytes: 0,
+            replayed_events: 0,
+            recovery_pause_ns: 0,
         };
         assert!((r.mean_user_state() - 15.0).abs() < 1e-9);
         assert!((r.mean_item_state() - 5.0).abs() < 1e-9);

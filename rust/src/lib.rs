@@ -122,6 +122,25 @@
 //! spawn with `rescale.max_n_i` — the Flink "max parallelism" analog.
 //! See `ARCHITECTURE.md` for the full protocol and the trade-off.
 //!
+//! ## Fault tolerance
+//!
+//! Set `fault.checkpoint_interval` and a worker crash becomes invisible:
+//! workers checkpoint each model lane every N events (same wire framing
+//! as rescaling, stamped with the lane's high-watermark sequence
+//! number), the coordinator keeps a bounded replay log of recent
+//! envelopes, and the supervisor respawns a crashed worker, restores its
+//! lanes from the latest checkpoints, and replays the watermark-filtered
+//! suffix. Recovery is **exactly-once**: hits, recall curves, and
+//! recommendations of a crashed-and-recovered session are identical to
+//! a never-crashed one, for both algorithms, even mid-rescale
+//! (property-tested in `tests/fault_tolerance.rs`; recovery pause vs
+//! state size is measured by `benches/recovery.rs`, recorded in
+//! `BENCH_recovery.json`). The per-lane forgetting clocks travel inside
+//! the same lane frames, so sweep cadence also survives both rescale
+//! and recovery. With the default `fault.checkpoint_interval = 0`
+//! nothing is checkpointed and a worker death is a loud session error —
+//! the paper's original contract.
+//!
 //! ## Migrating from `run_pipeline`
 //!
 //! The historical one-shot entry point survives with identical signature

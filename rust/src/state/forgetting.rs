@@ -57,6 +57,28 @@ impl ForgetClock {
         self.sweeps
     }
 
+    /// Internal trigger state as `(events_since_sweep, last_sweep_ts,
+    /// sweeps)` — what has to travel in a lane snapshot for the
+    /// forgetting *cadence* to survive a migration or a crash recovery
+    /// (the policy itself is configuration and does not travel).
+    pub fn state(&self) -> (u64, u64, u64) {
+        (self.events_since_sweep, self.last_sweep_ts, self.sweeps)
+    }
+
+    /// Restore trigger state captured by [`ForgetClock::state`]. After a
+    /// restore the clock fires on exactly the event it would have fired
+    /// on had the lane never moved.
+    pub fn restore(
+        &mut self,
+        events_since_sweep: u64,
+        last_sweep_ts: u64,
+        sweeps: u64,
+    ) {
+        self.events_since_sweep = events_since_sweep;
+        self.last_sweep_ts = last_sweep_ts;
+        self.sweeps = sweeps;
+    }
+
     /// Advance by one processed event at event-time `now_ts`; returns the
     /// sweep to perform, if due.
     pub fn on_event(&mut self, now_ts: u64) -> Option<SweepKind> {
@@ -150,6 +172,26 @@ mod tests {
         assert_eq!(c.on_event(0), None);
         assert_eq!(c.on_event(1), Some(SweepKind::Decay { factor: 0.9 }));
         assert_eq!(c.sweeps(), 1);
+    }
+
+    #[test]
+    fn state_round_trip_preserves_cadence() {
+        // Two clocks, same policy: advance one to mid-cycle, copy its
+        // state into the other — both must fire on the same future event.
+        let policy = Forgetting::Lfu { trigger_events: 5, min_freq: 1 };
+        let mut a = ForgetClock::new(policy);
+        for ts in 0..3 {
+            assert_eq!(a.on_event(ts), None);
+        }
+        let (ev, ts, sw) = a.state();
+        assert_eq!((ev, ts, sw), (3, 0, 0));
+        let mut b = ForgetClock::new(policy);
+        b.restore(ev, ts, sw);
+        assert_eq!(b.on_event(3), None);
+        assert_eq!(b.on_event(4), Some(SweepKind::Lfu { min_freq: 1 }));
+        assert_eq!(a.on_event(3), None);
+        assert_eq!(a.on_event(4), Some(SweepKind::Lfu { min_freq: 1 }));
+        assert_eq!(a.state(), b.state());
     }
 
     #[test]

@@ -89,6 +89,13 @@ impl WireWriter {
             self.u64(v);
         }
     }
+
+    /// Append raw bytes verbatim (no length prefix) — used to nest an
+    /// already-framed payload (e.g. a model partition inside a lane
+    /// checkpoint frame) without re-encoding it.
+    pub fn bytes(&mut self, bs: &[u8]) {
+        self.buf.extend_from_slice(bs);
+    }
 }
 
 /// Bounds-checked decoder over an encoded byte slice.
@@ -173,6 +180,14 @@ impl<'a> WireReader<'a> {
         }
         Ok(out)
     }
+
+    /// Consume and return every remaining byte — the counterpart of
+    /// [`WireWriter::bytes`] for a nested trailing payload.
+    pub fn rest(&mut self) -> &'a [u8] {
+        let out = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        out
+    }
 }
 
 #[cfg(test)]
@@ -221,6 +236,19 @@ mod tests {
         let err = r.u64().unwrap_err();
         assert_eq!(err.pos, 0);
         assert!(err.to_string().contains("need 8 bytes"));
+    }
+
+    #[test]
+    fn raw_bytes_and_rest_round_trip() {
+        let mut w = WireWriter::new();
+        w.u32(7);
+        w.bytes(&[1, 2, 3, 4, 5]);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.rest(), &[1, 2, 3, 4, 5]);
+        assert!(r.is_done());
+        assert_eq!(r.rest(), &[] as &[u8], "rest after rest is empty");
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Crash-recovery correctness properties for the supervised worker
+//! runtime (`engine/actor.rs` + `coordinator/supervisor.rs`).
+//!
+//! The acceptance property, verified for ISGD and cosine, with and
+//! without a concurrent rescale: **kill any worker at any event index
+//! and the session is indistinguishable from one that never crashed** —
+//! zero event loss, byte-identical top-10 answers at every probe point,
+//! identical hit totals and recall curves. Plus torture cases: a kill
+//! *during* a checkpoint (the half-taken checkpoint must never be
+//! used), the loud-failure contract when fault tolerance is off, and
+//! the loud-failure contract when the replay log is too small to
+//! recover without loss.
+
+use streamrec::config::{Algorithm, RunConfig, Topology};
+use streamrec::coordinator::Cluster;
+use streamrec::data::synth::{SyntheticConfig, SyntheticStream};
+use streamrec::data::types::Rating;
+use streamrec::eval::RunReport;
+use streamrec::util::proptest::forall;
+
+fn events(n: u64, seed: u64) -> Vec<Rating> {
+    SyntheticStream::new(SyntheticConfig::netflix_like(n, seed)).collect()
+}
+
+/// Fault-tolerant config with a 4x4 state-grid ceiling (so the rescale
+/// variants can grow from n_i = 2 to 4).
+fn fault_cfg(algo: Algorithm, checkpoint_interval: u64) -> RunConfig {
+    RunConfig {
+        algorithm: algo,
+        topology: Topology::new(2, 0).unwrap(),
+        rescale_max_n_i: 4,
+        sample_every: 200,
+        fault_checkpoint_interval: checkpoint_interval,
+        ..RunConfig::default()
+    }
+}
+
+/// First `k` distinct users of a slice, in stream order.
+fn panel(evs: &[Rating], k: usize) -> Vec<u64> {
+    let mut users = Vec::new();
+    for e in evs {
+        if !users.contains(&e.user) {
+            users.push(e.user);
+            if users.len() == k {
+                break;
+            }
+        }
+    }
+    users
+}
+
+/// What one session run produces at the shared probe points.
+struct Outcome {
+    mid: Vec<Vec<u64>>,
+    end: Vec<Vec<u64>>,
+    report: RunReport,
+}
+
+/// Drive one full session: ingest the first half, probe the panel,
+/// optionally rescale to `rescale_to`, ingest the rest, probe again,
+/// finish. The chaos and baseline runs execute this identical sequence.
+fn run_session(
+    cfg: &RunConfig,
+    evs: &[Rating],
+    users: &[u64],
+    rescale_to: Option<u64>,
+) -> Outcome {
+    let mut cluster = Cluster::spawn_labeled(cfg, "t-fault").unwrap();
+    let split = evs.len() / 2;
+    cluster.ingest_batch(&evs[..split]).unwrap();
+    let mid: Vec<Vec<u64>> = users
+        .iter()
+        .map(|&u| cluster.recommend(u, 10).unwrap())
+        .collect();
+    if let Some(n_i) = rescale_to {
+        cluster.rescale(Topology::new(n_i, 0).unwrap()).unwrap();
+    }
+    cluster.ingest_batch(&evs[split..]).unwrap();
+    let end: Vec<Vec<u64>> = users
+        .iter()
+        .map(|&u| cluster.recommend(u, 10).unwrap())
+        .collect();
+    let report = cluster.finish().unwrap();
+    Outcome { mid, end, report }
+}
+
+/// Per-worker `processed` summed over live + retired generations.
+fn total_processed(report: &RunReport) -> u64 {
+    report
+        .workers
+        .iter()
+        .chain(report.retired.iter())
+        .map(|w| w.processed)
+        .sum()
+}
+
+fn assert_indistinguishable(base: &Outcome, chaos: &Outcome, label: &str) {
+    assert_eq!(base.mid, chaos.mid, "{label}: mid-stream answers");
+    assert_eq!(base.end, chaos.end, "{label}: end-of-stream answers");
+    assert_eq!(base.report.events, chaos.report.events, "{label}: events");
+    assert_eq!(base.report.hits, chaos.report.hits, "{label}: hit totals");
+    assert_eq!(
+        base.report.recall_curve, chaos.report.recall_curve,
+        "{label}: recall curves"
+    );
+    assert_eq!(
+        total_processed(&chaos.report),
+        chaos.report.events,
+        "{label}: zero event loss (restored counters + replay cover all)"
+    );
+    assert_eq!(base.report.recoveries, 0, "{label}: baseline never crashed");
+}
+
+#[test]
+fn property_kill_any_worker_at_any_event_is_invisible() {
+    // For random (algorithm, checkpoint interval, kill position,
+    // with/without a concurrent rescale): the crashed-and-recovered
+    // session must be indistinguishable from the never-crashed one.
+    let evs = events(1600, 21);
+    let users = panel(&evs, 5);
+    forall("fault_kill_anywhere", 6, |rng| {
+        let algo = if rng.next_bounded(2) == 0 {
+            Algorithm::Isgd
+        } else {
+            Algorithm::Cosine
+        };
+        let ckpt = 1 + rng.next_bounded(64);
+        let kill = rng.next_bounded(evs.len() as u64 - 50);
+        let rescale_to =
+            if rng.next_bounded(2) == 0 { Some(4u64) } else { None };
+        let label = format!(
+            "algo={algo:?} ckpt={ckpt} kill={kill} rescale={rescale_to:?}"
+        );
+
+        let base_cfg = fault_cfg(algo, ckpt);
+        let mut chaos_cfg = base_cfg.clone();
+        chaos_cfg.fault_chaos_kill_seq = Some(kill);
+
+        let base = run_session(&base_cfg, &evs, &users, rescale_to);
+        let chaos = run_session(&chaos_cfg, &evs, &users, rescale_to);
+
+        assert_eq!(
+            chaos.report.recoveries, 1,
+            "{label}: the kill fires exactly once"
+        );
+        assert!(
+            chaos.report.replayed_events >= 1,
+            "{label}: the killed event itself is always replayed"
+        );
+        assert!(chaos.report.checkpoint_bytes > 0, "{label}");
+        assert_indistinguishable(&base, &chaos, &label);
+    });
+}
+
+#[test]
+fn kill_during_checkpoint_is_recovered_exactly() {
+    // Torture case: the panic fires *inside* the checkpoint path, after
+    // the frame is built but before it reaches the supervisor. The
+    // half-taken checkpoint must be invisible — recovery falls back to
+    // the previous one plus a longer replay, and the session is still
+    // exactly-once.
+    let evs = events(1500, 9);
+    let users = panel(&evs, 4);
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let base_cfg = fault_cfg(algo, 8);
+        let mut chaos_cfg = base_cfg.clone();
+        chaos_cfg.fault_chaos_kill_seq = Some(600);
+        chaos_cfg.fault_chaos_kill_in_checkpoint = true;
+        let base = run_session(&base_cfg, &evs, &users, None);
+        let chaos = run_session(&chaos_cfg, &evs, &users, None);
+        assert_eq!(chaos.report.recoveries, 1, "{algo:?}");
+        assert_indistinguishable(&base, &chaos, &format!("{algo:?} in-ckpt"));
+    }
+}
+
+#[test]
+fn kill_during_checkpoint_with_concurrent_rescale() {
+    // The same torture case straddling a rescale cutover: the worker
+    // dies in the checkpoint path while a 2 -> 4 scale-out is part of
+    // the session. Export-drain recovery plus zeroed-counter rescale
+    // checkpoints must keep the accounting exact.
+    let evs = events(1400, 33);
+    let users = panel(&evs, 4);
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let base_cfg = fault_cfg(algo, 8);
+        let mut chaos_cfg = base_cfg.clone();
+        // The kill seq sits in the second half, after the cutover.
+        chaos_cfg.fault_chaos_kill_seq = Some(1000);
+        chaos_cfg.fault_chaos_kill_in_checkpoint = true;
+        let base = run_session(&base_cfg, &evs, &users, Some(4));
+        let chaos = run_session(&chaos_cfg, &evs, &users, Some(4));
+        assert_eq!(chaos.report.recoveries, 1, "{algo:?}");
+        assert_eq!(chaos.report.rescales, 1, "{algo:?}");
+        assert_indistinguishable(&base, &chaos, &format!("{algo:?} rescale"));
+    }
+}
+
+#[test]
+fn recovery_metrics_are_plumbed_end_to_end() {
+    // The observability contract of the tentpole: recoveries,
+    // checkpoint_bytes, replayed_events, recovery_pause_ns appear in
+    // both the live ClusterMetrics and the final RunReport.
+    let evs = events(1200, 5);
+    let mut cfg = fault_cfg(Algorithm::Isgd, 16);
+    cfg.fault_chaos_kill_seq = Some(500);
+    let mut cluster = Cluster::spawn_labeled(&cfg, "t-metrics").unwrap();
+    cluster.ingest_batch(&evs[..800]).unwrap();
+    let m = cluster.metrics().unwrap();
+    assert_eq!(m.ingested, 800);
+    assert_eq!(m.processed, 800, "read-your-writes across the recovery");
+    assert_eq!(m.recoveries, 1);
+    assert!(m.checkpoint_bytes > 0);
+    assert!(m.replayed_events >= 1);
+    assert!(m.recovery_pause_ns > 0);
+    cluster.ingest_batch(&evs[800..]).unwrap();
+    let report = cluster.finish().unwrap();
+    assert_eq!(report.recoveries, 1);
+    // The final figures can only have grown past the live snapshot.
+    assert!(report.checkpoint_bytes >= m.checkpoint_bytes);
+    assert!(report.replayed_events >= m.replayed_events);
+    assert!(report.recovery_pause_ns >= m.recovery_pause_ns);
+    assert_eq!(total_processed(&report), 1200);
+}
+
+#[test]
+fn disabled_fault_tolerance_keeps_the_loud_failure_contract() {
+    // fault.checkpoint_interval = 0 (the default): a worker death is an
+    // explicit session error with the panic cause in the chain — never a
+    // silent recovery, never silent loss.
+    let evs = events(900, 13);
+    let mut cfg = RunConfig {
+        topology: Topology::new(2, 0).unwrap(),
+        sample_every: 200,
+        ..RunConfig::default()
+    };
+    cfg.fault_chaos_kill_seq = Some(400);
+    let mut cluster = Cluster::spawn_labeled(&cfg, "t-loud").unwrap();
+    let ingested = cluster.ingest_batch(&evs);
+    let outcome = match ingested {
+        Err(e) => Err(e),
+        Ok(()) => cluster.finish().map(|_| ()),
+    };
+    let err = outcome.expect_err("a killed worker must surface");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("chaos") || msg.contains("died"),
+        "root cause must surface: {msg}"
+    );
+}
+
+#[test]
+fn exhausted_replay_log_refuses_to_lose_events() {
+    // A replay log smaller than the checkpoint gap cannot recover
+    // without losing events — the supervisor must say so explicitly.
+    let evs = events(1200, 3);
+    let mut cfg = RunConfig {
+        topology: Topology::new(1, 0).unwrap(),
+        sample_every: 200,
+        // Only the eager first-event checkpoints ever run, so by the
+        // kill point the log has long since evicted uncovered events.
+        fault_checkpoint_interval: 1_000_000,
+        fault_replay_log_capacity: 8,
+        ..RunConfig::default()
+    };
+    cfg.fault_chaos_kill_seq = Some(1000);
+    let mut cluster = Cluster::spawn_labeled(&cfg, "t-exhaust").unwrap();
+    let ingested = cluster.ingest_batch(&evs);
+    let outcome = match ingested {
+        Err(e) => Err(e),
+        Ok(()) => cluster.finish().map(|_| ()),
+    };
+    let err = outcome.expect_err("recovery must refuse to lose events");
+    assert!(
+        format!("{err:#}").contains("replay log"),
+        "actionable error: {err:#}"
+    );
+}

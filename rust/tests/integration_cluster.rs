@@ -171,28 +171,39 @@ fn session_report_matches_one_shot_wrapper() {
 #[test]
 fn serving_does_not_perturb_learning() {
     // Interleaving queries must not change what the models learn: the
-    // final report of a query-heavy session equals a silent one. This is
-    // an ISGD (default-config) guarantee — cosine's bounded-staleness
-    // mode rebuilds read caches on query, shifting rebuild timing.
+    // final report of a query-heavy session equals a silent one. This
+    // holds for *both* algorithms since the serving path became a frozen
+    // read (`StreamingRecommender::serve`): cosine's bounded-staleness
+    // caches are served as-is instead of being rebuilt on query, so
+    // query timing cannot shift the models' state evolution — which is
+    // also what lets crash recovery replay events alone (see
+    // tests/fault_tolerance.rs).
     let evs = events(3000, 7);
-    let silent = {
-        let mut c = Cluster::spawn(&base_cfg(2)).unwrap();
-        c.ingest_batch(&evs).unwrap();
-        c.finish().unwrap()
-    };
-    let noisy = {
-        let mut c = Cluster::spawn(&base_cfg(2)).unwrap();
-        for chunk in evs.chunks(250) {
-            c.ingest_batch(chunk).unwrap();
-            let _ = c.recommend(chunk[0].user, 10).unwrap();
-            let _ = c.metrics().unwrap();
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let mut cfg = base_cfg(2);
+        cfg.algorithm = algo;
+        let silent = {
+            let mut c = Cluster::spawn(&cfg).unwrap();
+            c.ingest_batch(&evs).unwrap();
+            c.finish().unwrap()
+        };
+        let noisy = {
+            let mut c = Cluster::spawn(&cfg).unwrap();
+            for chunk in evs.chunks(250) {
+                c.ingest_batch(chunk).unwrap();
+                let _ = c.recommend(chunk[0].user, 10).unwrap();
+                let _ = c.metrics().unwrap();
+            }
+            c.finish().unwrap()
+        };
+        assert_eq!(
+            silent.hits, noisy.hits,
+            "{algo:?}: queries must be read-only"
+        );
+        assert_eq!(silent.recall_curve, noisy.recall_curve, "{algo:?}");
+        for (a, b) in silent.workers.iter().zip(noisy.workers.iter()) {
+            assert_eq!(a.state, b.state, "{algo:?}");
         }
-        c.finish().unwrap()
-    };
-    assert_eq!(silent.hits, noisy.hits, "queries must be read-only");
-    assert_eq!(silent.recall_curve, noisy.recall_curve);
-    for (a, b) in silent.workers.iter().zip(noisy.workers.iter()) {
-        assert_eq!(a.state, b.state);
     }
 }
 

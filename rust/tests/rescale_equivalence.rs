@@ -9,12 +9,15 @@
 //!   immediately after a rescale equals the result immediately before,
 //!   and a session that rescales mid-stream produces the *same* hit
 //!   sequence, recall curve, and answers as one that never rescales
-//!   (lanes evolve identically wherever they are hosted).
+//!   (lanes evolve identically wherever they are hosted) — including
+//!   under live forgetting, whose per-lane trigger clocks travel inside
+//!   the lane wire frames.
 
-use streamrec::config::{Algorithm, RunConfig, Topology};
+use streamrec::config::{Algorithm, Forgetting, RunConfig, Topology};
 use streamrec::coordinator::Cluster;
 use streamrec::data::synth::{SyntheticConfig, SyntheticStream};
 use streamrec::data::types::Rating;
+use streamrec::eval::RunReport;
 use streamrec::util::proptest::forall;
 
 fn events(n: u64, seed: u64) -> Vec<Rating> {
@@ -203,6 +206,64 @@ fn round_trip_out_and_back_preserves_answers() {
             .map(|w| w.processed)
             .sum();
         assert_eq!(total, 2000);
+    }
+}
+
+#[test]
+fn forgetting_cadence_survives_rescale() {
+    // PR 3 documented a caveat: forgetting trigger clocks were
+    // worker-scoped and restarted at a cutover, so the equivalence
+    // properties were only stated for `forgetting.kind = "none"`. The
+    // clocks are per-lane now and travel inside the lane wire frames, so
+    // the strongest property holds *with live forgetting*: a session
+    // that rescales mid-stream has identical answers, hits, recall
+    // curve, and even sweep/eviction totals to one that never rescales.
+    let evs = events(3000, 41);
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let mut c = ceiling_cfg(algo, 2);
+        // Aggressive LFU so many sweeps fire on both sides of the
+        // cutover (~190 events per lane -> several sweeps per lane).
+        c.forgetting =
+            Forgetting::Lfu { trigger_events: 25, min_freq: 2 };
+        let users = panel(&evs, 5);
+        let run = |rescale: bool| {
+            let mut cluster =
+                Cluster::spawn_labeled(&c, "t-forget").unwrap();
+            cluster.ingest_batch(&evs[..1500]).unwrap();
+            if rescale {
+                cluster.rescale(Topology::new(4, 0).unwrap()).unwrap();
+            }
+            cluster.ingest_batch(&evs[1500..]).unwrap();
+            let answers: Vec<Vec<u64>> = users
+                .iter()
+                .map(|&u| cluster.recommend(u, 10).unwrap())
+                .collect();
+            let report = cluster.finish().unwrap();
+            (answers, report)
+        };
+        let (ans_a, rep_a) = run(false);
+        let (ans_b, rep_b) = run(true);
+        assert_eq!(ans_a, ans_b, "{algo:?}: answers with live forgetting");
+        assert_eq!(rep_a.hits, rep_b.hits, "{algo:?}: hit totals");
+        assert_eq!(
+            rep_a.recall_curve, rep_b.recall_curve,
+            "{algo:?}: recall curves"
+        );
+        let totals = |r: &RunReport| {
+            let all = || r.workers.iter().chain(r.retired.iter());
+            (
+                all().map(|w| w.sweeps).sum::<u64>(),
+                all().map(|w| w.evicted).sum::<u64>(),
+            )
+        };
+        assert_eq!(
+            totals(&rep_a),
+            totals(&rep_b),
+            "{algo:?}: sweep/eviction totals are placement-independent"
+        );
+        let (sweeps, evicted) = totals(&rep_b);
+        assert!(sweeps > 0, "{algo:?}: forgetting actually fired");
+        assert!(evicted > 0, "{algo:?}: sweeps actually evicted state");
     }
 }
 
