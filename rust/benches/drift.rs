@@ -1,0 +1,51 @@
+//! Drift-transformer overhead benchmark: the scenario engine wraps the
+//! synthetic generator on the ingest path of every drift experiment, so
+//! its per-event cost must stay a rounding error next to routing and
+//! model updates. Measures events/s for the bare generator and for each
+//! drift shape layered over it.
+
+use std::time::Duration;
+
+use streamrec::benchutil::{bench_batch, black_box};
+use streamrec::data::drift::{DriftConfig, DriftKind, DriftStream};
+use streamrec::data::synth::SyntheticConfig;
+
+fn main() {
+    const EVENTS: u64 = 100_000;
+    println!("== drift stream generation (per-event overhead) ==");
+    let shapes: [(&str, Option<DriftKind>); 7] = [
+        ("base (no drift)", None),
+        ("abrupt", Some(DriftKind::Abrupt { at: 0.5 })),
+        ("rotate", Some(DriftKind::Rotate { start: 0.25, end: 0.75 })),
+        (
+            "recurring",
+            Some(DriftKind::Recurring { period_events: 10_000 }),
+        ),
+        ("invert", Some(DriftKind::Invert { at: 0.5 })),
+        ("churn", Some(DriftKind::Churn { at: 0.5, fraction: 0.5 })),
+        (
+            "burst",
+            Some(DriftKind::Burst { at: 0.4, len: 0.2, factor: 8.0 }),
+        ),
+    ];
+    for (name, kind) in shapes {
+        bench_batch(
+            &format!("drift/{name}"),
+            EVENTS,
+            1,
+            3,
+            Duration::from_millis(600),
+            || {
+                let stream = DriftStream::new(
+                    SyntheticConfig::movielens_like(EVENTS, 42),
+                    DriftConfig { kind },
+                );
+                let mut n = 0u64;
+                for r in stream {
+                    n += black_box(r.item) & 1;
+                }
+                black_box(n);
+            },
+        );
+    }
+}

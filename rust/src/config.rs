@@ -438,6 +438,17 @@ impl TomlValue {
             other => Err(anyhow!("expected number, got {other:?}")),
         }
     }
+
+    /// The numeric value validated as a stream fraction in `[0, 1]` —
+    /// the schedule unit of the drift/scenario knobs (`drift.at`,
+    /// `rescale.at`, `fault.chaos_kill_at`, ...), or an error.
+    pub fn frac(&self) -> Result<f64> {
+        let v = self.num()?;
+        if !(0.0..=1.0).contains(&v) {
+            bail!("expected a stream fraction in [0, 1], got {v}");
+        }
+        Ok(v)
+    }
 }
 
 /// Parse the TOML subset into flat `section.key -> value` pairs.
@@ -620,6 +631,15 @@ mod tests {
             RunConfig::from_toml("[model]\ncosine_strict = true").unwrap();
         assert!(cfg.cosine_strict);
         assert!(RunConfig::from_toml("[model]\ncosine_strict = 1").is_err());
+    }
+
+    #[test]
+    fn frac_values_validate_range() {
+        assert!((TomlValue::Float(0.5).frac().unwrap() - 0.5).abs() < 1e-12);
+        assert!((TomlValue::Int(1).frac().unwrap() - 1.0).abs() < 1e-12);
+        assert!(TomlValue::Float(1.5).frac().is_err());
+        assert!(TomlValue::Float(-0.1).frac().is_err());
+        assert!(TomlValue::Str("x".into()).frac().is_err());
     }
 
     #[test]

@@ -134,7 +134,7 @@ use crate::coordinator::supervisor::Supervisor;
 use crate::data::types::{ItemId, Rating, UserId};
 use crate::engine::actor::{CollectorMsg, Envelope, WorkerMsg};
 use crate::engine::{bounded, spawn, Receiver, Sender, WorkerHandle};
-use crate::eval::{merge_topn, RunReport, WorkerReport};
+use crate::eval::{merge_topn, RunReport, WindowStat, WindowedRecall, WorkerReport};
 
 pub use crate::engine::actor::WorkerSnapshot;
 
@@ -196,6 +196,11 @@ pub struct ClusterMetrics {
     pub workers: Vec<WorkerSnapshot>,
 }
 
+/// What the collector thread returns at join: the sampled cumulative
+/// recall curve, the tumbling-window (time-local) recall series, and
+/// the total hit count.
+type CollectorOutput = (Vec<(u64, f64)>, Vec<WindowStat>, u64);
+
 /// Outcome of one [`Cluster::rescale`]: what moved and what it cost.
 #[derive(Debug, Clone)]
 pub struct RescaleReport {
@@ -238,7 +243,7 @@ pub struct Cluster {
     route_bufs: Vec<Vec<WorkerMsg>>,
     /// Flush threshold (`cfg.ingest_batch_size`, clamped to >= 1).
     batch_size: usize,
-    collector: Option<WorkerHandle<(Vec<(u64, f64)>, u64)>>,
+    collector: Option<WorkerHandle<CollectorOutput>>,
     /// Master clone handed to the supervisor (which clones it into each
     /// worker generation); dropped in [`Cluster::finish`] so the
     /// collector sees end-of-stream only after the last generation
@@ -710,7 +715,7 @@ impl Cluster {
         // workers are gone; the collector then sees end-of-stream.
         self.sup.close_collector();
         drop(self.col_tx.take());
-        let (recall_curve, hits) = self
+        let (recall_curve, windowed_recall, hits) = self
             .collector
             .take()
             .expect("collector joined twice")
@@ -729,6 +734,7 @@ impl Cluster {
             throughput: events as f64 / wall_secs.max(1e-9),
             avg_recall: hits as f64 / events.max(1) as f64,
             recall_curve,
+            windowed_recall,
             workers,
             retired,
             route_ns_per_event: self.route_ns as f64 / events.max(1) as f64,
@@ -757,11 +763,14 @@ impl Cluster {
 /// Replay is deterministic (same lane state ⇒ same outcome), so the
 /// first arrival stands and duplicates are dropped — `total_hits` and
 /// the curve are exactly those of a never-crashed run.
+///
+/// Returns the moving-average curve, the tumbling-window (time-local)
+/// recall series bucketed by global sequence number, and the hit total.
 fn collect(
     rx: Receiver<CollectorMsg>,
     window: usize,
     sample_every: u64,
-) -> (Vec<(u64, f64)>, u64) {
+) -> CollectorOutput {
     let mut bits: Vec<u8> = Vec::new();
     let mut seen: Vec<u8> = Vec::new();
     let mut n_events = 0u64;
@@ -794,8 +803,10 @@ fn collect(
         }
     }
     // Global moving-average curve (skipping unseen slots would hide lost
-    // events — they count as misses, which is the honest accounting).
+    // events — they count as misses, which is the honest accounting),
+    // plus the tumbling-window series over the same bits.
     let mut ma = crate::eval::MovingRecall::new(window.max(1));
+    let mut windowed = WindowedRecall::new(window.max(1) as u64);
     let mut curve = Vec::new();
     for seq in 0..n_events {
         let (byte, bit) = ((seq / 8) as usize, seq % 8);
@@ -803,12 +814,14 @@ fn collect(
             seen[byte] & (1 << bit) != 0,
             "event {seq} never evaluated"
         );
-        ma.push(bits[byte] & (1 << bit) != 0);
+        let hit = bits[byte] & (1 << bit) != 0;
+        ma.push(hit);
+        windowed.push(seq, hit);
         if seq % sample_every == 0 || seq + 1 == n_events {
             curve.push((seq, ma.value()));
         }
     }
-    (curve, total_hits)
+    (curve, windowed.into_stats(), total_hits)
 }
 
 #[cfg(test)]
@@ -848,6 +861,25 @@ mod tests {
         assert_eq!(report.events, 3000);
         assert_eq!(
             report.workers.iter().map(|w| w.processed).sum::<u64>(),
+            3000
+        );
+        // The windowed (time-local) series reconciles with the
+        // cumulative totals, and per-worker windows cover every event.
+        assert_eq!(
+            report.windowed_recall.iter().map(|w| w.hits).sum::<u64>(),
+            report.hits
+        );
+        assert_eq!(
+            report.windowed_recall.iter().map(|w| w.events).sum::<u64>(),
+            3000
+        );
+        assert_eq!(
+            report
+                .workers
+                .iter()
+                .flat_map(|w| &w.windows)
+                .map(|w| w.events)
+                .sum::<u64>(),
             3000
         );
     }

@@ -1,0 +1,622 @@
+//! Concept-drift scenario transformers (DESIGN note; paper §2 names
+//! concept drift as one of the three streaming-RS requirements, and the
+//! forgetting techniques of §5.2 exist to respond to it).
+//!
+//! The base [`SyntheticStream`] already carries mild background drift
+//! (popularity churn per epoch). This module layers *shaped, scheduled*
+//! drift on top, so experiments can ask pointed questions — "how fast
+//! does the model recover from an abrupt preference flip?", "does LRU
+//! forgetting track a user-churn wave?" — instead of hoping the
+//! background churn happens to exercise them.
+//!
+//! Every transformer is a deterministic, seedable function of the
+//! element's *popularity ranks* (the [`RawEvent`] seam): drift reshapes
+//! the preference distribution, which is the concept that drifts, while
+//! the id scrambling and routing stay untouched. Same seed ⇒ identical
+//! stream, property-tested in `tests/drift_scenarios.rs`.
+//!
+//! Shapes (`[drift]` TOML table; see docs/CONFIG.md):
+//!
+//! * **abrupt** — at `at`, the item popularity ranking rotates by half
+//!   the catalog in one step: yesterday's head is suddenly mid-tail.
+//!   The classic sudden-drift stressor (recall dips, then recovers).
+//! * **rotate** — the same rotation, but blended in gradually over
+//!   `[at, end)`: each event flips to the new preference order with a
+//!   probability that ramps 0 → 1. Gradual/incremental drift.
+//! * **recurring** — the ranking alternates between the two orders every
+//!   `period_events` events: seasonal drift, where an old concept
+//!   returns and a model that forgot everything must relearn it.
+//! * **invert** — at `at`, rank `r` becomes rank `items-1-r`: exact
+//!   popularity inversion (the head moves to the *tail*, not mid-list —
+//!   harsher than `abrupt` for popularity-following models).
+//! * **churn** — from `at` on, a fixed `fraction` of the user base is
+//!   replaced by brand-new user ids (stable per user, so the newcomers
+//!   recur and can be learned): a user-churn + cold-start wave.
+//! * **burst** — inter-arrival gaps divide by `factor` during
+//!   `[at, at+len)`: an arrival-rate burst. Ranks are untouched; this
+//!   stresses event-time machinery (LRU clocks) and throughput, not
+//!   accuracy.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::{parse_toml_subset, TomlValue};
+use crate::data::synth::{RawEvent, SyntheticConfig, SyntheticStream};
+use crate::data::types::Rating;
+use crate::util::rng::{mix64, Pcg32};
+
+/// One shaped drift scenario, scheduled on the stream position. Stream
+/// positions are *fractions* of the configured event budget, so the same
+/// scenario file scales from a CI smoke run to a full-length experiment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DriftKind {
+    /// One-step preference flip at fraction `at`: item ranks rotate by
+    /// half the catalog.
+    Abrupt {
+        /// Stream fraction the flip happens at.
+        at: f64,
+    },
+    /// Gradual interest rotation: between `start` and `end` each event
+    /// samples the new preference order with probability ramping 0 → 1;
+    /// after `end` the rotation is total.
+    Rotate {
+        /// Stream fraction the ramp begins at.
+        start: f64,
+        /// Stream fraction the ramp completes at.
+        end: f64,
+    },
+    /// Seasonal drift: the preference order alternates every
+    /// `period_events` events (phase 0 = original, phase 1 = rotated,
+    /// phase 2 = original again, ...).
+    Recurring {
+        /// Events per phase.
+        period_events: u64,
+    },
+    /// Exact popularity inversion at fraction `at`: rank `r` becomes
+    /// `items - 1 - r`.
+    Invert {
+        /// Stream fraction the inversion happens at.
+        at: f64,
+    },
+    /// User churn + cold-start wave: from `at` on, a deterministic
+    /// `fraction` of users are replaced by fresh ids (stable per user).
+    Churn {
+        /// Stream fraction the wave starts at.
+        at: f64,
+        /// Fraction of the user base that churns (0..=1).
+        fraction: f64,
+    },
+    /// Arrival-rate burst: gaps divide by `factor` inside
+    /// `[at, at + len)`.
+    Burst {
+        /// Stream fraction the burst starts at.
+        at: f64,
+        /// Burst length as a stream fraction.
+        len: f64,
+        /// Rate multiplier (gap divisor) during the burst.
+        factor: f64,
+    },
+}
+
+impl DriftKind {
+    /// Canonical scenario name used in labels, CSVs, and result files.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Abrupt { .. } => "abrupt",
+            Self::Rotate { .. } => "rotate",
+            Self::Recurring { .. } => "recurring",
+            Self::Invert { .. } => "invert",
+            Self::Churn { .. } => "churn",
+            Self::Burst { .. } => "burst",
+        }
+    }
+
+    /// First stream position at which the preference distribution
+    /// changes, given the stream's event budget — the point a windowed
+    /// recall curve is expected to react at.
+    pub fn drift_seq(&self, total_events: u64) -> u64 {
+        let frac = match self {
+            Self::Abrupt { at }
+            | Self::Invert { at }
+            | Self::Churn { at, .. }
+            | Self::Burst { at, .. } => *at,
+            Self::Rotate { start, .. } => *start,
+            Self::Recurring { period_events } => {
+                return (*period_events).min(total_events);
+            }
+        };
+        frac_seq(frac, total_events)
+    }
+}
+
+/// Stream fraction → absolute event index (the schedule conversion every
+/// drift shape and the scenario driver share).
+pub fn frac_seq(frac: f64, total: u64) -> u64 {
+    (frac.clamp(0.0, 1.0) * total as f64) as u64
+}
+
+/// Parsed `[drift]` configuration: at most one shaped scenario
+/// (`kind = "none"` or an absent table means pass-through).
+#[derive(Debug, Clone, Default)]
+pub struct DriftConfig {
+    /// The scheduled drift shape, if any.
+    pub kind: Option<DriftKind>,
+}
+
+impl DriftConfig {
+    /// Pass-through (no shaped drift).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Parse the `[drift]` table from TOML-subset text (other sections
+    /// are ignored, so a full scenario file can be handed over whole).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        Self::from_kv(&parse_toml_subset(text)?)
+    }
+
+    /// Parse from already-parsed `section.key -> value` pairs.
+    pub fn from_kv(kv: &BTreeMap<String, TomlValue>) -> Result<Self> {
+        let get = |k: &str| kv.get(k);
+        let num = |k: &str, default: f64| -> Result<f64> {
+            Ok(match get(k) {
+                Some(v) => v.num()?,
+                None => default,
+            })
+        };
+        let kind = match get("drift.kind").map(|v| v.str()).transpose()? {
+            None | Some("none") => None,
+            Some("abrupt") => {
+                Some(DriftKind::Abrupt { at: num("drift.at", 0.5)? })
+            }
+            Some("rotate") => {
+                let start = num("drift.at", 0.25)?;
+                Some(DriftKind::Rotate {
+                    start,
+                    end: num("drift.end", (start + 0.5).min(1.0))?,
+                })
+            }
+            Some("recurring") => Some(DriftKind::Recurring {
+                period_events: match get("drift.period_events") {
+                    Some(v) => v.int()?.max(1) as u64,
+                    None => 10_000,
+                },
+            }),
+            Some("invert") => {
+                Some(DriftKind::Invert { at: num("drift.at", 0.5)? })
+            }
+            Some("churn") => Some(DriftKind::Churn {
+                at: num("drift.at", 0.5)?,
+                fraction: num("drift.fraction", 0.5)?,
+            }),
+            Some("burst") => Some(DriftKind::Burst {
+                at: num("drift.at", 0.5)?,
+                len: num("drift.len", 0.1)?,
+                factor: num("drift.factor", 8.0)?,
+            }),
+            Some(other) => bail!(
+                "unknown drift kind '{other}' \
+                 (none|abrupt|rotate|recurring|invert|churn|burst)"
+            ),
+        };
+        let cfg = Self { kind };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn validate(&self) -> Result<()> {
+        match self.kind {
+            Some(DriftKind::Abrupt { at })
+            | Some(DriftKind::Invert { at }) => check_frac("drift.at", at)?,
+            Some(DriftKind::Rotate { start, end }) => {
+                check_frac("drift.at", start)?;
+                check_frac("drift.end", end)?;
+                if end < start {
+                    bail!("drift.end ({end}) must be >= drift.at ({start})");
+                }
+            }
+            Some(DriftKind::Churn { at, fraction }) => {
+                check_frac("drift.at", at)?;
+                check_frac("drift.fraction", fraction)?;
+            }
+            Some(DriftKind::Burst { at, len, factor }) => {
+                check_frac("drift.at", at)?;
+                check_frac("drift.len", len)?;
+                if factor <= 0.0 {
+                    bail!("drift.factor must be > 0, got {factor}");
+                }
+            }
+            Some(DriftKind::Recurring { .. }) | None => {}
+        }
+        Ok(())
+    }
+}
+
+fn check_frac(key: &str, v: f64) -> Result<()> {
+    if !(0.0..=1.0).contains(&v) {
+        bail!("{key} must be a stream fraction in [0, 1], got {v}");
+    }
+    Ok(())
+}
+
+/// Tag salts for the churn wave's two deterministic hashes (membership
+/// and identity remap); mixed with the stream seed so different seeds
+/// churn different user subsets.
+const CHURN_PICK_SALT: u64 = 0xC0_1D_57A7;
+const CHURN_REMAP_SALT: u64 = 0x0DD_1D_5EED;
+
+/// A [`SyntheticStream`] with a shaped drift scenario layered on top.
+///
+/// The wrapper intercepts each element at the rank level
+/// ([`SyntheticStream::sample_raw`]), applies the scheduled transform,
+/// and materializes through the untouched base generator — so without a
+/// configured shape the output is *bit-identical* to the bare stream,
+/// and with one, everything outside the transform (id scrambling,
+/// inter-arrival sampling, background churn) is exactly the base
+/// stream's.
+pub struct DriftStream {
+    inner: SyntheticStream,
+    kind: Option<DriftKind>,
+    /// Drift-private RNG (the `rotate` ramp coin); the base stream's RNG
+    /// is never touched, so base randomness is shape-independent.
+    rng: Pcg32,
+    /// Per-seed salt for the churn hashes.
+    churn_salt: u64,
+    seq: u64,
+    total: u64,
+    items: u64,
+}
+
+impl DriftStream {
+    /// Build the base generator for `cfg` and layer `drift` over it.
+    pub fn new(cfg: SyntheticConfig, drift: DriftConfig) -> Self {
+        Self::over(SyntheticStream::new(cfg), drift)
+    }
+
+    /// Layer `drift` over an already-built base stream.
+    pub fn over(inner: SyntheticStream, drift: DriftConfig) -> Self {
+        let cfg = inner.config();
+        let seed = cfg.seed;
+        let total = cfg.events;
+        let items = cfg.items;
+        Self {
+            inner,
+            kind: drift.kind,
+            rng: Pcg32::seeded(mix64(seed ^ 0xD21F_75EE_D5)),
+            churn_salt: mix64(seed ^ CHURN_REMAP_SALT),
+            seq: 0,
+            total,
+            items,
+        }
+    }
+
+    /// The configured drift shape (None = pass-through).
+    pub fn kind(&self) -> Option<DriftKind> {
+        self.kind
+    }
+
+    /// The base generator's parameters.
+    pub fn config(&self) -> &SyntheticConfig {
+        self.inner.config()
+    }
+
+    /// Rotate a popularity rank by half the catalog (the shared "new
+    /// preference order" of abrupt/rotate/recurring).
+    fn rotated(&self, rank: u64) -> u64 {
+        if self.items <= 1 {
+            rank
+        } else {
+            (rank + self.items / 2) % self.items
+        }
+    }
+
+    /// Apply the scheduled rank/gap transform for stream position `seq`;
+    /// returns the churn fraction if the churn wave is active (churn
+    /// acts on the materialized user id, not the rank).
+    fn transform(&mut self, seq: u64, raw: &mut RawEvent) -> Option<f64> {
+        match self.kind? {
+            DriftKind::Abrupt { at } => {
+                if seq >= frac_seq(at, self.total) {
+                    raw.item_rank = self.rotated(raw.item_rank);
+                }
+            }
+            DriftKind::Rotate { start, end } => {
+                let s = frac_seq(start, self.total);
+                let e = frac_seq(end, self.total).max(s + 1);
+                if seq >= e {
+                    raw.item_rank = self.rotated(raw.item_rank);
+                } else if seq >= s {
+                    let p = (seq - s) as f64 / (e - s) as f64;
+                    if self.rng.next_f64() < p {
+                        raw.item_rank = self.rotated(raw.item_rank);
+                    }
+                }
+            }
+            DriftKind::Recurring { period_events } => {
+                if (seq / period_events.max(1)) % 2 == 1 {
+                    raw.item_rank = self.rotated(raw.item_rank);
+                }
+            }
+            DriftKind::Invert { at } => {
+                if seq >= frac_seq(at, self.total) {
+                    raw.item_rank = self.items - 1 - raw.item_rank;
+                }
+            }
+            DriftKind::Churn { at, fraction } => {
+                if seq >= frac_seq(at, self.total) {
+                    return Some(fraction);
+                }
+            }
+            DriftKind::Burst { at, len, factor } => {
+                let s = frac_seq(at, self.total);
+                let e = frac_seq((at + len).min(1.0), self.total).max(s);
+                if seq >= s && seq < e {
+                    raw.gap_secs /= factor.max(1e-9);
+                }
+            }
+        }
+        None
+    }
+}
+
+impl Iterator for DriftStream {
+    type Item = Rating;
+
+    fn next(&mut self) -> Option<Rating> {
+        let mut raw = self.inner.sample_raw()?;
+        let seq = self.seq;
+        self.seq += 1;
+        let churn = self.transform(seq, &mut raw);
+        let mut rating = self.inner.materialize(raw);
+        if let Some(fraction) = churn {
+            // Deterministic membership (a fixed subset of users churns)
+            // and a stable identity remap (the newcomer recurs, so the
+            // model can learn it like any other cold-start user).
+            let picked = mix64(rating.user ^ CHURN_PICK_SALT) % 10_000
+                < (fraction * 10_000.0) as u64;
+            if picked {
+                rating.user =
+                    mix64(rating.user ^ self.churn_salt) % (1 << 40);
+            }
+        }
+        Some(rating)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::{HashMap, HashSet};
+
+    fn stream(kind: Option<DriftKind>, events: u64, seed: u64) -> DriftStream {
+        DriftStream::new(
+            SyntheticConfig::movielens_like(events, seed),
+            DriftConfig { kind },
+        )
+    }
+
+    fn top_items(events: &[Rating], n: usize) -> Vec<u64> {
+        let mut counts: HashMap<u64, u64> = HashMap::new();
+        for e in events {
+            *counts.entry(e.item).or_default() += 1;
+        }
+        let mut v: Vec<_> = counts.into_iter().map(|(k, c)| (c, k)).collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v.into_iter().take(n).map(|(_, k)| k).collect()
+    }
+
+    fn overlap(a: &[u64], b: &[u64]) -> usize {
+        a.iter().filter(|x| b.contains(x)).count()
+    }
+
+    #[test]
+    fn no_drift_is_bit_identical_to_base() {
+        let base: Vec<_> =
+            SyntheticStream::new(SyntheticConfig::movielens_like(3000, 9))
+                .collect();
+        let wrapped: Vec<_> = stream(None, 3000, 9).collect();
+        assert_eq!(base, wrapped);
+    }
+
+    #[test]
+    fn every_kind_is_deterministic_and_keeps_the_budget() {
+        let kinds = [
+            DriftKind::Abrupt { at: 0.5 },
+            DriftKind::Rotate { start: 0.3, end: 0.7 },
+            DriftKind::Recurring { period_events: 500 },
+            DriftKind::Invert { at: 0.5 },
+            DriftKind::Churn { at: 0.5, fraction: 0.5 },
+            DriftKind::Burst { at: 0.4, len: 0.2, factor: 8.0 },
+        ];
+        for kind in kinds {
+            let a: Vec<_> = stream(Some(kind), 2000, 7).collect();
+            let b: Vec<_> = stream(Some(kind), 2000, 7).collect();
+            assert_eq!(a, b, "{}: same seed must replay", kind.name());
+            assert_eq!(a.len(), 2000, "{}: event budget", kind.name());
+            for w in a.windows(2) {
+                assert!(w[1].ts >= w[0].ts, "{}: monotone time", kind.name());
+            }
+            let c: Vec<_> = stream(Some(kind), 2000, 8).collect();
+            assert_ne!(a, c, "{}: different seed differs", kind.name());
+        }
+    }
+
+    #[test]
+    fn abrupt_flip_churns_the_popular_head() {
+        let events: Vec<_> =
+            stream(Some(DriftKind::Abrupt { at: 0.5 }), 40_000, 3).collect();
+        let pre = top_items(&events[..20_000], 10);
+        let post = top_items(&events[20_000..], 10);
+        assert!(
+            overlap(&pre, &post) <= 3,
+            "abrupt flip must replace the head: {} shared",
+            overlap(&pre, &post)
+        );
+        // Prefix identical to the undrifted stream (drift is scheduled,
+        // not ambient).
+        let base: Vec<_> = stream(None, 40_000, 3).collect();
+        assert_eq!(&events[..20_000], &base[..20_000]);
+        assert_ne!(&events[20_000..], &base[20_000..]);
+    }
+
+    /// Like `stream` but with the generator's *background* popularity
+    /// churn disabled, so only the scheduled drift moves the ranking.
+    fn quiet_stream(kind: DriftKind, events: u64, seed: u64) -> DriftStream {
+        let mut cfg = SyntheticConfig::movielens_like(events, seed);
+        cfg.drift_every = 0;
+        DriftStream::new(cfg, DriftConfig { kind: Some(kind) })
+    }
+
+    #[test]
+    fn recurring_drift_brings_the_old_concept_back() {
+        let period = 10_000u64;
+        let events: Vec<_> = quiet_stream(
+            DriftKind::Recurring { period_events: period },
+            40_000,
+            5,
+        )
+        .collect();
+        let p0 = top_items(&events[..10_000], 10);
+        let p1 = top_items(&events[10_000..20_000], 10);
+        let p2 = top_items(&events[20_000..30_000], 10);
+        assert!(overlap(&p0, &p1) <= 4, "phases must differ");
+        assert!(
+            overlap(&p0, &p2) >= 6,
+            "phase 2 must recur phase 0's concept: {} shared",
+            overlap(&p0, &p2)
+        );
+    }
+
+    #[test]
+    fn churn_wave_introduces_new_users_and_retires_old_ones() {
+        let kind = DriftKind::Churn { at: 0.5, fraction: 0.6 };
+        let events: Vec<_> = stream(Some(kind), 30_000, 11).collect();
+        let pre: HashSet<u64> =
+            events[..15_000].iter().map(|e| e.user).collect();
+        let post: HashSet<u64> =
+            events[15_000..].iter().map(|e| e.user).collect();
+        let newcomers = post.difference(&pre).count();
+        assert!(
+            newcomers as f64 >= 0.3 * post.len() as f64,
+            "cold-start wave too small: {newcomers}/{}",
+            post.len()
+        );
+        // Unchurned users persist: the wave replaces a fraction, not all.
+        let survivors = post.intersection(&pre).count();
+        assert!(survivors > 0, "some users must survive the wave");
+    }
+
+    #[test]
+    fn burst_compresses_event_time_without_touching_preferences() {
+        let kind = DriftKind::Burst { at: 0.25, len: 0.5, factor: 16.0 };
+        let burst: Vec<_> = stream(Some(kind), 20_000, 13).collect();
+        let base: Vec<_> = stream(None, 20_000, 13).collect();
+        // Same users/items in the same order — only timestamps move.
+        for (a, b) in burst.iter().zip(&base) {
+            assert_eq!((a.user, a.item), (b.user, b.item));
+        }
+        let span = |e: &[Rating]| e.last().unwrap().ts - e.first().unwrap().ts;
+        let w_burst = span(&burst[5_000..15_000]);
+        let w_base = span(&base[5_000..15_000]);
+        assert!(
+            (w_burst as f64) < 0.25 * w_base as f64,
+            "burst window must compress: {w_burst} vs {w_base}"
+        );
+    }
+
+    #[test]
+    fn invert_moves_head_to_tail() {
+        let events: Vec<_> =
+            quiet_stream(DriftKind::Invert { at: 0.0 }, 30_000, 17).collect();
+        let mut base_cfg = SyntheticConfig::movielens_like(30_000, 17);
+        base_cfg.drift_every = 0;
+        let base: Vec<_> =
+            DriftStream::new(base_cfg, DriftConfig::none()).collect();
+        let head = top_items(&base, 5);
+        let inv_counts: HashMap<u64, u64> =
+            events.iter().fold(HashMap::new(), |mut m, e| {
+                *m.entry(e.item).or_default() += 1;
+                m
+            });
+        // The base head items are now rare (they sit at the Zipf tail).
+        let total = events.len() as u64;
+        for item in head {
+            let c = inv_counts.get(&item).copied().unwrap_or(0);
+            assert!(
+                c < total / 100,
+                "old head item {item} still popular ({c} ratings)"
+            );
+        }
+    }
+
+    #[test]
+    fn toml_parsing_round_trips_all_kinds() {
+        let cases = [
+            ("[drift]\nkind = \"none\"", None),
+            (
+                "[drift]\nkind = \"abrupt\"\nat = 0.4",
+                Some(DriftKind::Abrupt { at: 0.4 }),
+            ),
+            (
+                "[drift]\nkind = \"rotate\"\nat = 0.2\nend = 0.9",
+                Some(DriftKind::Rotate { start: 0.2, end: 0.9 }),
+            ),
+            (
+                "[drift]\nkind = \"recurring\"\nperiod_events = 2500",
+                Some(DriftKind::Recurring { period_events: 2500 }),
+            ),
+            (
+                "[drift]\nkind = \"invert\"",
+                Some(DriftKind::Invert { at: 0.5 }),
+            ),
+            (
+                "[drift]\nkind = \"churn\"\nat = 0.5\nfraction = 0.25",
+                Some(DriftKind::Churn { at: 0.5, fraction: 0.25 }),
+            ),
+            (
+                "[drift]\nkind = \"burst\"\nat = 0.1\nlen = 0.2\nfactor = 4.0",
+                Some(DriftKind::Burst { at: 0.1, len: 0.2, factor: 4.0 }),
+            ),
+        ];
+        for (text, expect) in cases {
+            let cfg = DriftConfig::from_toml(text).unwrap();
+            assert_eq!(cfg.kind, expect, "{text}");
+        }
+        assert!(DriftConfig::from_toml("").unwrap().kind.is_none());
+    }
+
+    #[test]
+    fn toml_parsing_rejects_bad_values() {
+        assert!(DriftConfig::from_toml("[drift]\nkind = \"bogus\"").is_err());
+        assert!(DriftConfig::from_toml(
+            "[drift]\nkind = \"abrupt\"\nat = 1.5"
+        )
+        .is_err());
+        assert!(DriftConfig::from_toml(
+            "[drift]\nkind = \"rotate\"\nat = 0.8\nend = 0.2"
+        )
+        .is_err());
+        assert!(DriftConfig::from_toml(
+            "[drift]\nkind = \"churn\"\nfraction = -0.1"
+        )
+        .is_err());
+        assert!(DriftConfig::from_toml(
+            "[drift]\nkind = \"burst\"\nfactor = 0"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn drift_seq_points_at_the_change() {
+        assert_eq!(DriftKind::Abrupt { at: 0.5 }.drift_seq(10_000), 5_000);
+        assert_eq!(
+            DriftKind::Rotate { start: 0.25, end: 1.0 }.drift_seq(8_000),
+            2_000
+        );
+        assert_eq!(
+            DriftKind::Recurring { period_events: 3_000 }.drift_seq(10_000),
+            3_000
+        );
+    }
+}

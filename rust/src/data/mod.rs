@@ -1,6 +1,7 @@
 //! Dataset substrate: event types, synthetic stream generators shaped
 //! after Table 1, real-dataset loaders, and dataset statistics.
 
+pub mod drift;
 pub mod movielens;
 pub mod stats;
 pub mod synth;
@@ -8,6 +9,7 @@ pub mod types;
 
 use anyhow::Result;
 
+use drift::{DriftConfig, DriftStream};
 use synth::{SyntheticConfig, SyntheticStream};
 use types::Rating;
 
@@ -89,6 +91,42 @@ impl DatasetSpec {
         }
     }
 
+    /// The synthetic generator parameters behind this spec, if it is a
+    /// synthetic one (drift transformers need the rank-level seam that
+    /// only the generator provides).
+    pub fn synthetic_config(&self) -> Option<SyntheticConfig> {
+        match self {
+            Self::MovielensLike { events, seed } => {
+                Some(SyntheticConfig::movielens_like(*events, *seed))
+            }
+            Self::NetflixLike { events, seed } => {
+                Some(SyntheticConfig::netflix_like(*events, *seed))
+            }
+            Self::MovielensCsv { .. } | Self::NetflixFile { .. } => None,
+        }
+    }
+
+    /// Materialize the stream with a concept-drift scenario layered over
+    /// it. With no configured drift shape this is exactly [`load`];
+    /// shaped drift requires a synthetic spec (the transformers act on
+    /// popularity ranks, which file datasets do not expose) and fails
+    /// loudly otherwise.
+    ///
+    /// [`load`]: DatasetSpec::load
+    pub fn load_with_drift(&self, drift: &DriftConfig) -> Result<Vec<Rating>> {
+        if drift.kind.is_none() {
+            return self.load();
+        }
+        match self.synthetic_config() {
+            Some(cfg) => Ok(DriftStream::new(cfg, drift.clone()).collect()),
+            None => anyhow::bail!(
+                "drift scenarios layer over synthetic streams \
+                 (ml-like|nf-like); '{}' is a file dataset",
+                self.name()
+            ),
+        }
+    }
+
     /// Materialize the full event stream (timestamp-ordered).
     pub fn load(&self) -> Result<Vec<Rating>> {
         match self {
@@ -130,5 +168,21 @@ mod tests {
         let d = DatasetSpec::parse("nf-like:2000", 3).unwrap();
         let events = d.load().unwrap();
         assert_eq!(events.len(), 2000);
+    }
+
+    #[test]
+    fn drift_layering_over_specs() {
+        let d = DatasetSpec::parse("nf-like:2000", 3).unwrap();
+        let plain = d.load().unwrap();
+        // No configured shape: byte-identical to the bare loader.
+        assert_eq!(d.load_with_drift(&DriftConfig::none()).unwrap(), plain);
+        let abrupt =
+            DriftConfig::from_toml("[drift]\nkind = \"abrupt\"").unwrap();
+        let drifted = d.load_with_drift(&abrupt).unwrap();
+        assert_eq!(drifted.len(), 2000);
+        assert_ne!(drifted, plain);
+        // File datasets have no rank seam to drift on.
+        let f = DatasetSpec::parse("ml-csv:/no/such.csv", 1).unwrap();
+        assert!(f.load_with_drift(&abrupt).is_err());
     }
 }

@@ -84,6 +84,21 @@ impl SyntheticConfig {
     }
 }
 
+/// One sampled-but-unmaterialized stream element: the Zipf popularity
+/// *ranks* (0 = most popular) plus the exponential inter-arrival gap.
+/// This is the seam the concept-drift transformers in [`crate::data::drift`]
+/// operate on — a drift shape is a deterministic function of ranks (the
+/// preference distribution), not of the scrambled public ids.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RawEvent {
+    /// Activity rank of the sampled user (0 = most active).
+    pub user_rank: u64,
+    /// Popularity rank of the sampled item (0 = most popular).
+    pub item_rank: u64,
+    /// Seconds between the previous event and this one.
+    pub gap_secs: f64,
+}
+
 /// Iterator of timestamp-ordered rating events.
 pub struct SyntheticStream {
     cfg: SyntheticConfig,
@@ -123,6 +138,45 @@ impl SyntheticStream {
         &self.cfg
     }
 
+    /// Sample the next element at the *rank* level (advancing the
+    /// generator's RNG, drift epochs, and event budget) without
+    /// materializing ids. `next()` is exactly
+    /// `sample_raw().map(|r| self.materialize(r))`, so a wrapper that
+    /// transforms ranks between the two calls sees the same base stream
+    /// the untransformed iterator would emit.
+    pub fn sample_raw(&mut self) -> Option<RawEvent> {
+        if self.emitted >= self.cfg.events {
+            return None;
+        }
+        if self.cfg.drift_every > 0
+            && self.emitted > 0
+            && self.emitted % self.cfg.drift_every == 0
+        {
+            self.drift();
+        }
+        let item_rank = self.item_zipf.sample(&mut self.rng);
+        let user_rank = self.user_zipf.sample(&mut self.rng);
+        // Poisson-ish inter-arrival via exponential spacing.
+        let u = self.rng.next_f64().max(1e-12);
+        let gap_secs = -u.ln() * self.cfg.secs_per_event;
+        self.emitted += 1;
+        Some(RawEvent { user_rank, item_rank, gap_secs })
+    }
+
+    /// Turn a sampled (possibly transformed) rank pair into the public
+    /// event: ranks map through the drifting permutations, ids are
+    /// scrambled, and the stream clock advances by the gap. Ranks must be
+    /// in range (`user_rank < users`, `item_rank < items`).
+    pub fn materialize(&mut self, raw: RawEvent) -> Rating {
+        // Scramble ids so they are not dense-rank-ordered (real ids aren't;
+        // the router hashes raw ids, so id structure must not be a gift).
+        let item = mix64(self.item_perm[raw.item_rank as usize]) % (1 << 40);
+        let user = mix64(self.user_perm[raw.user_rank as usize] | (1 << 41))
+            % (1 << 40);
+        self.clock += raw.gap_secs.max(0.0);
+        Rating::new(user, item, 5.0, self.clock as u64)
+    }
+
     /// Apply one drift epoch: swap `drift_rate * items` randomly chosen
     /// ranking positions (popularity churn / concept drift).
     fn drift(&mut self) {
@@ -146,27 +200,8 @@ impl Iterator for SyntheticStream {
     type Item = Rating;
 
     fn next(&mut self) -> Option<Rating> {
-        if self.emitted >= self.cfg.events {
-            return None;
-        }
-        if self.cfg.drift_every > 0
-            && self.emitted > 0
-            && self.emitted % self.cfg.drift_every == 0
-        {
-            self.drift();
-        }
-        let item_rank = self.item_zipf.sample(&mut self.rng);
-        let user_rank = self.user_zipf.sample(&mut self.rng);
-        // Scramble ids so they are not dense-rank-ordered (real ids aren't;
-        // the router hashes raw ids, so id structure must not be a gift).
-        let item = mix64(self.item_perm[item_rank as usize]) % (1 << 40);
-        let user = mix64(self.user_perm[user_rank as usize] | (1 << 41))
-            % (1 << 40);
-        // Poisson-ish inter-arrival via exponential spacing.
-        let u = self.rng.next_f64().max(1e-12);
-        self.clock += -u.ln() * self.cfg.secs_per_event;
-        self.emitted += 1;
-        Some(Rating::new(user, item, 5.0, self.clock as u64))
+        let raw = self.sample_raw()?;
+        Some(self.materialize(raw))
     }
 }
 

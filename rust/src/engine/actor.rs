@@ -654,6 +654,7 @@ impl WorkerActor {
             evicted: lanes.values().map(|l| l.evicted).sum(),
             recommend_ns,
             update_ns,
+            windows: preq.windowed().stats().to_vec(),
         };
         let _ = col_tx.send(CollectorMsg::Done { worker_id: ord });
         Ok(report)

@@ -4,6 +4,7 @@
 //! size distributions (Figs 4/7/10/13), and throughput (Figs 8/14).
 
 use crate::data::types::StateSizes;
+use crate::eval::windowed::WindowStat;
 use crate::util::histogram::Histogram;
 
 /// Final report from one worker thread.
@@ -32,6 +33,11 @@ pub struct WorkerReport {
     pub recommend_ns: u64,
     /// Nanoseconds spent inside update() (profile split).
     pub update_ns: u64,
+    /// Tumbling-window recall over this worker's *local* event order
+    /// (window = `recall_window`): a per-worker drift-response
+    /// diagnostic. The stream-global windowed curve, bucketed by global
+    /// sequence number, is [`RunReport::windowed_recall`].
+    pub windows: Vec<WindowStat>,
 }
 
 /// Aggregated result of one pipeline run.
@@ -54,6 +60,12 @@ pub struct RunReport {
     pub avg_recall: f64,
     /// Moving-average recall curve: (global sequence, recall@N).
     pub recall_curve: Vec<(u64, f64)>,
+    /// Tumbling-window online recall over the global stream (window =
+    /// `recall_window` events, bucketed by global sequence number) — the
+    /// time-local view a drift scenario's dip-and-recovery shows up in,
+    /// where the cumulative curve only shows a slow slope change. Sums
+    /// reconcile exactly with `hits`/`events` for any window size.
+    pub windowed_recall: Vec<WindowStat>,
     /// Per-worker final reports for the final topology (state-size
     /// distributions etc.).
     pub workers: Vec<WorkerReport>,
@@ -170,6 +182,7 @@ mod tests {
             evicted: 0,
             recommend_ns: 0,
             update_ns: 0,
+            windows: vec![],
         }
     }
 
@@ -184,6 +197,7 @@ mod tests {
             throughput: 20.0,
             avg_recall: 0.2,
             recall_curve: vec![],
+            windowed_recall: vec![],
             workers: vec![worker(0, 10, 4), worker(1, 20, 6)],
             retired: vec![],
             route_ns_per_event: 1.0,

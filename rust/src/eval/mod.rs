@@ -4,7 +4,9 @@
 pub mod merge;
 pub mod metrics;
 pub mod prequential;
+pub mod windowed;
 
 pub use merge::merge_topn;
 pub use metrics::{RunReport, WorkerReport};
 pub use prequential::{HitSample, MovingRecall, Prequential, StepOutcome};
+pub use windowed::{drift_response, DriftResponse, WindowStat, WindowedRecall};

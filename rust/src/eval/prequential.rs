@@ -7,6 +7,7 @@ use std::time::Instant;
 
 use crate::algorithms::StreamingRecommender;
 use crate::data::types::Rating;
+use crate::eval::windowed::WindowedRecall;
 
 /// Ring-buffer moving average over the last `window` binary outcomes.
 #[derive(Debug, Clone)]
@@ -109,12 +110,21 @@ pub struct StepOutcome {
 pub struct Prequential {
     top_n: usize,
     recall: MovingRecall,
+    /// Tumbling-window (time-local) recall over this evaluator's own
+    /// event order — the drift-response view of the same outcomes the
+    /// moving average smooths (same window size).
+    windowed: WindowedRecall,
 }
 
 impl Prequential {
-    /// Evaluator judging hits against top-`top_n` with a moving window.
+    /// Evaluator judging hits against top-`top_n` with a moving window
+    /// (also the tumbling-window size of [`Prequential::windowed`]).
     pub fn new(top_n: usize, window: usize) -> Self {
-        Self { top_n, recall: MovingRecall::new(window) }
+        Self {
+            top_n,
+            recall: MovingRecall::new(window),
+            windowed: WindowedRecall::new(window as u64),
+        }
     }
 
     /// Algorithm 4 for one event. The hit is judged against the top-N list
@@ -129,6 +139,7 @@ impl Prequential {
         let recs = model.recommend(event.user, self.top_n);
         let recommend_ns = t0.elapsed().as_nanos() as u64;
         let hit = recs.contains(&event.item);
+        self.windowed.push(self.recall.count(), hit);
         self.recall.push(hit);
         let t1 = Instant::now();
         model.update(event);
@@ -139,6 +150,12 @@ impl Prequential {
     /// The recall accumulator (moving window + lifetime counters).
     pub fn recall(&self) -> &MovingRecall {
         &self.recall
+    }
+
+    /// The tumbling-window recall series over this evaluator's local
+    /// event order (window index = local event count / window size).
+    pub fn windowed(&self) -> &WindowedRecall {
+        &self.windowed
     }
 }
 
@@ -236,6 +253,27 @@ mod tests {
         // Both halves executed; on a coarse clock individual steps may
         // read 0 ns, but 50 steps of real work accumulate something.
         assert!(rec + upd > 0, "timing split must not be dead");
+    }
+
+    #[test]
+    fn windowed_view_reconciles_with_lifetime() {
+        let mut model = Scripted {
+            list: vec![1, 2, 3],
+            updated: vec![],
+            update_changes_list_to: None,
+        };
+        let mut p = Prequential::new(10, 4);
+        for i in 0..10u64 {
+            // Alternate hit (item 2) and miss (item 30).
+            let item = if i % 2 == 0 { 2 } else { 30 };
+            p.step(&mut model, &Rating::new(1, item, 5.0, i));
+        }
+        let w = p.windowed();
+        assert_eq!(w.window(), 4);
+        assert_eq!(w.total_events(), p.recall().count());
+        assert_eq!(w.total_hits(), p.recall().hits());
+        assert_eq!(w.stats().len(), 3, "10 events / window 4");
+        assert!((w.stats()[0].recall() - 0.5).abs() < 1e-12);
     }
 
     #[test]

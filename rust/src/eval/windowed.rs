@@ -1,0 +1,249 @@
+//! Time-local (windowed) online evaluation.
+//!
+//! The cumulative moving-average recall curve the paper plots answers
+//! "how good has the model been so far"; it is dominated by history and
+//! barely moves when user interests shift mid-stream. Concept-drift
+//! response needs a *time-local* metric: tumbling windows of K events,
+//! each scored independently, so a drift point shows up as a dip in the
+//! affected window and recovery as the climb back (Chang et al.,
+//! *Streaming Recommender Systems*, make the same argument for
+//! interest-shift evaluation).
+//!
+//! [`WindowedRecall`] accumulates per-event prequential outcomes into
+//! [`WindowStat`] rows keyed by `seq / window`; because each outcome
+//! lands in exactly one window, the windowed view always *reconciles*
+//! with the cumulative one (sum of window hits == lifetime hits, for
+//! any window size — property-tested in `tests/drift_scenarios.rs`).
+//! [`drift_response`] condenses a window series into the
+//! pre-drift / dip / recovered triple the drift experiments assert on.
+
+/// Aggregate of one tumbling window of prequential outcomes.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WindowStat {
+    /// Window index (`seq / window`).
+    pub index: u64,
+    /// First sequence number the window covers (`index * window`).
+    pub start_seq: u64,
+    /// Outcomes recorded in this window (the trailing window of a run
+    /// may be partial; all others hold exactly `window` outcomes once
+    /// the stream has passed them).
+    pub events: u64,
+    /// Prequential hits recorded in this window.
+    pub hits: u64,
+}
+
+impl WindowStat {
+    /// Window-local recall@N (== hit-rate for the binary prequential
+    /// protocol: each event carries exactly one relevant item).
+    pub fn recall(&self) -> f64 {
+        if self.events == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.events as f64
+        }
+    }
+}
+
+/// Accumulator for tumbling-window online recall.
+///
+/// `push` accepts outcomes in any order (workers see interleaved global
+/// sequence numbers; the collector replays in order) — each outcome is
+/// bucketed by its sequence number, so the resulting series is
+/// order-independent.
+#[derive(Debug, Clone)]
+pub struct WindowedRecall {
+    window: u64,
+    stats: Vec<WindowStat>,
+}
+
+impl WindowedRecall {
+    /// Accumulator with tumbling windows of `window` events (>= 1;
+    /// 0 is clamped).
+    pub fn new(window: u64) -> Self {
+        Self { window: window.max(1), stats: Vec::new() }
+    }
+
+    /// The configured window size in events.
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    /// Record one prequential outcome for sequence number `seq`.
+    pub fn push(&mut self, seq: u64, hit: bool) {
+        let index = seq / self.window;
+        let idx = index as usize;
+        if idx >= self.stats.len() {
+            let window = self.window;
+            let from = self.stats.len() as u64;
+            self.stats.extend((from..=index).map(|i| WindowStat {
+                index: i,
+                start_seq: i * window,
+                events: 0,
+                hits: 0,
+            }));
+        }
+        let w = &mut self.stats[idx];
+        w.events += 1;
+        w.hits += u64::from(hit);
+    }
+
+    /// The window series so far (dense: windows no outcome landed in are
+    /// present with `events == 0`).
+    pub fn stats(&self) -> &[WindowStat] {
+        &self.stats
+    }
+
+    /// Consume the accumulator, returning the window series.
+    pub fn into_stats(self) -> Vec<WindowStat> {
+        self.stats
+    }
+
+    /// Total outcomes recorded (reconciles with the cumulative curve).
+    pub fn total_events(&self) -> u64 {
+        self.stats.iter().map(|w| w.events).sum()
+    }
+
+    /// Total hits recorded (reconciles with the cumulative curve).
+    pub fn total_hits(&self) -> u64 {
+        self.stats.iter().map(|w| w.hits).sum()
+    }
+}
+
+/// A drift experiment's condensed windowed-recall response: the window
+/// just before the drift point, the worst window at/after it, and the
+/// final window of the stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftResponse {
+    /// Index of the window containing the drift point.
+    pub drift_window: u64,
+    /// Recall of the last full window *before* the drift point.
+    pub pre: f64,
+    /// Minimum window recall at/after the drift point (the dip).
+    pub dip: f64,
+    /// Recall of the final window (how far the model climbed back).
+    pub recovered: f64,
+}
+
+/// Condense a window series around a drift at sequence `drift_seq`.
+/// Returns `None` when the series is too short to have at least one
+/// window on each side of the drift point.
+pub fn drift_response(
+    windows: &[WindowStat],
+    drift_seq: u64,
+) -> Option<DriftResponse> {
+    let first = windows.first()?;
+    let window = windows.get(1).map_or(
+        first.events.max(1),
+        |w| w.start_seq - first.start_seq,
+    );
+    let drift_window = drift_seq / window.max(1);
+    if drift_window == 0 || drift_window as usize >= windows.len() {
+        return None;
+    }
+    let pre = windows[drift_window as usize - 1].recall();
+    let after = &windows[drift_window as usize..];
+    let dip = after
+        .iter()
+        .filter(|w| w.events > 0)
+        .map(|w| w.recall())
+        .fold(f64::INFINITY, f64::min);
+    let recovered = after.iter().rev().find(|w| w.events > 0)?.recall();
+    if !dip.is_finite() {
+        return None;
+    }
+    Some(DriftResponse { drift_window, pre, dip, recovered })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_by_sequence_number() {
+        let mut w = WindowedRecall::new(4);
+        for seq in 0..10 {
+            w.push(seq, seq % 2 == 0);
+        }
+        let s = w.stats();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], WindowStat { index: 0, start_seq: 0, events: 4, hits: 2 });
+        assert_eq!(s[1], WindowStat { index: 1, start_seq: 4, events: 4, hits: 2 });
+        assert_eq!(s[2], WindowStat { index: 2, start_seq: 8, events: 2, hits: 1 });
+        assert_eq!(w.total_events(), 10);
+        assert_eq!(w.total_hits(), 5);
+        assert!((s[0].recall() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn order_independent_and_gap_dense() {
+        let mut fwd = WindowedRecall::new(3);
+        let mut rev = WindowedRecall::new(3);
+        let outcomes = [(0, true), (7, false), (2, true), (8, true)];
+        for (s, h) in outcomes {
+            fwd.push(s, h);
+        }
+        for (s, h) in outcomes.iter().rev() {
+            rev.push(*s, *h);
+        }
+        assert_eq!(fwd.stats(), rev.stats());
+        // Window 1 (seqs 3..6) saw nothing but is present.
+        assert_eq!(fwd.stats()[1].events, 0);
+        assert_eq!(fwd.stats()[1].recall(), 0.0);
+    }
+
+    #[test]
+    fn reconciles_with_cumulative_for_any_window_size() {
+        // A fixed pseudo-random outcome sequence; every window size must
+        // preserve the lifetime totals.
+        let hits: Vec<bool> =
+            (0u64..997).map(|i| (i * 2654435761) % 7 < 3).collect();
+        let lifetime = hits.iter().filter(|h| **h).count() as u64;
+        for window in [1u64, 7, 100, 997, 5000] {
+            let mut w = WindowedRecall::new(window);
+            for (seq, h) in hits.iter().enumerate() {
+                w.push(seq as u64, *h);
+            }
+            assert_eq!(w.total_events(), 997, "window={window}");
+            assert_eq!(w.total_hits(), lifetime, "window={window}");
+            let weighted: f64 = w
+                .stats()
+                .iter()
+                .map(|s| s.recall() * s.events as f64)
+                .sum::<f64>()
+                / 997.0;
+            assert!(
+                (weighted - lifetime as f64 / 997.0).abs() < 1e-9,
+                "window={window}"
+            );
+        }
+    }
+
+    #[test]
+    fn drift_response_extracts_dip_and_recovery() {
+        // 10 windows of 100; recall 0.4 before, crashes to 0.05 at the
+        // drift (window 5), climbs back to 0.3.
+        let mk = |i: u64, hits: u64| WindowStat {
+            index: i,
+            start_seq: i * 100,
+            events: 100,
+            hits,
+        };
+        let windows: Vec<WindowStat> = (0..10)
+            .map(|i| match i {
+                0..=4 => mk(i, 40),
+                5 => mk(i, 5),
+                6 => mk(i, 10),
+                _ => mk(i, 30),
+            })
+            .collect();
+        let r = drift_response(&windows, 500).unwrap();
+        assert_eq!(r.drift_window, 5);
+        assert!((r.pre - 0.4).abs() < 1e-12);
+        assert!((r.dip - 0.05).abs() < 1e-12);
+        assert!((r.recovered - 0.3).abs() < 1e-12);
+        // Too short for a pre-window: None, not a panic.
+        assert!(drift_response(&windows[..1], 500).is_none());
+        assert!(drift_response(&windows, 0).is_none());
+        assert!(drift_response(&[], 500).is_none());
+    }
+}

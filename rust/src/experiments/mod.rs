@@ -1,9 +1,13 @@
 //! Experiment harness: regenerates every table and figure of the paper's
 //! evaluation section (DESIGN.md §4 maps each experiment id to the paper
-//! artifact). Results land in `results/<exp>/*.csv` plus a printed
-//! paper-style summary; EXPERIMENTS.md records paper-vs-measured.
+//! artifact; `runner`/`suites`, driven by the `figures` binary), plus
+//! the declarative drift-scenario driver behind `streamrec experiment`
+//! (`scenario`). Results land in `results/<exp>/*.csv` and `BENCH_*`
+//! JSON summaries; docs/EXPERIMENTS.md documents every schema.
 
 pub mod runner;
+pub mod scenario;
 pub mod suites;
 
 pub use runner::{ExpContext, RunKey};
+pub use scenario::{run_scenario, Scenario, ScenarioOutcome, ScenarioRun};

@@ -1,0 +1,574 @@
+//! Declarative drift-scenario experiments — the `streamrec experiment`
+//! driver.
+//!
+//! A *scenario file* is one TOML document describing a grid of runs:
+//! datasets × algorithms × topologies, all sharing one drift shape
+//! (`[drift]`), one model/forgetting/fault configuration (the regular
+//! `RunConfig` tables), and optionally a mid-stream rescale and a chaos
+//! kill — the paper-style "baseline `n_i = 1` vs distributed grids"
+//! comparison, rebuilt on the live [`Cluster`] session API instead of
+//! the one-shot pipeline.
+//!
+//! Each run drives the full stream through a session, captures the
+//! [`RunReport`] (cumulative curve + tumbling-window recall), condenses
+//! the windowed series into a [`DriftResponse`] (pre-drift / dip /
+//! recovered), writes one per-window CSV per run, and emits a
+//! `BENCH_drift.json` summary next to the other `BENCH_*` result files.
+//! Schemas are documented in docs/EXPERIMENTS.md; the scenario TOML
+//! keys in docs/CONFIG.md.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{parse_toml_subset, Algorithm, RunConfig, Topology};
+use crate::coordinator::Cluster;
+use crate::data::drift::{frac_seq, DriftConfig};
+use crate::data::types::Rating;
+use crate::data::DatasetSpec;
+use crate::eval::{drift_response, DriftResponse, RunReport};
+use crate::util::csv::CsvWriter;
+use crate::util::json::{num, obj, s, to_string, Json};
+
+/// Optional mid-stream elastic rescale (`[rescale] at / to_n_i` in the
+/// scenario file): at stream fraction `at`, distributed runs cut over to
+/// topology `to_n_i`. The `n_i = 1` baseline is left alone — it exists
+/// to be the fixed comparison point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MidStreamRescale {
+    /// Stream fraction the cutover fires at.
+    pub at: f64,
+    /// Target replication factor.
+    pub to_n_i: u64,
+}
+
+/// A parsed scenario file: the run grid plus everything the runs share.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Scenario id (labels, result files).
+    pub name: String,
+    /// Events per run (appended to bare dataset names; an explicit
+    /// `name:events` spec in `datasets` wins).
+    pub events: u64,
+    /// Dataset + model seed shared by every run.
+    pub seed: u64,
+    /// Dataset specs in the grid (`ml-like`, `nf-like`, or full
+    /// `DatasetSpec` strings).
+    pub datasets: Vec<String>,
+    /// Algorithms in the grid.
+    pub algorithms: Vec<Algorithm>,
+    /// Replication factors in the grid; `1` (the central baseline) is
+    /// always included.
+    pub topologies: Vec<u64>,
+    /// Tumbling-window size for the windowed recall curves (also becomes
+    /// the runs' `recall_window`).
+    pub window_events: u64,
+    /// Directory the per-window CSVs are written under.
+    pub out_dir: String,
+    /// Path of the JSON summary (`BENCH_drift.json` by convention).
+    pub bench_out: String,
+    /// The drift shape layered over every run's stream.
+    pub drift: DriftConfig,
+    /// Optional mid-stream rescale applied to distributed runs.
+    pub rescale: Option<MidStreamRescale>,
+    /// Optional chaos kill scheduled as a stream fraction
+    /// (`fault.chaos_kill_at`): resolved against each stream's actual
+    /// length at run time (an explicit `name:events` dataset spec can
+    /// differ from `events`), overriding `fault.chaos_kill_seq`.
+    pub chaos_kill_at: Option<f64>,
+    /// Shared run configuration (model/forgetting/engine/fault tables of
+    /// the same file; topology and recall_window are overridden per run).
+    pub base: RunConfig,
+}
+
+impl Scenario {
+    /// Parse a scenario file from disk.
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path.as_ref()).with_context(|| {
+                format!("reading scenario {}", path.as_ref().display())
+            })?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML-subset text. The same document feeds three
+    /// parsers: `RunConfig::from_toml` (shared run knobs),
+    /// `DriftConfig` (`[drift]`), and the `[experiment]` grid keys here.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let kv = parse_toml_subset(text)?;
+        let mut base = RunConfig::from_toml(text)?;
+        let drift = DriftConfig::from_kv(&kv)?;
+        let get = |k: &str| kv.get(k);
+        let str_or = |k: &str, d: &str| -> Result<String> {
+            Ok(match get(k) {
+                Some(v) => v.str()?.to_string(),
+                None => d.to_string(),
+            })
+        };
+        let int_or = |k: &str, d: i64| -> Result<i64> {
+            Ok(match get(k) {
+                Some(v) => v.int()?,
+                None => d,
+            })
+        };
+
+        let name = str_or("experiment.name", "drift")?;
+        let events = int_or("experiment.events", 20_000)?.max(1) as u64;
+        let seed = int_or("experiment.seed", base.seed as i64)? as u64;
+        let window_events =
+            int_or("experiment.window_events", 1_000)?.max(1) as u64;
+        let datasets = list(&str_or("experiment.datasets", "ml-like")?);
+        let algorithms = list(&str_or("experiment.algorithms", "isgd")?)
+            .iter()
+            .map(|a| Algorithm::parse(a))
+            .collect::<Result<Vec<_>>>()?;
+        let mut topologies: Vec<u64> =
+            list(&str_or("experiment.topologies", "1,2")?)
+                .iter()
+                .map(|t| {
+                    t.parse::<u64>()
+                        .map_err(|e| anyhow::anyhow!("topology '{t}': {e}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        if !topologies.contains(&1) {
+            // The paper's comparison is always against the central run.
+            topologies.insert(0, 1);
+        }
+        // Repeated grid entries would produce colliding labels (and
+        // overwrite each other's CSVs), so drop them up front.
+        dedup_in_place(&mut topologies);
+        let mut datasets = datasets;
+        dedup_in_place(&mut datasets);
+        let out_dir =
+            str_or("experiment.out_dir", &format!("results/{name}"))?;
+        let bench_out = str_or("experiment.bench_out", "BENCH_drift.json")?;
+
+        let rescale = match get("rescale.to_n_i") {
+            Some(v) => {
+                let to_n_i = v.int()?.max(1) as u64;
+                let at = match get("rescale.at") {
+                    Some(v) => v.frac().context("rescale.at")?,
+                    None => 0.5,
+                };
+                Some(MidStreamRescale { at, to_n_i })
+            }
+            None => None,
+        };
+
+        // A chaos kill can be scheduled as a stream fraction; it is
+        // resolved against each stream's actual length at run time, so
+        // it stays aligned with the drift schedule even for explicit
+        // `name:events` dataset specs.
+        let chaos_kill_at = get("fault.chaos_kill_at")
+            .map(|v| v.frac().context("fault.chaos_kill_at"))
+            .transpose()?;
+        if (base.fault_chaos_kill_seq.is_some() || chaos_kill_at.is_some())
+            && base.fault_checkpoint_interval == 0
+        {
+            bail!(
+                "scenario schedules a chaos kill but fault tolerance is \
+                 off; set fault.checkpoint_interval > 0 (or drop the kill)"
+            );
+        }
+        base.seed = seed;
+
+        let sc = Self {
+            name,
+            events,
+            seed,
+            datasets,
+            algorithms,
+            topologies,
+            window_events,
+            out_dir,
+            bench_out,
+            drift,
+            rescale,
+            chaos_kill_at,
+            base,
+        };
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.datasets.is_empty() {
+            bail!("experiment.datasets must name at least one dataset");
+        }
+        if self.algorithms.is_empty() {
+            bail!("experiment.algorithms must name at least one algorithm");
+        }
+        for &n_i in &self.topologies {
+            if n_i == 0 {
+                bail!("experiment.topologies entries must be >= 1");
+            }
+        }
+        Ok(())
+    }
+
+    /// First stream position the configured drift changes preferences
+    /// at, if a shape is configured.
+    pub fn drift_seq(&self) -> Option<u64> {
+        self.drift.kind.map(|k| k.drift_seq(self.events))
+    }
+}
+
+/// Split a comma list (`"isgd, cosine"`) into trimmed non-empty items.
+fn list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|x| x.trim().to_string())
+        .filter(|x| !x.is_empty())
+        .collect()
+}
+
+/// Drop repeated entries, keeping first-occurrence order.
+fn dedup_in_place<T: PartialEq>(v: &mut Vec<T>) {
+    let mut i = 0;
+    while i < v.len() {
+        if v[..i].contains(&v[i]) {
+            v.remove(i);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: u64, b: u64) -> u64 {
+    a / gcd(a, b) * b
+}
+
+/// One completed grid cell.
+#[derive(Debug, Clone)]
+pub struct ScenarioRun {
+    /// Run label (`{algo}-{dataset}-ni{n}-{drift}`).
+    pub label: String,
+    /// Dataset id of the cell.
+    pub dataset: String,
+    /// Algorithm of the cell.
+    pub algorithm: Algorithm,
+    /// Replication factor of the cell (1 = central baseline).
+    pub n_i: u64,
+    /// The condensed windowed-recall drift response, when the scenario
+    /// has a drift point with at least one window on each side.
+    pub response: Option<DriftResponse>,
+    /// The full run report (cumulative + windowed curves, counters).
+    pub report: RunReport,
+}
+
+/// All grid cells of one scenario execution plus where the artifacts
+/// were written.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    /// Completed runs, grid order (datasets × algorithms × topologies).
+    pub runs: Vec<ScenarioRun>,
+    /// Path the JSON summary was written to.
+    pub bench_path: PathBuf,
+    /// Directory the per-window CSVs were written under.
+    pub out_dir: PathBuf,
+}
+
+/// Execute every grid cell of `sc`: stream (with drift) → session →
+/// windowed curves → CSV + JSON artifacts. See the module docs.
+pub fn run_scenario(sc: &Scenario) -> Result<ScenarioOutcome> {
+    let drift_name =
+        sc.drift.kind.map(|k| k.name()).unwrap_or("none");
+    let mut datasets: HashMap<String, (String, Vec<Rating>)> = HashMap::new();
+    let mut runs = Vec::new();
+
+    for ds in &sc.datasets {
+        // Bare names get the scenario's event budget; explicit specs win.
+        let spec_str = if ds.contains(':') {
+            ds.clone()
+        } else {
+            format!("{ds}:{}", sc.events)
+        };
+        if !datasets.contains_key(&spec_str) {
+            let spec = DatasetSpec::parse(&spec_str, sc.seed)?;
+            let events = spec.load_with_drift(&sc.drift)?;
+            datasets.insert(spec_str.clone(), (spec.name(), events));
+        }
+        let (ds_name, events) = datasets.get(&spec_str).unwrap().clone();
+        let total = events.len() as u64;
+        // Every stream-fraction schedule (drift response anchor, chaos
+        // kill) resolves against the *stream's* length — an explicit
+        // `name:events` spec can differ from the scenario-wide budget.
+        let drift_seq = sc.drift.kind.map(|k| k.drift_seq(total));
+        // Labels must be collision-free: an explicit-events spec keeps
+        // its event count in the tag (`ml-like-6000`), a bare name (the
+        // common case) stays pretty.
+        let ds_tag = if ds.contains(':') {
+            spec_str.replace(&[':', '/', '\\', '.'][..], "-")
+        } else {
+            ds_name.clone()
+        };
+
+        for &algo in &sc.algorithms {
+            for &n_i in &sc.topologies {
+                let label = format!(
+                    "{}-{}-ni{}-{}",
+                    algo.name(),
+                    ds_tag,
+                    n_i,
+                    drift_name
+                );
+                let mut cfg = sc.base.clone();
+                cfg.algorithm = algo;
+                cfg.topology = Topology::new(n_i, 0)?;
+                cfg.recall_window = sc.window_events as usize;
+                if let Some(at) = sc.chaos_kill_at {
+                    cfg.fault_chaos_kill_seq =
+                        Some(frac_seq(at, total).min(total.saturating_sub(1)));
+                }
+                let rescale = sc.rescale.filter(|_| n_i > 1);
+                if let Some(r) = rescale {
+                    if cfg.rescale_max_n_i == 0 {
+                        cfg.rescale_max_n_i = lcm(n_i, r.to_n_i);
+                    }
+                }
+
+                log::info!(
+                    "scenario '{}': running {label} ({} events)",
+                    sc.name,
+                    events.len()
+                );
+                let mut cluster = Cluster::spawn_labeled(&cfg, &label)?;
+                match rescale {
+                    Some(r) => {
+                        let cut = frac_seq(r.at, total) as usize;
+                        cluster.ingest_batch(&events[..cut])?;
+                        cluster.rescale(Topology::new(r.to_n_i, 0)?)?;
+                        cluster.ingest_batch(&events[cut..])?;
+                    }
+                    None => cluster.ingest_batch(&events)?,
+                }
+                let report = cluster.finish()?;
+
+                let response = drift_seq
+                    .and_then(|at| drift_response(&report.windowed_recall, at));
+                write_window_csv(&sc.out_dir, &label, &report)?;
+                runs.push(ScenarioRun {
+                    label,
+                    dataset: ds_name.clone(),
+                    algorithm: algo,
+                    n_i,
+                    response,
+                    report,
+                });
+            }
+        }
+    }
+
+    let bench_path = write_bench_json(sc, drift_name, &runs)?;
+    Ok(ScenarioOutcome {
+        runs,
+        bench_path,
+        out_dir: PathBuf::from(&sc.out_dir),
+    })
+}
+
+/// Per-run tumbling-window curve: `<out_dir>/<label>_windows.csv`.
+fn write_window_csv(
+    out_dir: &str,
+    label: &str,
+    report: &RunReport,
+) -> Result<()> {
+    let path = Path::new(out_dir).join(format!("{label}_windows.csv"));
+    let mut w = CsvWriter::create(
+        &path,
+        &["window", "start_seq", "events", "hits", "recall"],
+    )?;
+    for stat in &report.windowed_recall {
+        w.row(&[
+            stat.index.to_string(),
+            stat.start_seq.to_string(),
+            stat.events.to_string(),
+            stat.hits.to_string(),
+            format!("{:.6}", stat.recall()),
+        ])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// The scenario summary JSON (one row per grid cell), written to
+/// `sc.bench_out` — schema documented in docs/EXPERIMENTS.md.
+fn write_bench_json(
+    sc: &Scenario,
+    drift_name: &str,
+    runs: &[ScenarioRun],
+) -> Result<PathBuf> {
+    let rows: Vec<Json> = runs
+        .iter()
+        .map(|r| {
+            let mut pairs = vec![
+                ("label", s(&r.label)),
+                ("dataset", s(&r.dataset)),
+                ("algorithm", s(r.algorithm.name())),
+                ("n_i", num(r.n_i as f64)),
+                ("events", num(r.report.events as f64)),
+                ("hits", num(r.report.hits as f64)),
+                ("avg_recall", num(r.report.avg_recall)),
+                ("throughput_ev_s", num(r.report.throughput)),
+                ("rescales", num(r.report.rescales as f64)),
+                ("recoveries", num(r.report.recoveries as f64)),
+                ("replayed_events", num(r.report.replayed_events as f64)),
+            ];
+            if let Some(resp) = r.response {
+                pairs.push(("pre_drift_recall", num(resp.pre)));
+                pairs.push(("dip_recall", num(resp.dip)));
+                pairs.push(("recovered_recall", num(resp.recovered)));
+                pairs.push(("drift_window", num(resp.drift_window as f64)));
+            }
+            obj(pairs)
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", s("drift scenario grid")),
+        ("scenario", s(&sc.name)),
+        ("drift", s(drift_name)),
+        ("events", num(sc.events as f64)),
+        ("seed", num(sc.seed as f64)),
+        ("window_events", num(sc.window_events as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = PathBuf::from(&sc.bench_out);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&path, to_string(&doc) + "\n")?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Forgetting;
+    use crate::data::drift::DriftKind;
+
+    #[test]
+    fn parses_a_full_scenario() {
+        let text = r#"
+            [experiment]
+            name = "abrupt-smoke"
+            events = 4000
+            seed = 9
+            datasets = "nf-like, ml-like"
+            algorithms = "isgd,cosine"
+            topologies = "2,4"
+            window_events = 250
+            out_dir = "results/x"
+            bench_out = "results/x/BENCH_drift.json"
+
+            [drift]
+            kind = "abrupt"
+            at = 0.5
+
+            [rescale]
+            at = 0.75
+            to_n_i = 4
+
+            [forgetting]
+            kind = "lfu"
+            trigger_events = 500
+            min_freq = 2
+        "#;
+        let sc = Scenario::from_toml(text).unwrap();
+        assert_eq!(sc.name, "abrupt-smoke");
+        assert_eq!(sc.events, 4000);
+        assert_eq!(sc.seed, 9);
+        assert_eq!(sc.datasets, vec!["nf-like", "ml-like"]);
+        assert_eq!(sc.algorithms, vec![Algorithm::Isgd, Algorithm::Cosine]);
+        // The central baseline is always prepended.
+        assert_eq!(sc.topologies, vec![1, 2, 4]);
+        assert_eq!(sc.window_events, 250);
+        assert_eq!(sc.drift.kind, Some(DriftKind::Abrupt { at: 0.5 }));
+        assert_eq!(
+            sc.rescale,
+            Some(MidStreamRescale { at: 0.75, to_n_i: 4 })
+        );
+        assert!(matches!(sc.base.forgetting, Forgetting::Lfu { .. }));
+        assert_eq!(sc.drift_seq(), Some(2000));
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let sc = Scenario::from_toml("").unwrap();
+        assert_eq!(sc.topologies, vec![1, 2]);
+        assert_eq!(sc.algorithms, vec![Algorithm::Isgd]);
+        assert!(sc.drift.kind.is_none());
+        assert!(sc.rescale.is_none());
+        assert_eq!(sc.bench_out, "BENCH_drift.json");
+        assert!(sc.drift_seq().is_none());
+    }
+
+    #[test]
+    fn chaos_kill_fraction_parses_and_needs_ft() {
+        let ok = Scenario::from_toml(
+            "[experiment]\nevents = 1000\n\
+             [fault]\ncheckpoint_interval = 32\nchaos_kill_at = 0.5",
+        )
+        .unwrap();
+        // Resolved per stream at run time, not at parse time (explicit
+        // `name:events` specs can differ from `experiment.events`).
+        assert_eq!(ok.chaos_kill_at, Some(0.5));
+        assert_eq!(ok.base.fault_chaos_kill_seq, None);
+        let err = Scenario::from_toml(
+            "[experiment]\nevents = 1000\n[fault]\nchaos_kill_at = 0.5",
+        );
+        assert!(err.is_err(), "chaos without FT must be rejected");
+        assert!(Scenario::from_toml(
+            "[experiment]\nevents = 1000\n\
+             [fault]\ncheckpoint_interval = 32\nchaos_kill_at = 1.5",
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn grid_lists_are_deduplicated() {
+        let sc = Scenario::from_toml(
+            "[experiment]\ndatasets = \"ml-like, ml-like\"\n\
+             topologies = \"2,1,2\"",
+        )
+        .unwrap();
+        assert_eq!(sc.datasets, vec!["ml-like"]);
+        assert_eq!(sc.topologies, vec![2, 1]);
+    }
+
+    #[test]
+    fn rejects_bad_grids() {
+        assert!(Scenario::from_toml(
+            "[experiment]\nalgorithms = \"bogus\""
+        )
+        .is_err());
+        assert!(Scenario::from_toml(
+            "[experiment]\ntopologies = \"0\""
+        )
+        .is_err());
+        assert!(Scenario::from_toml(
+            "[experiment]\ntopologies = \"x\""
+        )
+        .is_err());
+        assert!(Scenario::from_toml(
+            "[rescale]\nat = 1.5\nto_n_i = 2"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn lcm_grid_ceiling() {
+        assert_eq!(lcm(2, 4), 4);
+        assert_eq!(lcm(3, 2), 6);
+        assert_eq!(lcm(1, 5), 5);
+    }
+}

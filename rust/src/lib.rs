@@ -141,6 +141,23 @@
 //! nothing is checkpointed and a worker death is a loud session error —
 //! the paper's original contract.
 //!
+//! ## Concept drift & windowed evaluation
+//!
+//! The synthetic generator can be wrapped in a drift scenario
+//! ([`data::drift`]): six deterministic, seedable shapes — abrupt
+//! preference flip, gradual rotation, recurring/seasonal drift,
+//! popularity inversion, user churn + cold-start waves, arrival-rate
+//! bursts — each a pure function of popularity ranks, scheduled as
+//! stream fractions. Alongside the paper's cumulative moving-average
+//! recall, every run now reports *windowed* (tumbling, time-local)
+//! recall ([`eval::windowed`]): `RunReport::windowed_recall` globally,
+//! `WorkerReport::windows` per worker — the view where a drift shows up
+//! as a dip and recovery as the climb back. The `streamrec experiment`
+//! subcommand ([`experiments::scenario`]) runs declarative
+//! baseline-vs-distributed grids over drifted streams and records each
+//! run's drift response (`BENCH_drift.json`; schema in
+//! docs/EXPERIMENTS.md, knobs in docs/CONFIG.md).
+//!
 //! ## Migrating from `run_pipeline`
 //!
 //! The historical one-shot entry point survives with identical signature

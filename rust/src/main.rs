@@ -1,7 +1,10 @@
 //! `streamrec` — leader entrypoint and CLI.
 //!
 //! Subcommands:
-//! * `run`        — run one pipeline configuration and print the report.
+//! * `run`        — drive one stream through a live cluster session and
+//!   print the live metrics + final report.
+//! * `experiment` — run a declarative drift-scenario grid from a TOML
+//!   file (baseline vs distributed, windowed recall, `BENCH_drift.json`).
 //! * `table1`     — print dataset characteristics.
 //! * `gen-data`   — write a synthetic rating stream to CSV.
 //! * `backends`   — cross-check native vs PJRT backends on one stream.
@@ -10,16 +13,17 @@
 //! ```text
 //! streamrec run --dataset ml-like:100000 --ni 4 --algorithm isgd
 //! streamrec run --dataset nf-like:50000 --ni 2 --forgetting lru
-//! streamrec run --config configs/disgd_ml.toml
+//! streamrec experiment --config configs/drift_smoke.toml
 //! streamrec backends --events 3000
 //! ```
 
 use anyhow::{bail, Result};
 
 use streamrec::config::{Algorithm, Backend, Forgetting, RunConfig, Topology};
-use streamrec::coordinator::run_pipeline;
+use streamrec::coordinator::Cluster;
 use streamrec::data::stats::DatasetStats;
 use streamrec::data::DatasetSpec;
+use streamrec::experiments::{run_scenario, Scenario};
 use streamrec::util::args::Args;
 use streamrec::util::logging;
 
@@ -28,6 +32,7 @@ fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("experiment") => cmd_experiment(&args),
         Some("table1") => cmd_table1(&args),
         Some("gen-data") => cmd_gen_data(&args),
         Some("backends") => cmd_backends(&args),
@@ -47,6 +52,10 @@ USAGE:
   streamrec run [--config FILE] [--dataset SPEC] [--algorithm isgd|cosine]
                 [--ni N] [--w W] [--backend native|pjrt]
                 [--forgetting none|lru|lfu|decay] [--seed S] [--top-n N]
+  streamrec experiment --config SCENARIO.toml
+                                    # drift-scenario grid: baseline vs
+                                    # distributed, windowed recall curves,
+                                    # BENCH_drift.json (docs/EXPERIMENTS.md)
   streamrec table1 [--events N] [--seed S]
   streamrec gen-data --dataset SPEC --out FILE.csv
   streamrec backends [--events N]   # native-vs-PJRT cross-check
@@ -57,7 +66,7 @@ DATASET SPEC:
   ml-csv:<path>      real MovieLens ratings.csv
   nf-file:<path>     real Netflix combined_data file
 
-Figures/tables of the paper: use the `figures` binary."
+Paper figures/tables: `cargo run --release --bin figures -- --exp all`."
     );
 }
 
@@ -130,7 +139,26 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.topology.n_i,
         cfg.forgetting.name()
     );
-    let report = run_pipeline(&cfg, &events, &label)?;
+    // Drive the stream through a live session (the `run_pipeline`
+    // wrapper would hide the live-metrics surface this command prints).
+    let mut cluster = Cluster::spawn_labeled(&cfg, &label)?;
+    cluster.ingest_batch(&events)?;
+    let live = cluster.metrics()?;
+    println!(
+        "live: ingested={} processed={} recall={:.4} queries={} \
+         rescales={} recoveries={} replayed={} checkpoint_bytes={} \
+         router_epoch={}",
+        live.ingested,
+        live.processed,
+        live.recall,
+        live.queries,
+        live.rescales,
+        live.recoveries,
+        live.replayed_events,
+        live.checkpoint_bytes,
+        live.router_epoch
+    );
+    let report = cluster.finish()?;
     println!("{}", report.summary());
     println!(
         "latency: {}   route: {:.0} ns/event   backpressure: {:.1} ms   \
@@ -166,6 +194,53 @@ fn cmd_run(args: &Args) -> Result<()> {
         w.flush()?;
         println!("recall curve written to {out}");
     }
+    Ok(())
+}
+
+/// Run a declarative drift-scenario grid (`--config scenario.toml`):
+/// baseline `n_i = 1` vs distributed topologies over drifted streams,
+/// per-window recall CSVs, and a `BENCH_drift.json` summary. The
+/// scenario schema is documented in docs/EXPERIMENTS.md.
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let path = args
+        .get("config")
+        .ok_or_else(|| anyhow::anyhow!(
+            "experiment needs --config <scenario.toml> (see docs/EXPERIMENTS.md)"
+        ))?;
+    let scenario = Scenario::from_file(path)?;
+    let t0 = std::time::Instant::now();
+    let outcome = run_scenario(&scenario)?;
+    println!(
+        "== scenario '{}': {} runs, drift={} ==",
+        scenario.name,
+        outcome.runs.len(),
+        scenario.drift.kind.map(|k| k.name()).unwrap_or("none"),
+    );
+    for run in &outcome.runs {
+        let drift_cols = match run.response {
+            Some(r) => format!(
+                "pre={:.4} dip={:.4} recovered={:.4}",
+                r.pre, r.dip, r.recovered
+            ),
+            None => "-".to_string(),
+        };
+        println!(
+            "  {:42} recall={:.4} thpt={:>9.0} ev/s rescales={} \
+             recoveries={}  {}",
+            run.label,
+            run.report.avg_recall,
+            run.report.throughput,
+            run.report.rescales,
+            run.report.recoveries,
+            drift_cols
+        );
+    }
+    println!(
+        "done in {:.1}s; windows under {}/, summary in {}",
+        t0.elapsed().as_secs_f64(),
+        outcome.out_dir.display(),
+        outcome.bench_path.display()
+    );
     Ok(())
 }
 
@@ -219,7 +294,9 @@ fn cmd_backends(args: &Args) -> Result<()> {
             ..RunConfig::default()
         };
         let label = format!("backend-{}", backend.name());
-        let report = run_pipeline(&cfg, &events, &label)?;
+        let mut cluster = Cluster::spawn_labeled(&cfg, &label)?;
+        cluster.ingest_batch(&events)?;
+        let report = cluster.finish()?;
         println!("{}", report.summary());
         results.push(report);
     }

@@ -1,0 +1,278 @@
+//! Drift-scenario integration suite: generator determinism, the
+//! windowed-recall reconciliation invariants, and the headline
+//! acceptance property — an abrupt-drift scenario driven end to end
+//! through the `streamrec experiment` path shows windowed recall
+//! dipping at the drift point and recovering, for both the central
+//! baseline and a distributed grid.
+
+use std::path::PathBuf;
+
+use streamrec::config::RunConfig;
+use streamrec::coordinator::run_pipeline;
+use streamrec::data::drift::{DriftConfig, DriftKind, DriftStream};
+use streamrec::data::synth::SyntheticConfig;
+use streamrec::data::types::Rating;
+use streamrec::experiments::{run_scenario, Scenario};
+use streamrec::util::json::Json;
+use streamrec::util::proptest::forall;
+
+/// Property: every drift shape is a pure function of (seed, config) —
+/// two streams built the same way are element-identical, whatever the
+/// shape and wherever its schedule lands.
+#[test]
+fn drift_streams_replay_deterministically() {
+    forall("drift_determinism", 24, |rng| {
+        let at = rng.next_bounded(90) as f64 / 100.0;
+        let kind = match rng.next_bounded(6) {
+            0 => DriftKind::Abrupt { at },
+            1 => DriftKind::Rotate { start: at, end: (at + 0.3).min(1.0) },
+            2 => DriftKind::Recurring {
+                period_events: 100 + rng.next_bounded(900),
+            },
+            3 => DriftKind::Invert { at },
+            4 => DriftKind::Churn {
+                at,
+                fraction: rng.next_bounded(100) as f64 / 100.0,
+            },
+            _ => DriftKind::Burst {
+                at,
+                len: 0.2,
+                factor: 1.0 + rng.next_bounded(16) as f64,
+            },
+        };
+        let seed = rng.next_bounded(1 << 30);
+        let make = || {
+            DriftStream::new(
+                SyntheticConfig::netflix_like(1500, seed),
+                DriftConfig { kind: Some(kind) },
+            )
+            .collect::<Vec<Rating>>()
+        };
+        let a = make();
+        let b = make();
+        assert_eq!(a, b, "seed {seed} / {kind:?} must replay identically");
+        assert_eq!(a.len(), 1500);
+    });
+}
+
+/// The windowed series is an exact re-bucketing of the cumulative
+/// outcomes: sums reconcile with the lifetime totals, the weighted mean
+/// of window recalls is the average recall, and changing the window
+/// size never changes the underlying hit sequence.
+#[test]
+fn windowed_recall_reconciles_with_cumulative_curve() {
+    let events: Vec<Rating> = DriftStream::new(
+        SyntheticConfig::netflix_like(4000, 21),
+        DriftConfig::from_toml("[drift]\nkind = \"abrupt\"\nat = 0.5").unwrap(),
+    )
+    .collect();
+    let mut reports = Vec::new();
+    for window in [250usize, 500] {
+        let cfg = RunConfig {
+            recall_window: window,
+            sample_every: 100,
+            ..RunConfig::default()
+        };
+        let report =
+            run_pipeline(&cfg, &events, &format!("t-w{window}")).unwrap();
+        let w_events: u64 =
+            report.windowed_recall.iter().map(|w| w.events).sum();
+        let w_hits: u64 = report.windowed_recall.iter().map(|w| w.hits).sum();
+        assert_eq!(w_events, report.events, "window={window}");
+        assert_eq!(w_hits, report.hits, "window={window}");
+        let weighted: f64 = report
+            .windowed_recall
+            .iter()
+            .map(|w| w.recall() * w.events as f64)
+            .sum::<f64>()
+            / report.events as f64;
+        assert!(
+            (weighted - report.avg_recall).abs() < 1e-9,
+            "window={window}: weighted mean must equal avg recall"
+        );
+        // Per-worker windows cover the same totals.
+        let worker_events: u64 = report
+            .workers
+            .iter()
+            .flat_map(|w| &w.windows)
+            .map(|w| w.events)
+            .sum();
+        assert_eq!(worker_events, report.events, "window={window}");
+        reports.push(report);
+    }
+    // The window size is a *view* parameter: the evaluated hit sequence
+    // (and therefore the lifetime totals) is identical underneath.
+    assert_eq!(reports[0].hits, reports[1].hits);
+    assert_eq!(reports[0].events, reports[1].events);
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("streamrec_drift_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Acceptance: the declarative driver runs a baseline-vs-distributed
+/// abrupt-drift grid end to end, writes `BENCH_drift.json` and the
+/// per-window CSVs, and every run's windowed recall dips at the drift
+/// point and climbs back.
+#[test]
+fn abrupt_drift_scenario_dips_and_recovers_end_to_end() {
+    let dir = temp_dir("abrupt");
+    let toml = format!(
+        r#"
+        [experiment]
+        name = "abrupt-accept"
+        events = 20000
+        seed = 11
+        datasets = "ml-like"
+        algorithms = "isgd"
+        topologies = "1,2"
+        window_events = 1000
+        out_dir = "{out}"
+        bench_out = "{bench}"
+
+        [drift]
+        kind = "abrupt"
+        at = 0.5
+        "#,
+        out = dir.join("windows").display(),
+        bench = dir.join("BENCH_drift.json").display(),
+    );
+    let scenario_path = dir.join("scenario.toml");
+    std::fs::write(&scenario_path, toml).unwrap();
+
+    let scenario = Scenario::from_file(&scenario_path).unwrap();
+    assert_eq!(scenario.drift_seq(), Some(10_000));
+    let outcome = run_scenario(&scenario).unwrap();
+    assert_eq!(outcome.runs.len(), 2, "baseline + ni2");
+
+    for run in &outcome.runs {
+        assert_eq!(run.report.events, 20_000, "{}", run.label);
+        let resp = run
+            .response
+            .unwrap_or_else(|| panic!("{}: drift response missing", run.label));
+        assert_eq!(resp.drift_window, 10, "{}", run.label);
+        assert!(
+            resp.pre > 0.03,
+            "{}: model must have learned something pre-drift (pre={})",
+            run.label,
+            resp.pre
+        );
+        assert!(
+            resp.dip < 0.6 * resp.pre,
+            "{}: windowed recall must dip at the drift point \
+             (pre={} dip={})",
+            run.label,
+            resp.pre,
+            resp.dip
+        );
+        assert!(
+            resp.recovered > resp.dip,
+            "{}: windowed recall must recover after the dip \
+             (dip={} recovered={})",
+            run.label,
+            resp.dip,
+            resp.recovered
+        );
+        // Per-window CSV exists and has one row per window + header.
+        let csv = dir.join("windows").join(format!("{}_windows.csv", run.label));
+        let text = std::fs::read_to_string(&csv)
+            .unwrap_or_else(|e| panic!("{}: {e}", csv.display()));
+        assert_eq!(
+            text.lines().count(),
+            1 + run.report.windowed_recall.len(),
+            "{}",
+            run.label
+        );
+        assert!(text.starts_with("window,start_seq,events,hits,recall"));
+    }
+
+    // The JSON summary exists, parses, and carries the drift columns.
+    let bench = std::fs::read_to_string(dir.join("BENCH_drift.json")).unwrap();
+    let doc = Json::parse(&bench).unwrap();
+    assert_eq!(doc.get("scenario").unwrap().as_str(), Some("abrupt-accept"));
+    assert_eq!(doc.get("drift").unwrap().as_str(), Some("abrupt"));
+    let rows = doc.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    for row in rows {
+        assert!(row.get("pre_drift_recall").is_some());
+        assert!(row.get("dip_recall").is_some());
+        assert!(row.get("recovered_recall").is_some());
+        assert!(row.get("avg_recall").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    // Baseline and distributed both present, comparable by label.
+    let labels: Vec<&str> =
+        outcome.runs.iter().map(|r| r.label.as_str()).collect();
+    assert!(labels.iter().any(|l| l.contains("-ni1-")));
+    assert!(labels.iter().any(|l| l.contains("-ni2-")));
+}
+
+/// The scenario driver composes with the PR 3/4 runtime: a mid-stream
+/// rescale and a chaos kill inside one drifted grid run, with the
+/// windowed accounting still exact.
+#[test]
+fn scenario_survives_rescale_and_chaos_kill() {
+    let dir = temp_dir("chaos");
+    let toml = format!(
+        r#"
+        [experiment]
+        name = "chaos-rescale"
+        events = 6000
+        seed = 5
+        datasets = "nf-like"
+        algorithms = "isgd"
+        topologies = "2"
+        window_events = 500
+        out_dir = "{out}"
+        bench_out = "{bench}"
+
+        [drift]
+        kind = "churn"
+        at = 0.5
+        fraction = 0.4
+
+        [rescale]
+        at = 0.4
+        to_n_i = 4
+
+        [fault]
+        checkpoint_interval = 64
+        chaos_kill_at = 0.75
+        "#,
+        out = dir.join("windows").display(),
+        bench = dir.join("BENCH_drift.json").display(),
+    );
+    let path = dir.join("scenario.toml");
+    std::fs::write(&path, toml).unwrap();
+    let scenario = Scenario::from_file(&path).unwrap();
+    // The kill fraction resolves against the stream length at run time
+    // (0.75 * 6000 = seq 4500).
+    assert_eq!(scenario.chaos_kill_at, Some(0.75));
+    let outcome = run_scenario(&scenario).unwrap();
+    assert_eq!(outcome.runs.len(), 2, "baseline + ni2");
+
+    for run in &outcome.runs {
+        assert_eq!(run.report.events, 6000, "{}", run.label);
+        assert_eq!(
+            run.report.recoveries, 1,
+            "{}: the chaos kill must fire and be recovered",
+            run.label
+        );
+        let w_events: u64 =
+            run.report.windowed_recall.iter().map(|w| w.events).sum();
+        assert_eq!(
+            w_events, 6000,
+            "{}: windowed accounting exact across crash + cutover",
+            run.label
+        );
+        if run.n_i == 1 {
+            assert_eq!(run.report.rescales, 0, "baseline is never rescaled");
+        } else {
+            assert_eq!(run.report.rescales, 1, "{}", run.label);
+            assert_eq!(run.report.n_workers, 16, "ended at n_i=4");
+        }
+    }
+}
