@@ -1,0 +1,93 @@
+//! Transport benchmarks: what does putting workers behind loopback TCP
+//! cost, relative to in-process channel senders?
+//!
+//! Same stream, same seed, same topology — only `[cluster] workers`
+//! changes: all-local vs all-TCP (against an in-process
+//! [`WorkerServer`](streamrec::net::WorkerServer) on an ephemeral
+//! loopback port) vs a mixed half/half cycle. Correctness is asserted,
+//! not assumed: every placement must produce the identical hit count
+//! (the transport property the equivalence tests prove; here it guards
+//! the numbers). Results are recorded in `BENCH_transport.json`.
+
+use std::time::Instant;
+
+use streamrec::config::{RunConfig, Topology};
+use streamrec::coordinator::run_pipeline;
+use streamrec::data::DatasetSpec;
+use streamrec::net::WorkerServer;
+use streamrec::util::json::{num, obj, s, to_string, Json};
+
+fn main() -> anyhow::Result<()> {
+    println!("== transport benchmarks (in-proc vs loopback TCP) ==");
+    let events = DatasetSpec::parse("nf-like:30000", 21)?.load()?;
+
+    // One host serves every remote slot (each connection is its own
+    // actor, exactly like a separate `streamrec worker` process).
+    let server = WorkerServer::bind("127.0.0.1:0")?;
+    let addr = format!("tcp://{}", server.local_addr());
+
+    let placements: [(&str, Vec<String>); 3] = [
+        ("in-proc", vec![]),
+        ("loopback-tcp", vec![addr.clone()]),
+        ("mixed", vec!["local".to_string(), addr.clone()]),
+    ];
+
+    println!(
+        "\n{:>14} {:>10} {:>12} {:>10} {:>10}",
+        "placement", "events", "ev/s", "hits", "vs in-proc"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base_thpt = None;
+    let mut base_hits = None;
+    for (name, workers) in placements {
+        let cfg = RunConfig {
+            topology: Topology::new(2, 0)?,
+            sample_every: 10_000,
+            cluster_workers: workers,
+            ..RunConfig::default()
+        };
+        // Warmup pass (connection setup, allocator, page cache), then
+        // the measured pass.
+        run_pipeline(&cfg, &events[..2000], &format!("warmup-{name}"))?;
+        let t0 = Instant::now();
+        let r = run_pipeline(&cfg, &events, &format!("bench-{name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        if base_thpt.is_none() {
+            base_thpt = Some(r.throughput);
+            base_hits = Some(r.hits);
+        }
+        // The transports must be indistinguishable above the supervisor.
+        assert_eq!(
+            Some(r.hits),
+            base_hits,
+            "placement '{name}' changed the hit count"
+        );
+        let rel = r.throughput / base_thpt.unwrap().max(1e-9);
+        println!(
+            "{name:>14} {:>10} {:>12.0} {:>10} {rel:>9.2}x",
+            r.events, r.throughput, r.hits
+        );
+        rows.push(obj(vec![
+            ("placement", s(name)),
+            ("events", num(r.events as f64)),
+            ("throughput_ev_s", num(r.throughput)),
+            ("hits", num(r.hits as f64)),
+            ("relative_to_inproc", num(rel)),
+            ("wall_s", num(dt)),
+        ]));
+    }
+
+    let doc = obj(vec![
+        ("bench", s("worker transport: in-proc vs loopback TCP")),
+        ("dataset", s("nf-like:30000 (seed 21)")),
+        ("algorithm", s("isgd")),
+        ("n_i", num(2.0)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_transport.json", to_string(&doc) + "\n")?;
+    println!("\n(recorded in BENCH_transport.json)");
+
+    server.wait_idle(std::time::Duration::from_millis(200));
+    server.shutdown()?;
+    Ok(())
+}

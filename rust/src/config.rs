@@ -248,6 +248,14 @@ pub struct RunConfig {
     /// With fault tolerance off there are no checkpoints, so this
     /// degenerates to the plain event kill.
     pub fault_chaos_kill_in_checkpoint: bool,
+    /// Worker transport plan (TOML: `cluster.workers`): one endpoint
+    /// string per entry, cycled over the worker slots in order. `"local"`
+    /// (or `"inproc"`) spawns the slot as an in-process thread;
+    /// `"tcp://host:port"` dials a remote `streamrec worker --listen`
+    /// host and runs the slot there. Empty (the default) means every
+    /// worker is a local thread — the pre-networking behavior,
+    /// bit-for-bit. See docs/CONFIG.md and `net/`.
+    pub cluster_workers: Vec<String>,
 }
 
 impl Default for RunConfig {
@@ -275,6 +283,7 @@ impl Default for RunConfig {
             fault_replay_log_capacity: 65_536,
             fault_chaos_kill_seq: None,
             fault_chaos_kill_in_checkpoint: false,
+            cluster_workers: Vec::new(),
         }
     }
 }
@@ -388,6 +397,11 @@ impl RunConfig {
         if let Some(v) = get("run.artifacts_dir") {
             cfg.artifacts_dir = v.str()?.to_string();
         }
+        if let Some(v) = get("cluster.workers") {
+            cfg.cluster_workers = v
+                .str_list()
+                .context("cluster.workers must be a list of strings")?;
+        }
         Ok(cfg)
     }
 }
@@ -403,6 +417,8 @@ pub enum TomlValue {
     Float(f64),
     /// `true` | `false`.
     Bool(bool),
+    /// A single-line array of scalars, e.g. `["local", "tcp://h:p"]`.
+    List(Vec<TomlValue>),
 }
 
 impl TomlValue {
@@ -436,6 +452,19 @@ impl TomlValue {
             TomlValue::Int(i) => Ok(*i as f64),
             TomlValue::Float(f) => Ok(*f),
             other => Err(anyhow!("expected number, got {other:?}")),
+        }
+    }
+
+    /// The value as a list of strings (an empty `[]` is fine), or an
+    /// error for any other shape — including a list with a non-string
+    /// element.
+    pub fn str_list(&self) -> Result<Vec<String>> {
+        match self {
+            TomlValue::List(items) => items
+                .iter()
+                .map(|v| v.str().map(str::to_string))
+                .collect(),
+            other => Err(anyhow!("expected list of strings, got {other:?}")),
         }
     }
 
@@ -495,6 +524,23 @@ fn strip_comment(line: &str) -> &str {
 }
 
 fn parse_value(v: &str, lineno: usize) -> Result<TomlValue> {
+    if let Some(stripped) = v.strip_prefix('[') {
+        let inner = stripped
+            .strip_suffix(']')
+            .ok_or_else(|| {
+                anyhow!("line {lineno}: unterminated array (arrays must be \
+                         single-line)")
+            })?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::List(Vec::new()));
+        }
+        return split_array_items(inner, lineno)?
+            .into_iter()
+            .map(|item| parse_value(item.trim(), lineno))
+            .collect::<Result<Vec<_>>>()
+            .map(TomlValue::List);
+    }
     if let Some(stripped) = v.strip_prefix('"') {
         let inner = stripped
             .strip_suffix('"')
@@ -513,6 +559,36 @@ fn parse_value(v: &str, lineno: usize) -> Result<TomlValue> {
         return Ok(TomlValue::Float(f));
     }
     bail!("line {lineno}: cannot parse value '{v}'")
+}
+
+/// Split the inside of a single-line array on top-level commas (commas
+/// inside quoted strings or nested brackets don't count).
+fn split_array_items(inner: &str, lineno: usize) -> Result<Vec<&str>> {
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    let mut depth = 0usize;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or_else(|| {
+                    anyhow!("line {lineno}: unbalanced ']' in array")
+                })?;
+            }
+            ',' if !in_str && depth == 0 => {
+                items.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str || depth != 0 {
+        bail!("line {lineno}: unbalanced array literal");
+    }
+    items.push(&inner[start..]);
+    Ok(items)
 }
 
 #[cfg(test)]
@@ -640,6 +716,45 @@ mod tests {
         assert!(TomlValue::Float(1.5).frac().is_err());
         assert!(TomlValue::Float(-0.1).frac().is_err());
         assert!(TomlValue::Str("x".into()).frac().is_err());
+    }
+
+    #[test]
+    fn parses_cluster_section() {
+        let cfg = RunConfig::default();
+        assert!(cfg.cluster_workers.is_empty(), "default: all-local");
+        let cfg = RunConfig::from_toml(
+            "[cluster]\nworkers = [\"local\", \"tcp://127.0.0.1:7461\"] \
+             # mixed plan",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.cluster_workers,
+            vec!["local".to_string(), "tcp://127.0.0.1:7461".to_string()]
+        );
+        let cfg = RunConfig::from_toml("[cluster]\nworkers = []").unwrap();
+        assert!(cfg.cluster_workers.is_empty());
+    }
+
+    #[test]
+    fn array_parsing_rejects_bad_shapes() {
+        // Non-string elements in cluster.workers are a loud error.
+        assert!(RunConfig::from_toml("[cluster]\nworkers = [1, 2]").is_err());
+        // A scalar where a list is expected is a loud error.
+        assert!(
+            RunConfig::from_toml("[cluster]\nworkers = \"local\"").is_err()
+        );
+        // Unterminated / unbalanced arrays are loud errors.
+        assert!(parse_toml_subset("a = [\"x\"").is_err());
+        assert!(parse_toml_subset("a = [\"x\"]]").is_err());
+        // Commas inside quoted strings don't split items.
+        let kv = parse_toml_subset("a = [\"x,y\", \"z\"]").unwrap();
+        assert_eq!(
+            kv["a"],
+            TomlValue::List(vec![
+                TomlValue::Str("x,y".into()),
+                TomlValue::Str("z".into())
+            ])
+        );
     }
 
     #[test]

@@ -290,6 +290,18 @@ impl Cluster {
             },
         );
 
+        // Where each worker slot runs: local threads unless the config
+        // lists `[cluster] workers` entries to cycle over.
+        let transports = crate::net::transport_plan(cfg)?;
+        if !cfg.cluster_workers.is_empty() {
+            let labels: Vec<String> =
+                transports.iter().map(|t| t.describe()).collect();
+            log::info!(
+                "cluster '{label}': worker placement cycle = [{}]",
+                labels.join(", ")
+            );
+        }
+
         // Channels: coordinator -> workers (bounded, backpressured),
         // workers -> collector (bounded; hit batches are small).
         let (col_tx, col_rx) = bounded::<CollectorMsg>(n_c * 4 + 16);
@@ -309,7 +321,7 @@ impl Cluster {
             cfg: cfg.clone(),
             grid,
             router,
-            sup: Supervisor::new(cfg, grid, col_tx.clone()),
+            sup: Supervisor::new(cfg, grid, col_tx.clone(), transports),
             route_bufs: Vec::new(),
             batch_size,
             collector: Some(collector),

@@ -3,10 +3,16 @@
 //!
 //! The [`Cluster`](crate::coordinator::Cluster) owns the *session* —
 //! routing, buffering, the public API. This module owns the *workers*:
-//! it spawns each generation's [`WorkerActor`]s, detects crashes (a
-//! failed channel send, a [`WorkerHandle::is_finished`] liveness scan,
-//! or a panic surfacing at join), and brings a crashed worker back so
-//! the session never notices.
+//! it spawns each generation's
+//! [`WorkerActor`](crate::engine::actor::WorkerActor)s through the
+//! session's [`Transport`] plan (local threads, remote TCP peers, or a
+//! mix — `[cluster] workers`), detects crashes (a failed channel send,
+//! a [`WorkerHandle::is_finished`] liveness scan, or a panic surfacing
+//! at join), and brings a crashed worker back so the session never
+//! notices. Remote placement is crash-transparent too: a lost
+//! connection panics the proxy thread standing in for the worker, so
+//! both detection paths fire unchanged, and the respawn re-dials the
+//! same address (placement is `slot mod transports`).
 //!
 //! # The recovery contract
 //!
@@ -41,6 +47,7 @@
 
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -49,11 +56,11 @@ use crate::config::{RunConfig, Topology};
 use crate::coordinator::router::{Router, StateGrid};
 use crate::engine::actor::{
     lane_frame_watermark, zero_lane_frame_counters, ChaosPolicy,
-    CheckpointMsg, CollectorMsg, Envelope, WorkerActor, WorkerExport,
-    WorkerMsg,
+    CheckpointMsg, CollectorMsg, Envelope, WorkerExport, WorkerMsg,
 };
-use crate::engine::{bounded, spawn, ChannelStats, Receiver, Sender, WorkerHandle};
+use crate::engine::{bounded, ChannelStats, Receiver, Sender, WorkerHandle};
 use crate::eval::WorkerReport;
+use crate::net::{Transport, WorkerBoot};
 
 /// Cumulative fault-tolerance counters, surfaced in `ClusterMetrics` and
 /// `RunReport`.
@@ -135,6 +142,10 @@ impl ReplayLog {
 
 /// Spawns, watches, checkpoints, and recovers the worker plane.
 pub(crate) struct Supervisor {
+    /// Where worker slots run: cycled by slot index (`wid % len`), so
+    /// respawns keep their placement. Always non-empty — the default
+    /// plan is a single in-proc transport.
+    transports: Vec<Arc<dyn Transport>>,
     /// Configuration echo; the topology field tracks rescales.
     cfg: RunConfig,
     grid: StateGrid,
@@ -172,11 +183,14 @@ impl Supervisor {
         cfg: &RunConfig,
         grid: StateGrid,
         col_tx: Sender<CollectorMsg>,
+        transports: Vec<Arc<dyn Transport>>,
     ) -> Self {
+        debug_assert!(!transports.is_empty(), "empty transport plan");
         let enabled = cfg.fault_checkpoint_interval > 0;
         let (ckpt_tx, ckpt_rx) =
             bounded::<CheckpointMsg>(grid.n_lanes() as usize + 64);
         Self {
+            transports,
             cfg: cfg.clone(),
             grid,
             col_tx: Some(col_tx),
@@ -221,13 +235,17 @@ impl Supervisor {
         debug_assert!(self.slots.is_empty(), "previous generation not retired");
         let chaos = self.chaos;
         let mut slots = Vec::with_capacity(n_c);
-        for _ in 0..n_c {
-            slots.push(self.spawn_slot(chaos));
+        for wid in 0..n_c {
+            slots.push(self.spawn_slot(wid, chaos));
         }
         self.slots = slots;
     }
 
-    fn spawn_slot(&mut self, chaos: ChaosPolicy) -> WorkerSlot {
+    /// Stand up one worker slot via its transport. `wid` is the slot
+    /// index in the generation — `wid % transports.len()` picks the
+    /// placement, so a respawned slot re-dials the same address its
+    /// predecessor used.
+    fn spawn_slot(&mut self, wid: usize, chaos: ChaosPolicy) -> WorkerSlot {
         let ord = self.next_ord;
         self.next_ord += 1;
         let (tx, rx) = bounded::<WorkerMsg>(self.cfg.channel_capacity);
@@ -241,16 +259,21 @@ impl Supervisor {
         } else {
             None
         };
-        let actor = WorkerActor::new(
+        let transport = &self.transports[wid % self.transports.len()];
+        log::debug!(
+            "supervisor: slot {wid} spawns worker {ord} on {}",
+            transport.describe()
+        );
+        let boot = WorkerBoot {
             ord,
-            self.cfg.clone(),
-            self.grid,
+            cfg: self.cfg.clone(),
+            grid: self.grid,
             rx,
             col_tx,
             ckpt_tx,
             chaos,
-        );
-        let handle = spawn(ord, "worker", move || actor.run());
+        };
+        let handle = transport.spawn_worker(boot);
         WorkerSlot {
             ord,
             tx: Some(tx),
@@ -525,7 +548,7 @@ impl Supervisor {
         // The injected kill (if any) has fired; never arm a replacement,
         // or the replayed suffix would re-trigger it.
         self.chaos = ChaosPolicy::none();
-        let mut slot = self.spawn_slot(ChaosPolicy::none());
+        let mut slot = self.spawn_slot(wid, ChaosPolicy::none());
         slot.respawns = respawns;
         slot.last_respawn = Some(now);
         self.slots[wid] = slot;
@@ -815,7 +838,8 @@ mod tests {
         };
         let grid = StateGrid::for_config(&cfg).unwrap(); // 1x1: lane 0
         let (col_tx, _col_rx) = bounded::<CollectorMsg>(4);
-        let mut sup = Supervisor::new(&cfg, grid, col_tx);
+        let transports = crate::net::transport_plan(&cfg).unwrap();
+        let mut sup = Supervisor::new(&cfg, grid, col_tx, transports);
         sup.record_ingest(env(0, 1, 1), 0);
         sup.record_ingest(env(1, 1, 1), 0);
         assert!(sup.lost.is_empty(), "nothing evicted yet");

@@ -227,6 +227,23 @@ impl ChaosPolicy {
             in_checkpoint: cfg.fault_chaos_kill_in_checkpoint,
         }
     }
+
+    /// Rebuild a policy from its two knobs — the networked transport
+    /// ships the armed policy inside its hello frame so a remote host
+    /// arms exactly what an in-proc spawn would have.
+    pub(crate) fn from_parts(kill_at_seq: Option<u64>, in_checkpoint: bool) -> Self {
+        Self { kill_at_seq, in_checkpoint }
+    }
+
+    /// The armed kill position, if any.
+    pub(crate) fn kill_at_seq(&self) -> Option<u64> {
+        self.kill_at_seq
+    }
+
+    /// Whether the kill defers to the next checkpoint attempt.
+    pub(crate) fn kill_in_checkpoint(&self) -> bool {
+        self.in_checkpoint
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -765,6 +782,40 @@ mod tests {
         let bytes = encode_lane_frame(&lane);
         let model_len = lane.model.export_partition(&|_| true).len();
         assert_eq!(bytes.len(), LANE_FRAME_HEADER + model_len);
+    }
+
+    #[test]
+    fn property_lane_frame_header_round_trips_and_rejects_prefixes() {
+        // Randomized counters/watermarks/clocks round-trip exactly, and
+        // every strict prefix of the header decodes to a loud WireError
+        // (never a panic) — the contract the networked transport leans
+        // on when lane frames cross a socket.
+        crate::util::proptest::forall("lane_frame_header", 32, |rng| {
+            let mut lane = test_lane();
+            lane.processed = rng.next_u64();
+            lane.hits = rng.next_bounded(1 << 40);
+            lane.evicted = rng.next_bounded(1 << 40);
+            lane.sweeps = rng.next_bounded(1 << 20);
+            lane.watermark = if rng.next_bounded(4) == 0 {
+                None
+            } else {
+                Some(rng.next_u64())
+            };
+            let bytes = encode_lane_frame(&lane);
+            let frame = decode_lane_frame(&bytes).unwrap();
+            assert_eq!(frame.processed, lane.processed);
+            assert_eq!(frame.hits, lane.hits);
+            assert_eq!(frame.evicted, lane.evicted);
+            assert_eq!(frame.sweeps, lane.sweeps);
+            assert_eq!(frame.watermark, lane.watermark);
+            assert_eq!(lane_frame_watermark(&bytes), lane.watermark);
+            for cut in 0..LANE_FRAME_HEADER {
+                assert!(
+                    decode_lane_frame(&bytes[..cut]).is_err(),
+                    "prefix of {cut} bytes must error"
+                );
+            }
+        });
     }
 
     #[test]

@@ -171,6 +171,25 @@ impl Scenario {
                  off; set fault.checkpoint_interval > 0 (or drop the kill)"
             );
         }
+        // A chaos kill is injected *inside the worker actor*, so with
+        // remote workers it would kill the remote host's slot, not
+        // exercise the coordinator's connection-loss path — and which
+        // slot dies depends on the placement cycle. Keep the
+        // combination out of declarative scenarios; the dedicated
+        // transport tests cover remote failure deterministically.
+        let has_remote = base.cluster_workers.iter().any(|w| {
+            let w = w.trim();
+            !w.eq_ignore_ascii_case("local") && !w.eq_ignore_ascii_case("inproc")
+        });
+        if (base.fault_chaos_kill_seq.is_some() || chaos_kill_at.is_some())
+            && has_remote
+        {
+            bail!(
+                "scenario schedules a chaos kill AND lists remote workers \
+                 under [cluster]; chaos injection is only supported for \
+                 in-process workers (drop the kill or the tcp:// entries)"
+            );
+        }
         base.seed = seed;
 
         let sc = Self {
@@ -532,6 +551,26 @@ mod tests {
              [fault]\ncheckpoint_interval = 32\nchaos_kill_at = 1.5",
         )
         .is_err());
+    }
+
+    #[test]
+    fn chaos_kill_rejects_remote_workers() {
+        let err = Scenario::from_toml(
+            "[experiment]\nevents = 1000\n\
+             [fault]\ncheckpoint_interval = 32\nchaos_kill_at = 0.5\n\
+             [cluster]\nworkers = [\"local\", \"tcp://127.0.0.1:7461\"]",
+        )
+        .expect_err("chaos kill + remote workers must be rejected")
+        .to_string();
+        assert!(err.contains("remote workers"), "loud cause: {err}");
+        // All-local placement cycles stay allowed.
+        let ok = Scenario::from_toml(
+            "[experiment]\nevents = 1000\n\
+             [fault]\ncheckpoint_interval = 32\nchaos_kill_at = 0.5\n\
+             [cluster]\nworkers = [\"local\", \"inproc\"]",
+        )
+        .unwrap();
+        assert_eq!(ok.base.cluster_workers.len(), 2);
     }
 
     #[test]

@@ -158,6 +158,22 @@
 //! run's drift response (`BENCH_drift.json`; schema in
 //! docs/EXPERIMENTS.md, knobs in docs/CONFIG.md).
 //!
+//! ## Networked workers
+//!
+//! Workers can run in other processes or on other machines with no
+//! behavior change: start a host with `streamrec worker --listen
+//! host:port` (a [`net::WorkerServer`]), list it under
+//! `[cluster] workers` in the TOML, and the coordinator dials it
+//! instead of spawning a local thread — mixing `"local"` and
+//! `"tcp://host:port"` entries freely. Every `WorkerMsg` crosses the
+//! socket as a length-prefixed frame ([`net`]), replies multiplex by
+//! request id, and a dropped connection is handled exactly like a
+//! crashed local worker (checkpoint-restore recovery included).
+//! Loopback TCP and in-proc sessions are byte-identical
+//! (property-tested in `tests/transport_equivalence.rs`; throughput
+//! cost measured by `benches/transport.rs`, recorded in
+//! `BENCH_transport.json`).
+//!
 //! ## Migrating from `run_pipeline`
 //!
 //! The historical one-shot entry point survives with identical signature
@@ -177,6 +193,7 @@ pub mod data;
 pub mod engine;
 pub mod eval;
 pub mod experiments;
+pub mod net;
 pub mod runtime;
 pub mod state;
 pub mod util;

@@ -5,6 +5,8 @@
 //!   print the live metrics + final report.
 //! * `experiment` — run a declarative drift-scenario grid from a TOML
 //!   file (baseline vs distributed, windowed recall, `BENCH_drift.json`).
+//! * `worker`     — host workers behind TCP for a remote coordinator
+//!   (the `[cluster] workers = ["tcp://..."]` peer).
 //! * `table1`     — print dataset characteristics.
 //! * `gen-data`   — write a synthetic rating stream to CSV.
 //! * `backends`   — cross-check native vs PJRT backends on one stream.
@@ -14,6 +16,7 @@
 //! streamrec run --dataset ml-like:100000 --ni 4 --algorithm isgd
 //! streamrec run --dataset nf-like:50000 --ni 2 --forgetting lru
 //! streamrec experiment --config configs/drift_smoke.toml
+//! streamrec worker --listen 127.0.0.1:7461
 //! streamrec backends --events 3000
 //! ```
 
@@ -33,6 +36,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("experiment") => cmd_experiment(&args),
+        Some("worker") => cmd_worker(&args),
         Some("table1") => cmd_table1(&args),
         Some("gen-data") => cmd_gen_data(&args),
         Some("backends") => cmd_backends(&args),
@@ -56,6 +60,10 @@ USAGE:
                                     # drift-scenario grid: baseline vs
                                     # distributed, windowed recall curves,
                                     # BENCH_drift.json (docs/EXPERIMENTS.md)
+  streamrec worker --listen HOST:PORT [--once]
+                                    # host workers for a remote coordinator
+                                    # ([cluster] workers = [\"tcp://...\"]);
+                                    # --once exits after the peer finishes
   streamrec table1 [--events N] [--seed S]
   streamrec gen-data --dataset SPEC --out FILE.csv
   streamrec backends [--events N]   # native-vs-PJRT cross-check
@@ -242,6 +250,34 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         outcome.bench_path.display()
     );
     Ok(())
+}
+
+/// Host `WorkerActor`s behind TCP for a remote coordinator. Runs until
+/// killed; with `--once`, exits after the server has served at least one
+/// connection and then sat idle for two seconds (CI smoke / scripted
+/// runs).
+fn cmd_worker(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+    let listen = args.get_or("listen", "127.0.0.1:7461");
+    let server = streamrec::net::WorkerServer::bind(&listen)?;
+    // Flush: stdout is block-buffered when piped, and scripts wait for
+    // this line before dialing.
+    println!("streamrec worker listening on {}", server.local_addr());
+    std::io::stdout().flush().ok();
+    if args.flag("once") {
+        server.wait_idle(std::time::Duration::from_secs(2));
+        let served = server.connections();
+        let routed = server.events_routed();
+        server.shutdown()?;
+        println!(
+            "streamrec worker: served {served} connections, \
+             routed {routed} events"
+        );
+        return Ok(());
+    }
+    loop {
+        std::thread::park();
+    }
 }
 
 fn cmd_table1(args: &Args) -> Result<()> {

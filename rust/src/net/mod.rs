@@ -1,0 +1,213 @@
+//! Pluggable worker transport: run a session's workers as in-process
+//! threads, as remote processes behind TCP, or a mix — with no behavior
+//! change visible above the supervisor.
+//!
+//! The seam is deliberately narrow. The supervisor already talks to
+//! every worker through one bounded `WorkerMsg` FIFO and gets results
+//! back through the collector/checkpoint channels plus a join handle;
+//! a `Transport` only decides *where the consuming end of that FIFO
+//! runs*:
+//!
+//! * `InProcTransport` — the pre-networking behavior, bit for bit: a
+//!   `WorkerActor` on a local thread.
+//! * `TcpTransport` — a proxy thread (`remote`) that dials a
+//!   [`WorkerServer`] and speaks the frame protocol (`proto`); the
+//!   actor runs in the remote process, and connection loss surfaces as
+//!   a worker panic so the supervisor's crash recovery works unchanged.
+//!
+//! Which transport serves which worker slot comes from
+//! `[cluster] workers` in the run configuration
+//! ([`RunConfig::cluster_workers`]): the list is cycled over slot
+//! ordinals, so `["local", "tcp://10.0.0.7:7461"]` alternates local
+//! threads with remote workers, and re-dials land on the same address a
+//! crashed slot used (`ordinal mod len` is stable across respawns).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::router::StateGrid;
+use crate::engine::actor::{
+    ChaosPolicy, CheckpointMsg, CollectorMsg, WorkerActor, WorkerMsg,
+};
+use crate::engine::{spawn, Receiver, Sender, WorkerHandle};
+use crate::eval::WorkerReport;
+
+pub(crate) mod proto;
+pub(crate) mod remote;
+pub mod server;
+
+pub use server::WorkerServer;
+
+/// Everything a transport needs to stand up one worker slot — the
+/// exact argument list of
+/// [`WorkerActor::new`](crate::engine::actor::WorkerActor), bundled so
+/// it can cross a thread boundary in one move.
+pub(crate) struct WorkerBoot {
+    /// Session-unique worker ordinal (never reused across respawns).
+    pub(crate) ord: usize,
+    /// Full run configuration (remote hosts rebuild the actor from it).
+    pub(crate) cfg: RunConfig,
+    /// The session's fixed lane grid.
+    pub(crate) grid: StateGrid,
+    /// Consuming end of the slot's `WorkerMsg` FIFO.
+    pub(crate) rx: Receiver<WorkerMsg>,
+    /// Hit batches and `Done` markers flow here.
+    pub(crate) col_tx: Sender<CollectorMsg>,
+    /// Lane checkpoint frames (fault-tolerant sessions only).
+    pub(crate) ckpt_tx: Option<Sender<CheckpointMsg>>,
+    /// Crash-injection policy for this slot.
+    pub(crate) chaos: ChaosPolicy,
+}
+
+/// Where a worker slot's actor runs. Implementations must preserve the
+/// in-proc contract exactly: consume the FIFO in order, flush hits
+/// before the checkpoint frames that cover them, return the final
+/// [`WorkerReport`] from the join, and surface any failure as a panic
+/// or `Err` from the joined thread.
+pub(crate) trait Transport: Send + Sync {
+    /// Stand up one worker slot and return its join handle.
+    fn spawn_worker(&self, boot: WorkerBoot) -> WorkerHandle<Result<WorkerReport>>;
+
+    /// Human-readable placement label for logs (`"local"` or the
+    /// remote address).
+    fn describe(&self) -> String;
+}
+
+/// The default transport: the actor runs on a local thread, exactly as
+/// every session did before networking existed.
+pub(crate) struct InProcTransport;
+
+impl Transport for InProcTransport {
+    fn spawn_worker(&self, boot: WorkerBoot) -> WorkerHandle<Result<WorkerReport>> {
+        let WorkerBoot { ord, cfg, grid, rx, col_tx, ckpt_tx, chaos } = boot;
+        let actor = WorkerActor::new(ord, cfg, grid, rx, col_tx, ckpt_tx, chaos);
+        spawn(ord, "worker", move || actor.run())
+    }
+
+    fn describe(&self) -> String {
+        "local".to_string()
+    }
+}
+
+/// A remote worker slot behind `tcp://host:port`: the spawned thread is
+/// a [`remote`] proxy dialing a [`WorkerServer`] at `addr`.
+pub(crate) struct TcpTransport {
+    addr: String,
+}
+
+impl Transport for TcpTransport {
+    fn spawn_worker(&self, boot: WorkerBoot) -> WorkerHandle<Result<WorkerReport>> {
+        let addr = self.addr.clone();
+        let ord = boot.ord;
+        spawn(ord, "worker", move || remote::run_proxy(&addr, boot))
+    }
+
+    fn describe(&self) -> String {
+        format!("tcp://{}", self.addr)
+    }
+}
+
+/// Resolve `[cluster] workers` into the transport cycle the supervisor
+/// assigns slots from (`ordinal mod len`). An empty list — the default
+/// — is a single [`InProcTransport`], preserving pre-networking
+/// behavior bit for bit. Entries are `"local"`/`"inproc"` or
+/// `"tcp://host:port"`; anything else is a loud error.
+pub(crate) fn transport_plan(cfg: &RunConfig) -> Result<Vec<Arc<dyn Transport>>> {
+    if cfg.cluster_workers.is_empty() {
+        return Ok(vec![Arc::new(InProcTransport)]);
+    }
+    let mut plan: Vec<Arc<dyn Transport>> =
+        Vec::with_capacity(cfg.cluster_workers.len());
+    for entry in &cfg.cluster_workers {
+        let entry = entry.trim();
+        if entry.eq_ignore_ascii_case("local")
+            || entry.eq_ignore_ascii_case("inproc")
+        {
+            plan.push(Arc::new(InProcTransport));
+        } else if let Some(addr) = entry.strip_prefix("tcp://") {
+            let (host, port) = addr.rsplit_once(':').with_context(|| {
+                format!(
+                    "cluster worker '{entry}': expected tcp://host:port"
+                )
+            })?;
+            if host.is_empty() {
+                bail!("cluster worker '{entry}': empty host");
+            }
+            port.parse::<u16>().with_context(|| {
+                format!("cluster worker '{entry}': bad port '{port}'")
+            })?;
+            plan.push(Arc::new(TcpTransport { addr: addr.to_string() }));
+        } else {
+            bail!(
+                "cluster worker '{entry}': unknown transport (expected \
+                 'local', 'inproc', or 'tcp://host:port')"
+            );
+        }
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_with(workers: &[&str]) -> RunConfig {
+        RunConfig {
+            cluster_workers: workers.iter().map(|s| s.to_string()).collect(),
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn empty_cluster_is_one_inproc_transport() {
+        let plan = transport_plan(&RunConfig::default()).unwrap();
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].describe(), "local");
+    }
+
+    #[test]
+    fn mixed_plan_keeps_entry_order() {
+        let plan = transport_plan(&cfg_with(&[
+            "local",
+            "tcp://127.0.0.1:7461",
+            "InProc",
+            " tcp://worker-2.example:9000 ",
+        ]))
+        .unwrap();
+        let labels: Vec<String> =
+            plan.iter().map(|t| t.describe()).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "local",
+                "tcp://127.0.0.1:7461",
+                "local",
+                "tcp://worker-2.example:9000",
+            ]
+        );
+    }
+
+    #[test]
+    fn bad_entries_are_loud() {
+        for bad in [
+            "udp://127.0.0.1:1",
+            "tcp://",
+            "tcp://:7461",
+            "tcp://nohost",
+            "tcp://host:notaport",
+            "tcp://host:99999",
+            "remote",
+            "",
+        ] {
+            let err = transport_plan(&cfg_with(&[bad]))
+                .expect_err(&format!("'{bad}' must be rejected"))
+                .to_string();
+            assert!(
+                err.contains("cluster worker"),
+                "error for '{bad}' names the entry: {err}"
+            );
+        }
+    }
+}

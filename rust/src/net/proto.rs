@@ -1,0 +1,931 @@
+//! Frame protocol of the networked worker transport.
+//!
+//! Every [`WorkerMsg`] variant (and every worker→coordinator message)
+//! has a frame: a `u32` little-endian length prefix on the socket,
+//! then a one-byte tag, then the body encoded with
+//! [`wire`](crate::util::wire). Reply-`Sender`-carrying variants
+//! (`Query`, `MetricsSnapshot`, `Export`) become RPC: the
+//! coordinator-side proxy assigns a `req_id`, parks the reply sender in
+//! a multiplexer, and the worker host echoes the id on the answer frame
+//! (see `net/remote.rs` and `net/server.rs`).
+//!
+//! Layout rules, enforced by the round-trip tests:
+//!
+//! * every variable-length section carries its own length prefix — no
+//!   trailing-`rest` payloads — so any strict-prefix truncation decodes
+//!   to a loud [`WireError`], never a panic and never a silent partial
+//!   read;
+//! * [`Frame::decode`] requires full consumption: trailing bytes after
+//!   a well-formed body are an error (a frame is exactly one message);
+//! * decoding allocates proportionally to the *received* bytes, so a
+//!   hostile length prefix cannot balloon memory.
+
+use std::io::{Read, Write};
+
+use crate::config::{Algorithm, Backend, Forgetting, RunConfig, Topology};
+use crate::data::types::{Rating, StateSizes};
+use crate::engine::actor::{
+    Envelope, LaneSnapshot, ReplicaAnswer, WorkerExport,
+};
+use crate::engine::WorkerSnapshot;
+use crate::eval::{HitSample, WindowStat, WorkerReport};
+use crate::util::histogram::Histogram;
+use crate::util::wire::{WireError, WireReader, WireWriter};
+
+/// Bumped on any incompatible layout change; carried in the hello
+/// frame and checked by the host before anything else is decoded.
+pub(crate) const PROTO_VERSION: u8 = 1;
+
+/// Upper bound on a single frame body (sanity cap so a corrupt length
+/// prefix fails fast instead of attempting a giant read).
+pub(crate) const MAX_FRAME: usize = 1 << 30;
+
+// Coordinator → worker host.
+const TAG_HELLO: u8 = 1;
+const TAG_EVENTS: u8 = 2;
+const TAG_QUERY: u8 = 3;
+const TAG_SNAPSHOT: u8 = 4;
+const TAG_EXPORT: u8 = 5;
+const TAG_IMPORT: u8 = 6;
+const TAG_CLOSE: u8 = 7;
+// Worker host → coordinator.
+const TAG_ANSWER: u8 = 16;
+const TAG_SNAPSHOT_REPLY: u8 = 17;
+const TAG_EXPORT_REPLY: u8 = 18;
+const TAG_HITS: u8 = 19;
+const TAG_DONE: u8 = 20;
+const TAG_CHECKPOINT: u8 = 21;
+const TAG_REPORT: u8 = 22;
+
+/// First frame on every connection: everything the host needs to build
+/// the actor for one worker slot — its ordinal, the state-grid shape,
+/// the armed chaos policy, and the full run configuration.
+#[derive(Debug, Clone)]
+pub(crate) struct Hello {
+    /// Session-unique worker ordinal of the slot this connection hosts.
+    pub(crate) ord: u64,
+    /// State-grid item rows (`StateGrid::v_i`).
+    pub(crate) v_i: u64,
+    /// State-grid user columns (`StateGrid::v_u`).
+    pub(crate) v_u: u64,
+    /// Armed chaos kill position (respawned slots carry `None`).
+    pub(crate) kill_at_seq: Option<u64>,
+    /// Whether the kill defers to the next checkpoint attempt.
+    pub(crate) kill_in_checkpoint: bool,
+    /// The run configuration the actor is built from.
+    pub(crate) cfg: RunConfig,
+}
+
+/// One message on the transport socket, either direction. The tag
+/// ranges keep the directions disjoint so a misrouted frame is an
+/// immediate decode error rather than a confusing state.
+pub(crate) enum Frame {
+    /// Connection opener, coordinator → host (boxed: `RunConfig` makes
+    /// this variant much larger than the hot `Events` one).
+    Hello(Box<Hello>),
+    /// A batch of stream events in FIFO order.
+    Events(Vec<Envelope>),
+    /// `WorkerMsg::Query` as RPC.
+    Query {
+        /// Multiplexer key echoed on the matching `Answer`.
+        req_id: u64,
+        /// User to recommend for.
+        user: u64,
+        /// Per-lane list length.
+        n: u64,
+    },
+    /// `WorkerMsg::MetricsSnapshot` as RPC.
+    Snapshot {
+        /// Multiplexer key echoed on the matching `SnapshotReply`.
+        req_id: u64,
+    },
+    /// `WorkerMsg::Export` as RPC (terminal for the actor).
+    Export {
+        /// Multiplexer key echoed on the matching `ExportReply`.
+        req_id: u64,
+    },
+    /// `WorkerMsg::Import` (no reply; FIFO position is the contract).
+    Import {
+        /// Virtual grid cell to install.
+        lane: u64,
+        /// Recovery (`true`) vs rescale (`false`) counter semantics.
+        restore_counters: bool,
+        /// Encoded lane frame.
+        bytes: Vec<u8>,
+    },
+    /// End of the coordinator's stream: drain, report, hang up.
+    Close,
+    /// Reply to `Query`.
+    Answer {
+        /// Multiplexer key of the originating `Query`.
+        req_id: u64,
+        /// The replica's ranked lists + rated set.
+        answer: ReplicaAnswer,
+    },
+    /// Reply to `Snapshot`.
+    SnapshotReply {
+        /// Multiplexer key of the originating `Snapshot`.
+        req_id: u64,
+        /// Live counters.
+        snap: WorkerSnapshot,
+    },
+    /// Reply to `Export`.
+    ExportReply {
+        /// Multiplexer key of the originating `Export`.
+        req_id: u64,
+        /// Every hosted lane, serialized.
+        export: WorkerExport,
+    },
+    /// `CollectorMsg::Hits` forwarded home.
+    Hits(Vec<HitSample>),
+    /// `CollectorMsg::Done` forwarded home.
+    Done {
+        /// Ordinal of the drained worker.
+        worker_id: u64,
+    },
+    /// A periodic lane checkpoint forwarded home.
+    Checkpoint {
+        /// Ordinal of the checkpointing worker.
+        ord: u64,
+        /// Virtual grid cell the frame snapshots.
+        lane: u64,
+        /// Encoded lane frame.
+        bytes: Vec<u8>,
+    },
+    /// The actor's final [`WorkerReport`] (boxed for the same size
+    /// reason as `Hello`). A connection that ends *without* this frame
+    /// is a crashed worker.
+    Report(Box<WorkerReport>),
+}
+
+impl Frame {
+    /// Encode into a frame body (tag + payload, no length prefix — the
+    /// socket layer adds that).
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        match self {
+            Frame::Hello(h) => {
+                w.u8(TAG_HELLO);
+                w.u8(PROTO_VERSION);
+                w.u64(h.ord);
+                w.u64(h.v_i);
+                w.u64(h.v_u);
+                opt_u64(&mut w, h.kill_at_seq);
+                w.u8(u8::from(h.kill_in_checkpoint));
+                encode_config(&mut w, &h.cfg);
+            }
+            Frame::Events(envs) => {
+                w.u8(TAG_EVENTS);
+                w.u32(envs.len() as u32);
+                for env in envs {
+                    w.u64(env.seq);
+                    w.u64(env.rating.user);
+                    w.u64(env.rating.item);
+                    w.f32(env.rating.rating);
+                    w.u64(env.rating.ts);
+                }
+            }
+            Frame::Query { req_id, user, n } => {
+                w.u8(TAG_QUERY);
+                w.u64(*req_id);
+                w.u64(*user);
+                w.u64(*n);
+            }
+            Frame::Snapshot { req_id } => {
+                w.u8(TAG_SNAPSHOT);
+                w.u64(*req_id);
+            }
+            Frame::Export { req_id } => {
+                w.u8(TAG_EXPORT);
+                w.u64(*req_id);
+            }
+            Frame::Import { lane, restore_counters, bytes } => {
+                w.u8(TAG_IMPORT);
+                w.u64(*lane);
+                w.u8(u8::from(*restore_counters));
+                w.byte_slice(bytes);
+            }
+            Frame::Close => w.u8(TAG_CLOSE),
+            Frame::Answer { req_id, answer } => {
+                w.u8(TAG_ANSWER);
+                w.u64(*req_id);
+                w.u32(answer.lists.len() as u32);
+                for list in &answer.lists {
+                    w.u64_slice(list);
+                }
+                w.u64_slice(&answer.rated);
+            }
+            Frame::SnapshotReply { req_id, snap } => {
+                w.u8(TAG_SNAPSHOT_REPLY);
+                w.u64(*req_id);
+                w.u64(snap.worker_id as u64);
+                w.u64(snap.processed);
+                w.u64(snap.hits);
+                w.u64(snap.queries);
+                w.u64(snap.lanes);
+                encode_state(&mut w, &snap.state);
+            }
+            Frame::ExportReply { req_id, export } => {
+                w.u8(TAG_EXPORT_REPLY);
+                w.u64(*req_id);
+                w.u64(export.ord as u64);
+                w.u32(export.lanes.len() as u32);
+                for lane in &export.lanes {
+                    w.u64(lane.lane);
+                    w.byte_slice(&lane.bytes);
+                }
+            }
+            Frame::Hits(samples) => {
+                w.u8(TAG_HITS);
+                w.u32(samples.len() as u32);
+                for s in samples {
+                    w.u64(s.seq);
+                    w.u8(u8::from(s.hit));
+                }
+            }
+            Frame::Done { worker_id } => {
+                w.u8(TAG_DONE);
+                w.u64(*worker_id);
+            }
+            Frame::Checkpoint { ord, lane, bytes } => {
+                w.u8(TAG_CHECKPOINT);
+                w.u64(*ord);
+                w.u64(*lane);
+                w.byte_slice(bytes);
+            }
+            Frame::Report(report) => {
+                w.u8(TAG_REPORT);
+                encode_report(&mut w, report);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Decode a frame body. Unknown tags, truncation at any byte,
+    /// version skew, and trailing garbage are all loud [`WireError`]s.
+    pub(crate) fn decode(bytes: &[u8]) -> Result<Frame, WireError> {
+        let mut r = WireReader::new(bytes);
+        let tag = r.u8()?;
+        let frame = match tag {
+            TAG_HELLO => {
+                let proto = r.u8()?;
+                if proto != PROTO_VERSION {
+                    return Err(WireError {
+                        pos: 1,
+                        msg: format!(
+                            "peer speaks protocol v{proto}, this build \
+                             speaks v{PROTO_VERSION}"
+                        ),
+                    });
+                }
+                let ord = r.u64()?;
+                let v_i = r.u64()?;
+                let v_u = r.u64()?;
+                let kill_at_seq = read_opt_u64(&mut r)?;
+                let kill_in_checkpoint = r.u8()? != 0;
+                let cfg = decode_config(&mut r)?;
+                Frame::Hello(Box::new(Hello {
+                    ord,
+                    v_i,
+                    v_u,
+                    kill_at_seq,
+                    kill_in_checkpoint,
+                    cfg,
+                }))
+            }
+            TAG_EVENTS => {
+                let n = r.u32()? as usize;
+                let mut envs =
+                    Vec::with_capacity(n.min(r.remaining() / 36 + 1));
+                for _ in 0..n {
+                    let seq = r.u64()?;
+                    let user = r.u64()?;
+                    let item = r.u64()?;
+                    let rating = r.f32()?;
+                    let ts = r.u64()?;
+                    envs.push(Envelope {
+                        seq,
+                        rating: Rating::new(user, item, rating, ts),
+                    });
+                }
+                Frame::Events(envs)
+            }
+            TAG_QUERY => Frame::Query {
+                req_id: r.u64()?,
+                user: r.u64()?,
+                n: r.u64()?,
+            },
+            TAG_SNAPSHOT => Frame::Snapshot { req_id: r.u64()? },
+            TAG_EXPORT => Frame::Export { req_id: r.u64()? },
+            TAG_IMPORT => Frame::Import {
+                lane: r.u64()?,
+                restore_counters: r.u8()? != 0,
+                bytes: r.byte_slice()?,
+            },
+            TAG_CLOSE => Frame::Close,
+            TAG_ANSWER => {
+                let req_id = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut lists = Vec::with_capacity(n.min(r.remaining()));
+                for _ in 0..n {
+                    lists.push(r.u64_slice()?);
+                }
+                let rated = r.u64_slice()?;
+                Frame::Answer {
+                    req_id,
+                    answer: ReplicaAnswer { lists, rated },
+                }
+            }
+            TAG_SNAPSHOT_REPLY => Frame::SnapshotReply {
+                req_id: r.u64()?,
+                snap: WorkerSnapshot {
+                    worker_id: r.u64()? as usize,
+                    processed: r.u64()?,
+                    hits: r.u64()?,
+                    queries: r.u64()?,
+                    lanes: r.u64()?,
+                    state: decode_state(&mut r)?,
+                },
+            },
+            TAG_EXPORT_REPLY => {
+                let req_id = r.u64()?;
+                let ord = r.u64()? as usize;
+                let n = r.u32()? as usize;
+                let mut lanes = Vec::with_capacity(n.min(r.remaining()));
+                for _ in 0..n {
+                    lanes.push(LaneSnapshot {
+                        lane: r.u64()?,
+                        bytes: r.byte_slice()?,
+                    });
+                }
+                Frame::ExportReply {
+                    req_id,
+                    export: WorkerExport { ord, lanes },
+                }
+            }
+            TAG_HITS => {
+                let n = r.u32()? as usize;
+                let mut samples =
+                    Vec::with_capacity(n.min(r.remaining() / 9 + 1));
+                for _ in 0..n {
+                    samples.push(HitSample {
+                        seq: r.u64()?,
+                        hit: r.u8()? != 0,
+                    });
+                }
+                Frame::Hits(samples)
+            }
+            TAG_DONE => Frame::Done { worker_id: r.u64()? },
+            TAG_CHECKPOINT => Frame::Checkpoint {
+                ord: r.u64()?,
+                lane: r.u64()?,
+                bytes: r.byte_slice()?,
+            },
+            TAG_REPORT => Frame::Report(Box::new(decode_report(&mut r)?)),
+            other => {
+                return Err(WireError {
+                    pos: 0,
+                    msg: format!("unknown frame tag {other}"),
+                })
+            }
+        };
+        if !r.is_done() {
+            return Err(WireError {
+                pos: bytes.len() - r.remaining(),
+                msg: format!(
+                    "{} trailing bytes after frame tag {tag}",
+                    r.remaining()
+                ),
+            });
+        }
+        Ok(frame)
+    }
+}
+
+/// Write one length-prefixed frame. The prefix and body go out in a
+/// single `write_all` so a frame is never interleaved with another
+/// writer's bytes (each connection has exactly one writer thread; this
+/// keeps the failure mode of a future refactor loud instead of subtle).
+pub(crate) fn write_frame(
+    w: &mut impl Write,
+    frame: &Frame,
+) -> std::io::Result<()> {
+    let body = frame.encode();
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    w.write_all(&out)
+}
+
+/// Read one length-prefixed frame. `Ok(None)` is a clean end-of-stream
+/// (EOF exactly at a frame boundary); EOF anywhere inside a frame, a
+/// length prefix over [`MAX_FRAME`], and any decode failure are errors.
+pub(crate) fn read_frame(
+    r: &mut impl Read,
+) -> std::io::Result<Option<Frame>> {
+    // Probe one byte so a clean hangup between frames is Ok(None)
+    // rather than an UnexpectedEof error.
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let mut rest = [0u8; 3];
+    r.read_exact(&mut rest)?;
+    let len =
+        u32::from_le_bytes([first[0], rest[0], rest[1], rest[2]]) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds cap {MAX_FRAME}"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Frame::decode(&body).map(Some).map_err(|e| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+    })
+}
+
+fn opt_u64(w: &mut WireWriter, v: Option<u64>) {
+    w.u8(u8::from(v.is_some()));
+    w.u64(v.unwrap_or(0));
+}
+
+fn read_opt_u64(r: &mut WireReader<'_>) -> Result<Option<u64>, WireError> {
+    let has = r.u8()? != 0;
+    let raw = r.u64()?;
+    Ok(has.then_some(raw))
+}
+
+fn encode_state(w: &mut WireWriter, s: &StateSizes) {
+    w.u64(s.users);
+    w.u64(s.items);
+    w.u64(s.aux);
+}
+
+fn decode_state(r: &mut WireReader<'_>) -> Result<StateSizes, WireError> {
+    Ok(StateSizes { users: r.u64()?, items: r.u64()?, aux: r.u64()? })
+}
+
+/// Serialize the complete [`RunConfig`] — the remote host must build
+/// models, clocks, and channels from *exactly* the coordinator's
+/// configuration or the byte-identical-across-transports property
+/// breaks.
+fn encode_config(w: &mut WireWriter, cfg: &RunConfig) {
+    w.u8(match cfg.algorithm {
+        Algorithm::Isgd => 0,
+        Algorithm::Cosine => 1,
+    });
+    w.u8(match cfg.backend {
+        Backend::Native => 0,
+        Backend::Pjrt => 1,
+    });
+    w.u64(cfg.topology.n_i);
+    w.u64(cfg.topology.w);
+    match cfg.forgetting {
+        Forgetting::None => {
+            w.u8(0);
+            w.u64(0);
+            w.u64(0);
+        }
+        Forgetting::Lru { trigger_secs, max_idle_secs } => {
+            w.u8(1);
+            w.u64(trigger_secs);
+            w.u64(max_idle_secs);
+        }
+        Forgetting::Lfu { trigger_events, min_freq } => {
+            w.u8(2);
+            w.u64(trigger_events);
+            w.u64(min_freq);
+        }
+        Forgetting::Decay { trigger_events, factor } => {
+            w.u8(3);
+            w.u64(trigger_events);
+            w.u64(factor.to_bits() as u64);
+        }
+    }
+    w.u64(cfg.top_n as u64);
+    w.u64(cfg.recall_window as u64);
+    w.u64(cfg.latent_k as u64);
+    w.f32(cfg.eta);
+    w.f32(cfg.lambda);
+    w.u64(cfg.neighbors_k as u64);
+    w.u8(u8::from(cfg.cosine_strict));
+    w.u64(cfg.channel_capacity as u64);
+    w.u64(cfg.ingest_batch_size as u64);
+    w.u64(cfg.sample_every as u64);
+    w.u64(cfg.seed);
+    w.string(&cfg.artifacts_dir);
+    w.u64(cfg.rescale_max_n_i);
+    w.u64(cfg.rescale_max_w);
+    w.u64(cfg.fault_checkpoint_interval);
+    w.u64(cfg.fault_replay_log_capacity as u64);
+    opt_u64(w, cfg.fault_chaos_kill_seq);
+    w.u8(u8::from(cfg.fault_chaos_kill_in_checkpoint));
+    w.u32(cfg.cluster_workers.len() as u32);
+    for entry in &cfg.cluster_workers {
+        w.string(entry);
+    }
+}
+
+fn decode_config(r: &mut WireReader<'_>) -> Result<RunConfig, WireError> {
+    let bad = |pos: usize, msg: String| WireError { pos, msg };
+    let algorithm = match r.u8()? {
+        0 => Algorithm::Isgd,
+        1 => Algorithm::Cosine,
+        t => return Err(bad(0, format!("unknown algorithm tag {t}"))),
+    };
+    let backend = match r.u8()? {
+        0 => Backend::Native,
+        1 => Backend::Pjrt,
+        t => return Err(bad(0, format!("unknown backend tag {t}"))),
+    };
+    let n_i = r.u64()?;
+    let w_spares = r.u64()?;
+    let topology = Topology::new(n_i, w_spares)
+        .map_err(|e| bad(0, format!("bad topology: {e}")))?;
+    let forget_tag = r.u8()?;
+    let a = r.u64()?;
+    let b = r.u64()?;
+    let forgetting = match forget_tag {
+        0 => Forgetting::None,
+        1 => Forgetting::Lru { trigger_secs: a, max_idle_secs: b },
+        2 => Forgetting::Lfu { trigger_events: a, min_freq: b },
+        3 => Forgetting::Decay {
+            trigger_events: a,
+            factor: f32::from_bits(b as u32),
+        },
+        t => return Err(bad(0, format!("unknown forgetting tag {t}"))),
+    };
+    let top_n = r.u64()? as usize;
+    let recall_window = r.u64()? as usize;
+    let latent_k = r.u64()? as usize;
+    let eta = r.f32()?;
+    let lambda = r.f32()?;
+    let neighbors_k = r.u64()? as usize;
+    let cosine_strict = r.u8()? != 0;
+    let channel_capacity = r.u64()? as usize;
+    let ingest_batch_size = r.u64()? as usize;
+    let sample_every = r.u64()? as usize;
+    let seed = r.u64()?;
+    let artifacts_dir = r.string()?;
+    let rescale_max_n_i = r.u64()?;
+    let rescale_max_w = r.u64()?;
+    let fault_checkpoint_interval = r.u64()?;
+    let fault_replay_log_capacity = r.u64()? as usize;
+    let fault_chaos_kill_seq = read_opt_u64(r)?;
+    let fault_chaos_kill_in_checkpoint = r.u8()? != 0;
+    let n_workers = r.u32()? as usize;
+    let mut cluster_workers =
+        Vec::with_capacity(n_workers.min(r.remaining()));
+    for _ in 0..n_workers {
+        cluster_workers.push(r.string()?);
+    }
+    Ok(RunConfig {
+        algorithm,
+        backend,
+        topology,
+        forgetting,
+        top_n,
+        recall_window,
+        latent_k,
+        eta,
+        lambda,
+        neighbors_k,
+        cosine_strict,
+        channel_capacity,
+        ingest_batch_size,
+        sample_every,
+        seed,
+        artifacts_dir,
+        rescale_max_n_i,
+        rescale_max_w,
+        fault_checkpoint_interval,
+        fault_replay_log_capacity,
+        fault_chaos_kill_seq,
+        fault_chaos_kill_in_checkpoint,
+        cluster_workers,
+    })
+}
+
+fn encode_report(w: &mut WireWriter, rep: &WorkerReport) {
+    w.u64(rep.worker_id as u64);
+    w.u64(rep.processed);
+    w.u64(rep.hits);
+    w.u64(rep.queries);
+    encode_state(w, &rep.state);
+    rep.latency.wire_encode(w);
+    w.u64(rep.sweeps);
+    w.u64(rep.evicted);
+    w.u64(rep.recommend_ns);
+    w.u64(rep.update_ns);
+    w.u32(rep.windows.len() as u32);
+    for win in &rep.windows {
+        w.u64(win.index);
+        w.u64(win.start_seq);
+        w.u64(win.events);
+        w.u64(win.hits);
+    }
+}
+
+fn decode_report(
+    r: &mut WireReader<'_>,
+) -> Result<WorkerReport, WireError> {
+    let worker_id = r.u64()? as usize;
+    let processed = r.u64()?;
+    let hits = r.u64()?;
+    let queries = r.u64()?;
+    let state = decode_state(r)?;
+    let latency = Histogram::wire_decode(r)?;
+    let sweeps = r.u64()?;
+    let evicted = r.u64()?;
+    let recommend_ns = r.u64()?;
+    let update_ns = r.u64()?;
+    let n = r.u32()? as usize;
+    let mut windows = Vec::with_capacity(n.min(r.remaining() / 32 + 1));
+    for _ in 0..n {
+        windows.push(WindowStat {
+            index: r.u64()?,
+            start_seq: r.u64()?,
+            events: r.u64()?,
+            hits: r.u64()?,
+        });
+    }
+    Ok(WorkerReport {
+        worker_id,
+        processed,
+        hits,
+        queries,
+        state,
+        latency,
+        sweeps,
+        evicted,
+        recommend_ns,
+        update_ns,
+        windows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    /// Round-trip oracle that sidesteps `PartialEq` (WorkerReport holds
+    /// a Histogram): decode then re-encode must reproduce the bytes.
+    fn assert_round_trips(frame: &Frame) {
+        let bytes = frame.encode();
+        let back = Frame::decode(&bytes).unwrap_or_else(|e| {
+            panic!("decode failed: {e} (frame of {} bytes)", bytes.len())
+        });
+        assert_eq!(back.encode(), bytes, "decode→encode is identity");
+    }
+
+    /// Every strict prefix of an encoded frame must decode to an error.
+    fn assert_prefixes_error(frame: &Frame) {
+        let bytes = frame.encode();
+        for cut in 0..bytes.len() {
+            assert!(
+                Frame::decode(&bytes[..cut]).is_err(),
+                "prefix of {cut}/{} bytes must error",
+                bytes.len()
+            );
+        }
+    }
+
+    fn sample_report() -> WorkerReport {
+        let mut latency = Histogram::new();
+        for v in [13u64, 999, 100_000] {
+            latency.record(v);
+        }
+        WorkerReport {
+            worker_id: 6,
+            processed: 4096,
+            hits: 17,
+            queries: 3,
+            state: StateSizes { users: 5, items: 9, aux: 2 },
+            latency,
+            sweeps: 1,
+            evicted: 40,
+            recommend_ns: 123_456,
+            update_ns: 654_321,
+            windows: vec![
+                WindowStat {
+                    index: 0,
+                    start_seq: 0,
+                    events: 5000,
+                    hits: 12,
+                },
+                WindowStat {
+                    index: 1,
+                    start_seq: 5000,
+                    events: 96,
+                    hits: 5,
+                },
+            ],
+        }
+    }
+
+    fn every_variant() -> Vec<Frame> {
+        let cfg = RunConfig {
+            forgetting: Forgetting::Decay {
+                trigger_events: 100,
+                factor: 0.875,
+            },
+            fault_chaos_kill_seq: Some(777),
+            cluster_workers: vec![
+                "local".to_string(),
+                "tcp://127.0.0.1:7461".to_string(),
+            ],
+            ..RunConfig::default()
+        };
+        vec![
+            Frame::Hello(Box::new(Hello {
+                ord: 3,
+                v_i: 4,
+                v_u: 4,
+                kill_at_seq: Some(99),
+                kill_in_checkpoint: true,
+                cfg,
+            })),
+            Frame::Events(vec![
+                Envelope { seq: 0, rating: Rating::new(1, 2, 5.0, 10) },
+                Envelope {
+                    seq: u64::MAX,
+                    rating: Rating::new(7, 8, -0.0, 0),
+                },
+            ]),
+            Frame::Events(Vec::new()),
+            Frame::Query { req_id: 42, user: 17, n: 10 },
+            Frame::Snapshot { req_id: 43 },
+            Frame::Export { req_id: 44 },
+            Frame::Import {
+                lane: 5,
+                restore_counters: true,
+                bytes: vec![1, 2, 3],
+            },
+            Frame::Close,
+            Frame::Answer {
+                req_id: 42,
+                answer: ReplicaAnswer {
+                    lists: vec![vec![9, 8, 7], vec![], vec![1]],
+                    rated: vec![2, 4],
+                },
+            },
+            Frame::SnapshotReply {
+                req_id: 43,
+                snap: WorkerSnapshot {
+                    worker_id: 3,
+                    processed: 100,
+                    hits: 4,
+                    queries: 2,
+                    lanes: 1,
+                    state: StateSizes { users: 10, items: 20, aux: 0 },
+                },
+            },
+            Frame::ExportReply {
+                req_id: 44,
+                export: WorkerExport {
+                    ord: 3,
+                    lanes: vec![
+                        LaneSnapshot { lane: 0, bytes: vec![1; 50] },
+                        LaneSnapshot { lane: 9, bytes: Vec::new() },
+                    ],
+                },
+            },
+            Frame::Hits(vec![
+                HitSample { seq: 1, hit: true },
+                HitSample { seq: 2, hit: false },
+            ]),
+            Frame::Done { worker_id: 3 },
+            Frame::Checkpoint { ord: 3, lane: 7, bytes: vec![4; 60] },
+            Frame::Report(Box::new(sample_report())),
+        ]
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        for frame in every_variant() {
+            assert_round_trips(&frame);
+        }
+    }
+
+    #[test]
+    fn every_frame_rejects_every_strict_prefix() {
+        for frame in every_variant() {
+            assert_prefixes_error(&frame);
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_and_unknown_tags_error() {
+        let mut bytes = Frame::Close.encode();
+        bytes.push(0);
+        let err = Frame::decode(&bytes).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+        assert!(Frame::decode(&[0]).is_err(), "tag 0 is unassigned");
+        assert!(Frame::decode(&[200]).is_err(), "tag 200 is unassigned");
+        assert!(Frame::decode(&[]).is_err(), "empty body");
+    }
+
+    #[test]
+    fn hello_version_skew_is_loud() {
+        let frame = &every_variant()[0];
+        let mut bytes = frame.encode();
+        bytes[1] = PROTO_VERSION + 1;
+        let err = Frame::decode(&bytes).unwrap_err();
+        assert!(err.to_string().contains("protocol"), "{err}");
+    }
+
+    #[test]
+    fn config_round_trip_covers_every_forgetting_kind() {
+        for forgetting in [
+            Forgetting::None,
+            Forgetting::Lru { trigger_secs: 60, max_idle_secs: 3600 },
+            Forgetting::Lfu { trigger_events: 10, min_freq: 2 },
+            Forgetting::Decay { trigger_events: 7, factor: 0.5 },
+        ] {
+            let cfg = RunConfig { forgetting, ..RunConfig::default() };
+            let mut w = WireWriter::new();
+            encode_config(&mut w, &cfg);
+            let bytes = w.into_bytes();
+            let mut r = WireReader::new(&bytes);
+            let back = decode_config(&mut r).unwrap();
+            assert!(r.is_done());
+            assert_eq!(back.forgetting, cfg.forgetting);
+            assert_eq!(back.algorithm, cfg.algorithm);
+            assert_eq!(back.seed, cfg.seed);
+            assert_eq!(back.artifacts_dir, cfg.artifacts_dir);
+        }
+    }
+
+    #[test]
+    fn property_random_frames_round_trip_and_reject_prefixes() {
+        forall("net_frame_roundtrip", 12, |rng| {
+            let n = rng.next_bounded(32) as usize;
+            let envs: Vec<Envelope> = (0..n)
+                .map(|_| Envelope {
+                    seq: rng.next_u64(),
+                    rating: Rating::new(
+                        rng.next_u64(),
+                        rng.next_u64(),
+                        rng.next_f32(),
+                        rng.next_u64(),
+                    ),
+                })
+                .collect();
+            let samples: Vec<HitSample> = (0..rng.next_bounded(64))
+                .map(|_| HitSample {
+                    seq: rng.next_u64(),
+                    hit: rng.next_bounded(2) == 1,
+                })
+                .collect();
+            let ckpt = Frame::Checkpoint {
+                ord: rng.next_u64(),
+                lane: rng.next_u64(),
+                bytes: (0..rng.next_bounded(48))
+                    .map(|_| rng.next_u32() as u8)
+                    .collect(),
+            };
+            for frame in
+                [Frame::Events(envs), Frame::Hits(samples), ckpt]
+            {
+                assert_round_trips(&frame);
+                assert_prefixes_error(&frame);
+            }
+        });
+    }
+
+    #[test]
+    fn stream_read_write_round_trips_and_ends_cleanly() {
+        let mut buf = Vec::new();
+        for frame in every_variant() {
+            write_frame(&mut buf, &frame).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(&buf[..]);
+        let mut n = 0;
+        while let Some(frame) = read_frame(&mut cursor).unwrap() {
+            assert_round_trips(&frame);
+            n += 1;
+        }
+        assert_eq!(n, every_variant().len());
+        // EOF inside a frame is an error, not a silent None.
+        let mut cursor = std::io::Cursor::new(&buf[..buf.len() - 1]);
+        loop {
+            match read_frame(&mut cursor) {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("truncated tail frame must error"),
+                Err(_) => break,
+            }
+        }
+        // A hostile length prefix over the cap fails fast.
+        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        let mut cursor = std::io::Cursor::new(&huge[..]);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

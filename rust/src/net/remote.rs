@@ -1,0 +1,304 @@
+//! Coordinator-side proxy for a remote worker: the thread that stands
+//! where an in-process [`WorkerActor`](crate::engine::actor::WorkerActor)
+//! would, speaking [`WorkerMsg`] on one side and the frame protocol
+//! ([`net::proto`](crate::net::proto)) on the other.
+//!
+//! # Shape
+//!
+//! The proxy thread dials the host, sends the hello frame, then becomes
+//! the connection's single *writer*: it drains its `WorkerMsg` FIFO,
+//! batches consecutive events into one `Events` frame, and forwards
+//! control messages — flushing buffered events first, so the socket
+//! carries exactly the FIFO order the in-proc actor would have seen. A
+//! companion *reader* thread dispatches inbound frames: RPC replies
+//! resolve through a request-id multiplexer back to the parked reply
+//! `Sender`s, hit batches and `Done` markers go to the collector, and
+//! checkpoints are forwarded with the same non-blocking `try_send`
+//! contract the in-proc actor has (a full channel drops the frame; a
+//! fresher one always follows — blocking here would deadlock against a
+//! coordinator that is itself blocked sending events to this proxy).
+//!
+//! # Failure model
+//!
+//! Any connection loss — dial failure, write error, EOF before the
+//! final `Report` frame — makes the proxy **panic**, exactly like a
+//! crashed in-proc worker. That is deliberate: the supervisor's two
+//! crash-detection paths (failed channel send and join-time panic) then
+//! work unchanged, and its recovery (respawn the slot → this transport
+//! re-dials → restore checkpoints → replay) is transport-agnostic.
+//! Before panicking the proxy clears the reply multiplexer (dropping
+//! the parked senders, so a coordinator blocked on a reply wakes with
+//! "sender gone" — the same degradation as a dead local worker) and
+//! shuts the socket down so the reader thread cannot stay blocked.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::engine::actor::{
+    ChaosPolicy, CollectorMsg, Envelope, ReplicaAnswer, WorkerExport,
+    WorkerMsg,
+};
+use crate::engine::{Sender, WorkerSnapshot};
+use crate::eval::WorkerReport;
+use crate::net::proto::{read_frame, write_frame, Frame, Hello};
+use crate::net::WorkerBoot;
+
+/// A parked reply sender, keyed by request id in the multiplexer.
+enum Pending {
+    Query(Sender<ReplicaAnswer>),
+    Snapshot(Sender<WorkerSnapshot>),
+    Export(Sender<WorkerExport>),
+}
+
+type Mux = Arc<Mutex<HashMap<u64, Pending>>>;
+
+/// Run the proxy for one worker slot until the coordinator hangs up
+/// (normal end of session / retire) or the actor exports. Panics on
+/// connection loss — see the module docs for why that is the contract.
+pub(crate) fn run_proxy(addr: &str, boot: WorkerBoot) -> Result<WorkerReport> {
+    let WorkerBoot { ord, cfg, grid, rx, col_tx, ckpt_tx, chaos } = boot;
+    let mut stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => lost(ord, addr, &format!("dial failed: {e}")),
+    };
+    // Event batches are already coalesced; don't let Nagle delay the
+    // small RPC frames behind them.
+    let _ = stream.set_nodelay(true);
+
+    let hello = Frame::Hello(Box::new(Hello {
+        ord: ord as u64,
+        v_i: grid.v_i(),
+        v_u: grid.v_u(),
+        kill_at_seq: chaos.kill_at_seq(),
+        kill_in_checkpoint: chaos.kill_in_checkpoint(),
+        cfg,
+    }));
+    if let Err(e) = write_frame(&mut stream, &hello) {
+        lost(ord, addr, &format!("hello failed: {e}"));
+    }
+
+    let mux: Mux = Arc::new(Mutex::new(HashMap::new()));
+    let report: Arc<Mutex<Option<WorkerReport>>> = Arc::new(Mutex::new(None));
+    let reader = {
+        let stream = match stream.try_clone() {
+            Ok(s) => s,
+            Err(e) => lost(ord, addr, &format!("clone failed: {e}")),
+        };
+        let mux = Arc::clone(&mux);
+        let report = Arc::clone(&report);
+        let col_tx = col_tx.clone();
+        std::thread::Builder::new()
+            .name(format!("net-reader-{ord}"))
+            .spawn(move || {
+                read_loop(stream, &mux, &report, &col_tx, &ckpt_tx)
+            })
+            .expect("spawn net reader")
+    };
+
+    // Writer loop: drain the FIFO, batch events, forward control frames
+    // in FIFO position. `send` returns the frame to flush *after* the
+    // buffered events, preserving order on the socket.
+    let mut next_req: u64 = 0;
+    let mut inbox: Vec<WorkerMsg> = Vec::new();
+    let mut events: Vec<Envelope> = Vec::new();
+    let mut exported = false;
+    'drain: while rx.recv_many(&mut inbox, usize::MAX) {
+        for msg in inbox.drain(..) {
+            let frame = match msg {
+                WorkerMsg::Event(env) => {
+                    events.push(env);
+                    continue;
+                }
+                WorkerMsg::Query { user, n, reply } => {
+                    let req_id = next_req;
+                    next_req += 1;
+                    park(&mux, req_id, Pending::Query(reply));
+                    Frame::Query { req_id, user, n: n as u64 }
+                }
+                WorkerMsg::MetricsSnapshot { reply } => {
+                    let req_id = next_req;
+                    next_req += 1;
+                    park(&mux, req_id, Pending::Snapshot(reply));
+                    Frame::Snapshot { req_id }
+                }
+                WorkerMsg::Import { lane, bytes, restore_counters } => {
+                    Frame::Import { lane, restore_counters, bytes }
+                }
+                WorkerMsg::Export { reply } => {
+                    let req_id = next_req;
+                    next_req += 1;
+                    park(&mux, req_id, Pending::Export(reply));
+                    if let Err(e) = flush_events(&mut stream, &mut events)
+                        .and_then(|()| {
+                            write_frame(&mut stream, &Frame::Export { req_id })
+                        })
+                    {
+                        fail(&mux, &stream);
+                        lost(ord, addr, &e);
+                    }
+                    // Export is terminal for the actor (in-proc parity:
+                    // it breaks its drain loop, so later sends fail).
+                    // Stop consuming the FIFO *now* — blocking in
+                    // recv_many here would deadlock the coordinator's
+                    // retire, which joins this thread before dropping
+                    // the next generation's senders.
+                    exported = true;
+                    break 'drain;
+                }
+            };
+            if let Err(e) = flush_events(&mut stream, &mut events)
+                .and_then(|()| write_frame(&mut stream, &frame))
+            {
+                fail(&mux, &stream);
+                lost(ord, addr, &e);
+            }
+        }
+        if let Err(e) = flush_events(&mut stream, &mut events) {
+            fail(&mux, &stream);
+            lost(ord, addr, &e);
+        }
+    }
+    drop(rx);
+    if !exported {
+        // Clean hangup: all coordinator senders gone. Tell the host to
+        // drain and report.
+        if let Err(e) = flush_events(&mut stream, &mut events)
+            .and_then(|()| write_frame(&mut stream, &Frame::Close))
+        {
+            fail(&mux, &stream);
+            lost(ord, addr, &e);
+        }
+    }
+
+    // Wait for the reader: it exits after the host's final Report frame
+    // (clean) or on EOF/error (crash). Keep `stream` alive until then —
+    // dropping it would close the connection under the reader.
+    let cause = reader
+        .join()
+        .unwrap_or_else(|_| Some("reader panicked".to_string()));
+    let final_report = report.lock().expect("mux poisoned").take();
+    drop(stream);
+    match final_report {
+        Some(rep) => Ok(rep),
+        None => {
+            let why = cause.unwrap_or_else(|| {
+                "connection closed without a final report".to_string()
+            });
+            lost(ord, addr, &why)
+        }
+    }
+}
+
+/// Panic with the connection-loss cause — the supervisor treats this
+/// exactly like a crashed in-proc worker (see the module docs).
+fn lost(ord: usize, addr: &str, cause: &dyn std::fmt::Display) -> ! {
+    panic!("worker {ord} lost connection to {addr}: {cause}")
+}
+
+fn park(mux: &Mux, req_id: u64, pending: Pending) {
+    mux.lock().expect("mux poisoned").insert(req_id, pending);
+}
+
+/// Pre-panic cleanup on a write error: drop every parked reply sender
+/// (a coordinator blocked on one wakes with "sender gone") and shut the
+/// socket down so the reader thread cannot stay blocked mid-read.
+fn fail(mux: &Mux, stream: &TcpStream) {
+    mux.lock().expect("mux poisoned").clear();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn flush_events(
+    stream: &mut TcpStream,
+    events: &mut Vec<Envelope>,
+) -> std::io::Result<()> {
+    if events.is_empty() {
+        return Ok(());
+    }
+    let frame = Frame::Events(std::mem::take(events));
+    write_frame(stream, &frame)
+}
+
+/// Reader-thread body: dispatch inbound frames until the host hangs up.
+/// Returns the abnormal-exit cause (`None` = clean EOF). Always clears
+/// the multiplexer on the way out so no reply sender outlives the
+/// connection.
+fn read_loop(
+    stream: TcpStream,
+    mux: &Mux,
+    report: &Arc<Mutex<Option<WorkerReport>>>,
+    col_tx: &Sender<CollectorMsg>,
+    ckpt_tx: &Option<Sender<crate::engine::actor::CheckpointMsg>>,
+) -> Option<String> {
+    let mut reader = std::io::BufReader::new(stream);
+    let cause = loop {
+        match read_frame(&mut reader) {
+            Ok(None) => break None,
+            Err(e) => break Some(e.to_string()),
+            Ok(Some(frame)) => match frame {
+                Frame::Answer { req_id, answer } => {
+                    match take(mux, req_id) {
+                        Some(Pending::Query(tx)) => {
+                            let _ = tx.send(answer);
+                        }
+                        _ => log::warn!("unmatched answer (req {req_id})"),
+                    }
+                }
+                Frame::SnapshotReply { req_id, snap } => {
+                    match take(mux, req_id) {
+                        Some(Pending::Snapshot(tx)) => {
+                            let _ = tx.send(snap);
+                        }
+                        _ => log::warn!("unmatched snapshot (req {req_id})"),
+                    }
+                }
+                Frame::ExportReply { req_id, export } => {
+                    match take(mux, req_id) {
+                        Some(Pending::Export(tx)) => {
+                            let _ = tx.send(export);
+                        }
+                        _ => log::warn!("unmatched export (req {req_id})"),
+                    }
+                }
+                Frame::Hits(samples) => {
+                    // Blocking is safe: the collector drains its channel
+                    // unconditionally for the whole session.
+                    let _ = col_tx.send(CollectorMsg::Hits(samples));
+                }
+                Frame::Done { worker_id } => {
+                    let _ = col_tx.send(CollectorMsg::Done {
+                        worker_id: worker_id as usize,
+                    });
+                }
+                Frame::Checkpoint { ord, lane, bytes } => {
+                    // Same contract as the in-proc actor: never block on
+                    // a full checkpoint channel (the coordinator may be
+                    // blocked sending events to this very proxy; waiting
+                    // for it to drain checkpoints would deadlock the
+                    // cycle). A dropped frame is always superseded by a
+                    // fresher one.
+                    if let Some(tx) = ckpt_tx {
+                        let msg = crate::engine::actor::CheckpointMsg {
+                            ord: ord as usize,
+                            lane,
+                            bytes,
+                        };
+                        let _ = tx.try_send(msg);
+                    }
+                }
+                Frame::Report(rep) => {
+                    *report.lock().expect("report poisoned") = Some(*rep);
+                }
+                _ => break Some("host sent a coordinator frame".into()),
+            },
+        }
+    };
+    mux.lock().expect("mux poisoned").clear();
+    cause
+}
+
+fn take(mux: &Mux, req_id: u64) -> Option<Pending> {
+    mux.lock().expect("mux poisoned").remove(&req_id)
+}

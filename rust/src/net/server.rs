@@ -1,0 +1,585 @@
+//! The worker host: a TCP server that runs `WorkerActor`s for remote
+//! coordinators (`streamrec worker --listen <addr>`).
+//!
+//! Each accepted connection hosts exactly one worker slot: the first
+//! frame must be the hello (ordinal, state-grid shape, chaos policy,
+//! full run configuration), after which the host builds the same
+//! channel plumbing an in-process spawn would have — a bounded
+//! `WorkerMsg` FIFO, a collector channel, and (with fault tolerance on)
+//! a checkpoint channel — and runs the actor on a local thread. A
+//! *reader* thread translates inbound frames into `WorkerMsg`s (reply
+//! senders for the RPC variants are parked in a FIFO of pending
+//! replies; the actor answers in request order because it is
+//! sequential), and the connection's handler thread *pumps* outbound
+//! traffic: hit batches, checkpoints, RPC replies, and finally the
+//! actor's report.
+//!
+//! # Ordering invariant
+//!
+//! The in-proc actor hands buffered hit samples to the collector
+//! *before* a checkpoint frame can reach the supervisor (crash safety:
+//! the frame's watermark covers those samples). The pump preserves this
+//! over the single ordered socket by draining the checkpoint channel
+//! *first* and the collector channel *second* each iteration, then
+//! writing collector frames *before* checkpoint frames: a checkpoint
+//! captured at drain time provably entered its channel after the hits
+//! that precede it entered theirs, so those hits are in the later drain
+//! and ship ahead of it.
+//!
+//! # Failure model
+//!
+//! If the actor dies (an injected chaos kill, or a real bug), the
+//! connection is dropped *without* a final `Report` frame — the
+//! coordinator-side proxy translates that into a worker panic and the
+//! supervisor's checkpoint-restore recovery takes over, re-dialing this
+//! same host for the replacement slot. The server itself stays up: one
+//! crashed slot never takes down its neighbors.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::router::StateGrid;
+use crate::engine::actor::{
+    ChaosPolicy, CollectorMsg, ReplicaAnswer, WorkerActor, WorkerExport,
+    WorkerMsg,
+};
+use crate::engine::{bounded, spawn, Receiver, Sender, WorkerSnapshot};
+use crate::net::proto::{read_frame, write_frame, Frame, Hello};
+
+/// How often the accept loop polls for shutdown between connections.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Pump idle sleep while waiting for outbound traffic.
+const PUMP_POLL: Duration = Duration::from_millis(1);
+
+/// State shared between the server handle, the accept loop, and the
+/// per-connection handlers.
+struct Shared {
+    stop: AtomicBool,
+    connections: AtomicU64,
+    events_routed: AtomicU64,
+    active: AtomicUsize,
+    /// Live connection sockets by connection id — the [`WorkerServer::sever`]
+    /// chaos hook shuts these down abruptly.
+    streams: Mutex<HashMap<u64, TcpStream>>,
+}
+
+/// A TCP server hosting one `WorkerActor` per inbound connection —
+/// the remote end of the `tcp://` transport. Bind one with
+/// [`WorkerServer::bind`] (also the engine behind `streamrec worker
+/// --listen`), point a coordinator's `[cluster] workers` entry at it,
+/// and stop it with [`WorkerServer::shutdown`].
+pub struct WorkerServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl WorkerServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7461"`, or port `0` for an
+    /// ephemeral port — see [`WorkerServer::local_addr`]) and start
+    /// accepting coordinator connections in a background thread.
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding worker server on {addr}"))?;
+        let local = listener.local_addr().context("resolving bound addr")?;
+        listener
+            .set_nonblocking(true)
+            .context("making the accept loop pollable")?;
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            connections: AtomicU64::new(0),
+            events_routed: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+            streams: Mutex::new(HashMap::new()),
+        });
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let handlers = Arc::clone(&handlers);
+            std::thread::Builder::new()
+                .name("net-accept".to_string())
+                .spawn(move || accept_loop(listener, &shared, &handlers))
+                .context("spawning the accept loop")?
+        };
+        log::info!("worker server listening on {local}");
+        Ok(Self { addr: local, shared, accept: Some(accept), handlers })
+    }
+
+    /// The address actually bound (resolves a requested port `0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connections accepted so far (each hosts one worker slot).
+    pub fn connections(&self) -> u64 {
+        self.shared.connections.load(Ordering::Relaxed)
+    }
+
+    /// Stream events routed into hosted actors so far.
+    pub fn events_routed(&self) -> u64 {
+        self.shared.events_routed.load(Ordering::Relaxed)
+    }
+
+    /// Connections currently being served.
+    pub fn active(&self) -> usize {
+        self.shared.active.load(Ordering::Relaxed)
+    }
+
+    /// Abruptly shut down every live connection socket (both
+    /// directions) and return how many were hit — the chaos hook for
+    /// remote-failure tests: the coordinator sees each severed worker
+    /// as crashed and runs checkpoint-restore recovery, while this
+    /// server keeps accepting the replacement dials.
+    pub fn sever(&self) -> usize {
+        let streams = self.shared.streams.lock().expect("streams poisoned");
+        let mut hit = 0;
+        for stream in streams.values() {
+            if stream.shutdown(Shutdown::Both).is_ok() {
+                hit += 1;
+            }
+        }
+        hit
+    }
+
+    /// Block until the server has served at least one connection and
+    /// has had zero active connections for `grace` — the `--once` exit
+    /// condition. The grace window bridges the short all-closed gaps a
+    /// live session produces (a rescale retires one generation's
+    /// connections before the next generation dials; an experiment
+    /// driver runs several sessions back to back).
+    pub fn wait_idle(&self, grace: Duration) {
+        let mut idle_since: Option<Instant> = None;
+        loop {
+            let served = self.connections() > 0;
+            let idle = self.active() == 0;
+            if served && idle {
+                let t0 = *idle_since.get_or_insert_with(Instant::now);
+                if t0.elapsed() >= grace {
+                    return;
+                }
+            } else {
+                idle_since = None;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Stop accepting, sever any still-active connection (their
+    /// coordinators see a crashed worker), and join every server
+    /// thread. Call [`WorkerServer::wait_idle`] first for a graceful
+    /// stop.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("accept loop panicked"))?;
+        }
+        self.sever();
+        let handles: Vec<JoinHandle<()>> = std::mem::take(
+            &mut *self.handlers.lock().expect("handlers poisoned"),
+        );
+        for h in handles {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("connection handler panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Accept connections until told to stop, spawning one handler thread
+/// per connection.
+fn accept_loop(
+    listener: TcpListener,
+    shared: &Arc<Shared>,
+    handlers: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        let (stream, peer) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+                continue;
+            }
+            Err(e) => {
+                log::error!("worker server accept failed: {e}");
+                std::thread::sleep(ACCEPT_POLL);
+                continue;
+            }
+        };
+        // Accepted sockets must block: the reader and pump are plain
+        // blocking threads (the listener alone is nonblocking).
+        if stream.set_nonblocking(false).is_err() {
+            continue;
+        }
+        let _ = stream.set_nodelay(true);
+        let conn_id = shared.connections.fetch_add(1, Ordering::Relaxed);
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        if let Ok(clone) = stream.try_clone() {
+            shared
+                .streams
+                .lock()
+                .expect("streams poisoned")
+                .insert(conn_id, clone);
+        }
+        log::info!("worker server: connection {conn_id} from {peer}");
+        let shared2 = Arc::clone(shared);
+        let handle = std::thread::Builder::new()
+            .name(format!("net-conn-{conn_id}"))
+            .spawn(move || {
+                if let Err(e) = serve_connection(&shared2, stream) {
+                    log::warn!("connection {conn_id}: {e:#}");
+                }
+                shared2
+                    .streams
+                    .lock()
+                    .expect("streams poisoned")
+                    .remove(&conn_id);
+                shared2.active.fetch_sub(1, Ordering::SeqCst);
+                log::info!("worker server: connection {conn_id} done");
+            })
+            .expect("spawn connection handler");
+        handlers.lock().expect("handlers poisoned").push(handle);
+    }
+}
+
+/// One pending RPC reply: the receiver half of the bounded(1) reply
+/// channel handed to the actor, keyed by the request id to echo.
+enum PendingReply {
+    Query(u64, Receiver<ReplicaAnswer>),
+    Snapshot(u64, Receiver<WorkerSnapshot>),
+    Export(u64, Receiver<WorkerExport>),
+}
+
+/// Host one worker slot for the lifetime of one connection.
+fn serve_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
+    // The reader half is a buffered clone; this thread keeps the write
+    // half. The hello is read here (before the reader thread exists) on
+    // the same BufReader the reader thread will inherit, so no buffered
+    // bytes are lost.
+    let mut reader_stream = BufReader::new(
+        stream.try_clone().context("cloning the connection")?,
+    );
+    let hello = match read_frame(&mut reader_stream)
+        .context("reading the hello frame")?
+    {
+        Some(Frame::Hello(h)) => *h,
+        Some(_) => bail!("first frame was not a hello"),
+        None => bail!("peer hung up before the hello frame"),
+    };
+    let Hello { ord, v_i, v_u, kill_at_seq, kill_in_checkpoint, cfg } = hello;
+    let ord = ord as usize;
+    let grid = StateGrid::new(v_i, v_u)
+        .context("rebuilding the state grid from the hello frame")?;
+    let chaos = ChaosPolicy::from_parts(kill_at_seq, kill_in_checkpoint);
+
+    // The same plumbing Supervisor::spawn_slot builds for a local slot.
+    let (tx, rx) = bounded::<WorkerMsg>(cfg.channel_capacity);
+    let (col_tx, col_rx) = bounded::<CollectorMsg>(1024);
+    let (ckpt_tx, ckpt_rx) = if cfg.fault_checkpoint_interval > 0 {
+        let (ctx, crx) = bounded(grid.n_lanes() as usize + 64);
+        (Some(ctx), Some(crx))
+    } else {
+        (None, None)
+    };
+    let actor =
+        WorkerActor::new(ord, cfg, grid, rx, col_tx, ckpt_tx, chaos);
+    let actor_handle = spawn(ord, "worker", move || actor.run());
+
+    let pending: Arc<Mutex<VecDeque<PendingReply>>> =
+        Arc::new(Mutex::new(VecDeque::new()));
+    let reader_handle = {
+        let pending = Arc::clone(&pending);
+        let shared = Arc::clone(shared);
+        std::thread::Builder::new()
+            .name(format!("net-host-reader-{ord}"))
+            .spawn(move || {
+                reader_loop(reader_stream, tx, &pending, &shared)
+            })
+            .context("spawning the connection reader")?
+    };
+
+    let report = pump(&stream, &col_rx, ckpt_rx.as_ref(), &pending, || {
+        actor_handle.is_finished()
+    });
+
+    // Join the actor. A clean report ships as the final frame; a crash
+    // (chaos kill or real bug) drops the connection with *no* report —
+    // the coordinator's proxy panics on that, which is the contract.
+    let mut result = Ok(());
+    match actor_handle.join() {
+        Ok(Ok(worker_report)) if report.is_ok() => {
+            let mut w = &stream;
+            if let Err(e) =
+                write_frame(&mut w, &Frame::Report(Box::new(worker_report)))
+            {
+                result = Err(e).context("writing the final report");
+            }
+        }
+        Ok(Ok(_)) => {
+            // Pump lost the socket first; nowhere to send the report.
+            result = report.context("connection pump failed");
+        }
+        Ok(Err(e)) => {
+            log::warn!("hosted worker {ord} failed: {e:#}");
+        }
+        Err(panic) => {
+            log::warn!("hosted worker {ord} crashed: {panic:#}");
+        }
+    }
+    // Close both directions so the peer sees EOF and our reader thread
+    // (possibly parked in a blocking read) wakes up.
+    let _ = stream.shutdown(Shutdown::Both);
+    let _ = reader_handle.join();
+    result
+}
+
+/// Reader-thread body: translate inbound frames into `WorkerMsg` sends.
+/// Exits on `Close` + EOF, on connection loss, or when the actor stops
+/// accepting (death — the handler notices via the join).
+fn reader_loop(
+    mut stream: BufReader<TcpStream>,
+    tx: Sender<WorkerMsg>,
+    pending: &Arc<Mutex<VecDeque<PendingReply>>>,
+    shared: &Arc<Shared>,
+) {
+    let mut tx = Some(tx);
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => break,
+            Err(e) => {
+                log::debug!("host reader: {e}");
+                break;
+            }
+        };
+        let Some(sender) = tx.as_ref() else {
+            // Frames after Close violate the protocol; drop them and
+            // keep draining to EOF so the peer's writes don't block.
+            continue;
+        };
+        let sent = match frame {
+            Frame::Events(envs) => {
+                let n = envs.len() as u64;
+                let mut ok = true;
+                for env in envs {
+                    // Blocking send: actor backpressure propagates to
+                    // the socket, exactly like a local slot's bounded
+                    // channel slows the coordinator down.
+                    if sender.send(WorkerMsg::Event(env)).is_err() {
+                        ok = false;
+                        break;
+                    }
+                }
+                shared.events_routed.fetch_add(n, Ordering::Relaxed);
+                ok
+            }
+            Frame::Import { lane, restore_counters, bytes } => sender
+                .send(WorkerMsg::Import { lane, bytes, restore_counters })
+                .is_ok(),
+            Frame::Query { req_id, user, n } => {
+                let (rtx, rrx) = bounded::<ReplicaAnswer>(1);
+                let ok = sender
+                    .send(WorkerMsg::Query {
+                        user,
+                        n: n as usize,
+                        reply: rtx,
+                    })
+                    .is_ok();
+                if ok {
+                    pending
+                        .lock()
+                        .expect("pending poisoned")
+                        .push_back(PendingReply::Query(req_id, rrx));
+                }
+                ok
+            }
+            Frame::Snapshot { req_id } => {
+                let (rtx, rrx) = bounded::<WorkerSnapshot>(1);
+                let ok = sender
+                    .send(WorkerMsg::MetricsSnapshot { reply: rtx })
+                    .is_ok();
+                if ok {
+                    pending
+                        .lock()
+                        .expect("pending poisoned")
+                        .push_back(PendingReply::Snapshot(req_id, rrx));
+                }
+                ok
+            }
+            Frame::Export { req_id } => {
+                let (rtx, rrx) = bounded::<WorkerExport>(1);
+                let ok = sender
+                    .send(WorkerMsg::Export { reply: rtx })
+                    .is_ok();
+                if ok {
+                    pending
+                        .lock()
+                        .expect("pending poisoned")
+                        .push_back(PendingReply::Export(req_id, rrx));
+                }
+                ok
+            }
+            Frame::Close => {
+                // Drop our FIFO sender: the actor drains and reports.
+                // Keep reading to EOF so a slow peer never blocks on a
+                // full socket buffer.
+                tx = None;
+                continue;
+            }
+            _ => {
+                log::warn!("host reader: peer sent a worker frame");
+                break;
+            }
+        };
+        if !sent {
+            // The actor is gone (crash). Stop translating; the handler
+            // drops the connection without a report.
+            break;
+        }
+    }
+}
+
+/// Pump outbound traffic until the actor exits, preserving the
+/// hits-before-checkpoint ordering (module docs). Returns `Err` on
+/// socket failure — but only *after* the actor has exited: once a write
+/// fails the pump turns into a sink that keeps draining (and
+/// discarding) the actor's channels, because an actor blocked sending
+/// into a full collector channel nobody drains would never finish and
+/// the handler's join would hang forever.
+fn pump(
+    stream: &TcpStream,
+    col_rx: &Receiver<CollectorMsg>,
+    ckpt_rx: Option<&Receiver<crate::engine::actor::CheckpointMsg>>,
+    pending: &Arc<Mutex<VecDeque<PendingReply>>>,
+    actor_finished: impl Fn() -> bool,
+) -> std::io::Result<()> {
+    let mut w = stream;
+    let mut broken: Option<std::io::Error> = None;
+    let mut ck = Vec::new();
+    let mut co = Vec::new();
+    loop {
+        let finished = actor_finished();
+        // Capture checkpoints FIRST, collector traffic SECOND, then
+        // write collector frames before checkpoint frames: a checkpoint
+        // seen at the first capture entered its channel after the hit
+        // batch that precedes it entered the collector channel, so that
+        // batch is in the second capture and ships first.
+        if let Some(crx) = ckpt_rx {
+            crx.try_drain(&mut ck);
+        }
+        col_rx.try_drain(&mut co);
+        let mut progress = !ck.is_empty() || !co.is_empty();
+        for msg in co.drain(..) {
+            if broken.is_some() {
+                continue; // sink mode: drain, don't write
+            }
+            let frame = match msg {
+                CollectorMsg::Hits(samples) => Frame::Hits(samples),
+                CollectorMsg::Done { worker_id } => {
+                    Frame::Done { worker_id: worker_id as u64 }
+                }
+            };
+            if let Err(e) = write_frame(&mut w, &frame) {
+                broken = Some(e);
+            }
+        }
+        for msg in ck.drain(..) {
+            if broken.is_some() {
+                continue;
+            }
+            let frame = Frame::Checkpoint {
+                ord: msg.ord as u64,
+                lane: msg.lane,
+                bytes: msg.bytes,
+            };
+            if let Err(e) = write_frame(&mut w, &frame) {
+                broken = Some(e);
+            }
+        }
+        // Resolve at most ONE pending RPC reply per pass, in request
+        // order (the actor is sequential, so replies complete in the
+        // order they were asked). One per pass keeps the wire faithful
+        // to the in-proc ordering: hits the actor flushed before
+        // answering the *next* request are picked up by the next pass's
+        // collector drain and ship ahead of that reply.
+        let reply = {
+            let mut queue = pending.lock().expect("pending poisoned");
+            match queue.front() {
+                None => None,
+                Some(front) => {
+                    let ready = match front {
+                        PendingReply::Query(req_id, rrx) => {
+                            let mut out = Vec::new();
+                            rrx.try_drain(&mut out);
+                            out.pop().map(|answer| Frame::Answer {
+                                req_id: *req_id,
+                                answer,
+                            })
+                        }
+                        PendingReply::Snapshot(req_id, rrx) => {
+                            let mut out = Vec::new();
+                            rrx.try_drain(&mut out);
+                            out.pop().map(|snap| Frame::SnapshotReply {
+                                req_id: *req_id,
+                                snap,
+                            })
+                        }
+                        PendingReply::Export(req_id, rrx) => {
+                            let mut out = Vec::new();
+                            rrx.try_drain(&mut out);
+                            out.pop().map(|export| Frame::ExportReply {
+                                req_id: *req_id,
+                                export,
+                            })
+                        }
+                    };
+                    if ready.is_some() {
+                        queue.pop_front();
+                        ready
+                    } else if finished || broken.is_some() {
+                        // Never going to be answered (the actor died
+                        // mid-request) or nowhere to send it: discard.
+                        queue.pop_front();
+                        progress = true;
+                        None
+                    } else {
+                        None
+                    }
+                }
+            }
+        };
+        if let Some(frame) = reply {
+            progress = true;
+            if broken.is_none() {
+                if let Err(e) = write_frame(&mut w, &frame) {
+                    broken = Some(e);
+                }
+            }
+        }
+        if finished
+            && !progress
+            && pending.lock().expect("pending poisoned").is_empty()
+        {
+            // The actor exited, a full sweep found nothing queued, and
+            // no reply is owed: everything it ever sent is on the wire
+            // (or intentionally discarded in sink mode).
+            return match broken {
+                Some(e) => Err(e),
+                None => Ok(()),
+            };
+        }
+        if !progress {
+            std::thread::sleep(PUMP_POLL);
+        }
+    }
+}

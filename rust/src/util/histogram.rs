@@ -113,6 +113,47 @@ impl Histogram {
         self.max = self.max.max(other.max);
     }
 
+    /// Serialize into a wire writer (bucket counts, total, the u128 sum
+    /// split into two u64 halves, min, max) — the networked transport
+    /// ships per-worker latency histograms home inside the final report.
+    pub(crate) fn wire_encode(&self, w: &mut crate::util::wire::WireWriter) {
+        w.u64_slice(&self.counts);
+        w.u64(self.total);
+        w.u64((self.sum >> 64) as u64);
+        w.u64(self.sum as u64);
+        w.u64(self.min);
+        w.u64(self.max);
+    }
+
+    /// Decode the counterpart of [`Histogram::wire_encode`]; truncated
+    /// or shape-skewed input is a `WireError`, never a panic.
+    pub(crate) fn wire_decode(
+        r: &mut crate::util::wire::WireReader<'_>,
+    ) -> Result<Self, crate::util::wire::WireError> {
+        let counts = r.u64_slice()?;
+        if counts.len() != BUCKETS {
+            return Err(crate::util::wire::WireError {
+                pos: 0,
+                msg: format!(
+                    "histogram has {} buckets, expected {BUCKETS}",
+                    counts.len()
+                ),
+            });
+        }
+        let total = r.u64()?;
+        let sum_hi = r.u64()?;
+        let sum_lo = r.u64()?;
+        let min = r.u64()?;
+        let max = r.u64()?;
+        Ok(Self {
+            counts,
+            total,
+            sum: ((sum_hi as u128) << 64) | sum_lo as u128,
+            min,
+            max,
+        })
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
@@ -162,6 +203,31 @@ mod tests {
         // ~25% relative bucket error allowed.
         assert!((p50 as f64) > 3500.0 && (p50 as f64) < 6500.0, "p50={p50}");
         assert!((p99 as f64) > 7300.0, "p99={p99}");
+    }
+
+    #[test]
+    fn wire_round_trip_is_exact() {
+        use crate::util::wire::{WireReader, WireWriter};
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 17, 1_000_000, u64::MAX / 3] {
+            h.record(v);
+        }
+        let mut w = WireWriter::new();
+        h.wire_encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        let back = Histogram::wire_decode(&mut r).unwrap();
+        assert!(r.is_done());
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.min(), h.min());
+        assert_eq!(back.max(), h.max());
+        assert_eq!(back.sum, h.sum, "u128 sum survives the u64 halves");
+        assert_eq!(back.counts, h.counts);
+        // Truncation errors loudly at every strict prefix.
+        for cut in 0..bytes.len() {
+            let mut r = WireReader::new(&bytes[..cut]);
+            assert!(Histogram::wire_decode(&mut r).is_err(), "cut={cut}");
+        }
     }
 
     #[test]

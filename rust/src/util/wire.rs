@@ -96,6 +96,21 @@ impl WireWriter {
     pub fn bytes(&mut self, bs: &[u8]) {
         self.buf.extend_from_slice(bs);
     }
+
+    /// Append a `u32`-length-prefixed byte slice — unlike
+    /// [`WireWriter::bytes`], the counterpart read knows exactly where
+    /// the payload ends, so a frame can carry several of them and any
+    /// truncation is detectable (the networked-transport framing relies
+    /// on this: no trailing-`rest` payloads on the wire).
+    pub fn byte_slice(&mut self, bs: &[u8]) {
+        self.u32(bs.len() as u32);
+        self.buf.extend_from_slice(bs);
+    }
+
+    /// Append a `u32`-length-prefixed UTF-8 string.
+    pub fn string(&mut self, s: &str) {
+        self.byte_slice(s.as_bytes());
+    }
 }
 
 /// Bounds-checked decoder over an encoded byte slice.
@@ -188,6 +203,26 @@ impl<'a> WireReader<'a> {
         self.pos = self.buf.len();
         out
     }
+
+    /// Read a `u32`-length-prefixed byte slice (the counterpart of
+    /// [`WireWriter::byte_slice`]). A length prefix larger than the
+    /// remaining buffer is a bounds error, never an allocation of the
+    /// claimed size.
+    pub fn byte_slice(&mut self) -> Result<Vec<u8>, WireError> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n, "byte slice")?.to_vec())
+    }
+
+    /// Read a `u32`-length-prefixed UTF-8 string (the counterpart of
+    /// [`WireWriter::string`]); invalid UTF-8 is a [`WireError`].
+    pub fn string(&mut self) -> Result<String, WireError> {
+        let pos = self.pos;
+        let bytes = self.byte_slice()?;
+        String::from_utf8(bytes).map_err(|e| WireError {
+            pos,
+            msg: format!("invalid UTF-8 in string: {e}"),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -249,6 +284,46 @@ mod tests {
         assert_eq!(r.rest(), &[1, 2, 3, 4, 5]);
         assert!(r.is_done());
         assert_eq!(r.rest(), &[] as &[u8], "rest after rest is empty");
+    }
+
+    #[test]
+    fn byte_slice_and_string_round_trip() {
+        let mut w = WireWriter::new();
+        w.byte_slice(&[9, 8, 7]);
+        w.string("tcp://127.0.0.1:7461");
+        w.byte_slice(&[]);
+        w.string("");
+        let bytes = w.into_bytes();
+        let mut r = WireReader::new(&bytes);
+        assert_eq!(r.byte_slice().unwrap(), vec![9, 8, 7]);
+        assert_eq!(r.string().unwrap(), "tcp://127.0.0.1:7461");
+        assert_eq!(r.byte_slice().unwrap(), Vec::<u8>::new());
+        assert_eq!(r.string().unwrap(), "");
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn byte_slice_truncation_and_bad_utf8_error() {
+        let mut w = WireWriter::new();
+        w.byte_slice(&[1, 2, 3, 4]);
+        let bytes = w.into_bytes();
+        // Every strict prefix must fail loudly.
+        for cut in 0..bytes.len() {
+            let mut r = WireReader::new(&bytes[..cut]);
+            assert!(r.byte_slice().is_err(), "prefix of {cut} bytes");
+        }
+        // A hostile length prefix is a bounds error, not an allocation.
+        let mut w = WireWriter::new();
+        w.u32(u32::MAX);
+        let bytes = w.into_bytes();
+        assert!(WireReader::new(&bytes).byte_slice().is_err());
+        // Invalid UTF-8 surfaces as a WireError with the right offset.
+        let mut w = WireWriter::new();
+        w.byte_slice(&[0xFF, 0xFE]);
+        let bytes = w.into_bytes();
+        let err = WireReader::new(&bytes).string().unwrap_err();
+        assert_eq!(err.pos, 0);
+        assert!(err.to_string().contains("UTF-8"));
     }
 
     #[test]

@@ -249,6 +249,53 @@ fn disabled_fault_tolerance_keeps_the_loud_failure_contract() {
 }
 
 #[test]
+fn severed_remote_connection_recovers_byte_identical() {
+    // Remote-worker failure without chaos cooperation: every live
+    // worker connection is cut mid-stream at the TCP level
+    // (`WorkerServer::sever`). The coordinator-side proxies panic on
+    // their next write — the same detection surface as a crashed local
+    // worker — and the supervisor re-dials the (still listening) host
+    // and restores from checkpoints. The recovered session must match
+    // the in-proc baseline byte for byte.
+    use streamrec::net::WorkerServer;
+    let evs = events(1400, 27);
+    let users = panel(&evs, 4);
+    let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+
+    let base_cfg = fault_cfg(Algorithm::Isgd, 8);
+    let base = run_session(&base_cfg, &evs, &users, None);
+
+    let mut cfg = base_cfg.clone();
+    cfg.cluster_workers = vec![format!("tcp://{}", server.local_addr())];
+    let mut cluster = Cluster::spawn_labeled(&cfg, "t-sever").unwrap();
+    let split = evs.len() / 2;
+    cluster.ingest_batch(&evs[..split]).unwrap();
+    let mid: Vec<Vec<u64>> = users
+        .iter()
+        .map(|&u| cluster.recommend(u, 10).unwrap())
+        .collect();
+    let severed = server.sever();
+    assert!(severed >= 1, "live connections were cut");
+    // Keep streaming: the cut surfaces on the proxies' next writes and
+    // recovery must absorb it invisibly.
+    cluster.ingest_batch(&evs[split..]).unwrap();
+    let end: Vec<Vec<u64>> = users
+        .iter()
+        .map(|&u| cluster.recommend(u, 10).unwrap())
+        .collect();
+    let report = cluster.finish().unwrap();
+    let remote = Outcome { mid, end, report };
+
+    assert!(
+        remote.report.recoveries >= 1,
+        "a severed connection is a detected worker loss"
+    );
+    assert_indistinguishable(&base, &remote, "severed-remote");
+    server.wait_idle(std::time::Duration::from_millis(100));
+    server.shutdown().unwrap();
+}
+
+#[test]
 fn exhausted_replay_log_refuses_to_lose_events() {
     // A replay log smaller than the checkpoint gap cannot recover
     // without losing events — the supervisor must say so explicitly.

@@ -1,0 +1,267 @@
+//! Transport-equivalence properties for the pluggable worker transport
+//! (`net/`): a session whose workers live behind loopback TCP must be
+//! **byte-identical** to the same seeded session run fully in-process —
+//! identical answers at every probe point, identical hit totals and
+//! recall curves — including a mid-stream rescale, a mixed
+//! local-plus-remote placement cycle, and a chaos-killed remote worker
+//! recovered via checkpoint restore + replay over the wire.
+//!
+//! The last test leaves the in-process harness entirely: it spawns real
+//! `streamrec worker` child processes (two of them) and drives the
+//! coordinator against them — rescale and remote crash recovery
+//! included.
+
+use std::time::Duration;
+
+use streamrec::config::{Algorithm, RunConfig, Topology};
+use streamrec::coordinator::Cluster;
+use streamrec::data::synth::{SyntheticConfig, SyntheticStream};
+use streamrec::data::types::Rating;
+use streamrec::eval::RunReport;
+use streamrec::net::WorkerServer;
+use streamrec::util::proptest::forall;
+
+fn events(n: u64, seed: u64) -> Vec<Rating> {
+    SyntheticStream::new(SyntheticConfig::netflix_like(n, seed)).collect()
+}
+
+/// First `k` distinct users of a slice, in stream order.
+fn panel(evs: &[Rating], k: usize) -> Vec<u64> {
+    let mut users = Vec::new();
+    for e in evs {
+        if !users.contains(&e.user) {
+            users.push(e.user);
+            if users.len() == k {
+                break;
+            }
+        }
+    }
+    users
+}
+
+/// Base config shared by every pairing: n_i = 2 (4 workers) with
+/// headroom to rescale to 4.
+fn base_cfg(algo: Algorithm, checkpoint_interval: u64) -> RunConfig {
+    RunConfig {
+        algorithm: algo,
+        topology: Topology::new(2, 0).unwrap(),
+        rescale_max_n_i: 4,
+        sample_every: 200,
+        fault_checkpoint_interval: checkpoint_interval,
+        ..RunConfig::default()
+    }
+}
+
+/// What one session run produces at the shared probe points.
+struct Outcome {
+    mid: Vec<Vec<u64>>,
+    end: Vec<Vec<u64>>,
+    report: RunReport,
+}
+
+/// Drive one full session: ingest the first half, probe the panel,
+/// optionally rescale, ingest the rest, probe again, finish. Identical
+/// to the fault-tolerance driver so transport pairings compare the
+/// exact same session shape.
+fn run_session(
+    cfg: &RunConfig,
+    evs: &[Rating],
+    users: &[u64],
+    rescale_to: Option<u64>,
+) -> Outcome {
+    let mut cluster = Cluster::spawn_labeled(cfg, "t-transport").unwrap();
+    let split = evs.len() / 2;
+    cluster.ingest_batch(&evs[..split]).unwrap();
+    let mid: Vec<Vec<u64>> = users
+        .iter()
+        .map(|&u| cluster.recommend(u, 10).unwrap())
+        .collect();
+    if let Some(n_i) = rescale_to {
+        cluster.rescale(Topology::new(n_i, 0).unwrap()).unwrap();
+    }
+    cluster.ingest_batch(&evs[split..]).unwrap();
+    let end: Vec<Vec<u64>> = users
+        .iter()
+        .map(|&u| cluster.recommend(u, 10).unwrap())
+        .collect();
+    let report = cluster.finish().unwrap();
+    Outcome { mid, end, report }
+}
+
+fn assert_identical(inproc: &Outcome, tcp: &Outcome, label: &str) {
+    assert_eq!(inproc.mid, tcp.mid, "{label}: mid-stream answers");
+    assert_eq!(inproc.end, tcp.end, "{label}: end-of-stream answers");
+    assert_eq!(inproc.report.events, tcp.report.events, "{label}: events");
+    assert_eq!(inproc.report.hits, tcp.report.hits, "{label}: hit totals");
+    assert_eq!(
+        inproc.report.recall_curve, tcp.report.recall_curve,
+        "{label}: recall curves"
+    );
+}
+
+#[test]
+fn property_loopback_tcp_is_byte_identical_to_inproc() {
+    // For random (algorithm, checkpointing on/off, with/without a
+    // mid-stream rescale): the same seeded stream through all-remote
+    // workers answers and scores exactly like the all-local session.
+    let evs = events(1400, 17);
+    let users = panel(&evs, 5);
+    let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+    let addr = format!("tcp://{}", server.local_addr());
+    forall("transport_equivalence", 4, |rng| {
+        let algo = if rng.next_bounded(2) == 0 {
+            Algorithm::Isgd
+        } else {
+            Algorithm::Cosine
+        };
+        let ckpt = if rng.next_bounded(2) == 0 {
+            0
+        } else {
+            1 + rng.next_bounded(64)
+        };
+        let rescale_to =
+            if rng.next_bounded(2) == 0 { Some(4u64) } else { None };
+        let label =
+            format!("algo={algo:?} ckpt={ckpt} rescale={rescale_to:?}");
+
+        let cfg = base_cfg(algo, ckpt);
+        let mut tcp_cfg = cfg.clone();
+        tcp_cfg.cluster_workers = vec![addr.clone()];
+
+        let inproc = run_session(&cfg, &evs, &users, rescale_to);
+        let tcp = run_session(&tcp_cfg, &evs, &users, rescale_to);
+        assert_identical(&inproc, &tcp, &label);
+    });
+    server.wait_idle(Duration::from_millis(100));
+    assert!(server.connections() >= 4, "every worker slot dialed in");
+    assert!(server.events_routed() > 0, "events crossed the wire");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn mixed_local_and_tcp_placement_is_identical() {
+    // Placement cycle ["local", "tcp://..."]: even slots are threads,
+    // odd slots are remote — same bytes out, including across a
+    // rescale that doubles the worker count.
+    let evs = events(1500, 29);
+    let users = panel(&evs, 5);
+    let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let cfg = base_cfg(algo, 16);
+        let mut mixed_cfg = cfg.clone();
+        mixed_cfg.cluster_workers = vec![
+            "local".to_string(),
+            format!("tcp://{}", server.local_addr()),
+        ];
+        let inproc = run_session(&cfg, &evs, &users, Some(4));
+        let mixed = run_session(&mixed_cfg, &evs, &users, Some(4));
+        assert_identical(&inproc, &mixed, &format!("{algo:?} mixed"));
+        assert_eq!(mixed.report.rescales, 1);
+    }
+    server.wait_idle(Duration::from_millis(100));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn chaos_killed_remote_worker_recovers_byte_identical() {
+    // The remote failure path end to end: the chaos kill fires inside
+    // the *hosted* actor, the host drops the connection without a final
+    // report, the coordinator-side proxy panics (crash parity), and the
+    // supervisor re-dials the same host and restores from checkpoints
+    // shipped over the wire. The recovered remote session must match
+    // the never-crashed in-proc baseline byte for byte.
+    let evs = events(1300, 41);
+    let users = panel(&evs, 4);
+    let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+    let addr = format!("tcp://{}", server.local_addr());
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let cfg = base_cfg(algo, 8);
+        let mut chaos_cfg = cfg.clone();
+        chaos_cfg.cluster_workers = vec![addr.clone()];
+        chaos_cfg.fault_chaos_kill_seq = Some(400);
+
+        let inproc = run_session(&cfg, &evs, &users, None);
+        let remote = run_session(&chaos_cfg, &evs, &users, None);
+        assert_eq!(
+            remote.report.recoveries, 1,
+            "{algo:?}: the remote kill fires exactly once"
+        );
+        assert!(
+            remote.report.checkpoint_bytes > 0,
+            "{algo:?}: checkpoints crossed the wire"
+        );
+        assert_identical(&inproc, &remote, &format!("{algo:?} remote-kill"));
+    }
+    server.wait_idle(Duration::from_millis(100));
+    server.shutdown().unwrap();
+}
+
+/// A real `streamrec worker` child process bound to an ephemeral
+/// loopback port, address parsed from its first stdout line.
+struct WorkerProc {
+    child: std::process::Child,
+    addr: String,
+}
+
+impl WorkerProc {
+    fn spawn() -> WorkerProc {
+        use std::io::BufRead;
+        let mut child = std::process::Command::new(env!(
+            "CARGO_BIN_EXE_streamrec"
+        ))
+        .args(["worker", "--listen", "127.0.0.1:0"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn streamrec worker");
+        let stdout = child.stdout.take().expect("worker stdout piped");
+        let mut line = String::new();
+        std::io::BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("read the listening line");
+        let addr = line
+            .trim()
+            .rsplit(' ')
+            .next()
+            .expect("addr on the listening line")
+            .to_string();
+        assert!(
+            line.contains("listening"),
+            "unexpected first line: {line:?}"
+        );
+        WorkerProc { child, addr: format!("tcp://{addr}") }
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+#[test]
+fn two_worker_processes_match_inproc_with_rescale_and_crash() {
+    // The acceptance run: a coordinator plus two real worker processes,
+    // one mid-stream rescale, and one chaos-killed-and-recovered remote
+    // worker — byte-identical to the all-in-process session.
+    let evs = events(1200, 53);
+    let users = panel(&evs, 4);
+    let w1 = WorkerProc::spawn();
+    let w2 = WorkerProc::spawn();
+
+    let cfg = base_cfg(Algorithm::Isgd, 8);
+    let mut remote_cfg = cfg.clone();
+    remote_cfg.cluster_workers = vec![w1.addr.clone(), w2.addr.clone()];
+    remote_cfg.fault_chaos_kill_seq = Some(300);
+
+    let inproc = run_session(&cfg, &evs, &users, Some(4));
+    let remote = run_session(&remote_cfg, &evs, &users, Some(4));
+
+    assert_eq!(remote.report.rescales, 1);
+    assert_eq!(
+        remote.report.recoveries, 1,
+        "the killed remote worker recovered via re-dial"
+    );
+    assert_identical(&inproc, &remote, "two-process");
+}

@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Record the benchmark JSON files committed at the repo root.
+#
+# Each BENCH_*.json starts life as a stub ("status": "not yet recorded");
+# the corresponding bench binary overwrites it with measured rows. The
+# benches write to the *current working directory*, so this script must
+# run from the repo root (it cd's there itself).
+#
+# Usage:
+#   scripts/record_bench.sh            # all recorded benches
+#   scripts/record_bench.sh transport  # just one
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# bench name -> file it records
+declare -A RECORDS=(
+  [pipeline]=BENCH_ingest.json
+  [rescale]=BENCH_rescale.json
+  [recovery]=BENCH_recovery.json
+  [transport]=BENCH_transport.json
+)
+
+benches=("$@")
+if [ ${#benches[@]} -eq 0 ]; then
+  benches=(pipeline rescale recovery transport)
+fi
+
+for bench in "${benches[@]}"; do
+  out="${RECORDS[$bench]:-}"
+  if [ -z "$out" ]; then
+    echo "unknown bench '$bench' (known: ${!RECORDS[*]})" >&2
+    exit 1
+  fi
+  echo "== recording $out via 'cargo bench --bench $bench' =="
+  cargo bench --manifest-path rust/Cargo.toml --bench "$bench"
+  if grep -q '"status"' "$out"; then
+    echo "error: $out still looks like a stub after the run" >&2
+    exit 1
+  fi
+  echo "recorded: $out"
+done
