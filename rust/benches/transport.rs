@@ -7,11 +7,14 @@
 //! loopback port) vs a mixed half/half cycle. Correctness is asserted,
 //! not assumed: every placement must produce the identical hit count
 //! (the transport property the equivalence tests prove; here it guards
-//! the numbers). Results are recorded in `BENCH_transport.json`.
+//! the numbers). A second table measures the recovery pause when a
+//! seeded `[fault.net]` sever forces a respawn through refused dials,
+//! across three `fault.dial_backoff_ms` settings. Results are recorded
+//! in `BENCH_transport.json` (schema: docs/EXPERIMENTS.md).
 
 use std::time::Instant;
 
-use streamrec::config::{RunConfig, Topology};
+use streamrec::config::{NetFaultConfig, RunConfig, Topology};
 use streamrec::coordinator::run_pipeline;
 use streamrec::data::DatasetSpec;
 use streamrec::net::WorkerServer;
@@ -77,12 +80,68 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // Recovery pause under dial backoff: a seeded `[fault.net]` plan
+    // severs one remote connection mid-stream and refuses the
+    // respawn's first two re-dial attempts, so the recovery pause
+    // includes the bounded-backoff ladder. Only `fault.dial_backoff_ms`
+    // varies across rows; hits must stay identical to the fault-free
+    // baseline (the recovery-equivalence property guarding the
+    // numbers).
+    println!(
+        "\n{:>14} {:>10} {:>12} {:>11} {:>12}",
+        "dial backoff", "events", "ev/s", "recoveries", "pause ms"
+    );
+    let mut recovery_rows: Vec<Json> = Vec::new();
+    for backoff_ms in [5u64, 25, 100] {
+        let cfg = RunConfig {
+            topology: Topology::new(2, 0)?,
+            sample_every: 10_000,
+            cluster_workers: vec![addr.clone()],
+            fault_checkpoint_interval: 64,
+            fault_dial_retries: 4,
+            fault_dial_backoff_ms: backoff_ms,
+            fault_net: NetFaultConfig {
+                seed: 13,
+                sever_connections: 1,
+                sever_after_frames: 3,
+                refuse_dials: 2,
+                ..NetFaultConfig::default()
+            },
+            ..RunConfig::default()
+        };
+        let label = format!("backoff-{backoff_ms}ms");
+        let t0 = Instant::now();
+        let r = run_pipeline(&cfg, &events, &format!("bench-{label}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            Some(r.hits),
+            base_hits,
+            "chaos run '{label}' changed the hit count"
+        );
+        assert!(r.recoveries >= 1, "'{label}': the sever must fire");
+        let pause_ms = r.recovery_pause_ns as f64 / 1e6;
+        println!(
+            "{:>12}ms {:>10} {:>12.0} {:>11} {pause_ms:>12.1}",
+            backoff_ms, r.events, r.throughput, r.recoveries
+        );
+        recovery_rows.push(obj(vec![
+            ("dial_backoff_ms", num(backoff_ms as f64)),
+            ("events", num(r.events as f64)),
+            ("throughput_ev_s", num(r.throughput)),
+            ("hits", num(r.hits as f64)),
+            ("recoveries", num(r.recoveries as f64)),
+            ("recovery_pause_ms", num(pause_ms)),
+            ("wall_s", num(dt)),
+        ]));
+    }
+
     let doc = obj(vec![
         ("bench", s("worker transport: in-proc vs loopback TCP")),
         ("dataset", s("nf-like:30000 (seed 21)")),
         ("algorithm", s("isgd")),
         ("n_i", num(2.0)),
         ("rows", Json::Arr(rows)),
+        ("recovery_rows", Json::Arr(recovery_rows)),
     ]);
     std::fs::write("BENCH_transport.json", to_string(&doc) + "\n")?;
     println!("\n(recorded in BENCH_transport.json)");

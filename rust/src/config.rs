@@ -164,6 +164,53 @@ impl Topology {
     }
 }
 
+/// Deterministic network fault-injection plan knobs (TOML:
+/// `[fault.net]`). All-zero (the default) means no plan: the transport
+/// layer is transparent. With any knob set, both sides of every remote
+/// worker connection derive the *same* per-connection fault schedule
+/// from `seed` and the worker slot ordinal (the plan rides to the host
+/// inside the `Hello` frame), so an injected failure replays exactly —
+/// same seed, same faults, same recovery. Entries mapped to local
+/// (in-process) transports have no connection and take no fault. See
+/// `net/chaos.rs` and docs/CONFIG.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct NetFaultConfig {
+    /// Seed the per-connection fault schedules are derived from
+    /// (mixed with the worker slot ordinal).
+    pub seed: u64,
+    /// Upper bound (milliseconds) of the seeded per-connection
+    /// handshake delay injected after a dial succeeds. `0` = no delays.
+    pub delay_ms_max: u64,
+    /// Sever the connections of the first this-many worker slot
+    /// ordinals (each at a seeded frame index; respawned slots get
+    /// fresh ordinals and run clean, so the fault budget is bounded).
+    /// `0` = no severs. Severs need `fault.checkpoint_interval > 0` to
+    /// be absorbed by recovery; without it they are loud session errors.
+    pub sever_connections: u64,
+    /// Upper bound on the seeded frame index a severed connection is
+    /// cut at (the actual index is drawn per connection in
+    /// `1..=sever_after_frames`). Ignored while `sever_connections = 0`;
+    /// `0` falls back to 1.
+    pub sever_after_frames: u64,
+    /// Cut *mid-frame* — write a frame's length prefix and a truncated
+    /// body before severing — instead of cutting cleanly on a frame
+    /// boundary. Exercises the decoder's truncation handling.
+    pub mid_frame_cut: bool,
+    /// Refuse the first this-many dial attempts of every connection
+    /// (simulated connection-refused before the socket is touched).
+    /// Must stay within `fault.dial_retries` or every dial would fail;
+    /// validated at parse time.
+    pub refuse_dials: u32,
+}
+
+impl NetFaultConfig {
+    /// True when every knob is at its default — no fault plan is built
+    /// and the transport layer stays transparent.
+    pub fn is_noop(&self) -> bool {
+        *self == Self::default()
+    }
+}
+
 /// Complete run configuration for one pipeline execution.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -256,6 +303,33 @@ pub struct RunConfig {
     /// worker is a local thread — the pre-networking behavior,
     /// bit-for-bit. See docs/CONFIG.md and `net/`.
     pub cluster_workers: Vec<String>,
+    /// Dial retry budget for remote worker connections (TOML:
+    /// `fault.dial_retries`): after a failed or refused dial the
+    /// transport retries up to this many times with bounded exponential
+    /// backoff + seeded jitter before declaring the slot's host
+    /// unreachable (a loud session error naming the address). `0`
+    /// restores the pre-backoff dial-once behavior.
+    pub fault_dial_retries: u32,
+    /// Base backoff between dial retries in milliseconds (TOML:
+    /// `fault.dial_backoff_ms`). Attempt `n` sleeps roughly
+    /// `dial_backoff_ms * 2^n` (exponent capped) plus seeded jitter.
+    pub fault_dial_backoff_ms: u64,
+    /// RPC deadline in milliseconds (TOML: `fault.rpc_timeout_ms`): an
+    /// in-flight remote RPC (query / snapshot / export) older than this
+    /// converts the connection into the join-panic crash path — the
+    /// same path a dead socket takes — so a *hung* worker can never
+    /// block `recommend`/`metrics`/`rescale` forever. `0` disables the
+    /// deadline (pre-PR-7 blocking behavior).
+    pub fault_rpc_timeout_ms: u64,
+    /// Coordinator-side liveness ping interval in milliseconds (TOML:
+    /// `fault.heartbeat_interval_ms`): the proxy pings an idle
+    /// connection this often and treats `fault.rpc_timeout_ms` of
+    /// silence after a ping as a hung worker. `0` disables heartbeats
+    /// (only RPC deadlines and dead sockets detect failures).
+    pub fault_heartbeat_interval_ms: u64,
+    /// Deterministic network fault-injection plan (TOML: `[fault.net]`).
+    /// Defaults to a no-op; see [`NetFaultConfig`].
+    pub fault_net: NetFaultConfig,
 }
 
 impl Default for RunConfig {
@@ -284,6 +358,11 @@ impl Default for RunConfig {
             fault_chaos_kill_seq: None,
             fault_chaos_kill_in_checkpoint: false,
             cluster_workers: Vec::new(),
+            fault_dial_retries: 4,
+            fault_dial_backoff_ms: 50,
+            fault_rpc_timeout_ms: 30_000,
+            fault_heartbeat_interval_ms: 1_000,
+            fault_net: NetFaultConfig::default(),
         }
     }
 }
@@ -401,6 +480,39 @@ impl RunConfig {
             cfg.cluster_workers = v
                 .str_list()
                 .context("cluster.workers must be a list of strings")?;
+        }
+        num!("fault.dial_retries", cfg.fault_dial_retries, u32);
+        num!("fault.dial_backoff_ms", cfg.fault_dial_backoff_ms, u64);
+        num!("fault.rpc_timeout_ms", cfg.fault_rpc_timeout_ms, u64);
+        num!(
+            "fault.heartbeat_interval_ms",
+            cfg.fault_heartbeat_interval_ms,
+            u64
+        );
+        num!("fault.net.seed", cfg.fault_net.seed, u64);
+        num!("fault.net.delay_ms_max", cfg.fault_net.delay_ms_max, u64);
+        num!(
+            "fault.net.sever_connections",
+            cfg.fault_net.sever_connections,
+            u64
+        );
+        num!(
+            "fault.net.sever_after_frames",
+            cfg.fault_net.sever_after_frames,
+            u64
+        );
+        if let Some(v) = get("fault.net.mid_frame_cut") {
+            cfg.fault_net.mid_frame_cut = v.bool()?;
+        }
+        num!("fault.net.refuse_dials", cfg.fault_net.refuse_dials, u32);
+        if cfg.fault_net.refuse_dials > cfg.fault_dial_retries {
+            bail!(
+                "fault.net.refuse_dials = {} exceeds fault.dial_retries = \
+                 {}: every dial would fail before the retry budget runs \
+                 out — raise dial_retries or lower refuse_dials",
+                cfg.fault_net.refuse_dials,
+                cfg.fault_dial_retries
+            );
         }
         Ok(cfg)
     }
@@ -699,6 +811,67 @@ mod tests {
         let cfg =
             RunConfig::from_toml("[fault]\nchaos_kill_seq = -1").unwrap();
         assert_eq!(cfg.fault_chaos_kill_seq, None);
+    }
+
+    #[test]
+    fn parses_supervision_knobs() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.fault_dial_retries, 4);
+        assert_eq!(cfg.fault_dial_backoff_ms, 50);
+        assert_eq!(cfg.fault_rpc_timeout_ms, 30_000);
+        assert_eq!(cfg.fault_heartbeat_interval_ms, 1_000);
+        let cfg = RunConfig::from_toml(
+            "[fault]\ndial_retries = 7\ndial_backoff_ms = 5\n\
+             rpc_timeout_ms = 250\nheartbeat_interval_ms = 0",
+        )
+        .unwrap();
+        assert_eq!(cfg.fault_dial_retries, 7);
+        assert_eq!(cfg.fault_dial_backoff_ms, 5);
+        assert_eq!(cfg.fault_rpc_timeout_ms, 250);
+        assert_eq!(cfg.fault_heartbeat_interval_ms, 0);
+    }
+
+    #[test]
+    fn parses_fault_net_section() {
+        let cfg = RunConfig::default();
+        assert!(cfg.fault_net.is_noop(), "default: no fault plan");
+        let cfg = RunConfig::from_toml(
+            "[fault.net]\nseed = 9\ndelay_ms_max = 3\n\
+             sever_connections = 2\nsever_after_frames = 40\n\
+             mid_frame_cut = true\nrefuse_dials = 2",
+        )
+        .unwrap();
+        assert!(!cfg.fault_net.is_noop());
+        assert_eq!(cfg.fault_net.seed, 9);
+        assert_eq!(cfg.fault_net.delay_ms_max, 3);
+        assert_eq!(cfg.fault_net.sever_connections, 2);
+        assert_eq!(cfg.fault_net.sever_after_frames, 40);
+        assert!(cfg.fault_net.mid_frame_cut);
+        assert_eq!(cfg.fault_net.refuse_dials, 2);
+        // A seed alone is enough to make the plan non-noop (explicit
+        // opt-in spelling for "delays only drawn elsewhere").
+        let cfg = RunConfig::from_toml("[fault.net]\nseed = 1").unwrap();
+        assert!(!cfg.fault_net.is_noop());
+    }
+
+    #[test]
+    fn refusal_budget_must_fit_the_retry_budget() {
+        // refuse_dials > dial_retries would make every dial fail; the
+        // parser rejects it loudly instead of producing a doomed run.
+        let err = RunConfig::from_toml(
+            "[fault]\ndial_retries = 1\n[fault.net]\nrefuse_dials = 3",
+        )
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("refuse_dials"),
+            "unexpected error: {err:#}"
+        );
+        // Equal budgets are fine: the last attempt succeeds.
+        let cfg = RunConfig::from_toml(
+            "[fault]\ndial_retries = 3\n[fault.net]\nrefuse_dials = 3",
+        )
+        .unwrap();
+        assert_eq!(cfg.fault_net.refuse_dials, 3);
     }
 
     #[test]

@@ -132,7 +132,9 @@ use crate::config::{RunConfig, Topology};
 use crate::coordinator::router::{Router, StateGrid};
 use crate::coordinator::supervisor::Supervisor;
 use crate::data::types::{ItemId, Rating, UserId};
-use crate::engine::actor::{CollectorMsg, Envelope, WorkerMsg};
+use crate::engine::actor::{
+    CollectorMsg, Envelope, ReplicaAnswer, WorkerMsg,
+};
 use crate::engine::{bounded, spawn, Receiver, Sender, WorkerHandle};
 use crate::eval::{merge_topn, RunReport, WindowStat, WindowedRecall, WorkerReport};
 
@@ -188,6 +190,12 @@ pub struct ClusterMetrics {
     /// Total ns spent inside crash recoveries (reap + respawn + restore
     /// + replay).
     pub recovery_pause_ns: u64,
+    /// [`Cluster::recommend`] calls answered *degraded*: replicas kept
+    /// dying across the full retry budget, so the answer was merged
+    /// from the surviving replicas only (fault-tolerant sessions; a
+    /// healthy or fully-recovered session never degrades, so this stays
+    /// 0 for every fault plan the recovery budget can absorb).
+    pub degraded_queries: u64,
     /// Current topology version: 0 at spawn, +1 per rescale.
     pub router_epoch: u64,
     /// Per-live-worker detail, sorted by worker id (retired workers'
@@ -259,6 +267,21 @@ pub struct Cluster {
     rescales: u64,
     migrated_bytes: u64,
     rescale_pause_ns: u64,
+    degraded_queries: u64,
+}
+
+/// Outcome of one [`Cluster::probe_round`] fan-out.
+enum ProbeRound<T> {
+    /// Every asked worker answered (an empty vector means no targeted
+    /// worker was alive — only possible without fault tolerance).
+    Full(Vec<T>),
+    /// A worker died *after* its probe was queued (its reply channel
+    /// died with it); the supervisor healed the slot, and these are the
+    /// answers the surviving replicas produced. Callers normally retry
+    /// — the restored worker answers over the same accepted prefix —
+    /// but [`Cluster::recommend`] keeps the last partial round so it
+    /// can degrade gracefully when replicas keep dying.
+    Partial(Vec<T>),
 }
 
 impl Cluster {
@@ -333,6 +356,7 @@ impl Cluster {
             rescales: 0,
             migrated_bytes: 0,
             rescale_pause_ns: 0,
+            degraded_queries: 0,
         };
         cluster.sup.spawn_generation(n_c);
         cluster.route_bufs =
@@ -430,16 +454,17 @@ impl Cluster {
     /// first on fault-tolerant sessions, skipping them otherwise — and
     /// gather the replies.
     ///
-    /// Returns `Ok(None)` when a worker died *after* its probe was queued
-    /// (the reply channel died with it) and was healed: the caller
-    /// retries, and the restored worker answers over the same accepted
-    /// prefix. An empty reply set means no targeted worker was alive
-    /// (only possible without fault tolerance).
+    /// Returns [`ProbeRound::Partial`] when a worker died *after* its
+    /// probe was queued (the reply channel died with it) and was
+    /// healed: the caller may retry — the restored worker answers over
+    /// the same accepted prefix — or serve from the partial replies.
+    /// An empty [`ProbeRound::Full`] reply set means no targeted worker
+    /// was alive (only possible without fault tolerance).
     fn probe_round<T>(
         &mut self,
         targets: &[usize],
         make: &dyn Fn(Sender<T>) -> WorkerMsg,
-    ) -> Result<Option<Vec<T>>> {
+    ) -> Result<ProbeRound<T>> {
         let enabled = self.sup.enabled();
         self.flush_all()?;
         let (reply_tx, reply_rx) = bounded::<T>(targets.len().max(1));
@@ -458,14 +483,14 @@ impl Cluster {
         }
         drop(reply_tx);
         if asked == 0 {
-            return Ok(Some(Vec::new()));
+            return Ok(ProbeRound::Full(Vec::new()));
         }
         let replies = reply_rx.recv_n(asked);
         if replies.len() < asked && enabled {
             self.sup.heal(&self.router)?;
-            return Ok(None);
+            return Ok(ProbeRound::Partial(replies));
         }
-        Ok(Some(replies))
+        Ok(ProbeRound::Full(replies))
     }
 
     /// Online serving: global top-`n` for `user`, answered while the
@@ -487,6 +512,16 @@ impl Cluster {
     /// same session state yields the same answer under any topology and
     /// across any crash recovery (property-tested in
     /// `tests/rescale_equivalence.rs` and `tests/fault_tolerance.rs`).
+    ///
+    /// Graceful degradation (fault-tolerant sessions): when replicas
+    /// keep dying across the full retry budget, the query is answered
+    /// from the replicas that *did* reply in the final round instead of
+    /// erroring — serving stays available mid-respawn at the cost of
+    /// candidates from the dead replicas' lanes. Degraded answers are
+    /// counted in [`ClusterMetrics::degraded_queries`]; a session whose
+    /// recoveries all succeed never degrades, so the byte-identity
+    /// guarantee above is untouched. A round with *no* surviving
+    /// replica still errors loudly.
     pub fn recommend(&mut self, user: UserId, n: usize) -> Result<Vec<ItemId>> {
         // Over-fetch per lane: a lane cannot know which of its candidates
         // the user consumed on *other* lanes, and the global exclusion
@@ -495,24 +530,35 @@ impl Cluster {
         // large requests for heavy raters — the lane then degrades to
         // fewer candidates, it never errors.)
         let fetch = n.saturating_mul(2);
+        let mut last_partial: Vec<ReplicaAnswer> = Vec::new();
         for _attempt in 0..3 {
             let replicas = self.router.user_workers(user);
             let answers = match self.probe_round(&replicas, &|reply| {
                 WorkerMsg::Query { user, n: fetch, reply }
             })? {
-                Some(answers) => answers,
-                None => continue, // a replica died mid-probe; healed, retry
+                ProbeRound::Full(answers) => answers,
+                ProbeRound::Partial(partial) => {
+                    // A replica died mid-probe; the slot was healed.
+                    // Keep the freshest surviving answers and retry.
+                    last_partial = partial;
+                    continue;
+                }
             };
             if answers.is_empty() {
                 anyhow::bail!("no replica of user {user} is alive");
             }
-            let exclude: HashSet<ItemId> = answers
-                .iter()
-                .flat_map(|a| a.rated.iter().copied())
-                .collect();
-            let lists: Vec<Vec<ItemId>> =
-                answers.into_iter().flat_map(|a| a.lists).collect();
-            return Ok(merge_topn(&lists, &exclude, n));
+            return Ok(merge_answers(answers, n));
+        }
+        if !last_partial.is_empty() {
+            self.degraded_queries += 1;
+            log::warn!(
+                "cluster '{}': serving user {user} degraded from {} \
+                 surviving replica(s) — replicas kept dying across 3 \
+                 recoveries",
+                self.label,
+                last_partial.len(),
+            );
+            return Ok(merge_answers(last_partial, n));
         }
         anyhow::bail!("recommend: replicas kept dying across 3 recoveries")
     }
@@ -531,8 +577,11 @@ impl Cluster {
             let mut workers = match self.probe_round(&targets, &|reply| {
                 WorkerMsg::MetricsSnapshot { reply }
             })? {
-                Some(workers) => workers,
-                None => continue, // a worker died mid-probe; healed, retry
+                ProbeRound::Full(workers) => workers,
+                // A worker died mid-probe; healed, retry. (No degraded
+                // path here: a partial aggregate would silently under-
+                // count, which is worse than retrying.)
+                ProbeRound::Partial(_) => continue,
             };
             workers.sort_by_key(|w| w.worker_id);
             let mut processed: u64 = workers.iter().map(|w| w.processed).sum();
@@ -561,6 +610,7 @@ impl Cluster {
                 checkpoint_bytes: fault.checkpoint_bytes,
                 replayed_events: fault.replayed_events,
                 recovery_pause_ns: fault.recovery_pause_ns,
+                degraded_queries: self.degraded_queries,
                 router_epoch: self.router.epoch(),
                 workers,
             });
@@ -764,6 +814,18 @@ impl Cluster {
     }
 }
 
+/// Merge replica answers into a global top-`n`: union the rated sets
+/// for exclusion, then rank-aware-merge the per-lane lists. Shared by
+/// the healthy and degraded serving paths of [`Cluster::recommend`] —
+/// a degraded merge is the same computation over fewer replicas.
+fn merge_answers(answers: Vec<ReplicaAnswer>, n: usize) -> Vec<ItemId> {
+    let exclude: HashSet<ItemId> =
+        answers.iter().flat_map(|a| a.rated.iter().copied()).collect();
+    let lists: Vec<Vec<ItemId>> =
+        answers.into_iter().flat_map(|a| a.lists).collect();
+    merge_topn(&lists, &exclude, n)
+}
+
 /// Collector: reassembles the global prequential curve from per-worker
 /// hit batches. Workers interleave arbitrarily; the moving average is
 /// computed in global sequence order at the end (hit bits are buffered in
@@ -916,6 +978,7 @@ mod tests {
         assert_eq!(m2.workers.len(), 4);
         assert_eq!(m2.rescales, 0);
         assert_eq!(m2.recoveries, 0);
+        assert_eq!(m2.degraded_queries, 0);
         assert_eq!(m2.router_epoch, 0);
         let report = cluster.finish().unwrap();
         assert_eq!(report.hits, m2.hits, "final report matches last snapshot");
@@ -1046,6 +1109,10 @@ mod tests {
         assert_eq!(m.ingested, 1000);
         assert_eq!(m.processed, 1000, "no event lost across the crash");
         assert_eq!(m.recoveries, 1, "exactly one worker died");
+        assert_eq!(
+            m.degraded_queries, 0,
+            "a successful recovery never degrades serving"
+        );
         // The killed event itself was never applied pre-crash, so the
         // replay is never empty.
         assert!(m.replayed_events >= 1, "{}", m.replayed_events);

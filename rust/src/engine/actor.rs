@@ -43,6 +43,17 @@
 //! at/after it — so fault-tolerance tests can kill any worker at any
 //! stream position reproducibly. A disarmed policy costs one `Option`
 //! compare per event.
+//!
+//! This is *actor-level* chaos: the worker itself dies, wherever it
+//! runs. Transport-level chaos — severed connections, delayed dials,
+//! truncated frames — lives in `net::chaos` (`[fault.net]`) and only
+//! applies to remote slots. The two compose: both funnel into the same
+//! supervisor crash path. Note that transport liveness (answering the
+//! coordinator's `Ping` heartbeat) is the host *pump's* job, not the
+//! actor's — a remote actor grinding through a slow batch still proves
+//! liveness, while a stalled pump (or dead host) is what the
+//! coordinator's watchdog converts into a crash within
+//! `fault.rpc_timeout_ms`.
 
 use std::collections::BTreeMap;
 

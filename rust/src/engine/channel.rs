@@ -373,6 +373,64 @@ impl<T> Receiver<T> {
         }
     }
 
+    /// Deadline-bounded drain: like [`Receiver::recv_many`], but gives up
+    /// waiting at `deadline`. Returns `true` while any sender is still
+    /// alive — with `out` left empty if the deadline passed before a
+    /// message arrived — and `false` once every sender is gone and the
+    /// queue is drained (end-of-stream, exactly like `recv_many`).
+    ///
+    /// This is the waiting primitive of the remote-worker proxy's
+    /// liveness machinery: the proxy's single writer thread must both
+    /// consume the coordinator's FIFO *and* wake on a heartbeat cadence
+    /// to ping its peer and enforce RPC deadlines, which a pure blocking
+    /// `recv_many` cannot do.
+    pub fn recv_many_deadline(
+        &self,
+        out: &mut Vec<T>,
+        max: usize,
+        deadline: Instant,
+    ) -> bool {
+        let mut inner = self.shared.queue.lock().unwrap();
+        loop {
+            if !inner.buf.is_empty() {
+                let mut taken = 0u64;
+                while out.len() < max {
+                    match inner.buf.pop_front() {
+                        Some(v) => {
+                            out.push(v);
+                            taken += 1;
+                        }
+                        None => break,
+                    }
+                }
+                drop(inner);
+                let m = &self.shared.metrics;
+                m.received.fetch_add(taken, Ordering::Relaxed);
+                m.recv_batches.fetch_add(1, Ordering::Relaxed);
+                self.shared.not_full.notify_all();
+                return true;
+            }
+            if inner.senders == 0 {
+                return false;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return true;
+            }
+            let start = now;
+            let (guard, _timeout) = self
+                .shared
+                .not_empty
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = guard;
+            self.shared
+                .metrics
+                .recv_blocked_ns
+                .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+
     /// Non-blocking drain: move everything currently queued into `out`.
     /// Returns how many messages were taken (0 = queue was empty; says
     /// nothing about sender liveness).
@@ -554,6 +612,47 @@ mod tests {
         drop(tx);
         buf.clear();
         assert!(!rx.recv_many(&mut buf, 4));
+    }
+
+    #[test]
+    fn recv_many_deadline_times_out_alive_and_empty() {
+        let (tx, rx) = bounded::<u32>(4);
+        let mut buf = Vec::new();
+        let t0 = Instant::now();
+        let deadline = t0 + std::time::Duration::from_millis(30);
+        assert!(
+            rx.recv_many_deadline(&mut buf, usize::MAX, deadline),
+            "senders alive: a timeout is not end-of-stream"
+        );
+        assert!(buf.is_empty(), "nothing was sent");
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(25));
+        // Messages already queued return immediately, before any wait.
+        tx.send(5).unwrap();
+        let deadline = Instant::now() + std::time::Duration::from_secs(60);
+        assert!(rx.recv_many_deadline(&mut buf, usize::MAX, deadline));
+        assert_eq!(buf, vec![5]);
+        // End-of-stream is still reported as `false`, like recv_many.
+        drop(tx);
+        buf.clear();
+        let deadline = Instant::now() + std::time::Duration::from_secs(60);
+        assert!(!rx.recv_many_deadline(&mut buf, usize::MAX, deadline));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn recv_many_deadline_wakes_on_send() {
+        let (tx, rx) = bounded::<u32>(4);
+        let h = thread::spawn(move || {
+            let mut buf = Vec::new();
+            let deadline = Instant::now() + std::time::Duration::from_secs(30);
+            let alive = rx.recv_many_deadline(&mut buf, usize::MAX, deadline);
+            (alive, buf)
+        });
+        thread::sleep(std::time::Duration::from_millis(20));
+        tx.send(11).unwrap();
+        let (alive, buf) = h.join().unwrap();
+        assert!(alive);
+        assert_eq!(buf, vec![11], "a send interrupts the timed wait");
     }
 
     #[test]

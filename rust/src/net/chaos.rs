@@ -1,0 +1,424 @@
+//! Deterministic network fault injection for the worker transport.
+//!
+//! A [`NetFaultPlan`] is built from the `[fault.net]` knobs in
+//! [`RunConfig`] and derives, purely from `fault.net.seed` and a
+//! connection's worker slot ordinal, everything that will go wrong on
+//! that connection: how many dial attempts are refused, how long each
+//! side stalls before speaking, whether (and after how many frames, and
+//! how cleanly) the connection is severed. Both peers hold the same
+//! configuration — the plan rides to the host inside the `Hello` frame
+//! — so they compute the *same* [`ConnFault`] independently and each
+//! side arms only the faults it owns. Same seed, same faults: a failure
+//! replays exactly.
+//!
+//! Ordinals are session-unique and respawn-fresh (a recovered slot gets
+//! a new ordinal), so `sever_connections = k` severs exactly the first
+//! `k` connections ever opened and every replacement runs clean — the
+//! fault budget is bounded and a run with fault tolerance enabled must
+//! end byte-identical to a fault-free one.
+//!
+//! The injection points are deliberately the real failure surfaces:
+//! refusals happen before the socket is touched (exactly like a host
+//! that is not listening yet), severs go through `Shutdown::Both` so
+//! the peer observes an honest half-open teardown, and a mid-frame cut
+//! leaves a truncated length-prefixed frame on the wire for the
+//! decoder to choke on loudly.
+
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+use crate::config::RunConfig;
+use crate::util::rng::{mix64, Pcg32};
+
+use super::proto::{write_frame, Frame};
+
+/// Domain separator for the dial-backoff jitter stream so it never
+/// correlates with the per-connection fault draws.
+const JITTER_SALT: u64 = 0x6a69_7474_6572;
+
+/// Which peer of a connection executes an armed sever. Each side
+/// computes the full [`ConnFault`] and acts only on its own half.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Side {
+    /// The coordinator-side proxy (`net/remote.rs`) cuts its writes.
+    Coordinator,
+    /// The worker host (`net/server.rs`) cuts its writes.
+    Host,
+}
+
+/// A seeded network fault plan — the deterministic function from
+/// (seed, connection ordinal) to that connection's faults.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct NetFaultPlan {
+    net: crate::config::NetFaultConfig,
+}
+
+/// Everything that will go wrong on one connection, computed
+/// identically by both peers from the shared plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct ConnFault {
+    /// Simulated connection-refused results for the first this-many
+    /// dial attempts (never exceeds `fault.dial_retries`; validated at
+    /// config parse time).
+    pub(crate) dial_refusals: u32,
+    /// Coordinator-side stall (ms) after a successful dial, before the
+    /// `Hello` goes out.
+    pub(crate) dial_delay_ms: u64,
+    /// Host-side stall (ms) after decoding the `Hello`, before the
+    /// actor is built.
+    pub(crate) host_delay_ms: u64,
+    /// An armed sever, or `None` for a connection that lives.
+    pub(crate) sever: Option<SeverFault>,
+}
+
+/// One armed sever on one side of one connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct SeverFault {
+    /// Which peer executes the cut.
+    pub(crate) side: Side,
+    /// Counted frames that side delivers before cutting (≥ 1).
+    pub(crate) after_frames: u64,
+    /// Cut mid-frame (length prefix + truncated body) instead of on a
+    /// frame boundary.
+    pub(crate) mid_frame: bool,
+}
+
+impl NetFaultPlan {
+    /// The plan armed by `cfg`, or `None` when `[fault.net]` is all
+    /// defaults (the transport stays transparent — not even a seeded
+    /// zero-delay is drawn, so the no-plan path is byte-for-byte the
+    /// pre-chaos code path).
+    pub(crate) fn from_config(cfg: &RunConfig) -> Option<NetFaultPlan> {
+        if cfg.fault_net.is_noop() {
+            None
+        } else {
+            Some(NetFaultPlan { net: cfg.fault_net })
+        }
+    }
+
+    /// The faults for the connection hosting worker slot ordinal
+    /// `ord`. Pure: both peers call this independently and must agree.
+    pub(crate) fn connection(&self, ord: u64) -> ConnFault {
+        let mut rng = Pcg32::seeded(self.net.seed ^ mix64(ord));
+        let dial_delay_ms = if self.net.delay_ms_max > 0 {
+            rng.next_bounded(self.net.delay_ms_max + 1)
+        } else {
+            0
+        };
+        let host_delay_ms = if self.net.delay_ms_max > 0 {
+            rng.next_bounded(self.net.delay_ms_max + 1)
+        } else {
+            0
+        };
+        let sever = (ord < self.net.sever_connections).then(|| {
+            let span = self.net.sever_after_frames.max(1);
+            SeverFault {
+                side: if rng.next_bounded(2) == 0 {
+                    Side::Coordinator
+                } else {
+                    Side::Host
+                },
+                after_frames: 1 + rng.next_bounded(span),
+                mid_frame: self.net.mid_frame_cut,
+            }
+        });
+        ConnFault {
+            dial_refusals: self.net.refuse_dials,
+            dial_delay_ms,
+            host_delay_ms,
+            sever,
+        }
+    }
+}
+
+/// Per-connection-side write wrapper that executes an armed sever.
+/// Counted frames decrement the fuse; when it reaches zero the frame
+/// is dropped (or truncated), the socket is shut down both ways, and
+/// the caller gets a `BrokenPipe` — exactly what a real peer death
+/// looks like to the write path.
+#[derive(Debug)]
+pub(crate) struct FrameChaos {
+    /// Counted frames still to deliver; `None` = never sever.
+    fuse: Option<u64>,
+    mid_frame: bool,
+}
+
+impl FrameChaos {
+    /// A transparent wrapper (the no-plan / not-my-side case).
+    pub(crate) fn none() -> FrameChaos {
+        FrameChaos { fuse: None, mid_frame: false }
+    }
+
+    /// Arm this side with `fault`'s sever iff it targets `side`.
+    pub(crate) fn armed(fault: &ConnFault, side: Side) -> FrameChaos {
+        match fault.sever {
+            Some(s) if s.side == side => FrameChaos {
+                fuse: Some(s.after_frames),
+                mid_frame: s.mid_frame,
+            },
+            _ => FrameChaos::none(),
+        }
+    }
+
+    /// Write one frame through the fault, or execute the sever.
+    /// `counts` is false for liveness `Ping`/`Pong` traffic so the
+    /// heartbeat cadence cannot shift where a data-frame sever lands.
+    pub(crate) fn write(
+        &mut self,
+        mut stream: &TcpStream,
+        frame: &Frame,
+        counts: bool,
+    ) -> std::io::Result<()> {
+        let Some(fuse) = &mut self.fuse else {
+            return write_frame(&mut stream, frame);
+        };
+        if !counts {
+            return write_frame(&mut stream, frame);
+        }
+        if *fuse > 1 {
+            *fuse -= 1;
+            return write_frame(&mut stream, frame);
+        }
+        // The fuse burned down: this frame dies instead of going out.
+        if self.mid_frame {
+            // Honest length prefix, half the body, then the cut — the
+            // peer's read_exact hits EOF inside the frame.
+            let body = frame.encode();
+            let mut partial = Vec::with_capacity(4 + body.len() / 2);
+            partial
+                .extend_from_slice(&(body.len() as u32).to_le_bytes());
+            partial.extend_from_slice(&body[..body.len() / 2]);
+            let _ = stream.write_all(&partial);
+        }
+        let _ = stream.shutdown(Shutdown::Both);
+        self.fuse = None;
+        Err(std::io::Error::new(
+            std::io::ErrorKind::BrokenPipe,
+            "connection severed by fault plan",
+        ))
+    }
+}
+
+/// Dial `addr` for slot ordinal `ord` with the configured retry budget:
+/// bounded exponential backoff (`fault.dial_backoff_ms * 2^n`, exponent
+/// capped) plus seeded jitter between attempts, and the fault plan's
+/// injected refusals consumed before the socket is touched. On success
+/// the plan's coordinator-side handshake delay has already been slept.
+/// The error string names the address and the attempt count.
+pub(crate) fn dial_with_backoff(
+    addr: &str,
+    ord: u64,
+    cfg: &RunConfig,
+) -> Result<TcpStream, String> {
+    let fault =
+        NetFaultPlan::from_config(cfg).map(|plan| plan.connection(ord));
+    let refusals = fault.map_or(0, |f| f.dial_refusals);
+    let mut jitter =
+        Pcg32::seeded(cfg.fault_net.seed ^ mix64(ord) ^ JITTER_SALT);
+    let attempts = 1 + cfg.fault_dial_retries;
+    let mut last_err = String::new();
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            let exp = (attempt - 1).min(6);
+            let base = cfg.fault_dial_backoff_ms << exp;
+            if base > 0 {
+                let ms = base + jitter.next_bounded(base);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+        if attempt < refusals {
+            last_err = "connection refused (injected by fault plan)"
+                .to_string();
+            continue;
+        }
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                if let Some(f) = fault {
+                    if f.dial_delay_ms > 0 {
+                        std::thread::sleep(Duration::from_millis(
+                            f.dial_delay_ms,
+                        ));
+                    }
+                }
+                return Ok(stream);
+            }
+            Err(e) => last_err = e.to_string(),
+        }
+    }
+    Err(format!(
+        "dial {addr} failed after {attempts} attempt(s): {last_err}"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Read;
+    use std::net::TcpListener;
+
+    use super::*;
+    use crate::net::proto::read_frame;
+
+    fn plan_cfg(
+        f: impl FnOnce(&mut crate::config::NetFaultConfig),
+    ) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        f(&mut cfg.fault_net);
+        cfg
+    }
+
+    #[test]
+    fn noop_config_builds_no_plan() {
+        assert!(NetFaultPlan::from_config(&RunConfig::default()).is_none());
+        let cfg = plan_cfg(|n| n.seed = 1);
+        assert!(NetFaultPlan::from_config(&cfg).is_some());
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_respects_the_budget() {
+        let cfg = plan_cfg(|n| {
+            n.seed = 11;
+            n.delay_ms_max = 7;
+            n.sever_connections = 3;
+            n.sever_after_frames = 20;
+            n.mid_frame_cut = true;
+            n.refuse_dials = 2;
+        });
+        let plan = NetFaultPlan::from_config(&cfg).unwrap();
+        for ord in 0..16 {
+            let a = plan.connection(ord);
+            let b = plan.connection(ord);
+            assert_eq!(a, b, "same seed+ord must draw the same fault");
+            assert!(a.dial_delay_ms <= 7 && a.host_delay_ms <= 7);
+            assert_eq!(a.dial_refusals, 2);
+            if ord < 3 {
+                let s = a.sever.expect("first k conns sever");
+                assert!((1..=20).contains(&s.after_frames));
+                assert!(s.mid_frame);
+            } else {
+                assert!(a.sever.is_none(), "ord {ord} must run clean");
+            }
+        }
+        // Different seeds disagree somewhere (sanity, not crypto).
+        let other = NetFaultPlan::from_config(&plan_cfg(|n| {
+            n.seed = 12;
+            n.delay_ms_max = 7;
+            n.sever_connections = 3;
+            n.sever_after_frames = 20;
+        }))
+        .unwrap();
+        assert!(
+            (0..3).any(|o| other.connection(o) != plan.connection(o)),
+            "seed must matter"
+        );
+    }
+
+    #[test]
+    fn sever_after_frames_zero_falls_back_to_one() {
+        let cfg = plan_cfg(|n| {
+            n.seed = 5;
+            n.sever_connections = 1;
+        });
+        let plan = NetFaultPlan::from_config(&cfg).unwrap();
+        let s = plan.connection(0).sever.unwrap();
+        assert_eq!(s.after_frames, 1);
+    }
+
+    #[test]
+    fn frame_chaos_cuts_after_the_fused_count() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = TcpStream::connect(addr).unwrap();
+        let (mut peer, _) = listener.accept().unwrap();
+
+        let fault = ConnFault {
+            dial_refusals: 0,
+            dial_delay_ms: 0,
+            host_delay_ms: 0,
+            sever: Some(SeverFault {
+                side: Side::Coordinator,
+                after_frames: 2,
+                mid_frame: false,
+            }),
+        };
+        let mut chaos = FrameChaos::armed(&fault, Side::Coordinator);
+        // Host-side wrapper of the same fault stays transparent.
+        assert!(FrameChaos::armed(&fault, Side::Host).fuse.is_none());
+
+        let ping = Frame::Ping { nonce: 1 };
+        chaos.write(&writer, &ping, false).unwrap(); // uncounted
+        chaos.write(&writer, &Frame::Close, true).unwrap(); // 1st
+        let err =
+            chaos.write(&writer, &Frame::Close, true).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+
+        // The peer sees the delivered frames, then a clean EOF —
+        // exactly two frames made it out, the third died.
+        assert!(matches!(
+            read_frame(&mut peer).unwrap(),
+            Some(Frame::Ping { nonce: 1 })
+        ));
+        assert!(matches!(
+            read_frame(&mut peer).unwrap(),
+            Some(Frame::Close)
+        ));
+        assert!(read_frame(&mut peer).unwrap().is_none());
+    }
+
+    #[test]
+    fn mid_frame_cut_leaves_a_truncated_frame() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = TcpStream::connect(addr).unwrap();
+        let (mut peer, _) = listener.accept().unwrap();
+
+        let mut chaos = FrameChaos {
+            fuse: Some(1),
+            mid_frame: true,
+        };
+        let frame = Frame::Query { req_id: 9, user: 3, n: 10 };
+        let err = chaos.write(&writer, &frame, true).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+
+        // The peer got a length prefix promising more bytes than ever
+        // arrive: read_frame must fail loudly, not hang or succeed.
+        let res = read_frame(&mut peer);
+        assert!(res.is_err(), "truncated frame must error: {res:?}");
+        // And the raw stream is closed.
+        let mut rest = Vec::new();
+        assert_eq!(peer.read_to_end(&mut rest).unwrap(), 0);
+    }
+
+    #[test]
+    fn dial_backoff_survives_injected_refusals() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let cfg = RunConfig {
+            fault_dial_retries: 3,
+            fault_dial_backoff_ms: 1,
+            ..plan_cfg(|n| {
+                n.seed = 3;
+                n.refuse_dials = 2;
+            })
+        };
+        let stream = dial_with_backoff(&addr, 0, &cfg).unwrap();
+        drop(stream);
+        drop(listener);
+    }
+
+    #[test]
+    fn exhausted_dial_retries_name_the_address() {
+        // Bind then drop so the port is (almost surely) dead.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let cfg = RunConfig {
+            fault_dial_retries: 1,
+            fault_dial_backoff_ms: 1,
+            ..RunConfig::default()
+        };
+        let err = dial_with_backoff(&addr, 7, &cfg).unwrap_err();
+        assert!(err.contains(&addr), "error must name the host: {err}");
+        assert!(err.contains("2 attempt"), "{err}");
+    }
+}

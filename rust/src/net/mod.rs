@@ -34,6 +34,7 @@ use crate::engine::actor::{
 use crate::engine::{spawn, Receiver, Sender, WorkerHandle};
 use crate::eval::WorkerReport;
 
+pub(crate) mod chaos;
 pub(crate) mod proto;
 pub(crate) mod remote;
 pub mod server;

@@ -22,7 +22,9 @@
 
 use std::io::{Read, Write};
 
-use crate::config::{Algorithm, Backend, Forgetting, RunConfig, Topology};
+use crate::config::{
+    Algorithm, Backend, Forgetting, NetFaultConfig, RunConfig, Topology,
+};
 use crate::data::types::{Rating, StateSizes};
 use crate::engine::actor::{
     Envelope, LaneSnapshot, ReplicaAnswer, WorkerExport,
@@ -34,7 +36,9 @@ use crate::util::wire::{WireError, WireReader, WireWriter};
 
 /// Bumped on any incompatible layout change; carried in the hello
 /// frame and checked by the host before anything else is decoded.
-pub(crate) const PROTO_VERSION: u8 = 1;
+/// v2: liveness `Ping`/`Pong` frames + supervision and `[fault.net]`
+/// knobs appended to the config codec.
+pub(crate) const PROTO_VERSION: u8 = 2;
 
 /// Upper bound on a single frame body (sanity cap so a corrupt length
 /// prefix fails fast instead of attempting a giant read).
@@ -48,6 +52,7 @@ const TAG_SNAPSHOT: u8 = 4;
 const TAG_EXPORT: u8 = 5;
 const TAG_IMPORT: u8 = 6;
 const TAG_CLOSE: u8 = 7;
+const TAG_PING: u8 = 8;
 // Worker host → coordinator.
 const TAG_ANSWER: u8 = 16;
 const TAG_SNAPSHOT_REPLY: u8 = 17;
@@ -56,6 +61,7 @@ const TAG_HITS: u8 = 19;
 const TAG_DONE: u8 = 20;
 const TAG_CHECKPOINT: u8 = 21;
 const TAG_REPORT: u8 = 22;
+const TAG_PONG: u8 = 23;
 
 /// First frame on every connection: everything the host needs to build
 /// the actor for one worker slot — its ordinal, the state-grid shape,
@@ -115,6 +121,18 @@ pub(crate) enum Frame {
     },
     /// End of the coordinator's stream: drain, report, hang up.
     Close,
+    /// Coordinator-side liveness probe. The host answers with a `Pong`
+    /// echoing the nonce through its ordinary write path, so a pong
+    /// proves the whole host loop — not just the socket — is alive.
+    Ping {
+        /// Echoed verbatim on the matching `Pong`.
+        nonce: u64,
+    },
+    /// Reply to `Ping` (host → coordinator).
+    Pong {
+        /// Nonce of the `Ping` being answered.
+        nonce: u64,
+    },
     /// Reply to `Query`.
     Answer {
         /// Multiplexer key of the originating `Query`.
@@ -206,6 +224,14 @@ impl Frame {
                 w.byte_slice(bytes);
             }
             Frame::Close => w.u8(TAG_CLOSE),
+            Frame::Ping { nonce } => {
+                w.u8(TAG_PING);
+                w.u64(*nonce);
+            }
+            Frame::Pong { nonce } => {
+                w.u8(TAG_PONG);
+                w.u64(*nonce);
+            }
             Frame::Answer { req_id, answer } => {
                 w.u8(TAG_ANSWER);
                 w.u64(*req_id);
@@ -323,6 +349,8 @@ impl Frame {
                 bytes: r.byte_slice()?,
             },
             TAG_CLOSE => Frame::Close,
+            TAG_PING => Frame::Ping { nonce: r.u64()? },
+            TAG_PONG => Frame::Pong { nonce: r.u64()? },
             TAG_ANSWER => {
                 let req_id = r.u64()?;
                 let n = r.u32()? as usize;
@@ -531,6 +559,16 @@ fn encode_config(w: &mut WireWriter, cfg: &RunConfig) {
     for entry in &cfg.cluster_workers {
         w.string(entry);
     }
+    w.u32(cfg.fault_dial_retries);
+    w.u64(cfg.fault_dial_backoff_ms);
+    w.u64(cfg.fault_rpc_timeout_ms);
+    w.u64(cfg.fault_heartbeat_interval_ms);
+    w.u64(cfg.fault_net.seed);
+    w.u64(cfg.fault_net.delay_ms_max);
+    w.u64(cfg.fault_net.sever_connections);
+    w.u64(cfg.fault_net.sever_after_frames);
+    w.u8(u8::from(cfg.fault_net.mid_frame_cut));
+    w.u32(cfg.fault_net.refuse_dials);
 }
 
 fn decode_config(r: &mut WireReader<'_>) -> Result<RunConfig, WireError> {
@@ -586,6 +624,18 @@ fn decode_config(r: &mut WireReader<'_>) -> Result<RunConfig, WireError> {
     for _ in 0..n_workers {
         cluster_workers.push(r.string()?);
     }
+    let fault_dial_retries = r.u32()?;
+    let fault_dial_backoff_ms = r.u64()?;
+    let fault_rpc_timeout_ms = r.u64()?;
+    let fault_heartbeat_interval_ms = r.u64()?;
+    let fault_net = NetFaultConfig {
+        seed: r.u64()?,
+        delay_ms_max: r.u64()?,
+        sever_connections: r.u64()?,
+        sever_after_frames: r.u64()?,
+        mid_frame_cut: r.u8()? != 0,
+        refuse_dials: r.u32()?,
+    };
     Ok(RunConfig {
         algorithm,
         backend,
@@ -610,6 +660,11 @@ fn decode_config(r: &mut WireReader<'_>) -> Result<RunConfig, WireError> {
         fault_chaos_kill_seq,
         fault_chaos_kill_in_checkpoint,
         cluster_workers,
+        fault_dial_retries,
+        fault_dial_backoff_ms,
+        fault_rpc_timeout_ms,
+        fault_heartbeat_interval_ms,
+        fault_net,
     })
 }
 
@@ -742,6 +797,16 @@ mod tests {
                 "local".to_string(),
                 "tcp://127.0.0.1:7461".to_string(),
             ],
+            fault_dial_retries: 6,
+            fault_rpc_timeout_ms: 1234,
+            fault_net: NetFaultConfig {
+                seed: 5,
+                delay_ms_max: 2,
+                sever_connections: 1,
+                sever_after_frames: 30,
+                mid_frame_cut: true,
+                refuse_dials: 2,
+            },
             ..RunConfig::default()
         };
         vec![
@@ -805,6 +870,8 @@ mod tests {
             Frame::Done { worker_id: 3 },
             Frame::Checkpoint { ord: 3, lane: 7, bytes: vec![4; 60] },
             Frame::Report(Box::new(sample_report())),
+            Frame::Ping { nonce: 77 },
+            Frame::Pong { nonce: 77 },
         ]
     }
 
@@ -861,6 +928,53 @@ mod tests {
             assert_eq!(back.algorithm, cfg.algorithm);
             assert_eq!(back.seed, cfg.seed);
             assert_eq!(back.artifacts_dir, cfg.artifacts_dir);
+            assert_eq!(back.fault_dial_retries, cfg.fault_dial_retries);
+            assert_eq!(back.fault_net, cfg.fault_net);
+        }
+    }
+
+    #[test]
+    fn property_decode_is_total_on_hostile_bytes() {
+        // The decoder must be total: arbitrary byte soup, bit-flipped
+        // real frames, and truncations may only ever yield Ok or a
+        // WireError — never a panic, never an attempt to allocate more
+        // than the received bytes warrant.
+        forall("net_decode_total", 24, |rng| {
+            let soup: Vec<u8> = (0..rng.next_bounded(512))
+                .map(|_| rng.next_u32() as u8)
+                .collect();
+            let _ = Frame::decode(&soup);
+            let variants = every_variant();
+            let pick =
+                rng.next_bounded(variants.len() as u64) as usize;
+            let mut bytes = variants[pick].encode();
+            if !bytes.is_empty() {
+                let flips = 1 + rng.next_bounded(8) as usize;
+                for _ in 0..flips {
+                    let at = rng.next_bounded(bytes.len() as u64) as usize;
+                    bytes[at] ^= 1 << rng.next_bounded(8);
+                }
+                let _ = Frame::decode(&bytes);
+                let cut = rng.next_bounded(bytes.len() as u64) as usize;
+                let _ = Frame::decode(&bytes[..cut]);
+            }
+        });
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_before_allocation() {
+        // Both ends read frames through the same `read_frame`, so this
+        // covers the coordinator proxy and the worker host alike: a
+        // length prefix over the 1 GiB cap errors out immediately —
+        // the body is never allocated (the cursor holds only 4 bytes).
+        for len in [(MAX_FRAME + 1) as u32, u32::MAX] {
+            let prefix = len.to_le_bytes();
+            let mut cursor = std::io::Cursor::new(&prefix[..]);
+            let err = read_frame(&mut cursor).unwrap_err();
+            assert!(
+                err.to_string().contains("exceeds cap"),
+                "want loud cap rejection, got: {err}"
+            );
         }
     }
 

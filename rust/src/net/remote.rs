@@ -5,45 +5,60 @@
 //!
 //! # Shape
 //!
-//! The proxy thread dials the host, sends the hello frame, then becomes
-//! the connection's single *writer*: it drains its `WorkerMsg` FIFO,
-//! batches consecutive events into one `Events` frame, and forwards
-//! control messages — flushing buffered events first, so the socket
-//! carries exactly the FIFO order the in-proc actor would have seen. A
-//! companion *reader* thread dispatches inbound frames: RPC replies
-//! resolve through a request-id multiplexer back to the parked reply
-//! `Sender`s, hit batches and `Done` markers go to the collector, and
-//! checkpoints are forwarded with the same non-blocking `try_send`
+//! The proxy thread dials the host (with bounded exponential backoff —
+//! see [`chaos::dial_with_backoff`]), sends the hello frame, then
+//! becomes the connection's single *writer*: it drains its `WorkerMsg`
+//! FIFO, batches consecutive events into one `Events` frame, and
+//! forwards control messages — flushing buffered events first, so the
+//! socket carries exactly the FIFO order the in-proc actor would have
+//! seen. A companion *reader* thread dispatches inbound frames: RPC
+//! replies resolve through a request-id multiplexer back to the parked
+//! reply `Sender`s, hit batches and `Done` markers go to the collector,
+//! and checkpoints are forwarded with the same non-blocking `try_send`
 //! contract the in-proc actor has (a full channel drops the frame; a
 //! fresher one always follows — blocking here would deadlock against a
 //! coordinator that is itself blocked sending events to this proxy).
 //!
 //! # Failure model
 //!
-//! Any connection loss — dial failure, write error, EOF before the
-//! final `Report` frame — makes the proxy **panic**, exactly like a
-//! crashed in-proc worker. That is deliberate: the supervisor's two
-//! crash-detection paths (failed channel send and join-time panic) then
-//! work unchanged, and its recovery (respawn the slot → this transport
-//! re-dials → restore checkpoints → replay) is transport-agnostic.
-//! Before panicking the proxy clears the reply multiplexer (dropping
-//! the parked senders, so a coordinator blocked on a reply wakes with
-//! "sender gone" — the same degradation as a dead local worker) and
-//! shuts the socket down so the reader thread cannot stay blocked.
+//! Any connection loss — exhausted dial retries, write error, EOF
+//! before the final `Report` frame — makes the proxy **panic**, exactly
+//! like a crashed in-proc worker. That is deliberate: the supervisor's
+//! two crash-detection paths (failed channel send and join-time panic)
+//! then work unchanged, and its recovery (respawn the slot → this
+//! transport re-dials → restore checkpoints → replay) is
+//! transport-agnostic. Before panicking the proxy clears the reply
+//! multiplexer (dropping the parked senders, so a coordinator blocked
+//! on a reply wakes with "sender gone" — the same degradation as a dead
+//! local worker) and shuts the socket down so the reader thread cannot
+//! stay blocked.
+//!
+//! A *hung* peer — socket open, nothing moving — is converted into the
+//! same path by the writer-side watchdog: while `fault.rpc_timeout_ms`
+//! is non-zero the writer wakes on a deadline even when the FIFO is
+//! idle, fails the connection if the oldest parked RPC reply is overdue,
+//! and (with `fault.heartbeat_interval_ms` armed) sends liveness
+//! `Ping`s; a ping that stays unanswered past the RPC deadline with no
+//! other inbound traffic declares the worker hung. The reader thread
+//! never needs its own timeout: the watchdog's shutdown wakes it from
+//! any blocking read. Both knobs at zero restore the pre-watchdog
+//! blocking behavior exactly.
 
 use std::collections::HashMap;
 use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::engine::actor::{
-    ChaosPolicy, CollectorMsg, Envelope, ReplicaAnswer, WorkerExport,
-    WorkerMsg,
+    CollectorMsg, Envelope, ReplicaAnswer, WorkerExport, WorkerMsg,
 };
 use crate::engine::{Sender, WorkerSnapshot};
 use crate::eval::WorkerReport;
-use crate::net::proto::{read_frame, write_frame, Frame, Hello};
+use crate::net::chaos::{self, FrameChaos, NetFaultPlan, Side};
+use crate::net::proto::{read_frame, Frame, Hello};
 use crate::net::WorkerBoot;
 
 /// A parked reply sender, keyed by request id in the multiplexer.
@@ -53,16 +68,156 @@ enum Pending {
     Export(Sender<WorkerExport>),
 }
 
-type Mux = Arc<Mutex<HashMap<u64, Pending>>>;
+/// A multiplexer entry: the parked sender plus when it was parked, so
+/// the watchdog can age the oldest outstanding RPC.
+struct Parked {
+    since: Instant,
+    pending: Pending,
+}
+
+type Mux = Arc<Mutex<HashMap<u64, Parked>>>;
+
+/// Inbound-traffic clock shared between the reader thread (which stamps
+/// it on every frame) and the writer-side watchdog (which ages it).
+/// Milliseconds since proxy start, monotone, relaxed — the watchdog
+/// only needs "roughly how stale", never ordering against other memory.
+struct Health {
+    start: Instant,
+    last_rx_ms: AtomicU64,
+}
+
+impl Health {
+    fn new() -> Health {
+        Health { start: Instant::now(), last_rx_ms: AtomicU64::new(0) }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
+    fn touch(&self) {
+        self.last_rx_ms.store(self.now_ms(), Ordering::Relaxed);
+    }
+
+    fn last_rx_ms(&self) -> u64 {
+        self.last_rx_ms.load(Ordering::Relaxed)
+    }
+}
+
+/// Writer-side liveness state: RPC deadlines, ping cadence, and the
+/// hung-worker verdict. One tick per writer wakeup.
+struct Watchdog {
+    rpc_timeout: Option<Duration>,
+    heartbeat: Option<Duration>,
+    health: Arc<Health>,
+    next_ping_at: Instant,
+    /// Send-time (health-clock ms) of the oldest unanswered ping.
+    ping_outstanding_ms: Option<u64>,
+    nonce: u64,
+}
+
+impl Watchdog {
+    fn new(
+        rpc_timeout_ms: u64,
+        heartbeat_ms: u64,
+        health: Arc<Health>,
+    ) -> Watchdog {
+        Watchdog {
+            rpc_timeout: (rpc_timeout_ms > 0)
+                .then(|| Duration::from_millis(rpc_timeout_ms)),
+            heartbeat: (heartbeat_ms > 0)
+                .then(|| Duration::from_millis(heartbeat_ms)),
+            health,
+            next_ping_at: Instant::now(),
+            ping_outstanding_ms: None,
+            nonce: 0,
+        }
+    }
+
+    /// One watchdog pass. `Err` is the connection-loss cause — the
+    /// caller fails the connection and panics with it. `allow_ping` is
+    /// false once `Close`/`Export` went out: the host is draining and
+    /// may hang up at any moment, so no new traffic is injected (an
+    /// already-outstanding ping or parked RPC still ages normally).
+    fn tick(
+        &mut self,
+        mux: &Mux,
+        link: &mut FrameChaos,
+        stream: &TcpStream,
+        allow_ping: bool,
+    ) -> std::result::Result<(), String> {
+        let now = Instant::now();
+        if let Some(limit) = self.rpc_timeout {
+            let oldest = mux
+                .lock()
+                .expect("mux poisoned")
+                .values()
+                .map(|p| now.saturating_duration_since(p.since))
+                .max();
+            if let Some(age) = oldest {
+                if age > limit {
+                    return Err(format!(
+                        "rpc deadline exceeded: a reply is {}ms \
+                         overdue (fault.rpc_timeout_ms = {})",
+                        age.as_millis(),
+                        limit.as_millis()
+                    ));
+                }
+            }
+        }
+        let last_rx = self.health.last_rx_ms();
+        if let Some(sent) = self.ping_outstanding_ms {
+            if last_rx >= sent {
+                self.ping_outstanding_ms = None;
+            } else if let Some(limit) = self.rpc_timeout {
+                let silent = self.health.now_ms().saturating_sub(sent);
+                if silent > limit.as_millis() as u64 {
+                    return Err(format!(
+                        "worker hung: liveness ping unanswered and no \
+                         inbound traffic for {silent}ms \
+                         (fault.rpc_timeout_ms = {})",
+                        limit.as_millis()
+                    ));
+                }
+            }
+        }
+        if allow_ping {
+            if let Some(every) = self.heartbeat {
+                if now >= self.next_ping_at {
+                    let sent_ms = self.health.now_ms();
+                    let frame = Frame::Ping { nonce: self.nonce };
+                    self.nonce += 1;
+                    link.write(stream, &frame, false).map_err(|e| {
+                        format!("liveness ping failed: {e}")
+                    })?;
+                    if self.ping_outstanding_ms.is_none() {
+                        self.ping_outstanding_ms = Some(sent_ms);
+                    }
+                    self.next_ping_at = now + every;
+                }
+            }
+        }
+        Ok(())
+    }
+}
 
 /// Run the proxy for one worker slot until the coordinator hangs up
 /// (normal end of session / retire) or the actor exports. Panics on
 /// connection loss — see the module docs for why that is the contract.
 pub(crate) fn run_proxy(addr: &str, boot: WorkerBoot) -> Result<WorkerReport> {
     let WorkerBoot { ord, cfg, grid, rx, col_tx, ckpt_tx, chaos } = boot;
-    let mut stream = match TcpStream::connect(addr) {
+    let rpc_timeout_ms = cfg.fault_rpc_timeout_ms;
+    let heartbeat_ms = cfg.fault_heartbeat_interval_ms;
+    let fault = NetFaultPlan::from_config(&cfg)
+        .map(|plan| plan.connection(ord as u64));
+    let mut link = fault
+        .as_ref()
+        .map_or_else(FrameChaos::none, |f| {
+            FrameChaos::armed(f, Side::Coordinator)
+        });
+    let stream = match chaos::dial_with_backoff(addr, ord as u64, &cfg) {
         Ok(s) => s,
-        Err(e) => lost(ord, addr, &format!("dial failed: {e}")),
+        Err(e) => lost(ord, addr, &e),
     };
     // Event batches are already coalesced; don't let Nagle delay the
     // small RPC frames behind them.
@@ -76,12 +231,13 @@ pub(crate) fn run_proxy(addr: &str, boot: WorkerBoot) -> Result<WorkerReport> {
         kill_in_checkpoint: chaos.kill_in_checkpoint(),
         cfg,
     }));
-    if let Err(e) = write_frame(&mut stream, &hello) {
+    if let Err(e) = link.write(&stream, &hello, true) {
         lost(ord, addr, &format!("hello failed: {e}"));
     }
 
     let mux: Mux = Arc::new(Mutex::new(HashMap::new()));
     let report: Arc<Mutex<Option<WorkerReport>>> = Arc::new(Mutex::new(None));
+    let health = Arc::new(Health::new());
     let reader = {
         let stream = match stream.try_clone() {
             Ok(s) => s,
@@ -89,14 +245,32 @@ pub(crate) fn run_proxy(addr: &str, boot: WorkerBoot) -> Result<WorkerReport> {
         };
         let mux = Arc::clone(&mux);
         let report = Arc::clone(&report);
+        let health = Arc::clone(&health);
         let col_tx = col_tx.clone();
         std::thread::Builder::new()
             .name(format!("net-reader-{ord}"))
             .spawn(move || {
-                read_loop(stream, &mux, &report, &col_tx, &ckpt_tx)
+                read_loop(stream, &mux, &report, &health, &col_tx, &ckpt_tx)
             })
             .expect("spawn net reader")
     };
+
+    // Watchdog cadence: the heartbeat interval when armed, otherwise a
+    // quarter of the RPC deadline — frequent enough that a deadline is
+    // never overshot by more than a tick. Both knobs zero = no ticking,
+    // the writer blocks exactly as it did before the watchdog existed.
+    let tick = if rpc_timeout_ms == 0 && heartbeat_ms == 0 {
+        None
+    } else {
+        let ms = if heartbeat_ms > 0 {
+            heartbeat_ms
+        } else {
+            (rpc_timeout_ms / 4).max(1)
+        };
+        Some(Duration::from_millis(ms))
+    };
+    let mut watchdog =
+        Watchdog::new(rpc_timeout_ms, heartbeat_ms, Arc::clone(&health));
 
     // Writer loop: drain the FIFO, batch events, forward control frames
     // in FIFO position. `send` returns the frame to flush *after* the
@@ -105,7 +279,15 @@ pub(crate) fn run_proxy(addr: &str, boot: WorkerBoot) -> Result<WorkerReport> {
     let mut inbox: Vec<WorkerMsg> = Vec::new();
     let mut events: Vec<Envelope> = Vec::new();
     let mut exported = false;
-    'drain: while rx.recv_many(&mut inbox, usize::MAX) {
+    'drain: loop {
+        let alive = match tick {
+            None => rx.recv_many(&mut inbox, usize::MAX),
+            Some(t) => rx.recv_many_deadline(
+                &mut inbox,
+                usize::MAX,
+                Instant::now() + t,
+            ),
+        };
         for msg in inbox.drain(..) {
             let frame = match msg {
                 WorkerMsg::Event(env) => {
@@ -131,11 +313,14 @@ pub(crate) fn run_proxy(addr: &str, boot: WorkerBoot) -> Result<WorkerReport> {
                     let req_id = next_req;
                     next_req += 1;
                     park(&mux, req_id, Pending::Export(reply));
-                    if let Err(e) = flush_events(&mut stream, &mut events)
-                        .and_then(|()| {
-                            write_frame(&mut stream, &Frame::Export { req_id })
-                        })
-                    {
+                    if let Err(e) = flush_events(
+                        &mut link,
+                        &stream,
+                        &mut events,
+                    )
+                    .and_then(|()| {
+                        link.write(&stream, &Frame::Export { req_id }, true)
+                    }) {
                         fail(&mux, &stream);
                         lost(ord, addr, &e);
                     }
@@ -149,24 +334,35 @@ pub(crate) fn run_proxy(addr: &str, boot: WorkerBoot) -> Result<WorkerReport> {
                     break 'drain;
                 }
             };
-            if let Err(e) = flush_events(&mut stream, &mut events)
-                .and_then(|()| write_frame(&mut stream, &frame))
+            if let Err(e) = flush_events(&mut link, &stream, &mut events)
+                .and_then(|()| link.write(&stream, &frame, true))
             {
                 fail(&mux, &stream);
                 lost(ord, addr, &e);
             }
         }
-        if let Err(e) = flush_events(&mut stream, &mut events) {
+        if let Err(e) = flush_events(&mut link, &stream, &mut events) {
             fail(&mux, &stream);
             lost(ord, addr, &e);
+        }
+        if tick.is_some() {
+            if let Err(cause) =
+                watchdog.tick(&mux, &mut link, &stream, true)
+            {
+                fail(&mux, &stream);
+                lost(ord, addr, &cause);
+            }
+        }
+        if !alive {
+            break 'drain;
         }
     }
     drop(rx);
     if !exported {
         // Clean hangup: all coordinator senders gone. Tell the host to
         // drain and report.
-        if let Err(e) = flush_events(&mut stream, &mut events)
-            .and_then(|()| write_frame(&mut stream, &Frame::Close))
+        if let Err(e) = flush_events(&mut link, &stream, &mut events)
+            .and_then(|()| link.write(&stream, &Frame::Close, true))
         {
             fail(&mux, &stream);
             lost(ord, addr, &e);
@@ -175,7 +371,21 @@ pub(crate) fn run_proxy(addr: &str, boot: WorkerBoot) -> Result<WorkerReport> {
 
     // Wait for the reader: it exits after the host's final Report frame
     // (clean) or on EOF/error (crash). Keep `stream` alive until then —
-    // dropping it would close the connection under the reader.
+    // dropping it would close the connection under the reader. While a
+    // watchdog is armed, keep ticking it (without new pings — the host
+    // may hang up mid-drain) so an outstanding Export RPC or an already
+    // unanswered ping still converts a hang into the crash path.
+    if let Some(t) = tick {
+        while !reader.is_finished() {
+            if let Err(cause) =
+                watchdog.tick(&mux, &mut link, &stream, false)
+            {
+                fail(&mux, &stream);
+                lost(ord, addr, &cause);
+            }
+            std::thread::sleep(t);
+        }
+    }
     let cause = reader
         .join()
         .unwrap_or_else(|_| Some("reader panicked".to_string()));
@@ -199,7 +409,9 @@ fn lost(ord: usize, addr: &str, cause: &dyn std::fmt::Display) -> ! {
 }
 
 fn park(mux: &Mux, req_id: u64, pending: Pending) {
-    mux.lock().expect("mux poisoned").insert(req_id, pending);
+    mux.lock()
+        .expect("mux poisoned")
+        .insert(req_id, Parked { since: Instant::now(), pending });
 }
 
 /// Pre-panic cleanup on a write error: drop every parked reply sender
@@ -211,24 +423,27 @@ fn fail(mux: &Mux, stream: &TcpStream) {
 }
 
 fn flush_events(
-    stream: &mut TcpStream,
+    link: &mut FrameChaos,
+    stream: &TcpStream,
     events: &mut Vec<Envelope>,
 ) -> std::io::Result<()> {
     if events.is_empty() {
         return Ok(());
     }
     let frame = Frame::Events(std::mem::take(events));
-    write_frame(stream, &frame)
+    link.write(stream, &frame, true)
 }
 
 /// Reader-thread body: dispatch inbound frames until the host hangs up.
 /// Returns the abnormal-exit cause (`None` = clean EOF). Always clears
 /// the multiplexer on the way out so no reply sender outlives the
-/// connection.
+/// connection. Every inbound frame — `Pong`s included — stamps the
+/// shared [`Health`] clock the writer-side watchdog ages.
 fn read_loop(
     stream: TcpStream,
     mux: &Mux,
     report: &Arc<Mutex<Option<WorkerReport>>>,
+    health: &Arc<Health>,
     col_tx: &Sender<CollectorMsg>,
     ckpt_tx: &Option<Sender<crate::engine::actor::CheckpointMsg>>,
 ) -> Option<String> {
@@ -237,62 +452,78 @@ fn read_loop(
         match read_frame(&mut reader) {
             Ok(None) => break None,
             Err(e) => break Some(e.to_string()),
-            Ok(Some(frame)) => match frame {
-                Frame::Answer { req_id, answer } => {
-                    match take(mux, req_id) {
-                        Some(Pending::Query(tx)) => {
-                            let _ = tx.send(answer);
+            Ok(Some(frame)) => {
+                health.touch();
+                match frame {
+                    Frame::Answer { req_id, answer } => {
+                        match take(mux, req_id) {
+                            Some(Pending::Query(tx)) => {
+                                let _ = tx.send(answer);
+                            }
+                            _ => {
+                                log::warn!("unmatched answer (req {req_id})")
+                            }
                         }
-                        _ => log::warn!("unmatched answer (req {req_id})"),
                     }
-                }
-                Frame::SnapshotReply { req_id, snap } => {
-                    match take(mux, req_id) {
-                        Some(Pending::Snapshot(tx)) => {
-                            let _ = tx.send(snap);
+                    Frame::SnapshotReply { req_id, snap } => {
+                        match take(mux, req_id) {
+                            Some(Pending::Snapshot(tx)) => {
+                                let _ = tx.send(snap);
+                            }
+                            _ => log::warn!(
+                                "unmatched snapshot (req {req_id})"
+                            ),
                         }
-                        _ => log::warn!("unmatched snapshot (req {req_id})"),
                     }
-                }
-                Frame::ExportReply { req_id, export } => {
-                    match take(mux, req_id) {
-                        Some(Pending::Export(tx)) => {
-                            let _ = tx.send(export);
+                    Frame::ExportReply { req_id, export } => {
+                        match take(mux, req_id) {
+                            Some(Pending::Export(tx)) => {
+                                let _ = tx.send(export);
+                            }
+                            _ => log::warn!(
+                                "unmatched export (req {req_id})"
+                            ),
                         }
-                        _ => log::warn!("unmatched export (req {req_id})"),
                     }
-                }
-                Frame::Hits(samples) => {
-                    // Blocking is safe: the collector drains its channel
-                    // unconditionally for the whole session.
-                    let _ = col_tx.send(CollectorMsg::Hits(samples));
-                }
-                Frame::Done { worker_id } => {
-                    let _ = col_tx.send(CollectorMsg::Done {
-                        worker_id: worker_id as usize,
-                    });
-                }
-                Frame::Checkpoint { ord, lane, bytes } => {
-                    // Same contract as the in-proc actor: never block on
-                    // a full checkpoint channel (the coordinator may be
-                    // blocked sending events to this very proxy; waiting
-                    // for it to drain checkpoints would deadlock the
-                    // cycle). A dropped frame is always superseded by a
-                    // fresher one.
-                    if let Some(tx) = ckpt_tx {
-                        let msg = crate::engine::actor::CheckpointMsg {
-                            ord: ord as usize,
-                            lane,
-                            bytes,
-                        };
-                        let _ = tx.try_send(msg);
+                    Frame::Hits(samples) => {
+                        // Blocking is safe: the collector drains its
+                        // channel unconditionally for the whole session.
+                        let _ = col_tx.send(CollectorMsg::Hits(samples));
                     }
+                    Frame::Done { worker_id } => {
+                        let _ = col_tx.send(CollectorMsg::Done {
+                            worker_id: worker_id as usize,
+                        });
+                    }
+                    Frame::Checkpoint { ord, lane, bytes } => {
+                        // Same contract as the in-proc actor: never
+                        // block on a full checkpoint channel (the
+                        // coordinator may be blocked sending events to
+                        // this very proxy; waiting for it to drain
+                        // checkpoints would deadlock the cycle). A
+                        // dropped frame is always superseded by a
+                        // fresher one.
+                        if let Some(tx) = ckpt_tx {
+                            let msg = crate::engine::actor::CheckpointMsg {
+                                ord: ord as usize,
+                                lane,
+                                bytes,
+                            };
+                            let _ = tx.try_send(msg);
+                        }
+                    }
+                    Frame::Pong { .. } => {
+                        // The `health.touch()` above is the whole point;
+                        // the nonce needs no matching — any inbound
+                        // frame proves liveness.
+                    }
+                    Frame::Report(rep) => {
+                        *report.lock().expect("report poisoned") =
+                            Some(*rep);
+                    }
+                    _ => break Some("host sent a coordinator frame".into()),
                 }
-                Frame::Report(rep) => {
-                    *report.lock().expect("report poisoned") = Some(*rep);
-                }
-                _ => break Some("host sent a coordinator frame".into()),
-            },
+            }
         }
     };
     mux.lock().expect("mux poisoned").clear();
@@ -300,5 +531,8 @@ fn read_loop(
 }
 
 fn take(mux: &Mux, req_id: u64) -> Option<Pending> {
-    mux.lock().expect("mux poisoned").remove(&req_id)
+    mux.lock()
+        .expect("mux poisoned")
+        .remove(&req_id)
+        .map(|p| p.pending)
 }

@@ -51,7 +51,8 @@ use crate::engine::actor::{
     WorkerMsg,
 };
 use crate::engine::{bounded, spawn, Receiver, Sender, WorkerSnapshot};
-use crate::net::proto::{read_frame, write_frame, Frame, Hello};
+use crate::net::chaos::{FrameChaos, NetFaultPlan, Side};
+use crate::net::proto::{read_frame, Frame, Hello};
 
 /// How often the accept loop polls for shutdown between connections.
 const ACCEPT_POLL: Duration = Duration::from_millis(25);
@@ -69,6 +70,19 @@ struct Shared {
     /// Live connection sockets by connection id — the [`WorkerServer::sever`]
     /// chaos hook shuts these down abruptly.
     streams: Mutex<HashMap<u64, TcpStream>>,
+    /// Until when every connection's outbound pump is frozen — the
+    /// [`WorkerServer::stall`] hung-worker test hook.
+    stall_until: Mutex<Option<Instant>>,
+}
+
+impl Shared {
+    /// True while a [`WorkerServer::stall`] window is open.
+    fn stalled(&self) -> bool {
+        match *self.stall_until.lock().expect("stall poisoned") {
+            Some(until) => Instant::now() < until,
+            None => false,
+        }
+    }
 }
 
 /// A TCP server hosting one `WorkerActor` per inbound connection —
@@ -100,6 +114,7 @@ impl WorkerServer {
             events_routed: AtomicU64::new(0),
             active: AtomicUsize::new(0),
             streams: Mutex::new(HashMap::new()),
+            stall_until: Mutex::new(None),
         });
         let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> =
             Arc::new(Mutex::new(Vec::new()));
@@ -149,6 +164,18 @@ impl WorkerServer {
             }
         }
         hit
+    }
+
+    /// Freeze every live connection's outbound pump for `d` — nothing
+    /// leaves this server (no hits, no checkpoints, no RPC replies, no
+    /// liveness pongs) while the sockets stay open and inbound frames
+    /// keep being accepted. This is the *hung worker* test hook: unlike
+    /// [`WorkerServer::sever`], the coordinator sees no EOF and no
+    /// error, only silence — exactly the failure its RPC-deadline /
+    /// heartbeat watchdog exists to detect.
+    pub fn stall(&self, d: Duration) {
+        *self.shared.stall_until.lock().expect("stall poisoned") =
+            Some(Instant::now() + d);
     }
 
     /// Block until the server has served at least one connection and
@@ -258,6 +285,10 @@ enum PendingReply {
     Query(u64, Receiver<ReplicaAnswer>),
     Snapshot(u64, Receiver<WorkerSnapshot>),
     Export(u64, Receiver<WorkerExport>),
+    /// A liveness pong (always ready — it just echoes the nonce). It
+    /// rides the same FIFO as real replies so the pump stays the single
+    /// writer and ordering stays trivially correct.
+    Pong(u64),
 }
 
 /// Host one worker slot for the lifetime of one connection.
@@ -277,6 +308,19 @@ fn serve_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
         None => bail!("peer hung up before the hello frame"),
     };
     let Hello { ord, v_i, v_u, kill_at_seq, kill_in_checkpoint, cfg } = hello;
+    // Host side of the network fault plan: both peers derive the same
+    // per-connection fault from the Hello's config; this side sleeps
+    // its handshake delay and arms the sever iff the plan put it here.
+    let fault =
+        NetFaultPlan::from_config(&cfg).map(|plan| plan.connection(ord));
+    if let Some(f) = &fault {
+        if f.host_delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(f.host_delay_ms));
+        }
+    }
+    let mut link = fault
+        .as_ref()
+        .map_or_else(FrameChaos::none, |f| FrameChaos::armed(f, Side::Host));
     let ord = ord as usize;
     let grid = StateGrid::new(v_i, v_u)
         .context("rebuilding the state grid from the hello frame")?;
@@ -308,9 +352,15 @@ fn serve_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
             .context("spawning the connection reader")?
     };
 
-    let report = pump(&stream, &col_rx, ckpt_rx.as_ref(), &pending, || {
-        actor_handle.is_finished()
-    });
+    let report = pump(
+        &stream,
+        &mut link,
+        shared,
+        &col_rx,
+        ckpt_rx.as_ref(),
+        &pending,
+        || actor_handle.is_finished(),
+    );
 
     // Join the actor. A clean report ships as the final frame; a crash
     // (chaos kill or real bug) drops the connection with *no* report —
@@ -318,10 +368,8 @@ fn serve_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
     let mut result = Ok(());
     match actor_handle.join() {
         Ok(Ok(worker_report)) if report.is_ok() => {
-            let mut w = &stream;
-            if let Err(e) =
-                write_frame(&mut w, &Frame::Report(Box::new(worker_report)))
-            {
+            let frame = Frame::Report(Box::new(worker_report));
+            if let Err(e) = link.write(&stream, &frame, true) {
                 result = Err(e).context("writing the final report");
             }
         }
@@ -362,6 +410,16 @@ fn reader_loop(
                 break;
             }
         };
+        if let Frame::Ping { nonce } = frame {
+            // Answer liveness probes even after Close (the actor may
+            // still be draining): the pong goes through the pump like
+            // any reply, so it also proves the outbound path moves.
+            pending
+                .lock()
+                .expect("pending poisoned")
+                .push_back(PendingReply::Pong(nonce));
+            continue;
+        }
         let Some(sender) = tx.as_ref() else {
             // Frames after Close violate the protocol; drop them and
             // keep draining to EOF so the peer's writes don't block.
@@ -455,19 +513,29 @@ fn reader_loop(
 /// fails the pump turns into a sink that keeps draining (and
 /// discarding) the actor's channels, because an actor blocked sending
 /// into a full collector channel nobody drains would never finish and
-/// the handler's join would hang forever.
+/// the handler's join would hang forever. All writes go through the
+/// host-side chaos `link` (an armed host-side sever surfaces here as a
+/// broken write, which is exactly the sink-mode path); a
+/// [`WorkerServer::stall`] window freezes the whole pass — nothing is
+/// drained or written while it is open.
+#[allow(clippy::too_many_arguments)]
 fn pump(
     stream: &TcpStream,
+    link: &mut FrameChaos,
+    shared: &Arc<Shared>,
     col_rx: &Receiver<CollectorMsg>,
     ckpt_rx: Option<&Receiver<crate::engine::actor::CheckpointMsg>>,
     pending: &Arc<Mutex<VecDeque<PendingReply>>>,
     actor_finished: impl Fn() -> bool,
 ) -> std::io::Result<()> {
-    let mut w = stream;
     let mut broken: Option<std::io::Error> = None;
     let mut ck = Vec::new();
     let mut co = Vec::new();
     loop {
+        if shared.stalled() {
+            std::thread::sleep(PUMP_POLL);
+            continue;
+        }
         let finished = actor_finished();
         // Capture checkpoints FIRST, collector traffic SECOND, then
         // write collector frames before checkpoint frames: a checkpoint
@@ -489,7 +557,7 @@ fn pump(
                     Frame::Done { worker_id: worker_id as u64 }
                 }
             };
-            if let Err(e) = write_frame(&mut w, &frame) {
+            if let Err(e) = link.write(stream, &frame, true) {
                 broken = Some(e);
             }
         }
@@ -502,7 +570,7 @@ fn pump(
                 lane: msg.lane,
                 bytes: msg.bytes,
             };
-            if let Err(e) = write_frame(&mut w, &frame) {
+            if let Err(e) = link.write(stream, &frame, true) {
                 broken = Some(e);
             }
         }
@@ -542,6 +610,9 @@ fn pump(
                                 export,
                             })
                         }
+                        PendingReply::Pong(nonce) => {
+                            Some(Frame::Pong { nonce: *nonce })
+                        }
                     };
                     if ready.is_some() {
                         queue.pop_front();
@@ -561,7 +632,11 @@ fn pump(
         if let Some(frame) = reply {
             progress = true;
             if broken.is_none() {
-                if let Err(e) = write_frame(&mut w, &frame) {
+                // Pongs don't count against a sever-at-frame-N fuse:
+                // heartbeat cadence must not move where a data-frame
+                // sever lands.
+                let counts = !matches!(frame, Frame::Pong { .. });
+                if let Err(e) = link.write(stream, &frame, counts) {
                     broken = Some(e);
                 }
             }
@@ -581,5 +656,48 @@ fn pump(
         if !progress {
             std::thread::sleep(PUMP_POLL);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Write;
+
+    use super::*;
+
+    fn wait_for(what: &str, cond: impl Fn() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting: {what}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn hostile_length_prefix_does_not_kill_the_host() {
+        let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+
+        // Connection 1: a length prefix far over the 1 GiB frame cap.
+        // The host must reject it loudly (no allocation, no panic) and
+        // drop only this connection.
+        let mut evil = TcpStream::connect(addr).unwrap();
+        evil.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        wait_for("evil connection accepted", || server.connections() >= 1);
+        wait_for("evil connection dropped", || server.active() == 0);
+
+        // Connection 2: a well-formed frame that is not a Hello — also
+        // rejected per-connection, proving the accept loop survived.
+        let mut wrong = TcpStream::connect(addr).unwrap();
+        let body = Frame::Close.encode();
+        let mut out = (body.len() as u32).to_le_bytes().to_vec();
+        out.extend_from_slice(&body);
+        wrong.write_all(&out).unwrap();
+        wait_for("second connection served", || server.connections() >= 2);
+        wait_for("second connection dropped", || server.active() == 0);
+
+        drop(evil);
+        drop(wrong);
+        server.shutdown().unwrap();
     }
 }

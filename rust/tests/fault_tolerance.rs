@@ -296,6 +296,101 @@ fn severed_remote_connection_recovers_byte_identical() {
 }
 
 #[test]
+fn hung_remote_worker_is_detected_and_recovered() {
+    // A worker that stops making progress WITHOUT dying — no EOF, no
+    // error, just silence on an open TCP connection — must be detected
+    // by the coordinator's liveness watchdog within the rpc timeout
+    // and converted into the ordinary crash-recovery path.
+    // `WorkerServer::stall` freezes the hosts' outbound pumps: events
+    // still flow in, but no reply, hit batch, or heartbeat `Pong`
+    // comes back.
+    use std::time::{Duration, Instant};
+    use streamrec::net::WorkerServer;
+    let evs = events(1200, 97);
+    let users = panel(&evs, 4);
+    let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+
+    let base_cfg = fault_cfg(Algorithm::Isgd, 8);
+    let base = run_session(&base_cfg, &evs, &users, None);
+
+    let mut cfg = base_cfg.clone();
+    cfg.cluster_workers = vec![format!("tcp://{}", server.local_addr())];
+    cfg.fault_rpc_timeout_ms = 400;
+    cfg.fault_heartbeat_interval_ms = 50;
+    cfg.fault_dial_backoff_ms = 2;
+    let mut cluster = Cluster::spawn_labeled(&cfg, "t-hung").unwrap();
+    let split = evs.len() / 2;
+    cluster.ingest_batch(&evs[..split]).unwrap();
+    let mid: Vec<Vec<u64>> = users
+        .iter()
+        .map(|&u| cluster.recommend(u, 10).unwrap())
+        .collect();
+
+    // Freeze every pump for 1.2 s — long enough that the 400 ms
+    // deadline must fire, short enough that the per-slot respawn
+    // budget absorbs any repeat detections inside the window.
+    server.stall(Duration::from_millis(1200));
+    let t0 = Instant::now();
+    cluster.ingest_batch(&evs[split..]).unwrap();
+    // Let the stall window fully elapse so the probes below land on
+    // live pumps; *detection* must already have happened by then,
+    // bounded by the rpc timeout — not by the stall length.
+    std::thread::sleep(Duration::from_millis(1400));
+    let end: Vec<Vec<u64>> = users
+        .iter()
+        .map(|&u| cluster.recommend(u, 10).unwrap())
+        .collect();
+    let report = cluster.finish().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "hung-worker handling must be bounded, not a hang"
+    );
+    let remote = Outcome { mid, end, report };
+    assert!(
+        remote.report.recoveries >= 1,
+        "the stall was detected as a worker loss"
+    );
+    assert_indistinguishable(&base, &remote, "hung-remote");
+    server.wait_idle(Duration::from_millis(100));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn respawn_onto_a_briefly_unavailable_listener_succeeds() {
+    // A respawn whose re-dial initially fails must retry under the
+    // bounded-backoff budget and succeed. The unavailability window is
+    // injected deterministically: the fault plan refuses every
+    // connection's first two dial attempts (exactly what a
+    // not-yet-listening host looks like), and one connection is
+    // severed mid-stream so a respawn — and therefore a refused
+    // re-dial — actually happens.
+    use streamrec::net::WorkerServer;
+    let evs = events(1400, 83);
+    let users = panel(&evs, 4);
+    let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+
+    let base_cfg = fault_cfg(Algorithm::Cosine, 8);
+    let base = run_session(&base_cfg, &evs, &users, None);
+
+    let mut cfg = base_cfg.clone();
+    cfg.cluster_workers = vec![format!("tcp://{}", server.local_addr())];
+    cfg.fault_dial_retries = 4;
+    cfg.fault_dial_backoff_ms = 2;
+    cfg.fault_net.seed = 19;
+    cfg.fault_net.sever_connections = 1;
+    cfg.fault_net.sever_after_frames = 3;
+    cfg.fault_net.refuse_dials = 2;
+    let remote = run_session(&cfg, &evs, &users, None);
+    assert!(
+        remote.report.recoveries >= 1,
+        "the sever forces a respawn through the refused dials"
+    );
+    assert_indistinguishable(&base, &remote, "refused-then-respawned");
+    server.wait_idle(std::time::Duration::from_millis(100));
+    server.shutdown().unwrap();
+}
+
+#[test]
 fn exhausted_replay_log_refuses_to_lose_events() {
     // A replay log smaller than the checkpoint gap cannot recover
     // without losing events — the supervisor must say so explicitly.

@@ -196,6 +196,84 @@ fn chaos_killed_remote_worker_recovers_byte_identical() {
     server.shutdown().unwrap();
 }
 
+#[test]
+fn property_net_fault_plans_within_budget_are_invisible() {
+    // The chaos-tentpole acceptance property: for random seeded
+    // `[fault.net]` plans the retry/timeout budget can absorb —
+    // per-connection handshake delays, injected dial refusals,
+    // sever-at-frame-N (clean or mid-frame), both algorithms, with and
+    // without a concurrent rescale — the remote session must be
+    // byte-identical to the fault-free all-in-process run. The sever
+    // fuse is kept short (≤ 3 counted frames) so every armed sever is
+    // guaranteed to fire before its connection retires naturally.
+    let evs = events(1400, 61);
+    let users = panel(&evs, 4);
+    let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+    let addr = format!("tcp://{}", server.local_addr());
+    forall("net_fault_invisible", 4, |rng| {
+        let algo = if rng.next_bounded(2) == 0 {
+            Algorithm::Isgd
+        } else {
+            Algorithm::Cosine
+        };
+        let ckpt = 1 + rng.next_bounded(32);
+        let rescale_to =
+            if rng.next_bounded(2) == 0 { Some(4u64) } else { None };
+
+        let mut tcp_cfg = base_cfg(algo, ckpt);
+        tcp_cfg.cluster_workers = vec![addr.clone()];
+        tcp_cfg.fault_dial_retries = 5;
+        tcp_cfg.fault_dial_backoff_ms = 2;
+        tcp_cfg.fault_rpc_timeout_ms = 5_000;
+        tcp_cfg.fault_heartbeat_interval_ms = 100;
+        tcp_cfg.fault_net.seed = rng.next_u64();
+        tcp_cfg.fault_net.delay_ms_max = rng.next_bounded(4);
+        tcp_cfg.fault_net.sever_connections = 1 + rng.next_bounded(2);
+        tcp_cfg.fault_net.sever_after_frames = 3;
+        tcp_cfg.fault_net.mid_frame_cut = rng.next_bounded(2) == 1;
+        tcp_cfg.fault_net.refuse_dials = rng.next_bounded(3) as u32;
+        let label = format!(
+            "algo={algo:?} ckpt={ckpt} rescale={rescale_to:?} net={:?}",
+            tcp_cfg.fault_net
+        );
+
+        let inproc =
+            run_session(&base_cfg(algo, ckpt), &evs, &users, rescale_to);
+        let tcp = run_session(&tcp_cfg, &evs, &users, rescale_to);
+        assert!(
+            tcp.report.recoveries >= 1,
+            "{label}: an armed sever must fire and be recovered"
+        );
+        assert_identical(&inproc, &tcp, &label);
+    });
+    server.wait_idle(Duration::from_millis(100));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn exhausted_dial_retries_fail_loudly_with_the_host() {
+    // Without fault tolerance, a slot whose host is gone for good must
+    // exhaust its dial budget and surface a session error naming the
+    // address — never hang, never fail silently. (Bind then drop a
+    // listener so the port is almost surely dead.)
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    let evs = events(200, 3);
+    let mut cfg = base_cfg(Algorithm::Isgd, 0);
+    cfg.cluster_workers = vec![format!("tcp://{addr}")];
+    cfg.fault_dial_retries = 2;
+    cfg.fault_dial_backoff_ms = 1;
+    let mut cluster = Cluster::spawn_labeled(&cfg, "t-deadhost").unwrap();
+    let outcome = cluster
+        .ingest_batch(&evs)
+        .and_then(|()| cluster.finish().map(|_| ()));
+    let err = outcome.expect_err("a dead host must surface");
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&addr), "error must name the host: {msg}");
+    assert!(msg.contains("3 attempt"), "retry budget visible: {msg}");
+}
+
 /// A real `streamrec worker` child process bound to an ephemeral
 /// loopback port, address parsed from its first stdout line.
 struct WorkerProc {
