@@ -49,8 +49,11 @@ fn main() -> anyhow::Result<()> {
                     ),
                 )?;
                 cluster.ingest_batch(&events[..warm])?;
-                // The metrics probe forces crash detection if the ingest
-                // flushes have not already tripped over it.
+                // Flush the buffered tail (the kill seq is the *last*
+                // event, which may still sit in a route buffer); the
+                // metrics probe then forces crash detection if the
+                // flush has not already tripped over it.
+                cluster.flush()?;
                 let m = cluster.metrics()?;
                 assert_eq!(m.recoveries, 1, "bench kill must have fired");
                 assert_eq!(m.processed, warm as u64, "bench lost events");

@@ -1,85 +1,239 @@
-//! Serving-path benchmarks: `Cluster::recommend` latency while the
-//! cluster is under concurrent ingest load, plus the rank-aware replica
-//! merge in isolation.
+//! Open-loop serving-latency load harness (records `BENCH_serving.json`).
 //!
-//! The recommend number is the one a latency SLO cares about: each query
-//! queues behind the in-flight events of the user's replicas (per-worker
-//! FIFO), so it includes the queue wait a live system actually pays.
+//! Queries arrive on a fixed schedule — arrival `i` at `t0 + i/qps` —
+//! pulled by a pool of reader threads from a shared atomic counter,
+//! while the owner thread ingests the live stream the whole time. The
+//! recorded latency is *completion minus scheduled arrival*, so queue
+//! wait from falling behind the schedule is charged to the system, not
+//! hidden by a coordinated caller (the open-loop/SLO view). Each row
+//! runs against a fresh cluster; the `mixed-tcp` rows cycle worker
+//! placement between local threads and a loopback-TCP host, so query
+//! frames also cross the wire protocol's serving lane.
+//!
+//! `SERVING_BENCH_SMOKE=1` switches to a single low-QPS short window per
+//! transport (the CI smoke: real measured rows, tiny budget).
+//!
+//! Schema of the emitted rows: docs/EXPERIMENTS.md.
 
-use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
-use streamrec::benchutil::{bench, black_box};
+use streamrec::benchutil::black_box;
 use streamrec::config::{RunConfig, Topology};
 use streamrec::coordinator::Cluster;
+use streamrec::data::types::Rating;
 use streamrec::data::DatasetSpec;
-use streamrec::eval::merge_topn;
+use streamrec::net::WorkerServer;
 use streamrec::util::histogram::Histogram;
+use streamrec::util::json::{num, obj, s, to_string, Json};
+use streamrec::util::rng::mix64;
+
+/// One load point: a target arrival rate sustained for a window.
+struct LoadSpec {
+    qps: u64,
+    seconds: u64,
+    threads: usize,
+}
+
+/// First `k` distinct users of a slice, in stream order.
+fn panel(evs: &[Rating], k: usize) -> Vec<u64> {
+    let mut users = Vec::new();
+    for e in evs {
+        if !users.contains(&e.user) {
+            users.push(e.user);
+            if users.len() == k {
+                break;
+            }
+        }
+    }
+    users
+}
+
+/// Drive one row: warm the models, then run the open-loop window with
+/// live ingest racing the readers.
+fn run_row(
+    cfg: &RunConfig,
+    transport: &str,
+    warm: &[Rating],
+    live: &[Rating],
+    spec: &LoadSpec,
+) -> anyhow::Result<Json> {
+    let mut cluster = Cluster::spawn_labeled(
+        cfg,
+        &format!("serve-{transport}-{}qps", spec.qps),
+    )?;
+    cluster.ingest_batch(warm)?;
+    let users = panel(warm, 64);
+    let handle = cluster.serving();
+    let total = spec.qps * spec.seconds;
+    let window = Duration::from_secs(spec.seconds);
+    let next = AtomicU64::new(0);
+    let t0 = Instant::now();
+
+    let (hist, ingested) = std::thread::scope(|sc| {
+        let joins: Vec<_> = (0..spec.threads)
+            .map(|t| {
+                let h = handle.clone();
+                let next = &next;
+                let users = &users;
+                sc.spawn(move || {
+                    let mut hist = Histogram::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= total {
+                            break;
+                        }
+                        let sched = Duration::from_nanos(
+                            i.saturating_mul(1_000_000_000) / spec.qps,
+                        );
+                        // Wait for the scheduled arrival. The schedule
+                        // never slips: a slow answer makes the *next*
+                        // arrival late, and that lateness is measured.
+                        loop {
+                            let now = t0.elapsed();
+                            if now >= sched {
+                                break;
+                            }
+                            std::thread::sleep(
+                                (sched - now).min(Duration::from_millis(1)),
+                            );
+                        }
+                        let u = users[(mix64(i ^ ((t as u64) << 32))
+                            as usize)
+                            % users.len()];
+                        black_box(h.recommend(u, 10).expect("loadgen query"));
+                        hist.record((t0.elapsed() - sched).as_nanos() as u64);
+                    }
+                    hist
+                })
+            })
+            .collect();
+
+        // The owner thread keeps the cluster under ingest load for the
+        // whole window (stopping early only if the stream runs out).
+        let mut ingested = 0u64;
+        for chunk in live.chunks(512) {
+            if t0.elapsed() >= window {
+                break;
+            }
+            cluster.ingest_batch(chunk).expect("live ingest");
+            ingested += chunk.len() as u64;
+        }
+
+        let mut merged = Histogram::new();
+        for j in joins {
+            merged.merge(&j.join().expect("reader thread"));
+        }
+        (merged, ingested)
+    });
+
+    let wall = t0.elapsed().as_secs_f64();
+    let m = cluster.metrics()?;
+    cluster.finish()?;
+
+    let p50 = hist.quantile(0.5) as f64 / 1e3;
+    let p99 = hist.quantile(0.99) as f64 / 1e3;
+    let p999 = hist.quantile(0.999) as f64 / 1e3;
+    println!(
+        "{transport:>10} {:>7} {:>9.0} {:>10.1} {:>10.1} {:>10.1} {:>6} {:>8}",
+        spec.qps,
+        total as f64 / wall,
+        p50,
+        p99,
+        p999,
+        m.shed_queries,
+        ingested,
+    );
+    Ok(obj(vec![
+        ("transport", s(transport)),
+        ("qps_target", num(spec.qps as f64)),
+        ("qps_achieved", num(total as f64 / wall)),
+        ("queries", num(total as f64)),
+        ("threads", num(spec.threads as f64)),
+        ("p50_us", num(p50)),
+        ("p99_us", num(p99)),
+        ("p999_us", num(p999)),
+        ("shed", num(m.shed_queries as f64)),
+        ("cache_hits", num(m.cache_hits as f64)),
+        ("degraded", num(m.degraded_queries as f64)),
+        ("ingest_events", num(ingested as f64)),
+        ("wall_s", num(wall)),
+    ]))
+}
 
 fn main() -> anyhow::Result<()> {
-    println!("== serving-path benchmarks ==");
-
-    // 1) Replica merge in isolation: n_i disjoint ranked lists of 10.
-    for n_i in [2usize, 4, 6] {
-        let lists: Vec<Vec<u64>> = (0..n_i)
-            .map(|r| (0..10u64).map(|i| i * n_i as u64 + r as u64).collect())
-            .collect();
-        let exclude: HashSet<u64> = [3u64, 17, 23].into_iter().collect();
-        bench(
-            &format!("merge_topn/{n_i}x10"),
-            1000,
-            20_000,
-            Duration::from_millis(200),
-            || {
-                black_box(merge_topn(
-                    black_box(&lists),
-                    black_box(&exclude),
-                    10,
-                ));
-            },
-        );
-    }
-
-    // 2) recommend() latency under concurrent ingest, central vs n_i=2/4.
-    let events = DatasetSpec::parse("ml-like:60000", 33)?.load()?;
-    // "session ev/s" = events / (first ingest .. finish) wall clock; the
-    // window deliberately includes the interleaved query round-trips.
+    let smoke = std::env::var("SERVING_BENCH_SMOKE")
+        .map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false);
     println!(
-        "\n{:>4} {:>10} {:>12} {:>12} {:>12}",
-        "n_i", "queries", "p50 (us)", "p99 (us)", "session ev/s"
+        "== serving plane: open-loop load under live ingest{} ==",
+        if smoke { " (smoke)" } else { "" }
     );
-    for n_i in [1u64, 2, 4] {
-        let cfg = RunConfig {
-            topology: Topology::new(n_i, 0)?,
-            sample_every: 10_000,
-            ..RunConfig::default()
-        };
-        let mut cluster =
-            Cluster::spawn_labeled(&cfg, &format!("serve-ni{n_i}"))?;
-        // Warm the models with the first half of the stream.
-        let (warm, live) = events.split_at(events.len() / 2);
-        cluster.ingest_batch(warm)?;
-        let hot_user = warm[0].user;
 
-        // Interleave: every chunk of ingest keeps the worker queues busy,
-        // then one timed query rides behind that load.
-        let mut hist = Histogram::new();
-        let mut queries = 0u64;
-        for chunk in live.chunks(250) {
-            cluster.ingest_batch(chunk)?;
-            let t0 = Instant::now();
-            let recs = cluster.recommend(hot_user, 10)?;
-            hist.record(t0.elapsed().as_nanos() as u64);
-            black_box(recs);
-            queries += 1;
+    let dataset = if smoke { "ml-like:20000" } else { "ml-like:120000" };
+    let events = DatasetSpec::parse(dataset, 33)?.load()?;
+    let (warm, live) = events.split_at(events.len() / 3);
+
+    let cfg = RunConfig {
+        topology: Topology::new(2, 0)?,
+        sample_every: 10_000,
+        ..RunConfig::default()
+    };
+    let server = WorkerServer::bind("127.0.0.1:0")?;
+    let placements: Vec<(&str, Vec<String>)> = vec![
+        ("inproc", Vec::new()),
+        (
+            "mixed-tcp",
+            vec![
+                "local".to_string(),
+                format!("tcp://{}", server.local_addr()),
+            ],
+        ),
+    ];
+    let specs: Vec<LoadSpec> = if smoke {
+        vec![LoadSpec { qps: 200, seconds: 2, threads: 2 }]
+    } else {
+        vec![
+            LoadSpec { qps: 1_000, seconds: 3, threads: 4 },
+            LoadSpec { qps: 4_000, seconds: 3, threads: 4 },
+            LoadSpec { qps: 16_000, seconds: 3, threads: 8 },
+        ]
+    };
+
+    println!(
+        "{:>10} {:>7} {:>9} {:>10} {:>10} {:>10} {:>6} {:>8}",
+        "transport",
+        "qps",
+        "achieved",
+        "p50 (us)",
+        "p99 (us)",
+        "p999 (us)",
+        "shed",
+        "ingest"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for (transport, workers) in &placements {
+        let mut c = cfg.clone();
+        c.cluster_workers = workers.clone();
+        for spec in &specs {
+            rows.push(run_row(&c, transport, warm, live, spec)?);
         }
-        let report = cluster.finish()?;
-        println!(
-            "{n_i:>4} {queries:>10} {:>12.1} {:>12.1} {:>12.0}",
-            hist.quantile(0.5) as f64 / 1e3,
-            hist.quantile(0.99) as f64 / 1e3,
-            report.throughput
-        );
     }
+    server.wait_idle(Duration::from_millis(200));
+    server.shutdown()?;
+
+    let doc = obj(vec![
+        (
+            "bench",
+            s("serving plane: open-loop query latency under live ingest"),
+        ),
+        ("dataset", s(dataset)),
+        ("algorithm", s("isgd")),
+        ("n_i", num(2.0)),
+        ("smoke", num(if smoke { 1.0 } else { 0.0 })),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_serving.json", to_string(&doc) + "\n")?;
+    println!("\n(recorded in BENCH_serving.json)");
     Ok(())
 }

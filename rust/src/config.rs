@@ -330,6 +330,31 @@ pub struct RunConfig {
     /// Deterministic network fault-injection plan (TOML: `[fault.net]`).
     /// Defaults to a no-op; see [`NetFaultConfig`].
     pub fault_net: NetFaultConfig,
+    /// Per-worker query channel capacity (TOML:
+    /// `serving.queue_capacity`): how many in-flight queries a worker's
+    /// dedicated serving lane buffers before `recommend` sheds the
+    /// query instead of blocking. The serving plane never waits on a
+    /// full queue — that is the load-shedding contract.
+    pub serving_queue_capacity: usize,
+    /// Admission-control ceiling (TOML: `serving.max_in_flight`): the
+    /// maximum number of concurrently admitted `recommend` calls across
+    /// all caller threads. Arrivals beyond it are shed immediately
+    /// (counted in `ClusterMetrics::shed_queries`) rather than queued,
+    /// keeping tail latency bounded under overload.
+    pub serving_max_in_flight: usize,
+    /// Number of shards in the serving cache (TOML:
+    /// `serving.cache_shards`), rounded up to a power of two. More
+    /// shards means less lock contention between caller threads; each
+    /// shard is an independent `user -> answer` map.
+    pub serving_cache_shards: usize,
+    /// Serving-cache staleness budget in *events* (TOML:
+    /// `serving.cache_max_staleness`): a cached answer for a user is
+    /// reused only while fewer than this many ingested events have
+    /// touched the user's state column since the answer was computed.
+    /// `0` (the default) is strict read-your-writes: any newer event in
+    /// the column invalidates the entry. Rescales and worker recoveries
+    /// always invalidate regardless of this budget.
+    pub serving_cache_max_staleness: u64,
 }
 
 impl Default for RunConfig {
@@ -363,6 +388,10 @@ impl Default for RunConfig {
             fault_rpc_timeout_ms: 30_000,
             fault_heartbeat_interval_ms: 1_000,
             fault_net: NetFaultConfig::default(),
+            serving_queue_capacity: 1024,
+            serving_max_in_flight: 256,
+            serving_cache_shards: 16,
+            serving_cache_max_staleness: 0,
         }
     }
 }
@@ -505,6 +534,23 @@ impl RunConfig {
             cfg.fault_net.mid_frame_cut = v.bool()?;
         }
         num!("fault.net.refuse_dials", cfg.fault_net.refuse_dials, u32);
+        num!("serving.queue_capacity", cfg.serving_queue_capacity, usize);
+        num!("serving.max_in_flight", cfg.serving_max_in_flight, usize);
+        num!("serving.cache_shards", cfg.serving_cache_shards, usize);
+        num!(
+            "serving.cache_max_staleness",
+            cfg.serving_cache_max_staleness,
+            u64
+        );
+        if cfg.serving_queue_capacity == 0 {
+            bail!("serving.queue_capacity must be >= 1");
+        }
+        if cfg.serving_max_in_flight == 0 {
+            bail!("serving.max_in_flight must be >= 1");
+        }
+        if cfg.serving_cache_shards == 0 {
+            bail!("serving.cache_shards must be >= 1");
+        }
         if cfg.fault_net.refuse_dials > cfg.fault_dial_retries {
             bail!(
                 "fault.net.refuse_dials = {} exceeds fault.dial_retries = \
@@ -829,6 +875,33 @@ mod tests {
         assert_eq!(cfg.fault_dial_backoff_ms, 5);
         assert_eq!(cfg.fault_rpc_timeout_ms, 250);
         assert_eq!(cfg.fault_heartbeat_interval_ms, 0);
+    }
+
+    #[test]
+    fn parses_serving_section() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.serving_queue_capacity, 1024);
+        assert_eq!(cfg.serving_max_in_flight, 256);
+        assert_eq!(cfg.serving_cache_shards, 16);
+        assert_eq!(cfg.serving_cache_max_staleness, 0);
+        let cfg = RunConfig::from_toml(
+            "[serving]\nqueue_capacity = 64\nmax_in_flight = 8\n\
+             cache_shards = 4\ncache_max_staleness = 500",
+        )
+        .unwrap();
+        assert_eq!(cfg.serving_queue_capacity, 64);
+        assert_eq!(cfg.serving_max_in_flight, 8);
+        assert_eq!(cfg.serving_cache_shards, 4);
+        assert_eq!(cfg.serving_cache_max_staleness, 500);
+        // Zeroes would deadlock or divide by zero downstream; rejected
+        // loudly at parse time.
+        for bad in [
+            "[serving]\nqueue_capacity = 0",
+            "[serving]\nmax_in_flight = 0",
+            "[serving]\ncache_shards = 0",
+        ] {
+            assert!(RunConfig::from_toml(bad).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

@@ -5,31 +5,43 @@
 //! keeps them alive across an *unbounded* stream: [`Cluster::ingest`]
 //! pushes events through the Algorithm-1 router with backpressure,
 //! [`Cluster::recommend`] is the online serving path (fan a query out to
-//! every replica of the user, merge the per-replica top-N lists),
-//! [`Cluster::metrics`] snapshots live counters without stopping anything,
-//! [`Cluster::rescale`] migrates the running system to a different worker
-//! topology without losing an event or a bit of model state, and
-//! [`Cluster::finish`] drains, joins, and returns the final
-//! [`RunReport`] — exactly what the old one-shot `run_pipeline` produced.
+//! every replica of the user over its dedicated query lane, merge the
+//! per-replica top-N lists) — callable through `&self`, and concurrently
+//! from any number of threads via [`Cluster::serving`] handles while
+//! ingest proceeds, [`Cluster::metrics`] snapshots live counters without
+//! stopping (or flushing) anything, [`Cluster::rescale`] migrates the
+//! running system to a different worker topology without losing an event
+//! or a bit of model state, and [`Cluster::finish`] drains, joins, and
+//! returns the final [`RunReport`] — exactly what the old one-shot
+//! `run_pipeline` produced.
 //!
-//! This module is deliberately thin: it owns routing, the per-worker
-//! route buffers, and the session lifecycle. The worker loop itself —
-//! the `WorkerMsg` protocol, the per-lane models, checkpointing — lives
-//! in `engine/actor.rs`, and worker spawning, liveness, crash
-//! detection, and recovery live in `coordinator/supervisor.rs`.
+//! This module is deliberately thin: it owns routing and the session
+//! lifecycle. The worker loop — the `WorkerMsg`/`QueryMsg` protocols,
+//! the per-lane models, checkpointing — lives in `engine/actor.rs`;
+//! worker spawning, liveness, crash detection, and recovery live in
+//! `coordinator/supervisor.rs`; and the concurrent query plane (plan,
+//! route buffers, cache, admission) lives in `coordinator/serving.rs`.
 //!
-//! # The worker protocol (`engine/actor.rs`)
+//! # The two planes
 //!
-//! Workers speak `WorkerMsg`: `Event` (prequential test-then-train),
-//! `Query` (serve from local lanes over a reply channel),
-//! `MetricsSnapshot` (live counters), `Export` (terminal: serialize
-//! every hosted lane and drain out), and `Import` (install a lane frame
-//! ahead of any later event). All messages share the per-worker FIFO
-//! channel, which gives queries, snapshots, and migrations a useful
-//! consistency guarantee for free: a probe observes every event ingested
-//! before it (per worker), because it queues behind them — and an
-//! `Export` therefore snapshots state that reflects the *entire*
-//! accepted prefix of the stream.
+//! Workers consume two channels. The **event FIFO** carries `WorkerMsg`:
+//! `Event` (prequential test-then-train), `MetricsSnapshot` (live
+//! counters), `Export` (terminal: serialize every hosted lane and drain
+//! out), and `Import` (install a lane frame ahead of any later event).
+//! Control probes sit at their FIFO position among the events, so a
+//! snapshot observes exactly the events flushed before it and an
+//! `Export` covers the complete accepted prefix.
+//!
+//! The **query lane** carries [`QueryMsg`](crate::engine::actor::QueryMsg)
+//! only. Queries bypass the event FIFO — they never queue behind ingest
+//! backpressure — and carry a read-your-writes *fence*: the `seq + 1` of
+//! the last event routed to that worker, captured in the same critical
+//! section that flushes the worker's route buffer. The actor holds a
+//! query until its applied watermark reaches the fence, so bypassing the
+//! FIFO never lets a query observe *less* than the ingested prefix —
+//! only sooner. Because the serve path is a frozen read (it never
+//! trains), query timing cannot perturb worker state, which is what
+//! makes the bypass sound (`tests/serving_equivalence.rs` pins this).
 //!
 //! # The batched data plane
 //!
@@ -38,20 +50,27 @@
 //! caps ingest throughput once the models are fast:
 //!
 //! * **Coordinator side** — [`Cluster::ingest`] does not send; it appends
-//!   the routed envelope to a per-worker *route buffer* and flushes that
-//!   worker's buffer with one bulk [`Sender::send_many`] (one lock, one
-//!   wakeup) when it reaches `cfg.ingest_batch_size`.
+//!   the routed envelope to the worker's *route buffer* (inside the
+//!   serving plan, under that slot's route lock) and flushes the buffer
+//!   with one bulk [`Sender::send_many`] (one lock, one wakeup) when it
+//!   reaches `cfg.ingest_batch_size`.
 //! * **Worker side** — the worker loop drains everything queued in one
-//!   critical section ([`Receiver::recv_many`]): wake once, process a
-//!   whole window of envelopes in FIFO order. Prequential accounting
-//!   stays strictly per-event; only the transport is batched.
-//! * **Ordering is batch-size-invariant** — every route buffer is
-//!   flushed before any `Query`/`MetricsSnapshot`/`Export` is sent and in
-//!   [`Cluster::finish`], so a query still observes every event ingested
-//!   before it and the drain guarantee is untouched. Reports, hit
+//!   critical section: wake once, process a whole window of envelopes in
+//!   FIFO order. Prequential accounting stays strictly per-event; only
+//!   the transport is batched.
+//! * **Ordering is batch-size-invariant** — a query's fence covers the
+//!   flushed prefix, the fan-out flushes the replica's buffer itself,
+//!   and [`Cluster::finish`] flushes every tail, so reports, hit
 //!   sequences, and recommendations are identical for any
 //!   `ingest_batch_size` (property-tested in
 //!   `tests/batching_equivalence.rs`).
+//!
+//! Note what is *not* flushed anymore: [`Cluster::metrics`] observes the
+//! stream without touching route buffers (`processed + buffered ==
+//! ingested`), and a query flushes only the queried user's replica
+//! workers — an idle worker's buffer is never disturbed by another
+//! user's traffic. [`Cluster::flush`] forces every buffer out when a
+//! caller wants `processed == ingested` exactly.
 //!
 //! # Lanes: state partitioning vs worker placement
 //!
@@ -69,8 +88,10 @@
 //!
 //! # The rescale protocol (pause → flush → drain → migrate → resume)
 //!
-//! 1. **Pause**: `rescale(&mut self, ..)` holds the only handle to the
-//!    session, so no ingest or query can interleave with the cutover.
+//! 1. **Pause**: `rescale(&mut self, ..)` pauses ingest (exclusive
+//!    borrow); concurrent [`ServingHandle`] queries keep running against
+//!    the old plan until the cutover swaps it, then retry against the
+//!    new one.
 //! 2. **Flush**: every route buffer is bulk-sent, so each worker's FIFO
 //!    holds the complete accepted prefix of the stream.
 //! 3. **Drain**: an `Export` probe queues behind those events on every
@@ -85,9 +106,12 @@
 //!    sessions).
 //! 4. **Migrate**: a fresh [`Router`] is installed with its epoch bumped,
 //!    new workers spawn, and every lane snapshot is sent as an `Import`
-//!    to the worker that owns the lane under the new topology.
-//! 5. **Resume**: subsequent `ingest` routes through the new grid; FIFO
-//!    order guarantees every `Import` lands before the first new event.
+//!    to the worker that owns the lane under the new topology. A barrier
+//!    probe confirms every import is applied *before* the new serving
+//!    plan goes live — a concurrent query can never observe a
+//!    pre-import (empty) lane.
+//! 5. **Resume**: subsequent `ingest` routes through the new grid; the
+//!    epoch bump invalidates every cached answer.
 //!
 //! Zero event loss and before/after recommendation equality are
 //! property-tested in `tests/rescale_equivalence.rs`; the pause-time cost
@@ -102,8 +126,9 @@
 //! a failed send, a liveness scan, or a panic at join — is then
 //! *invisible*: the supervisor respawns the worker, restores its lanes
 //! from their latest checkpoints, replays the watermark-filtered suffix
-//! from the log, and resumes. Replayed events re-evaluate to identical
-//! prequential outcomes (lane state is deterministic), and the collector
+//! from the log, refreshes the serving plan's senders in place, and
+//! resumes. Replayed events re-evaluate to identical prequential
+//! outcomes (lane state is deterministic), and the collector
 //! deduplicates by global sequence number, so a recovered session's
 //! hits, recall curve, and answers are byte-identical to a never-crashed
 //! run (`tests/fault_tolerance.rs`; recovery pause is measured by
@@ -116,27 +141,32 @@
 //! column ([`Router::user_workers`]) — each replica learned from the
 //! *item rows* it owns, so no single worker can rank the whole catalog
 //! for the user. `recommend` therefore fans the query out to all
-//! replicas, gathers each replica's per-lane ranked top-N lists plus the
-//! locally-rated item sets over a reply channel ([`Receiver::recv_n`]),
-//! and merges with the rank-aware [`merge_topn`], excluding items the
-//! user rated on *any* replica. Because the per-lane lists are invariant
+//! replicas over their query lanes, gathers each replica's per-lane
+//! ranked top-N lists plus the locally-rated item sets over a reply
+//! channel ([`Receiver::recv_n`]), and merges with the rank-aware
+//! [`merge_topn`](crate::eval::merge_topn), excluding items the user
+//! rated on *any* replica. Because the per-lane lists are invariant
 //! under lane placement, the merged answer is identical before and after
-//! any rescale — or any crash recovery.
+//! any rescale — or any crash recovery. Repeated queries for hot users
+//! are answered from a sharded cache validated by (epoch, column
+//! generation, column write count) — see `coordinator/serving.rs` for
+//! admission control and shedding.
 
-use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::config::{RunConfig, Topology};
 use crate::coordinator::router::{Router, StateGrid};
+use crate::coordinator::serving::{
+    ServingHandle, ServingPlan, ServingState, SlotServing,
+};
 use crate::coordinator::supervisor::Supervisor;
 use crate::data::types::{ItemId, Rating, UserId};
-use crate::engine::actor::{
-    CollectorMsg, Envelope, ReplicaAnswer, WorkerMsg,
-};
+use crate::engine::actor::{CollectorMsg, Envelope, WorkerExport, WorkerMsg};
 use crate::engine::{bounded, spawn, Receiver, Sender, WorkerHandle};
-use crate::eval::{merge_topn, RunReport, WindowStat, WindowedRecall, WorkerReport};
+use crate::eval::{RunReport, WindowStat, WindowedRecall, WorkerReport};
 
 pub use crate::engine::actor::WorkerSnapshot;
 
@@ -146,11 +176,16 @@ pub struct ClusterMetrics {
     /// Events accepted by [`Cluster::ingest`] so far.
     pub ingested: u64,
     /// Events fully processed across workers, including workers retired
-    /// by earlier rescales (== `ingested` at the moment the snapshot is
-    /// answered: the probe rides behind the flushed buffers on the
-    /// per-worker FIFO — and a recovered worker's restored + replayed
-    /// lanes cover its predecessor's work exactly).
+    /// by earlier rescales. The snapshot probe rides the event FIFO and
+    /// no longer forces a flush, so `processed + buffered == ingested`
+    /// at the moment the snapshot is answered (a recovered worker's
+    /// restored + replayed lanes cover its predecessor's work exactly).
+    /// Call [`Cluster::flush`] first when `processed == ingested` is
+    /// wanted.
     pub processed: u64,
+    /// Events accepted but still sitting in route buffers (not yet
+    /// bulk-sent to their workers).
+    pub buffered: u64,
     /// Prequential hits so far (including retired workers).
     pub hits: u64,
     /// Lifetime online recall so far (hits / processed).
@@ -160,25 +195,35 @@ pub struct ClusterMetrics {
     /// crashed worker's tally is not checkpointed (it can dip after a
     /// recovery), and a recovery retry re-asks the surviving replicas of
     /// an in-flight fan-out (it can also count a little high around a
-    /// crash).
+    /// crash). Cache hits never reach a worker, so they are *not*
+    /// counted here — see [`ClusterMetrics::cache_hits`].
     pub queries: u64,
+    /// Queries refused by admission control — the in-flight limit
+    /// (`serving.max_in_flight`) or a full worker query queue
+    /// (`serving.queue_capacity`). Shed queries return an error
+    /// immediately instead of queueing unboundedly.
+    pub shed_queries: u64,
+    /// Queries answered from the serving cache without any worker
+    /// fan-out.
+    pub cache_hits: u64,
     /// Total ns senders spent blocked on backpressure so far.
     pub backpressure_ns: u64,
     /// Total ns worker receivers spent waiting for messages so far.
     pub recv_blocked_ns: u64,
     /// Mean messages per channel send (1.0 = unbatched;
     /// tracks how much transport cost `ingest_batch_size` amortizes).
-    /// Counts *all* data-channel sends: query/snapshot probes and the
-    /// partial flushes they force are singletons, so probe-heavy
-    /// sessions read lower than their event batching — pure ingest runs
-    /// (the bench) read clean.
+    /// Counts *all* event-FIFO sends: snapshot/export probes are
+    /// singletons, so probe-heavy sessions read lower than their event
+    /// batching — pure ingest runs (the bench) read clean. The query
+    /// lanes keep their own books and are excluded here.
     pub mean_send_batch: f64,
     /// Completed [`Cluster::rescale`] calls.
     pub rescales: u64,
     /// Total serialized lane bytes moved by rescales.
     pub migrated_bytes: u64,
-    /// Total ns the session spent inside rescale cutovers (ingest and
-    /// serving are paused for exactly this long, summed).
+    /// Total ns the session spent inside rescale cutovers (ingest is
+    /// paused for exactly this long, summed; concurrent queries retry
+    /// across the cutover).
     pub rescale_pause_ns: u64,
     /// Completed crash recoveries (0 unless `fault.checkpoint_interval`
     /// is set and a worker actually died).
@@ -226,7 +271,7 @@ pub struct RescaleReport {
     /// Serialized state bytes moved.
     pub bytes_moved: u64,
     /// Wall-clock ns the cutover took — the window during which ingest
-    /// and serving were paused.
+    /// was paused (concurrent queries retry across it).
     pub pause_ns: u64,
     /// Router epoch now live (bumped by this rescale).
     pub epoch: u64,
@@ -243,14 +288,21 @@ pub struct Cluster {
     grid: StateGrid,
     router: Router,
     /// Owns the worker slots: spawn/respawn, liveness, checkpoints,
-    /// replay, recovery.
-    sup: Supervisor,
-    /// Per-worker route buffers: envelopes accumulate here and move in
-    /// bulk (`send_many`) once a buffer reaches `batch_size` — or earlier
-    /// when a query/metrics probe needs read-your-writes ordering.
-    route_bufs: Vec<Vec<WorkerMsg>>,
+    /// replay, recovery. Shared with every [`ServingHandle`] so the
+    /// concurrent query path can heal dead workers.
+    sup: Arc<Mutex<Supervisor>>,
+    /// The concurrent query plane: plan, route buffers, cache,
+    /// admission. Shared with the supervisor (recovery refresh) and
+    /// every [`ServingHandle`].
+    serving: Arc<ServingState>,
+    /// Ingest-side snapshot of the current plan (identical to the one
+    /// inside `serving` between rescales; replaced at each cutover).
+    plan: Arc<ServingPlan>,
     /// Flush threshold (`cfg.ingest_batch_size`, clamped to >= 1).
     batch_size: usize,
+    /// `fault.checkpoint_interval > 0`, cached so the ingest hot path
+    /// skips the supervisor lock entirely when fault tolerance is off.
+    fault_enabled: bool,
     collector: Option<WorkerHandle<CollectorOutput>>,
     /// Master clone handed to the supervisor (which clones it into each
     /// worker generation); dropped in [`Cluster::finish`] so the
@@ -267,7 +319,6 @@ pub struct Cluster {
     rescales: u64,
     migrated_bytes: u64,
     rescale_pause_ns: u64,
-    degraded_queries: u64,
 }
 
 /// Outcome of one [`Cluster::probe_round`] fan-out.
@@ -277,11 +328,27 @@ enum ProbeRound<T> {
     Full(Vec<T>),
     /// A worker died *after* its probe was queued (its reply channel
     /// died with it); the supervisor healed the slot, and these are the
-    /// answers the surviving replicas produced. Callers normally retry
-    /// — the restored worker answers over the same accepted prefix —
-    /// but [`Cluster::recommend`] keeps the last partial round so it
-    /// can degrade gracefully when replicas keep dying.
-    Partial(Vec<T>),
+    /// answers the surviving workers produced. Callers retry — the
+    /// restored worker answers over the same accepted prefix.
+    Partial(#[allow(dead_code)] Vec<T>),
+}
+
+/// Build the serving plan for a freshly spawned generation: clone each
+/// slot's sender pair out of the supervisor.
+fn build_plan(
+    sup: &Supervisor,
+    router: Router,
+    batch_size: usize,
+) -> Arc<ServingPlan> {
+    let slots = (0..router.n_c())
+        .map(|wid| {
+            let (tx, qtx) = sup
+                .slot_senders(wid)
+                .expect("freshly spawned generation has both senders");
+            SlotServing::new(tx, qtx, batch_size)
+        })
+        .collect();
+    Arc::new(ServingPlan { router, slots })
 }
 
 impl Cluster {
@@ -339,14 +406,21 @@ impl Cluster {
         });
 
         let batch_size = cfg.ingest_batch_size.max(1);
-        let mut cluster = Self {
+        let mut sup = Supervisor::new(cfg, grid, col_tx.clone(), transports);
+        sup.spawn_generation(n_c);
+        let plan = build_plan(&sup, router, batch_size);
+        let serving = Arc::new(ServingState::new(cfg, grid, plan.clone()));
+        sup.attach_serving(serving.clone());
+        Ok(Self {
             label: label.to_string(),
             cfg: cfg.clone(),
             grid,
             router,
-            sup: Supervisor::new(cfg, grid, col_tx.clone(), transports),
-            route_bufs: Vec::new(),
+            sup: Arc::new(Mutex::new(sup)),
+            serving,
+            plan,
             batch_size,
+            fault_enabled: cfg.fault_checkpoint_interval > 0,
             collector: Some(collector),
             col_tx: Some(col_tx),
             retired: Vec::new(),
@@ -356,17 +430,12 @@ impl Cluster {
             rescales: 0,
             migrated_bytes: 0,
             rescale_pause_ns: 0,
-            degraded_queries: 0,
-        };
-        cluster.sup.spawn_generation(n_c);
-        cluster.route_bufs =
-            (0..n_c).map(|_| Vec::with_capacity(batch_size)).collect();
-        Ok(cluster)
+        })
     }
 
     /// Number of workers in the cluster (current topology).
     pub fn n_workers(&self) -> usize {
-        self.sup.n_workers()
+        self.sup.lock().expect("supervisor lock").n_workers()
     }
 
     /// The Algorithm-1 router for the *current* topology (e.g. to inspect
@@ -382,9 +451,18 @@ impl Cluster {
     }
 
     /// Events accepted so far (including events still in route buffers —
-    /// they are on the per-worker FIFO before any later query or probe).
+    /// a query's fence covers them once its replica's buffer flushes).
     pub fn ingested(&self) -> u64 {
         self.seq
+    }
+
+    /// A cloneable, thread-safe handle onto the query plane: call
+    /// [`ServingHandle::recommend`] from any number of threads while
+    /// this `Cluster` keeps ingesting (or rescaling) on its own thread.
+    /// Handles stay valid across rescales and crash recoveries and fail
+    /// cleanly after [`Cluster::finish`].
+    pub fn serving(&self) -> ServingHandle {
+        ServingHandle { state: self.serving.clone(), sup: self.sup.clone() }
     }
 
     /// Route one event into its worker's buffer; the buffer moves to the
@@ -394,7 +472,7 @@ impl Cluster {
     /// Error reporting is flush-grained: an `Ok` means the event is
     /// accepted (buffered or sent), and a dead worker surfaces at the
     /// flush that hits it — up to `ingest_batch_size - 1` events after
-    /// the death — or at the next query/metrics/finish, whichever comes
+    /// the death — or at the next query/flush/finish, whichever comes
     /// first. On a fault-tolerant session a dead worker does not surface
     /// at all: the flush recovers it and the stream continues.
     pub fn ingest(&mut self, rating: Rating) -> Result<()> {
@@ -405,25 +483,37 @@ impl Cluster {
         let target = self.router.route(rating.user, rating.item);
         self.route_ns += t0.elapsed().as_nanos() as u64;
         let env = Envelope { seq: self.seq, rating };
-        if self.sup.enabled() {
+        if self.fault_enabled {
             // Fault bookkeeping: every *accepted* envelope enters the
             // replay log before it can reach a worker, so nothing a
             // crash destroys (queued or buffered) is ever unrecoverable.
             let lane = self.grid.lane(rating.user, rating.item);
-            self.sup.record_ingest(env, lane);
+            self.sup
+                .lock()
+                .expect("supervisor lock")
+                .record_ingest(env, lane);
         }
-        self.route_bufs[target].push(WorkerMsg::Event(env));
+        // Count the write against the user's column *before* buffering,
+        // so a cached answer validated later can never hide it.
+        self.serving.note_ingest(rating.user);
+        let needs_flush = {
+            let mut route =
+                self.plan.slots[target].route.lock().expect("route lock");
+            route.buf.push(WorkerMsg::Event(env));
+            route.last_routed = env.seq + 1;
+            route.buf.len() >= self.batch_size
+        };
         self.seq += 1;
-        if self.route_bufs[target].len() >= self.batch_size {
-            self.flush_worker(target)?;
+        if needs_flush {
+            self.flush_slot(target)?;
         }
         Ok(())
     }
 
     /// Ingest a slice of events in stream order. The tail that does not
     /// fill a route buffer stays buffered; it is flushed by the next
-    /// query/metrics probe, the next ingest that fills the buffer, or
-    /// [`Cluster::finish`].
+    /// query fan-out that targets the worker, the next ingest that fills
+    /// the buffer, [`Cluster::flush`], or [`Cluster::finish`].
     pub fn ingest_batch(&mut self, events: &[Rating]) -> Result<()> {
         for &rating in events {
             self.ingest(rating)?;
@@ -431,54 +521,91 @@ impl Cluster {
         Ok(())
     }
 
-    /// Bulk-send one worker's route buffer (one lock, one wakeup). A dead
-    /// worker is recovered in place when fault tolerance is on.
-    fn flush_worker(&mut self, wid: usize) -> Result<()> {
-        self.sup.send_event_batch(wid, &mut self.route_bufs[wid], &self.router)
+    /// Bulk-send one worker's route buffer (one lock, one wakeup; the
+    /// send happens inside the route critical section so concurrent
+    /// flushers — query fan-outs — can never interleave the worker's
+    /// batches). A dead worker is healed in place when fault tolerance
+    /// is on (the buffered envelopes are in the replay log, so the
+    /// recovery re-delivers them); otherwise the death is a loud error.
+    fn flush_slot(&self, wid: usize) -> Result<()> {
+        loop {
+            let slot = &self.plan.slots[wid];
+            let (event_tx, _) = slot.senders();
+            let sent = {
+                let mut route = slot.route.lock().expect("route lock");
+                if route.buf.is_empty() {
+                    return Ok(());
+                }
+                event_tx.send_many(&mut route.buf).is_ok()
+            };
+            {
+                let mut sup = self.sup.lock().expect("supervisor lock");
+                if self.fault_enabled {
+                    sup.drain_checkpoints();
+                }
+                if sent {
+                    return Ok(());
+                }
+                // `heal`, not `recover`: a concurrent query fan-out may
+                // have recovered the slot already (our sender clone was
+                // just stale) — heal only reaps workers that are
+                // actually down, then the retry picks up the refreshed
+                // senders. Bails loudly when fault tolerance is off or
+                // the crash loops.
+                sup.heal(&self.router)?;
+            }
+        }
     }
 
-    /// Flush every route buffer. Runs before any `Query`,
-    /// `MetricsSnapshot`, or `Export` send and in [`Cluster::finish`] so
-    /// reads keep their read-your-writes guarantee: the probe queues
-    /// behind every previously ingested event on each per-worker FIFO.
-    fn flush_all(&mut self) -> Result<()> {
-        for wid in 0..self.route_bufs.len() {
-            self.flush_worker(wid)?;
+    /// Flush every route buffer now — afterwards (and until the next
+    /// ingest) `processed == ingested` holds for [`Cluster::metrics`].
+    /// [`Cluster::finish`] and [`Cluster::rescale`] call this
+    /// internally; interactive sessions only need it when they want
+    /// exact live counters.
+    pub fn flush(&mut self) -> Result<()> {
+        self.flush_all()
+    }
+
+    fn flush_all(&self) -> Result<()> {
+        for wid in 0..self.plan.slots.len() {
+            self.flush_slot(wid)?;
         }
         Ok(())
     }
 
-    /// One fan-out probe round shared by [`Cluster::recommend`] and
-    /// [`Cluster::metrics`]: flush every route buffer (read-your-writes),
-    /// send `make(reply)` to each target worker — recovering dead workers
-    /// first on fault-tolerant sessions, skipping them otherwise — and
-    /// gather the replies.
+    /// One fan-out probe round over the event FIFOs (used by
+    /// [`Cluster::metrics`]): send `make(reply)` to each target worker —
+    /// recovering dead workers first on fault-tolerant sessions,
+    /// skipping them otherwise — and gather the replies. Probes queue
+    /// behind previously *flushed* events (route buffers are not
+    /// touched).
     ///
     /// Returns [`ProbeRound::Partial`] when a worker died *after* its
     /// probe was queued (the reply channel died with it) and was
-    /// healed: the caller may retry — the restored worker answers over
-    /// the same accepted prefix — or serve from the partial replies.
-    /// An empty [`ProbeRound::Full`] reply set means no targeted worker
-    /// was alive (only possible without fault tolerance).
+    /// healed: the caller retries — the restored worker answers over
+    /// the same accepted prefix. An empty [`ProbeRound::Full`] reply
+    /// set means no targeted worker was alive (only possible without
+    /// fault tolerance).
     fn probe_round<T>(
-        &mut self,
+        &self,
         targets: &[usize],
         make: &dyn Fn(Sender<T>) -> WorkerMsg,
     ) -> Result<ProbeRound<T>> {
-        let enabled = self.sup.enabled();
-        self.flush_all()?;
         let (reply_tx, reply_rx) = bounded::<T>(targets.len().max(1));
         let mut asked = 0usize;
-        for &wid in targets {
-            let msg = make(reply_tx.clone());
-            if enabled {
-                self.sup.send_probe(wid, msg, &self.router)?;
-                asked += 1;
-            } else if self.sup.probe(wid, msg) {
-                // A failed send returns (and drops) the message together
-                // with its reply-sender clone, so recv_n below can't
-                // deadlock on a dead worker.
-                asked += 1;
+        {
+            let mut sup = self.sup.lock().expect("supervisor lock");
+            for &wid in targets {
+                let msg = make(reply_tx.clone());
+                if self.fault_enabled {
+                    sup.send_probe(wid, msg, &self.router)?;
+                    asked += 1;
+                } else if sup.probe(wid, msg) {
+                    // A failed send returns (and drops) the message
+                    // together with its reply-sender clone, so recv_n
+                    // below can't deadlock on a dead worker.
+                    asked += 1;
+                }
             }
         }
         drop(reply_tx);
@@ -486,94 +613,62 @@ impl Cluster {
             return Ok(ProbeRound::Full(Vec::new()));
         }
         let replies = reply_rx.recv_n(asked);
-        if replies.len() < asked && enabled {
-            self.sup.heal(&self.router)?;
+        if replies.len() < asked && self.fault_enabled {
+            self.sup.lock().expect("supervisor lock").heal(&self.router)?;
             return Ok(ProbeRound::Partial(replies));
         }
         Ok(ProbeRound::Full(replies))
     }
 
     /// Online serving: global top-`n` for `user`, answered while the
-    /// stream is live.
+    /// stream is live — through `&self`, so any number of threads can
+    /// query concurrently (see [`Cluster::serving`] for a handle that
+    /// queries while *this* thread keeps ingesting).
     ///
     /// Fans the query out to every replica of the user (its grid column,
-    /// [`Router::user_workers`]); each replica answers from its local
-    /// lane models over a reply channel; the per-lane ranked lists are
-    /// merged rank-aware into a global top-N that excludes items the user
-    /// has rated on *any* replica. A user unknown to every replica yields
-    /// an empty list (cold start).
+    /// [`Router::user_workers`]) over the dedicated query lanes; each
+    /// replica answers from its local lane models; the per-lane ranked
+    /// lists are merged rank-aware into a global top-N that excludes
+    /// items the user has rated on *any* replica. A user unknown to
+    /// every replica yields an empty list (cold start).
     ///
-    /// Read-your-writes: all route buffers are flushed first, so the
-    /// query queues behind every previously ingested event — including
-    /// events that were still buffered — on each replica's FIFO.
+    /// Read-your-writes: the fan-out flushes each replica's route buffer
+    /// and fences the query on the flushed prefix, so the answer
+    /// reflects every previously ingested event — other workers'
+    /// buffers are not touched. Repeat queries for a hot user are
+    /// answered from the serving cache while their column is unchanged.
+    ///
+    /// Admission control: at most `serving.max_in_flight` queries run at
+    /// once and each worker's query queue is bounded; beyond either
+    /// limit the query errors immediately ("query shed", counted in
+    /// [`ClusterMetrics::shed_queries`]) instead of queueing without
+    /// bound.
     ///
     /// Rescale- and recovery-invariant: the merged answer depends only on
     /// the per-lane lists, not on how lanes are placed on workers, so the
     /// same session state yields the same answer under any topology and
     /// across any crash recovery (property-tested in
     /// `tests/rescale_equivalence.rs` and `tests/fault_tolerance.rs`).
-    ///
-    /// Graceful degradation (fault-tolerant sessions): when replicas
-    /// keep dying across the full retry budget, the query is answered
-    /// from the replicas that *did* reply in the final round instead of
-    /// erroring — serving stays available mid-respawn at the cost of
-    /// candidates from the dead replicas' lanes. Degraded answers are
-    /// counted in [`ClusterMetrics::degraded_queries`]; a session whose
-    /// recoveries all succeed never degrades, so the byte-identity
-    /// guarantee above is untouched. A round with *no* surviving
-    /// replica still errors loudly.
-    pub fn recommend(&mut self, user: UserId, n: usize) -> Result<Vec<ItemId>> {
-        // Over-fetch per lane: a lane cannot know which of its candidates
-        // the user consumed on *other* lanes, and the global exclusion
-        // below would otherwise under-fill the merged top-N. (On the PJRT
-        // backend the compiled artifact's overfetch bound may clip very
-        // large requests for heavy raters — the lane then degrades to
-        // fewer candidates, it never errors.)
-        let fetch = n.saturating_mul(2);
-        let mut last_partial: Vec<ReplicaAnswer> = Vec::new();
-        for _attempt in 0..3 {
-            let replicas = self.router.user_workers(user);
-            let answers = match self.probe_round(&replicas, &|reply| {
-                WorkerMsg::Query { user, n: fetch, reply }
-            })? {
-                ProbeRound::Full(answers) => answers,
-                ProbeRound::Partial(partial) => {
-                    // A replica died mid-probe; the slot was healed.
-                    // Keep the freshest surviving answers and retry.
-                    last_partial = partial;
-                    continue;
-                }
-            };
-            if answers.is_empty() {
-                anyhow::bail!("no replica of user {user} is alive");
-            }
-            return Ok(merge_answers(answers, n));
-        }
-        if !last_partial.is_empty() {
-            self.degraded_queries += 1;
-            log::warn!(
-                "cluster '{}': serving user {user} degraded from {} \
-                 surviving replica(s) — replicas kept dying across 3 \
-                 recoveries",
-                self.label,
-                last_partial.len(),
-            );
-            return Ok(merge_answers(last_partial, n));
-        }
-        anyhow::bail!("recommend: replicas kept dying across 3 recoveries")
+    /// Graceful degradation when replicas keep dying past the retry
+    /// budget is described in `coordinator/serving.rs` (counted in
+    /// [`ClusterMetrics::degraded_queries`]).
+    pub fn recommend(&self, user: UserId, n: usize) -> Result<Vec<ItemId>> {
+        self.serving.recommend(&self.sup, user, n)
     }
 
-    /// Live metrics without shutdown: every worker answers a snapshot
-    /// probe; route buffers are flushed first and the probe queues behind
-    /// the flushed events (per-worker FIFO), so the aggregate reflects
-    /// the whole prefix of the stream accepted before this call. Workers
-    /// retired by earlier rescales contribute their final totals to the
-    /// aggregates; a crashed-and-recovered worker's replacement reports
-    /// its restored counters, so `processed == ingested` holds across
+    /// Live metrics without shutdown — and without disturbing the data
+    /// plane: every worker answers a snapshot probe that rides its event
+    /// FIFO behind the already-flushed events; route buffers are left
+    /// alone, so `processed + buffered == ingested` (call
+    /// [`Cluster::flush`] first for `processed == ingested` exactly).
+    /// Workers retired by earlier rescales contribute their final totals
+    /// to the aggregates; a crashed-and-recovered worker's replacement
+    /// reports its restored counters, so the identity holds across
     /// recoveries too.
-    pub fn metrics(&mut self) -> Result<ClusterMetrics> {
+    pub fn metrics(&self) -> Result<ClusterMetrics> {
         for _attempt in 0..3 {
-            let targets: Vec<usize> = (0..self.sup.n_workers()).collect();
+            let n = self.sup.lock().expect("supervisor lock").n_workers();
+            let targets: Vec<usize> = (0..n).collect();
             let mut workers = match self.probe_round(&targets, &|reply| {
                 WorkerMsg::MetricsSnapshot { reply }
             })? {
@@ -592,14 +687,19 @@ impl Cluster {
                 hits += w.hits;
                 queries += w.queries;
             }
-            let chan = self.sup.channel_stats();
-            let fault = self.sup.stats();
+            let (chan, fault) = {
+                let sup = self.sup.lock().expect("supervisor lock");
+                (sup.channel_stats(), sup.stats())
+            };
             return Ok(ClusterMetrics {
                 ingested: self.seq,
                 processed,
+                buffered: self.serving.buffered(),
                 hits,
                 recall: hits as f64 / (processed.max(1)) as f64,
                 queries,
+                shed_queries: self.serving.shed_total(),
+                cache_hits: self.serving.cache_hit_total(),
                 backpressure_ns: chan.blocked_ns,
                 recv_blocked_ns: chan.recv_blocked_ns,
                 mean_send_batch: chan.mean_send_batch(),
@@ -610,7 +710,7 @@ impl Cluster {
                 checkpoint_bytes: fault.checkpoint_bytes,
                 replayed_events: fault.replayed_events,
                 recovery_pause_ns: fault.recovery_pause_ns,
-                degraded_queries: self.degraded_queries,
+                degraded_queries: self.serving.degraded_total(),
                 router_epoch: self.router.epoch(),
                 workers,
             });
@@ -629,13 +729,61 @@ impl Cluster {
     /// size. See the module docs for the cutover protocol and
     /// ARCHITECTURE.md for the design.
     ///
-    /// Costs one full pause of the session (no ingest or serving while
-    /// state moves); the report says how long and how many bytes. On a
+    /// Costs one full pause of ingest (concurrent [`ServingHandle`]
+    /// queries keep retrying across the cutover and resume against the
+    /// new plan); the report says how long and how many bytes. On a
     /// fault-tolerant session a worker crash before or during the drain
     /// is recovered and the cutover proceeds; otherwise — or after an
     /// unrecoverable error — the session should be considered lost and
     /// [`Cluster::finish`] will surface the root cause.
     pub fn rescale(&mut self, new_topology: Topology) -> Result<RescaleReport> {
+        self.rescale_inner(new_topology, &mut |_| {})
+    }
+
+    /// Stable fingerprint of the full model state: drains the cluster
+    /// through a same-topology rescale (so every lane is serialized over
+    /// the complete accepted prefix) and hashes the sorted lane frames.
+    /// Two sessions that processed the same stream — regardless of
+    /// query traffic, batch size, placement, rescale history, or crash
+    /// recoveries — fingerprint identically; serving is a frozen read,
+    /// so queries can never perturb it (`tests/serving_equivalence.rs`).
+    ///
+    /// Costs a full cutover pause (and bumps the router epoch like any
+    /// rescale); the session continues normally afterwards.
+    pub fn state_fingerprint(&mut self) -> Result<u64> {
+        let topology = self.cfg.topology;
+        let mut lanes: Vec<(u64, Vec<u8>)> = Vec::new();
+        self.rescale_inner(topology, &mut |export| {
+            for snap in &export.lanes {
+                lanes.push((snap.lane, snap.bytes.clone()));
+            }
+        })?;
+        lanes.sort_by(|a, b| a.0.cmp(&b.0));
+        // FNV-1a over (lane id, frame bytes) in lane order — placement-
+        // independent by construction.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |b: u8| {
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        };
+        for (lane, bytes) in &lanes {
+            for b in lane.to_le_bytes() {
+                eat(b);
+            }
+            for &b in bytes {
+                eat(b);
+            }
+        }
+        Ok(h)
+    }
+
+    /// The rescale cutover, parameterized over an export inspector so
+    /// [`Cluster::state_fingerprint`] can hash the lane frames without a
+    /// second drain.
+    fn rescale_inner(
+        &mut self,
+        new_topology: Topology,
+        inspect: &mut dyn FnMut(&WorkerExport),
+    ) -> Result<RescaleReport> {
         let t0 = Instant::now();
         if !self.grid.supports(new_topology) {
             anyhow::bail!(
@@ -648,7 +796,7 @@ impl Cluster {
             );
         }
         let from = self.cfg.topology;
-        let from_workers = self.sup.n_workers();
+        let from_workers = self.sup.lock().expect("supervisor lock").n_workers();
         log::info!(
             "cluster '{}': rescale n_i {} -> {} ({} -> {} workers)",
             self.label,
@@ -666,51 +814,89 @@ impl Cluster {
         // Drain + export: each worker finishes its queue, snapshots its
         // lanes, replies, and exits (crash-proof on fault-tolerant
         // sessions: a worker dying mid-drain is recovered and re-asked).
-        let exports = self.sup.export_all(&self.router)?;
+        // Concurrent queries that hit the retiring generation fail with
+        // `Closed` and retry until the new plan is live.
+        let exports = {
+            let mut sup = self.sup.lock().expect("supervisor lock");
+            let exports = sup.export_all(&self.router)?;
 
-        // The exports double as fresh checkpoints (counters zeroed to the
-        // new generation's baseline), so recovery stays exact across the
-        // cutover without waiting for new periodic checkpoints.
-        self.sup.install_rescale_checkpoints(&exports);
+            // The exports double as fresh checkpoints (counters zeroed to
+            // the new generation's baseline), so recovery stays exact
+            // across the cutover without waiting for new periodic
+            // checkpoints.
+            sup.install_rescale_checkpoints(&exports);
 
-        // Retire the old generation: fold its channel counters into the
-        // base, close its channels, and keep its final reports.
-        let mut retiring = self.sup.retire_generation()?;
-        self.retired.append(&mut retiring);
+            // Retire the old generation: fold its channel counters into
+            // the base, close its channels, and keep its final reports.
+            let mut retiring = sup.retire_generation()?;
+            self.retired.append(&mut retiring);
+            exports
+        };
+        for export in &exports {
+            inspect(export);
+        }
 
         // Install the new topology (epoch bump) and spawn the new
         // generation.
         self.router =
             Router::with_epoch(new_topology, self.router.epoch() + 1);
         self.cfg.topology = new_topology;
-        self.sup.set_topology(new_topology);
         let n_c = self.router.n_c();
-        self.sup.spawn_generation(n_c);
-        self.route_bufs =
-            (0..n_c).map(|_| Vec::with_capacity(self.batch_size)).collect();
+        let plan = {
+            let mut sup = self.sup.lock().expect("supervisor lock");
+            sup.set_topology(new_topology);
+            sup.spawn_generation(n_c);
+            build_plan(&sup, self.router, self.batch_size)
+        };
 
-        // Re-route every lane to its owner under the new grid. Imports go
-        // out before resume, so FIFO order puts them ahead of any
-        // post-rescale event.
+        // Re-route every lane to its owner under the new grid, then run
+        // a barrier probe: the imports must be *applied* before the new
+        // plan goes live, or a concurrent query (whose fence is still 0
+        // on the fresh slots) could be answered from a pre-import,
+        // empty lane.
         let mut lanes_moved = 0u64;
         let mut bytes_moved = 0u64;
-        for export in exports {
-            for snap in export.lanes {
-                let target = self.grid.owner(snap.lane, &self.router);
-                lanes_moved += 1;
-                bytes_moved += snap.bytes.len() as u64;
-                let msg = WorkerMsg::Import {
-                    lane: snap.lane,
-                    bytes: snap.bytes,
-                    restore_counters: false,
-                };
-                if !self.sup.probe(target, msg) {
+        {
+            let sup = self.sup.lock().expect("supervisor lock");
+            for export in exports {
+                for snap in export.lanes {
+                    let target = self.grid.owner(snap.lane, &self.router);
+                    lanes_moved += 1;
+                    bytes_moved += snap.bytes.len() as u64;
+                    let msg = WorkerMsg::Import {
+                        lane: snap.lane,
+                        bytes: snap.bytes,
+                        restore_counters: false,
+                    };
+                    if !sup.probe(target, msg) {
+                        anyhow::bail!(
+                            "rescale: new worker {target} died during import"
+                        );
+                    }
+                }
+            }
+            let (ack_tx, ack_rx) = bounded::<WorkerSnapshot>(n_c.max(1));
+            for wid in 0..n_c {
+                let msg =
+                    WorkerMsg::MetricsSnapshot { reply: ack_tx.clone() };
+                if !sup.probe(wid, msg) {
                     anyhow::bail!(
-                        "rescale: new worker {target} died during import"
+                        "rescale: new worker {wid} died before activation"
                     );
                 }
             }
+            drop(ack_tx);
+            if ack_rx.recv_n(n_c).len() < n_c {
+                anyhow::bail!(
+                    "rescale: a new worker died during the import barrier"
+                );
+            }
         }
+
+        // Activate: queries now fan out to the new generation; the epoch
+        // bump invalidates every cached answer.
+        self.serving.install_plan(plan.clone());
+        self.plan = plan;
 
         let pause_ns = t0.elapsed().as_nanos() as u64;
         self.rescales += 1;
@@ -742,7 +928,9 @@ impl Cluster {
     /// the final [`RunReport`] — the same aggregate the one-shot
     /// `run_pipeline` returns. A worker that panics during the final
     /// drain of a fault-tolerant session is recovered, drained, and
-    /// reported by its replacement.
+    /// reported by its replacement. In-flight [`ServingHandle`] queries
+    /// complete first (the workers drain them before exiting); queries
+    /// issued after this call fail with "session has shut down".
     ///
     /// Note on `throughput`: the wall-clock window runs from the first
     /// ingest to this call, so for an interactive session it includes
@@ -755,27 +943,39 @@ impl Cluster {
         // recovers dead workers, so an error here is terminal; without
         // it, keep going so the join below surfaces the root cause.
         if let Err(e) = self.flush_all() {
-            if self.sup.enabled() {
+            if self.fault_enabled {
                 return Err(e);
             }
             log::warn!("finish: final flush failed ({e}); joining workers");
         }
-        let n_workers = self.sup.n_workers();
-        // Close worker inputs; workers drain and report via join. A panic
-        // in the final drain is recovered (respawn + restore + replay)
-        // and the replacement joined instead. Each channel's counters are
-        // folded into the retained base at the moment its input closes —
-        // that still excludes the workers' final idle wait, but includes
-        // any final-drain recovery's replacement channel.
-        let mut workers = self.sup.finish_join(&self.router)?;
-        let chan = self.sup.channel_stats();
+        // Retire the serving plan: every plan-held sender clone must
+        // drop before the join below, because the actors exit on
+        // end-of-stream (all event senders gone). Queries already in
+        // flight hold a plan snapshot and complete normally; later ones
+        // fail cleanly.
+        self.serving.shutdown();
+        self.plan = ServingPlan::empty(self.router);
+        let (n_workers, joined, chan, fault) = {
+            let mut sup = self.sup.lock().expect("supervisor lock");
+            let n_workers = sup.n_workers();
+            // Close worker inputs; workers drain and report via join. A
+            // panic in the final drain is recovered (respawn + restore +
+            // replay) and the replacement joined instead. Each channel's
+            // counters are folded into the retained base at the moment
+            // its input closes.
+            let joined = sup.finish_join(&self.router);
+            let chan = sup.channel_stats();
+            let fault = sup.stats();
+            sup.close_collector();
+            (n_workers, joined, chan, fault)
+        };
+        let mut workers = joined?;
         let wall_secs = self
             .started
             .map(|t| t.elapsed().as_secs_f64())
             .unwrap_or(0.0);
         // Drop every collector sender only after the last generation's
         // workers are gone; the collector then sees end-of-stream.
-        self.sup.close_collector();
         drop(self.col_tx.take());
         let (recall_curve, windowed_recall, hits) = self
             .collector
@@ -786,7 +986,6 @@ impl Cluster {
         let mut retired = std::mem::take(&mut self.retired);
         retired.sort_by_key(|w| w.worker_id);
         let events = self.seq;
-        let fault = self.sup.stats();
         Ok(RunReport {
             label: self.label.clone(),
             n_workers,
@@ -812,18 +1011,6 @@ impl Cluster {
             recovery_pause_ns: fault.recovery_pause_ns,
         })
     }
-}
-
-/// Merge replica answers into a global top-`n`: union the rated sets
-/// for exclusion, then rank-aware-merge the per-lane lists. Shared by
-/// the healthy and degraded serving paths of [`Cluster::recommend`] —
-/// a degraded merge is the same computation over fewer replicas.
-fn merge_answers(answers: Vec<ReplicaAnswer>, n: usize) -> Vec<ItemId> {
-    let exclude: HashSet<ItemId> =
-        answers.iter().flat_map(|a| a.rated.iter().copied()).collect();
-    let lists: Vec<Vec<ItemId>> =
-        answers.into_iter().flat_map(|a| a.lists).collect();
-    merge_topn(&lists, &exclude, n)
 }
 
 /// Collector: reassembles the global prequential curve from per-worker
@@ -928,7 +1115,11 @@ mod tests {
             let recs = cluster.recommend(hot, 10).unwrap();
             served += usize::from(!recs.is_empty());
             let m = cluster.metrics().unwrap();
-            assert_eq!(m.processed, cluster.ingested(), "FIFO snapshot");
+            assert_eq!(
+                m.processed + m.buffered,
+                cluster.ingested(),
+                "every accepted event is processed or buffered"
+            );
         }
         assert!(served > 0, "a seen user must eventually get answers");
         let report = cluster.finish().unwrap();
@@ -965,16 +1156,24 @@ mod tests {
         cluster.ingest_batch(&events[..500]).unwrap();
         let m1 = cluster.metrics().unwrap();
         assert_eq!(m1.ingested, 500);
-        assert_eq!(m1.processed, 500);
+        assert_eq!(m1.processed + m1.buffered, 500, "no-flush accounting");
         assert_eq!(m1.queries, 0);
+        // An explicit flush makes the live counter exact.
+        cluster.flush().unwrap();
+        let m1 = cluster.metrics().unwrap();
+        assert_eq!(m1.processed, 500);
+        assert_eq!(m1.buffered, 0);
         let _ = cluster.recommend(events[0].user, 10).unwrap();
         cluster.ingest_batch(&events[500..]).unwrap();
+        cluster.flush().unwrap();
         let m2 = cluster.metrics().unwrap();
         assert_eq!(m2.processed, 1000);
         assert!(m2.hits >= m1.hits);
         // One fan-out = one answered query per replica of the user.
         let n_i = 2u64;
         assert_eq!(m2.queries, n_i);
+        assert_eq!(m2.shed_queries, 0);
+        assert_eq!(m2.cache_hits, 0);
         assert_eq!(m2.workers.len(), 4);
         assert_eq!(m2.rescales, 0);
         assert_eq!(m2.recoveries, 0);
@@ -982,6 +1181,95 @@ mod tests {
         assert_eq!(m2.router_epoch, 0);
         let report = cluster.finish().unwrap();
         assert_eq!(report.hits, m2.hits, "final report matches last snapshot");
+    }
+
+    #[test]
+    fn recommend_flushes_only_replica_buffers() {
+        // Regression (query-plane split): a query must flush only the
+        // queried user's replica workers — an idle worker's ingest
+        // buffer stays untouched by another user's traffic.
+        let mut c = cfg(2);
+        c.ingest_batch_size = 10_000; // nothing auto-flushes
+        let mut cluster = Cluster::spawn(&c).unwrap();
+        // n_ciw = 2: user 0 lives on workers {0, 2}, user 1 on {1, 3}.
+        for i in 0..40u64 {
+            cluster.ingest(Rating::new(0, i, 4.0, i)).unwrap();
+            cluster.ingest(Rating::new(1, i, 4.0, i)).unwrap();
+        }
+        let m = cluster.metrics().unwrap();
+        assert_eq!(m.processed, 0, "metrics must not flush");
+        assert_eq!(m.buffered, 80);
+        let _ = cluster.recommend(0, 5).unwrap();
+        let m = cluster.metrics().unwrap();
+        assert_eq!(m.processed, 40, "only user 0's replicas were flushed");
+        assert_eq!(m.buffered, 40, "user 1's buffers are untouched");
+        cluster.flush().unwrap();
+        let m = cluster.metrics().unwrap();
+        assert_eq!(m.processed, 80);
+        assert_eq!(m.buffered, 0);
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, 80);
+    }
+
+    #[test]
+    fn repeat_query_hits_the_serving_cache() {
+        let events = small_events(800);
+        let mut cluster = Cluster::spawn(&cfg(2)).unwrap();
+        cluster.ingest_batch(&events).unwrap();
+        let hot = events[0].user;
+        let first = cluster.recommend(hot, 10).unwrap();
+        let second = cluster.recommend(hot, 10).unwrap();
+        assert_eq!(first, second, "cached answer identical");
+        // A shorter request is served as a prefix of the cached merge.
+        let shorter = cluster.recommend(hot, 3).unwrap();
+        assert_eq!(shorter, first[..3.min(first.len())].to_vec());
+        let m = cluster.metrics().unwrap();
+        assert_eq!(m.cache_hits, 2);
+        assert_eq!(m.queries, 2, "only the first query fanned out (n_i=2)");
+        assert_eq!(m.shed_queries, 0);
+        // Any new event for the user's column invalidates the entry
+        // (strict staleness default), forcing a fresh fan-out.
+        cluster.ingest(events[0]).unwrap();
+        let _ = cluster.recommend(hot, 10).unwrap();
+        let m = cluster.metrics().unwrap();
+        assert_eq!(m.cache_hits, 2, "stale entry recomputed, not served");
+        assert_eq!(m.queries, 4);
+    }
+
+    #[test]
+    fn serving_handle_queries_concurrently_with_ingest() {
+        // The tentpole contract in miniature: reader threads hammer the
+        // query plane through ServingHandle while the owner ingests.
+        let events = small_events(4000);
+        let mut cluster = Cluster::spawn_labeled(&cfg(2), "t-conc").unwrap();
+        let handle = cluster.serving();
+        let users: Vec<u64> = events.iter().take(16).map(|e| e.user).collect();
+        std::thread::scope(|s| {
+            let readers: Vec<_> = (0..2)
+                .map(|t| {
+                    let handle = handle.clone();
+                    let users = users.clone();
+                    s.spawn(move || {
+                        for i in 0..200usize {
+                            let u = users[(t * 7 + i) % users.len()];
+                            handle.recommend(u, 5).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            cluster.ingest_batch(&events).unwrap();
+            for r in readers {
+                r.join().unwrap();
+            }
+        });
+        let m = cluster.metrics().unwrap();
+        assert_eq!(
+            m.shed_queries, 0,
+            "2 readers never trip the default admission limit"
+        );
+        assert_eq!(m.processed + m.buffered, 4000);
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, 4000);
     }
 
     #[test]
@@ -1031,6 +1319,7 @@ mod tests {
         assert_eq!(cluster.n_workers(), 16);
         let m = cluster.metrics().unwrap();
         assert_eq!(m.processed, 800, "no events lost in scale-out");
+        assert_eq!(m.buffered, 0, "rescale flushed every buffer");
         assert_eq!(m.rescales, 1);
         assert_eq!(m.router_epoch, 1);
 
@@ -1098,6 +1387,31 @@ mod tests {
     }
 
     #[test]
+    fn state_fingerprint_is_query_invariant() {
+        // Two sessions over the same stream; one serves queries along
+        // the way. The frozen-read guarantee means the model state —
+        // and therefore the fingerprint — is byte-identical.
+        let events = small_events(1200);
+        let mut quiet = Cluster::spawn_labeled(&cfg(2), "t-fp-q").unwrap();
+        quiet.ingest_batch(&events).unwrap();
+        let fp_quiet = quiet.state_fingerprint().unwrap();
+        quiet.finish().unwrap();
+
+        let mut noisy = Cluster::spawn_labeled(&cfg(2), "t-fp-n").unwrap();
+        for chunk in events.chunks(200) {
+            noisy.ingest_batch(chunk).unwrap();
+            let _ = noisy.recommend(chunk[0].user, 10).unwrap();
+        }
+        let fp_noisy = noisy.state_fingerprint().unwrap();
+        assert_eq!(fp_quiet, fp_noisy, "queries perturbed model state");
+        // The fingerprint drain is a real cutover: the session keeps
+        // working afterwards.
+        noisy.ingest_batch(&events[..100]).unwrap();
+        let report = noisy.finish().unwrap();
+        assert_eq!(report.events, 1300);
+    }
+
+    #[test]
     fn crash_recovery_mid_stream_is_exactly_once() {
         let events = small_events(2000);
         let mut c = cfg(2);
@@ -1105,6 +1419,7 @@ mod tests {
         c.fault_chaos_kill_seq = Some(700);
         let mut cluster = Cluster::spawn_labeled(&c, "t-fault").unwrap();
         cluster.ingest_batch(&events[..1000]).unwrap();
+        cluster.flush().unwrap();
         let m = cluster.metrics().unwrap();
         assert_eq!(m.ingested, 1000);
         assert_eq!(m.processed, 1000, "no event lost across the crash");

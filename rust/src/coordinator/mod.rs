@@ -9,8 +9,10 @@
 pub mod cluster;
 pub mod pipeline;
 pub mod router;
+pub(crate) mod serving;
 pub(crate) mod supervisor;
 
 pub use cluster::{Cluster, ClusterMetrics, RescaleReport, WorkerSnapshot};
+pub use serving::ServingHandle;
 pub use pipeline::run_pipeline;
 pub use router::{Router, StateGrid, WorkerId};

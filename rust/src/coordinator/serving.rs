@@ -1,0 +1,711 @@
+//! The serving plane: lock-free concurrent reads over a live ingesting
+//! cluster.
+//!
+//! PR 4 froze the read path (`StreamingRecommender::serve` never trains),
+//! which makes queries *logically* side-effect free — but they still rode
+//! the per-worker event FIFO, so every query queued behind ingest
+//! backpressure and every caller needed `&mut Cluster`. This module
+//! splits the planes:
+//!
+//! * **Dedicated query lane.** Each worker slot has a second bounded
+//!   channel carrying [`QueryMsg`] only. Queries bypass the event FIFO
+//!   entirely; a read-your-writes *fence* (the slot's `last_routed`
+//!   sequence, captured under the route lock) keeps them from observing
+//!   less than the ingested prefix — the actor parks a query until its
+//!   applied watermark reaches the fence (see `engine::actor`).
+//! * **Shared ownership.** The routing table and per-slot senders live in
+//!   a [`ServingPlan`] behind an `Arc`, so any number of threads can
+//!   snapshot it and fan out concurrently while ingest proceeds.
+//!   [`ServingHandle::recommend`] takes `&self`.
+//! * **Sharded serving cache.** Answers are cached per user, validated by
+//!   `(topology epoch, column generation, column event count)`. A rescale
+//!   bumps the epoch, a crash recovery bumps the generation of every
+//!   column the dead worker hosted, and any ingest for the user's virtual
+//!   column advances its event count — so a cached answer can never be
+//!   served across an epoch bump, a recovery, or past the configured
+//!   staleness budget (`serving.cache_max_staleness`, default 0: any
+//!   write to the column invalidates).
+//! * **Admission control.** At most `serving.max_in_flight` queries run
+//!   concurrently; beyond that (or when a worker's query queue is full)
+//!   the query is *shed* — a fast, counted error instead of unbounded
+//!   queueing. Shed totals surface in `ClusterMetrics`.
+//!
+//! # Locking
+//!
+//! Every mutex here (`plan`, per-slot `senders`, per-slot `route`, cache
+//! shards) is a *leaf* lock: nothing acquires the supervisor — or any
+//! other lock — while holding one. The supervisor lock MAY be held while
+//! taking a leaf lock (recovery refreshes senders via
+//! [`ServingState::on_recover`]); the reverse order would deadlock and is
+//! never used. The one subtle rule: flushing a slot's route buffer sends
+//! `WorkerMsg` batches *while holding that slot's route lock*, so two
+//! concurrent flushers can never interleave a worker's batches — the
+//! actor's exactly-once watermark filter requires per-worker sends to
+//! stay in routed order.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::router::{Router, StateGrid};
+use crate::coordinator::supervisor::Supervisor;
+use crate::data::types::{ItemId, UserId};
+use crate::engine::actor::{QueryMsg, ReplicaAnswer, WorkerMsg};
+use crate::engine::{bounded, Sender, TrySendError};
+use crate::eval::merge::merge_topn;
+use crate::util::rng::mix64;
+
+/// How long a query keeps retrying through worker deaths and rescale
+/// cutovers before giving up (degraded answer or error).
+const RETRY_WINDOW: Duration = Duration::from_secs(5);
+/// Pause between retry attempts while the plan is mid-cutover.
+const RETRY_PAUSE: Duration = Duration::from_micros(500);
+/// Heal rounds that actually recovered a worker before a query settles
+/// for a degraded (partial-replica) answer.
+const MAX_HEALS: u32 = 3;
+
+/// A slot's pending outbound event batch plus the read-your-writes
+/// fence.
+pub(crate) struct RouteState {
+    /// Envelopes routed to this slot but not yet flushed to its FIFO.
+    pub(crate) buf: Vec<WorkerMsg>,
+    /// `seq + 1` of the newest envelope ever routed to this slot
+    /// (`0` = none). Captured as the fence of every query fanned out to
+    /// the slot: once flushed (same critical section), the actor holds
+    /// the query until it has applied at least that prefix.
+    pub(crate) last_routed: u64,
+}
+
+/// Per-worker-slot serving endpoints: the event FIFO and query lane
+/// senders (refreshed in place when a crashed slot is recovered) plus
+/// the slot's route buffer.
+pub(crate) struct SlotServing {
+    /// `(event FIFO, query lane)`. A recovery swaps both under this
+    /// lock; fan-outs clone them out, so a stale pair at worst fails
+    /// with `Closed` and the caller retries against the refreshed pair.
+    senders: Mutex<(Sender<WorkerMsg>, Sender<QueryMsg>)>,
+    /// See [`RouteState`]. Lock order: leaf (never acquire anything
+    /// else while held); sends happen *inside* the critical section.
+    pub(crate) route: Mutex<RouteState>,
+}
+
+impl SlotServing {
+    pub(crate) fn new(
+        event_tx: Sender<WorkerMsg>,
+        query_tx: Sender<QueryMsg>,
+        batch_capacity: usize,
+    ) -> Self {
+        Self {
+            senders: Mutex::new((event_tx, query_tx)),
+            route: Mutex::new(RouteState {
+                buf: Vec::with_capacity(batch_capacity),
+                last_routed: 0,
+            }),
+        }
+    }
+
+    /// Clone the current sender pair (brief leaf lock).
+    pub(crate) fn senders(&self) -> (Sender<WorkerMsg>, Sender<QueryMsg>) {
+        let guard = self.senders.lock().expect("senders lock");
+        (guard.0.clone(), guard.1.clone())
+    }
+
+    fn set_senders(
+        &self,
+        event_tx: Sender<WorkerMsg>,
+        query_tx: Sender<QueryMsg>,
+    ) {
+        *self.senders.lock().expect("senders lock") = (event_tx, query_tx);
+    }
+}
+
+/// An immutable snapshot of the physical topology's serving endpoints:
+/// the router plus one [`SlotServing`] per worker. Swapped atomically
+/// (as an `Arc`) at rescale; *senders inside slots* are refreshed in
+/// place at crash recovery, so the plan survives worker deaths.
+pub(crate) struct ServingPlan {
+    /// Router of this plan's topology epoch.
+    pub(crate) router: Router,
+    /// One entry per worker slot, indexed by `WorkerId`.
+    pub(crate) slots: Vec<SlotServing>,
+}
+
+impl ServingPlan {
+    /// The shut-down plan: no slots, so every sender clone the plan held
+    /// is dropped and the workers see end-of-stream.
+    pub(crate) fn empty(router: Router) -> Arc<Self> {
+        Arc::new(Self { router, slots: Vec::new() })
+    }
+}
+
+/// One cached merged answer.
+struct CacheEntry {
+    /// Topology epoch the answer was computed under.
+    epoch: u64,
+    /// The user's column generation at fan-out time (bumped per
+    /// recovery touching the column).
+    gen: u64,
+    /// The column's ingested-event count *before* the fan-out
+    /// (conservative: the answer reflects at least this prefix).
+    events: u64,
+    /// Requested list length; a shorter request is served as a prefix
+    /// (see `eval::merge` — truncation yields a prefix of the longer
+    /// merge), a longer one misses.
+    n: usize,
+    items: Vec<ItemId>,
+}
+
+/// Decrement-on-drop guard for the in-flight admission counter.
+struct InFlight<'a>(&'a AtomicU64);
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Shared, thread-safe state of the serving plane. One per session,
+/// behind an `Arc` held by the `Cluster`, the supervisor (for recovery
+/// refresh), and every [`ServingHandle`].
+pub(crate) struct ServingState {
+    grid: StateGrid,
+    /// Current plan; callers snapshot the `Arc` and work lock-free.
+    plan: Mutex<Arc<ServingPlan>>,
+    /// Mirrors `plan.router.epoch()` for lock-free cache validation.
+    epoch: AtomicU64,
+    /// Per virtual user column (`grid.v_u` entries): events ingested.
+    col_events: Vec<AtomicU64>,
+    /// Per virtual user column: bumped when a recovery restores any
+    /// lane of the column, invalidating cached answers built on the
+    /// pre-crash replicas.
+    col_gen: Vec<AtomicU64>,
+    in_flight: AtomicU64,
+    shed: AtomicU64,
+    cache_hits: AtomicU64,
+    degraded: AtomicU64,
+    /// Sharded `(user -> CacheEntry)` map; shard by `mix64(user)`.
+    cache: Vec<Mutex<HashMap<UserId, CacheEntry>>>,
+    shard_mask: u64,
+    max_in_flight: u64,
+    max_staleness: u64,
+    fault_enabled: bool,
+}
+
+impl ServingState {
+    /// Build the serving plane for a fresh session. `serving.cache_shards`
+    /// is rounded up to a power of two so shard selection is a mask.
+    pub(crate) fn new(
+        cfg: &RunConfig,
+        grid: StateGrid,
+        plan: Arc<ServingPlan>,
+    ) -> Self {
+        let shards = cfg.serving_cache_shards.next_power_of_two() as usize;
+        let v_u = grid.v_u() as usize;
+        Self {
+            grid,
+            epoch: AtomicU64::new(plan.router.epoch()),
+            plan: Mutex::new(plan),
+            col_events: (0..v_u).map(|_| AtomicU64::new(0)).collect(),
+            col_gen: (0..v_u).map(|_| AtomicU64::new(0)).collect(),
+            in_flight: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            cache: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            shard_mask: shards as u64 - 1,
+            max_in_flight: cfg.serving_max_in_flight as u64,
+            max_staleness: cfg.serving_cache_max_staleness,
+            fault_enabled: cfg.fault_checkpoint_interval > 0,
+        }
+    }
+
+    /// Snapshot the current plan.
+    pub(crate) fn plan(&self) -> Arc<ServingPlan> {
+        self.plan.lock().expect("plan lock").clone()
+    }
+
+    /// Install a rescale's fresh plan. The epoch bump implicitly
+    /// invalidates every cached answer; the stale entries are also
+    /// dropped eagerly to free their memory.
+    pub(crate) fn install_plan(&self, plan: Arc<ServingPlan>) {
+        self.epoch.store(plan.router.epoch(), Ordering::Release);
+        *self.plan.lock().expect("plan lock") = plan;
+        for shard in &self.cache {
+            shard.lock().expect("cache shard").clear();
+        }
+    }
+
+    /// Shutdown: swap in the empty plan so every plan-held sender clone
+    /// drops. Required before `Supervisor::finish_join` — the actors
+    /// exit on end-of-stream, which needs *all* event senders gone.
+    pub(crate) fn shutdown(&self) {
+        let mut plan = self.plan.lock().expect("plan lock");
+        *plan = ServingPlan::empty(plan.router);
+    }
+
+    /// Count one accepted envelope against its user's column (cache
+    /// staleness bookkeeping). Called by ingest *before* the envelope
+    /// is buffered, so a cache entry validated after this bump can
+    /// never hide the write.
+    pub(crate) fn note_ingest(&self, user: UserId) {
+        let col = self.grid.user_col(user) as usize;
+        self.col_events[col].fetch_add(1, Ordering::Release);
+    }
+
+    /// Crash-recovery hook (called by the supervisor with its own lock
+    /// held — leaf locks only in here): hand the replacement worker's
+    /// fresh senders to the live plan and invalidate the cache columns
+    /// the slot hosts.
+    pub(crate) fn on_recover(
+        &self,
+        wid: usize,
+        event_tx: Sender<WorkerMsg>,
+        query_tx: Sender<QueryMsg>,
+        router: &Router,
+    ) {
+        let plan = self.plan();
+        if let Some(slot) = plan.slots.get(wid) {
+            slot.set_senders(event_tx, query_tx);
+        }
+        // One generation bump per affected column, not per lane.
+        let mut touched = vec![false; self.col_gen.len()];
+        for lane in 0..self.grid.n_lanes() {
+            if self.grid.owner(lane, router) == wid {
+                touched[self.grid.lane_col(lane) as usize] = true;
+            }
+        }
+        for (col, hit) in touched.into_iter().enumerate() {
+            if hit {
+                self.col_gen[col].fetch_add(1, Ordering::Release);
+            }
+        }
+    }
+
+    /// Envelopes routed but not yet flushed, across all slots.
+    pub(crate) fn buffered(&self) -> u64 {
+        self.plan()
+            .slots
+            .iter()
+            .map(|s| s.route.lock().expect("route lock").buf.len() as u64)
+            .sum()
+    }
+
+    /// Queries shed by admission control or full worker queues.
+    pub(crate) fn shed_total(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Queries answered from the serving cache.
+    pub(crate) fn cache_hit_total(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Queries answered from a partial replica set after repeated
+    /// worker failures.
+    pub(crate) fn degraded_total(&self) -> u64 {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    fn admit(&self) -> Option<InFlight<'_>> {
+        let prev = self.in_flight.fetch_add(1, Ordering::AcqRel);
+        let guard = InFlight(&self.in_flight);
+        if prev >= self.max_in_flight {
+            drop(guard);
+            None
+        } else {
+            Some(guard)
+        }
+    }
+
+    fn shard(&self, user: UserId) -> &Mutex<HashMap<UserId, CacheEntry>> {
+        &self.cache[(mix64(user) & self.shard_mask) as usize]
+    }
+
+    fn cache_get(
+        &self,
+        user: UserId,
+        col: usize,
+        n: usize,
+    ) -> Option<Vec<ItemId>> {
+        let epoch = self.epoch.load(Ordering::Acquire);
+        let gen = self.col_gen[col].load(Ordering::Acquire);
+        let events = self.col_events[col].load(Ordering::Acquire);
+        let map = self.shard(user).lock().expect("cache shard");
+        let e = map.get(&user)?;
+        let fresh = e.epoch == epoch
+            && e.gen == gen
+            && events.saturating_sub(e.events) <= self.max_staleness
+            && n <= e.n;
+        if !fresh {
+            return None;
+        }
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        Some(e.items.iter().take(n).copied().collect())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn cache_put(
+        &self,
+        user: UserId,
+        col: usize,
+        epoch: u64,
+        gen: u64,
+        events: u64,
+        n: usize,
+        items: &[ItemId],
+    ) {
+        // Re-validate against the *current* generation: a recovery or
+        // rescale that landed mid-fan-out means this answer may predate
+        // restored state — drop it rather than cache it.
+        if self.epoch.load(Ordering::Acquire) != epoch
+            || self.col_gen[col].load(Ordering::Acquire) != gen
+        {
+            return;
+        }
+        self.shard(user).lock().expect("cache shard").insert(
+            user,
+            CacheEntry { epoch, gen, events, n, items: items.to_vec() },
+        );
+    }
+
+    /// The concurrent read path: admission, cache probe, then a fenced
+    /// fan-out to the user's replica workers over their query lanes.
+    /// Safe to call from any number of threads while ingest proceeds.
+    pub(crate) fn recommend(
+        &self,
+        sup: &Mutex<Supervisor>,
+        user: UserId,
+        n: usize,
+    ) -> Result<Vec<ItemId>> {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let _in_flight = match self.admit() {
+            Some(guard) => guard,
+            None => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                bail!(
+                    "query shed: {} queries already in flight \
+                     (serving.max_in_flight)",
+                    self.max_in_flight
+                );
+            }
+        };
+        let col = self.grid.user_col(user) as usize;
+        if let Some(items) = self.cache_get(user, col, n) {
+            return Ok(items);
+        }
+        // Over-fetch per replica: local lists shrink under the global
+        // exclusion of items other replicas saw the user consume.
+        let fetch = n.saturating_mul(2);
+        let deadline = Instant::now() + RETRY_WINDOW;
+        let mut heals = 0u32;
+        let mut replica_count = 0usize;
+        let mut partial: Vec<ReplicaAnswer> = Vec::new();
+        loop {
+            let plan = self.plan();
+            if plan.slots.is_empty() {
+                bail!("recommend(user {user}): the session has shut down");
+            }
+            let epoch = plan.router.epoch();
+            let gen_before = self.col_gen[col].load(Ordering::Acquire);
+            let events_before = self.col_events[col].load(Ordering::Acquire);
+            let replicas = plan.router.user_workers(user);
+            replica_count = replicas.len();
+            let (reply_tx, reply_rx) =
+                bounded::<ReplicaAnswer>(replicas.len().max(1));
+            let mut asked = 0usize;
+            let mut dead = false;
+            for &wid in &replicas {
+                let slot = &plan.slots[wid];
+                let (event_tx, query_tx) = slot.senders();
+                // Flush the slot's pending events and capture the fence
+                // in one critical section: the fence must cover exactly
+                // the routed-and-flushed prefix, and the send must not
+                // interleave with a concurrent flusher's batch.
+                let fence = {
+                    let mut route = slot.route.lock().expect("route lock");
+                    if !route.buf.is_empty()
+                        && event_tx.send_many(&mut route.buf).is_err()
+                    {
+                        dead = true;
+                    }
+                    route.last_routed
+                };
+                if dead {
+                    break;
+                }
+                let q =
+                    QueryMsg { user, n: fetch, fence, reply: reply_tx.clone() };
+                match query_tx.try_send(q) {
+                    Ok(()) => asked += 1,
+                    Err(TrySendError::Full(_)) => {
+                        self.shed.fetch_add(1, Ordering::Relaxed);
+                        bail!(
+                            "query shed: worker {wid}'s query queue is full \
+                             (serving.queue_capacity)"
+                        );
+                    }
+                    Err(TrySendError::Closed(_)) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            drop(reply_tx);
+            if !dead {
+                let answers = reply_rx.recv_n(asked);
+                if answers.len() == asked {
+                    let items = merge_answers(&answers, n);
+                    self.cache_put(
+                        user,
+                        col,
+                        epoch,
+                        gen_before,
+                        events_before,
+                        n,
+                        &items,
+                    );
+                    return Ok(items);
+                }
+                // A replica died after accepting the query (its parked
+                // reply sender dropped with it) — keep what answered.
+                if !answers.is_empty() {
+                    partial = answers;
+                }
+            }
+            // Failure: a closed lane or a lost reply. With fault
+            // tolerance on, heal recovers dead slots (refreshing the
+            // plan's senders in place). `recovered == 0` means nothing
+            // was dead — the plan is mid-rescale-cutover — so the retry
+            // is free; only real recoveries count toward the degraded
+            // fallback.
+            if self.fault_enabled {
+                let recovered =
+                    sup.lock().expect("supervisor lock").heal(&plan.router)?;
+                if recovered > 0 {
+                    heals += 1;
+                    if heals > MAX_HEALS {
+                        break;
+                    }
+                }
+            }
+            if Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(RETRY_PAUSE);
+        }
+        if self.fault_enabled && !partial.is_empty() {
+            self.degraded.fetch_add(1, Ordering::Relaxed);
+            log::warn!(
+                "recommend(user {user}): replicas kept failing; serving a \
+                 degraded answer merged from {} of {replica_count} replicas",
+                partial.len(),
+            );
+            return Ok(merge_answers(&partial, n));
+        }
+        bail!(
+            "recommend(user {user}): no complete replica answer within \
+             {RETRY_WINDOW:?} ({heals} heal rounds) — worker dead{}",
+            if self.fault_enabled {
+                " despite recovery"
+            } else {
+                " and fault tolerance is disabled"
+            }
+        )
+    }
+}
+
+/// A cloneable, thread-safe handle onto a session's query plane.
+/// Obtained from [`Cluster::serving`](crate::coordinator::Cluster::serving);
+/// stays valid across rescales and crash recoveries, and fails cleanly
+/// ("session has shut down") after [`Cluster::finish`].
+///
+/// ```no_run
+/// # use streamrec::config::RunConfig;
+/// # use streamrec::coordinator::Cluster;
+/// # fn main() -> anyhow::Result<()> {
+/// let mut cluster = Cluster::spawn(&RunConfig::default())?;
+/// let serving = cluster.serving();
+/// let reader = std::thread::spawn(move || serving.recommend(7, 10));
+/// // ...ingest on this thread while `reader` queries concurrently...
+/// # Ok(()) }
+/// ```
+pub struct ServingHandle {
+    pub(crate) state: Arc<ServingState>,
+    pub(crate) sup: Arc<Mutex<Supervisor>>,
+}
+
+impl Clone for ServingHandle {
+    fn clone(&self) -> Self {
+        Self { state: self.state.clone(), sup: self.sup.clone() }
+    }
+}
+
+impl ServingHandle {
+    /// Global top-`n` for `user` — the concurrent, fenced, cached read
+    /// path. See [`ServingState::recommend`] for the full contract.
+    pub fn recommend(&self, user: UserId, n: usize) -> Result<Vec<ItemId>> {
+        self.state.recommend(&self.sup, user, n)
+    }
+}
+
+/// Merge replica answers into a global top-`n`: union the per-replica
+/// rated sets (global "never recommend a consumed item") and rank-merge
+/// the per-lane lists (`eval::merge::merge_topn`).
+pub(crate) fn merge_answers(
+    answers: &[ReplicaAnswer],
+    n: usize,
+) -> Vec<ItemId> {
+    let exclude: HashSet<ItemId> =
+        answers.iter().flat_map(|a| a.rated.iter().copied()).collect();
+    let lists: Vec<Vec<ItemId>> =
+        answers.iter().flat_map(|a| a.lists.iter().cloned()).collect();
+    merge_topn(&lists, &exclude, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Receiver;
+
+    fn test_state(
+        max_staleness: u64,
+        max_in_flight: u64,
+    ) -> (ServingState, Receiver<WorkerMsg>, Receiver<QueryMsg>) {
+        let cfg = RunConfig {
+            serving_cache_max_staleness: max_staleness,
+            serving_max_in_flight: max_in_flight,
+            ..RunConfig::default()
+        };
+        let grid = StateGrid::for_config(&cfg).unwrap();
+        let router = Router::new(cfg.topology);
+        let (tx, rx) = bounded::<WorkerMsg>(16);
+        let (qtx, qrx) = bounded::<QueryMsg>(16);
+        let plan = Arc::new(ServingPlan {
+            router,
+            slots: vec![SlotServing::new(tx, qtx, 8)],
+        });
+        (ServingState::new(&cfg, grid, plan), rx, qrx)
+    }
+
+    fn put(st: &ServingState, user: UserId, n: usize, items: &[ItemId]) {
+        let col = st.grid.user_col(user) as usize;
+        let epoch = st.epoch.load(Ordering::Acquire);
+        let gen = st.col_gen[col].load(Ordering::Acquire);
+        let events = st.col_events[col].load(Ordering::Acquire);
+        st.cache_put(user, col, epoch, gen, events, n, items);
+    }
+
+    fn get(st: &ServingState, user: UserId, n: usize) -> Option<Vec<ItemId>> {
+        let col = st.grid.user_col(user) as usize;
+        st.cache_get(user, col, n)
+    }
+
+    #[test]
+    fn cache_roundtrip_and_prefix_serving() {
+        let (st, _rx, _qrx) = test_state(0, 4);
+        put(&st, 7, 3, &[10, 20, 30]);
+        assert_eq!(get(&st, 7, 3), Some(vec![10, 20, 30]));
+        // A shorter request is a prefix of the cached merge...
+        assert_eq!(get(&st, 7, 2), Some(vec![10, 20]));
+        // ...a longer one must recompute.
+        assert_eq!(get(&st, 7, 4), None);
+        assert_eq!(st.cache_hit_total(), 2);
+    }
+
+    #[test]
+    fn ingest_into_column_invalidates_under_strict_staleness() {
+        let (st, _rx, _qrx) = test_state(0, 4);
+        put(&st, 7, 2, &[1, 2]);
+        // A different user in a different column leaves the entry alone.
+        st.note_ingest(8);
+        assert!(get(&st, 7, 2).is_some());
+        // Any write to user 7's own column kills it (staleness 0).
+        st.note_ingest(7);
+        assert_eq!(get(&st, 7, 2), None);
+    }
+
+    #[test]
+    fn staleness_budget_tolerates_bounded_writes() {
+        let (st, _rx, _qrx) = test_state(2, 4);
+        put(&st, 7, 2, &[1, 2]);
+        st.note_ingest(7);
+        st.note_ingest(7);
+        assert!(get(&st, 7, 2).is_some(), "2 writes within budget 2");
+        st.note_ingest(7);
+        assert_eq!(get(&st, 7, 2), None, "3rd write exceeds the budget");
+    }
+
+    #[test]
+    fn epoch_bump_invalidates_everything() {
+        let (st, _rx, _qrx) = test_state(u64::MAX, 4);
+        put(&st, 7, 2, &[1, 2]);
+        assert!(get(&st, 7, 2).is_some());
+        // A rescale installs a plan with a bumped router epoch.
+        let plan = st.plan();
+        let next = Router::with_epoch(
+            RunConfig::default().topology,
+            plan.router.epoch() + 1,
+        );
+        st.install_plan(ServingPlan::empty(next));
+        assert_eq!(get(&st, 7, 2), None, "cross-epoch serve forbidden");
+    }
+
+    #[test]
+    fn column_generation_bump_invalidates_column_only() {
+        let (st, _rx, _qrx) = test_state(u64::MAX, 4);
+        put(&st, 7, 2, &[1, 2]);
+        let col = st.grid.user_col(7) as usize;
+        st.col_gen[col].fetch_add(1, Ordering::Release);
+        assert_eq!(get(&st, 7, 2), None, "recovered column must recompute");
+    }
+
+    #[test]
+    fn stale_put_after_invalidation_is_dropped() {
+        let (st, _rx, _qrx) = test_state(u64::MAX, 4);
+        let col = st.grid.user_col(7) as usize;
+        let epoch = st.epoch.load(Ordering::Acquire);
+        let gen = st.col_gen[col].load(Ordering::Acquire);
+        // Invalidation lands while the fan-out is in flight...
+        st.col_gen[col].fetch_add(1, Ordering::Release);
+        // ...so the put (validated against its pre-fan-out generation)
+        // must not install the possibly-pre-recovery answer.
+        st.cache_put(7, col, epoch, gen, 0, 2, &[1, 2]);
+        assert_eq!(get(&st, 7, 2), None);
+    }
+
+    #[test]
+    fn admission_sheds_beyond_max_in_flight() {
+        let (st, _rx, _qrx) = test_state(0, 2);
+        let a = st.admit();
+        let b = st.admit();
+        assert!(a.is_some() && b.is_some());
+        assert!(st.admit().is_none(), "3rd concurrent query is refused");
+        drop(a);
+        assert!(st.admit().is_some(), "slot freed on guard drop");
+    }
+
+    #[test]
+    fn merge_answers_excludes_across_replicas() {
+        // Replica A knows the user rated item 3; replica B still ranks
+        // it first. The union exclusion must strip it globally.
+        let a = ReplicaAnswer { lists: vec![vec![1, 2]], rated: vec![3] };
+        let b = ReplicaAnswer { lists: vec![vec![3, 4]], rated: vec![] };
+        let merged = merge_answers(&[a, b], 10);
+        assert!(!merged.contains(&3));
+        assert!(merged.contains(&1) && merged.contains(&4));
+    }
+
+    #[test]
+    fn shutdown_empties_the_plan_and_fails_queries_cleanly() {
+        let (st, _rx, _qrx) = test_state(0, 4);
+        st.shutdown();
+        assert_eq!(st.plan().slots.len(), 0);
+        assert_eq!(st.buffered(), 0);
+    }
+}

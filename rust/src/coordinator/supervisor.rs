@@ -54,11 +54,15 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::{RunConfig, Topology};
 use crate::coordinator::router::{Router, StateGrid};
+use crate::coordinator::serving::ServingState;
 use crate::engine::actor::{
     lane_frame_watermark, zero_lane_frame_counters, ChaosPolicy,
-    CheckpointMsg, CollectorMsg, Envelope, WorkerExport, WorkerMsg,
+    CheckpointMsg, CollectorMsg, Envelope, QueryMsg, WorkerExport, WorkerMsg,
 };
-use crate::engine::{bounded, ChannelStats, Receiver, Sender, WorkerHandle};
+use crate::engine::{
+    bounded, bounded_with_signal, ChannelStats, Receiver, Sender, WakeSignal,
+    WorkerHandle,
+};
 use crate::eval::WorkerReport;
 use crate::net::{Transport, WorkerBoot};
 
@@ -84,6 +88,10 @@ struct WorkerSlot {
     /// recoveries).
     ord: usize,
     tx: Option<Sender<WorkerMsg>>,
+    /// Sending half of the slot's dedicated serving lane. The serving
+    /// plan holds its own clone; this one exists so a respawn can hand
+    /// the *fresh* pair to [`ServingState::on_recover`].
+    query_tx: Option<Sender<QueryMsg>>,
     handle: Option<WorkerHandle<Result<WorkerReport>>>,
     /// Root cause captured when this slot's worker was reaped. The slot
     /// keeps it only while unrecovered (fault tolerance off), so a later
@@ -171,9 +179,15 @@ pub(crate) struct Supervisor {
     chaos: ChaosPolicy,
     next_ord: usize,
     /// Channel counters of dead/retired channels, folded in so totals
-    /// never regress (`ChannelStats::absorb`).
+    /// never regress (`ChannelStats::absorb`). Event-FIFO channels only;
+    /// the serving lanes keep their own books.
     chan_base: ChannelStats,
     stats: FaultStats,
+    /// The session's serving plane, once attached: a recovery swaps the
+    /// replacement worker's fresh senders into the live plan and
+    /// invalidates the cache columns the slot hosts. `None` until
+    /// [`Supervisor::attach_serving`] (and in supervisor-only tests).
+    serving: Option<Arc<ServingState>>,
 }
 
 impl Supervisor {
@@ -205,7 +219,14 @@ impl Supervisor {
             next_ord: 0,
             chan_base: ChannelStats::default(),
             stats: FaultStats::default(),
+            serving: None,
         }
+    }
+
+    /// Attach the session's serving plane so recoveries can refresh its
+    /// senders in place and invalidate affected cache columns.
+    pub(crate) fn attach_serving(&mut self, serving: Arc<ServingState>) {
+        self.serving = Some(serving);
     }
 
     /// Is checkpoint/replay fault tolerance on (`fault.checkpoint_interval
@@ -248,7 +269,17 @@ impl Supervisor {
     fn spawn_slot(&mut self, wid: usize, chaos: ChaosPolicy) -> WorkerSlot {
         let ord = self.next_ord;
         self.next_ord += 1;
-        let (tx, rx) = bounded::<WorkerMsg>(self.cfg.channel_capacity);
+        // Both inputs share one wake signal so the actor can sleep on a
+        // single latch while draining either (see `WakeSignal`).
+        let signal = WakeSignal::new();
+        let (tx, rx) = bounded_with_signal::<WorkerMsg>(
+            self.cfg.channel_capacity,
+            &signal,
+        );
+        let (query_tx, query_rx) = bounded_with_signal::<QueryMsg>(
+            self.cfg.serving_queue_capacity,
+            &signal,
+        );
         let col_tx = self
             .col_tx
             .as_ref()
@@ -269,6 +300,8 @@ impl Supervisor {
             cfg: self.cfg.clone(),
             grid: self.grid,
             rx,
+            query_rx,
+            signal,
             col_tx,
             ckpt_tx,
             chaos,
@@ -277,10 +310,24 @@ impl Supervisor {
         WorkerSlot {
             ord,
             tx: Some(tx),
+            query_tx: Some(query_tx),
             handle: Some(handle),
             cause: None,
             respawns: 0,
             last_respawn: None,
+        }
+    }
+
+    /// Clone slot `wid`'s data-plane senders (event FIFO + serving lane)
+    /// for the serving plan. `None` while the slot is reaped.
+    pub(crate) fn slot_senders(
+        &self,
+        wid: usize,
+    ) -> Option<(Sender<WorkerMsg>, Sender<QueryMsg>)> {
+        let slot = self.slots.get(wid)?;
+        match (&slot.tx, &slot.query_tx) {
+            (Some(tx), Some(qtx)) => Some((tx.clone(), qtx.clone())),
+            _ => None,
         }
     }
 
@@ -352,36 +399,7 @@ impl Supervisor {
         self.store.insert(lane, Checkpoint { watermark, bytes });
     }
 
-    /// Bulk-send one worker's route buffer; a dead worker is recovered
-    /// (when enabled) and the dropped batch is covered by the replay —
-    /// the buffered envelopes were accepted, so they are in the log with
-    /// seqs past every checkpoint watermark.
-    pub(crate) fn send_event_batch(
-        &mut self,
-        wid: usize,
-        buf: &mut Vec<WorkerMsg>,
-        router: &Router,
-    ) -> Result<()> {
-        if buf.is_empty() {
-            return Ok(());
-        }
-        if self.enabled() {
-            self.drain_checkpoints();
-        }
-        let sent = match &self.slots[wid].tx {
-            Some(tx) => tx.send_many(buf).is_ok(),
-            None => false,
-        };
-        if sent {
-            return Ok(());
-        }
-        // `send_many` drains the caller's buffer even on failure; make
-        // that true for the closed-slot arm too, then recover.
-        buf.clear();
-        self.recover(wid, router)
-    }
-
-    /// Send a probe (`Query`/`MetricsSnapshot`), recovering a dead worker
+    /// Send a probe (`MetricsSnapshot`), recovering a dead worker
     /// once and re-sending. Fault-tolerant sessions only.
     pub(crate) fn send_probe(
         &mut self,
@@ -419,9 +437,12 @@ impl Supervisor {
     }
 
     /// Liveness scan: recover every worker whose thread has exited.
-    /// Returns how many were recovered. Call only with empty route
-    /// buffers (probes/flushes do that) — recovery replays from the log,
-    /// so a still-buffered envelope would be delivered twice.
+    /// Returns how many were recovered. Safe to call with route buffers
+    /// still holding envelopes: every buffered envelope was accepted (so
+    /// it is in the replay log, and the recovery re-sends it), and the
+    /// buffered copy that arrives later carries a seq at or below the
+    /// restored lane watermark, so the actor's exactly-once filter drops
+    /// it.
     pub(crate) fn heal(&mut self, router: &Router) -> Result<u64> {
         let mut recovered = 0u64;
         for wid in 0..self.slots.len() {
@@ -440,12 +461,15 @@ impl Supervisor {
     /// Reap a dead worker and bring its slot back: fold channel
     /// counters, join (logging the panic), respawn, restore from
     /// checkpoints, replay the suffix.
-    fn recover(&mut self, wid: usize, router: &Router) -> Result<()> {
+    pub(crate) fn recover(&mut self, wid: usize, router: &Router) -> Result<()> {
         if let Some(tx) = self.slots[wid].tx.take() {
             // Satellite guarantee: a crashed generation's transport
             // counters survive into metrics/finish via the absorb path.
             self.chan_base.absorb(&tx.metrics());
         }
+        // The dead worker's serving lane closes with it; the plan's
+        // stale clone keeps returning `Closed` until the refresh below.
+        drop(self.slots[wid].query_tx.take());
         let ord = self.slots[wid].ord;
         let cause = match self.slots[wid].handle.take() {
             Some(h) => match h.join() {
@@ -592,6 +616,14 @@ impl Supervisor {
             }
             replayed += 1;
         }
+        // Hand the replacement's fresh senders to the serving plane (in
+        // place — the plan Arc is only rebuilt at rescale) and
+        // invalidate the cache columns this slot hosts.
+        if let Some(serving) = self.serving.clone() {
+            if let Some((tx, qtx)) = self.slot_senders(wid) {
+                serving.on_recover(wid, tx, qtx, router);
+            }
+        }
         let pause_ns = t0.elapsed().as_nanos() as u64;
         self.stats.recoveries += 1;
         self.stats.replayed_events += replayed;
@@ -716,6 +748,7 @@ impl Supervisor {
         let mut reports = Vec::with_capacity(slots.len());
         for mut slot in slots {
             drop(slot.tx.take());
+            drop(slot.query_tx.take());
             let handle = slot.handle.take().expect("slot joined twice");
             reports.push(handle.join()??);
         }
@@ -741,6 +774,7 @@ impl Supervisor {
                     // vanish with the dropped sender.
                     self.chan_base.absorb(&tx.metrics());
                 }
+                drop(self.slots[wid].query_tx.take());
                 let handle = match self.slots[wid].handle.take() {
                     Some(h) => h,
                     // Already reaped: an earlier unrecovered crash (fault

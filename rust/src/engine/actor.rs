@@ -55,7 +55,8 @@
 //! coordinator's watchdog converts into a crash within
 //! `fault.rpc_timeout_ms`.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -63,7 +64,7 @@ use crate::algorithms::{build_model, StreamingRecommender};
 use crate::config::RunConfig;
 use crate::coordinator::router::StateGrid;
 use crate::data::types::{ItemId, Rating, StateSizes, UserId};
-use crate::engine::{Receiver, Sender};
+use crate::engine::{Receiver, Sender, WakeSignal};
 use crate::eval::{HitSample, Prequential, WorkerReport};
 use crate::state::ForgetClock;
 use crate::util::histogram::Histogram;
@@ -107,23 +108,11 @@ pub(crate) struct CheckpointMsg {
 }
 
 /// Everything a worker can be asked to do (the control-plane protocol).
+/// Queries do *not* travel here — they have their own channel
+/// ([`QueryMsg`]) that bypasses this FIFO entirely.
 pub(crate) enum WorkerMsg {
     /// One stream event (the learning loop).
     Event(Envelope),
-    /// Online recommendation query (the serving loop). Answered from the
-    /// local lane models over `reply` via the frozen
-    /// [`serve`](crate::algorithms::StreamingRecommender::serve) read:
-    /// never trains them and never moves serialized state (bounded-
-    /// staleness caches are served as-is), so query timing cannot
-    /// perturb the event timeline that crash recovery replays.
-    Query {
-        /// User to recommend for.
-        user: UserId,
-        /// Per-lane list length to return.
-        n: usize,
-        /// Reply channel back to the coordinator.
-        reply: Sender<ReplicaAnswer>,
-    },
     /// Live counter snapshot over `reply`; never blocks the stream for
     /// longer than one reply-channel send.
     MetricsSnapshot {
@@ -154,6 +143,29 @@ pub(crate) enum WorkerMsg {
         /// and the importing worker counts from zero.
         restore_counters: bool,
     },
+}
+
+/// An online recommendation query on the worker's dedicated serving
+/// lane. Queries bypass the event FIFO — a backlog of un-trained events
+/// never queues a query behind it — and are answered from the local lane
+/// models via the frozen
+/// [`serve`](crate::algorithms::StreamingRecommender::serve) read: never
+/// trains them and never moves serialized state (bounded-staleness
+/// caches are served as-is), so query timing cannot perturb the event
+/// timeline that crash recovery replays.
+pub(crate) struct QueryMsg {
+    /// User to recommend for.
+    pub(crate) user: UserId,
+    /// Per-lane list length to return.
+    pub(crate) n: usize,
+    /// Read-your-writes fence: `seq + 1` of the last event the
+    /// coordinator routed to this worker before issuing the query (`0` =
+    /// none). The actor parks the query until its applied watermark
+    /// reaches the fence, so bypassing the FIFO never lets a query
+    /// observe *less* than the ingested prefix — only sooner.
+    pub(crate) fence: u64,
+    /// Reply channel back to the coordinator.
+    pub(crate) reply: Sender<ReplicaAnswer>,
 }
 
 /// One replica's answer to a query: the ranked local top-N of every lane
@@ -423,6 +435,11 @@ pub(crate) struct WorkerActor {
     cfg: RunConfig,
     grid: StateGrid,
     rx: Receiver<WorkerMsg>,
+    /// The dedicated serving lane: queries arrive here, never on `rx`.
+    query_rx: Receiver<QueryMsg>,
+    /// Shared wakeup for both inputs — the loop sleeps on this single
+    /// latch instead of blocking inside either channel.
+    signal: WakeSignal,
     col_tx: Sender<CollectorMsg>,
     /// `Some` iff fault tolerance is enabled; checkpoints flow here.
     ckpt_tx: Option<Sender<CheckpointMsg>>,
@@ -431,31 +448,49 @@ pub(crate) struct WorkerActor {
 
 impl WorkerActor {
     /// Assemble an actor for one worker slot.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn new(
         ord: usize,
         cfg: RunConfig,
         grid: StateGrid,
         rx: Receiver<WorkerMsg>,
+        query_rx: Receiver<QueryMsg>,
+        signal: WakeSignal,
         col_tx: Sender<CollectorMsg>,
         ckpt_tx: Option<Sender<CheckpointMsg>>,
         chaos: ChaosPolicy,
     ) -> Self {
-        Self { ord, cfg, grid, rx, col_tx, ckpt_tx, chaos }
+        Self { ord, cfg, grid, rx, query_rx, signal, col_tx, ckpt_tx, chaos }
     }
 
     /// The worker body: prequential learning loop + serving + snapshots
     /// + checkpoints + migration over the hosted lanes.
     ///
-    /// Drain-based: each wakeup moves *everything* queued into a local
-    /// inbox in one critical section ([`Receiver::recv_many`]), then
-    /// works through it in FIFO order — the train loop stays per-event
-    /// (prequential accounting is unchanged) but lock transitions and
-    /// condvar wakeups are amortized over the window. Queries and
-    /// snapshots sit at their FIFO position inside the drained window,
-    /// so they observe exactly the events ingested before them.
-    /// `Export` is terminal: reply, then drain out.
+    /// Two inputs, one sleep: each wakeup first drains the serving lane
+    /// (`query_rx`) — answering every query whose fence the applied
+    /// watermark already covers, parking the rest — then moves
+    /// *everything* queued on the event FIFO into a local inbox in one
+    /// critical section and works through it in FIFO order. The train
+    /// loop stays per-event (prequential accounting is unchanged) but
+    /// lock transitions and wakeups are amortized over the window; with
+    /// both inputs empty the loop sleeps on the shared [`WakeSignal`]
+    /// (never inside one channel, which would starve the other).
+    /// Control messages (snapshots, imports, exports) still sit at their
+    /// FIFO position among the events, so they observe exactly the
+    /// events ingested before them. `Export` is terminal: reply, then
+    /// drain out.
     pub(crate) fn run(self) -> Result<WorkerReport> {
-        let WorkerActor { ord, cfg, grid, rx, col_tx, ckpt_tx, chaos } = self;
+        let WorkerActor {
+            ord,
+            cfg,
+            grid,
+            rx,
+            query_rx,
+            signal,
+            col_tx,
+            ckpt_tx,
+            chaos,
+        } = self;
         let ckpt_interval = cfg.fault_checkpoint_interval.max(1);
         let mut lanes: BTreeMap<u64, Lane> = BTreeMap::new();
         let mut preq = Prequential::new(cfg.top_n, cfg.recall_window);
@@ -470,11 +505,58 @@ impl WorkerActor {
         // Armed once the chaos kill seq passes in `in_checkpoint` mode;
         // the next checkpoint attempt then panics mid-checkpoint.
         let mut chaos_ckpt_armed = false;
+        // Read-your-writes watermark: `seq + 1` of the newest event this
+        // actor has applied (or deliberately filtered), advanced by
+        // imports too. A query whose fence is at or below it is
+        // answerable now; otherwise it parks until ingest catches up.
+        // Fences are not monotone across coordinator threads, so the
+        // parked queue is re-scanned whole after every event window.
+        let mut applied = 0u64;
+        let mut parked: VecDeque<QueryMsg> = VecDeque::new();
+        let mut qbuf: Vec<QueryMsg> = Vec::new();
+        const IDLE_WAIT: Duration = Duration::from_millis(10);
 
-        'drain: while rx.recv_many(&mut inbox, usize::MAX) {
+        'drain: loop {
+            // Epoch read BEFORE draining: anything arriving after it
+            // bumps the epoch, so the idle wait below can never sleep
+            // through a message (see `WakeSignal`).
+            let seen = signal.epoch();
+            let mut served = false;
+            if query_rx.try_drain(&mut qbuf) > 0 {
+                for q in qbuf.drain(..) {
+                    if q.fence <= applied {
+                        answer_query(&mut lanes, &grid, &mut queries, q);
+                        served = true;
+                    } else {
+                        parked.push_back(q);
+                    }
+                }
+            }
+            if rx.try_drain(&mut inbox) == 0 {
+                if !served {
+                    if rx.is_ended() {
+                        // End-of-stream: the coordinator dropped its
+                        // event sender. Any still-parked query waits on
+                        // events that can no longer arrive; dropping it
+                        // closes its reply channel, and the serving
+                        // fan-out degrades instead of deadlocking.
+                        break 'drain;
+                    }
+                    let t0 = Instant::now();
+                    signal.wait_past(seen, IDLE_WAIT);
+                    rx.record_wait(t0.elapsed().as_nanos() as u64);
+                }
+                continue 'drain;
+            }
             for msg in inbox.drain(..) {
                 match msg {
                     WorkerMsg::Event(env) => {
+                        // Advance the fence watermark even for events the
+                        // lane filter below skips: a filtered duplicate
+                        // was applied before the snapshot that guards it,
+                        // so for read-your-writes purposes it *is*
+                        // applied.
+                        applied = applied.max(env.seq + 1);
                         if chaos.kill_at_seq == Some(env.seq) {
                             // The in-checkpoint variant needs a checkpoint
                             // path to fire in; without fault tolerance
@@ -586,30 +668,6 @@ impl WorkerActor {
                             }
                         }
                     }
-                    WorkerMsg::Query { user, n, reply } => {
-                        // Serving never trains the models and never moves
-                        // *visible* model state (`serve` is the frozen
-                        // read — see the StreamingRecommender trait docs):
-                        // query timing can therefore never perturb the
-                        // event-replay timeline crash recovery rebuilds
-                        // from. Every hosted lane of the user's grid
-                        // column answers with its own ranked list.
-                        queries += 1;
-                        let col = grid.user_col(user);
-                        let mut lists = Vec::new();
-                        let mut rated = Vec::new();
-                        for (lane_id, lane) in lanes.iter_mut() {
-                            if grid.lane_col(*lane_id) != col {
-                                continue;
-                            }
-                            let items = lane.model.serve(user, n);
-                            if !items.is_empty() {
-                                lists.push(items);
-                            }
-                            rated.extend(lane.model.rated_items(user));
-                        }
-                        let _ = reply.send(ReplicaAnswer { lists, rated });
-                    }
                     WorkerMsg::MetricsSnapshot { reply } => {
                         let _ = reply.send(WorkerSnapshot {
                             worker_id: ord,
@@ -630,6 +688,12 @@ impl WorkerActor {
                         let (ev, ts, sw) = frame.clock;
                         slot.clock.restore(ev, ts, sw);
                         slot.watermark = frame.watermark;
+                        // The frame covers the prefix up to its
+                        // watermark: queries fenced at or below it are
+                        // answerable without replaying those events.
+                        if let Some(w) = frame.watermark {
+                            applied = applied.max(w + 1);
+                        }
                         if restore_counters {
                             slot.processed = frame.processed;
                             slot.hits = frame.hits;
@@ -647,7 +711,23 @@ impl WorkerActor {
                         // has been processed (FIFO), so the snapshots cover
                         // the complete accepted prefix. The coordinator
                         // sends nothing after Export, so breaking out drops
-                        // no work.
+                        // no work. Parked queries the prefix satisfies are
+                        // answered first; the rest wait on events that
+                        // will never arrive on this generation — dropping
+                        // them closes their reply channels and the
+                        // serving fan-out degrades/retries against the
+                        // next generation instead of deadlocking.
+                        for _ in 0..parked.len() {
+                            let q = parked.pop_front().expect("len-bounded");
+                            if q.fence <= applied {
+                                answer_query(
+                                    &mut lanes,
+                                    &grid,
+                                    &mut queries,
+                                    q,
+                                );
+                            }
+                        }
                         let out: Vec<LaneSnapshot> = lanes
                             .iter()
                             .map(|(id, lane)| LaneSnapshot {
@@ -659,6 +739,17 @@ impl WorkerActor {
                         let _ = reply.send(WorkerExport { ord, lanes: out });
                         break 'drain;
                     }
+                }
+            }
+            // Events applied this window may have released parked
+            // queries; one pass over the queue answers the ready ones
+            // and keeps the rest in arrival order.
+            for _ in 0..parked.len() {
+                let q = parked.pop_front().expect("len-bounded");
+                if q.fence <= applied {
+                    answer_query(&mut lanes, &grid, &mut queries, q);
+                } else {
+                    parked.push_back(q);
                 }
             }
         }
@@ -703,6 +794,35 @@ fn lane_entry<'a>(
         }
         std::collections::btree_map::Entry::Occupied(o) => o.into_mut(),
     })
+}
+
+/// Answer one serving query from the hosted lanes: every lane of the
+/// user's grid column contributes its ranked local list, plus the
+/// user's locally-rated items for global exclusion. `serve` is the
+/// frozen read — answering never trains the models, so query timing
+/// cannot perturb the event timeline crash recovery replays.
+fn answer_query(
+    lanes: &mut BTreeMap<u64, Lane>,
+    grid: &StateGrid,
+    queries: &mut u64,
+    q: QueryMsg,
+) {
+    *queries += 1;
+    let QueryMsg { user, n, reply, .. } = q;
+    let col = grid.user_col(user);
+    let mut lists = Vec::new();
+    let mut rated = Vec::new();
+    for (lane_id, lane) in lanes.iter_mut() {
+        if grid.lane_col(*lane_id) != col {
+            continue;
+        }
+        let items = lane.model.serve(user, n);
+        if !items.is_empty() {
+            lists.push(items);
+        }
+        rated.extend(lane.model.rated_items(user));
+    }
+    let _ = reply.send(ReplicaAnswer { lists, rated });
 }
 
 /// Sum state-entry counts across a worker's hosted lanes.

@@ -23,7 +23,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 struct Shared<T> {
     queue: Mutex<Inner<T>>,
@@ -31,6 +31,84 @@ struct Shared<T> {
     not_empty: Condvar,
     capacity: usize,
     metrics: ChannelMetrics,
+    /// Optional cross-channel wakeup: notified on every enqueue and on
+    /// either half's last drop, so one consumer can sleep on a single
+    /// [`WakeSignal`] shared by several channels (the actor's event FIFO
+    /// plus its query lane) instead of blocking inside one of them.
+    signal: Option<WakeSignal>,
+}
+
+/// A shared wakeup latch for consumers draining *several* channels.
+///
+/// The classic blocking `recv_many` parks inside one channel's condvar,
+/// which is wrong for a consumer with two inputs: a message on the other
+/// channel would not wake it. A `WakeSignal` is a monotonically
+/// increasing epoch plus a condvar; every channel built over it via
+/// [`bounded_with_signal`] bumps the epoch on enqueue and teardown. The
+/// consumer's loop is lost-wakeup-free by construction:
+///
+/// ```text
+/// let seen = signal.epoch();       // BEFORE draining
+/// drain channel A; drain channel B;
+/// if nothing arrived { signal.wait_past(seen, timeout); }
+/// ```
+///
+/// Any enqueue after `epoch()` was read bumps the epoch, so `wait_past`
+/// returns immediately instead of sleeping through it.
+pub struct WakeSignal {
+    inner: Arc<(Mutex<u64>, Condvar)>,
+}
+
+impl Clone for WakeSignal {
+    fn clone(&self) -> Self {
+        Self { inner: self.inner.clone() }
+    }
+}
+
+impl Default for WakeSignal {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WakeSignal {
+    /// A fresh signal at epoch 0.
+    pub fn new() -> Self {
+        Self { inner: Arc::new((Mutex::new(0), Condvar::new())) }
+    }
+
+    /// Current epoch. Read it *before* draining the attached channels.
+    pub fn epoch(&self) -> u64 {
+        *self.inner.0.lock().unwrap()
+    }
+
+    /// Bump the epoch and wake every waiter.
+    pub fn notify(&self) {
+        let mut epoch = self.inner.0.lock().unwrap();
+        *epoch += 1;
+        self.inner.1.notify_all();
+    }
+
+    /// Sleep until the epoch passes `seen` or `timeout` elapses
+    /// (whichever first, robust against spurious wakeups); returns the
+    /// epoch at exit.
+    pub fn wait_past(&self, seen: u64, timeout: Duration) -> u64 {
+        let deadline = Instant::now() + timeout;
+        let mut epoch = self.inner.0.lock().unwrap();
+        while *epoch <= seen {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = self
+                .inner
+                .1
+                .wait_timeout(epoch, deadline - now)
+                .unwrap();
+            epoch = guard;
+        }
+        *epoch
+    }
 }
 
 struct Inner<T> {
@@ -142,8 +220,45 @@ impl<T> std::fmt::Display for SendError<T> {
     }
 }
 
+/// Why a [`Sender::try_send`] was refused. The two cases demand opposite
+/// reactions on the serving path: `Full` is transient backpressure (shed
+/// the query, count it), `Closed` is a dead worker (heal and retry).
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// The queue is at capacity; the value is handed back.
+    Full(T),
+    /// The receiver is gone; the value is handed back.
+    Closed(T),
+}
+
+impl<T> TrySendError<T> {
+    /// The refused value, regardless of the reason.
+    pub fn into_inner(self) -> T {
+        match self {
+            TrySendError::Full(v) | TrySendError::Closed(v) => v,
+        }
+    }
+}
+
 /// Create a bounded channel of the given capacity (>= 1).
 pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    bounded_inner(capacity, None)
+}
+
+/// Like [`bounded`], but every enqueue (and either half's teardown) also
+/// notifies `signal` — the primitive that lets one consumer drain
+/// several channels while sleeping on a single latch. See [`WakeSignal`].
+pub fn bounded_with_signal<T>(
+    capacity: usize,
+    signal: &WakeSignal,
+) -> (Sender<T>, Receiver<T>) {
+    bounded_inner(capacity, Some(signal.clone()))
+}
+
+fn bounded_inner<T>(
+    capacity: usize,
+    signal: Option<WakeSignal>,
+) -> (Sender<T>, Receiver<T>) {
     assert!(capacity >= 1, "channel capacity must be >= 1");
     let shared = Arc::new(Shared {
         queue: Mutex::new(Inner {
@@ -155,8 +270,18 @@ pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
         not_empty: Condvar::new(),
         capacity,
         metrics: ChannelMetrics::default(),
+        signal,
     });
     (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+impl<T> Shared<T> {
+    #[inline]
+    fn wake(&self) {
+        if let Some(signal) = &self.signal {
+            signal.notify();
+        }
+    }
 }
 
 impl<T> Sender<T> {
@@ -187,6 +312,7 @@ impl<T> Sender<T> {
         m.send_batches.fetch_add(1, Ordering::Relaxed);
         m.high_water.fetch_max(depth, Ordering::Relaxed);
         self.shared.not_empty.notify_one();
+        self.shared.wake();
         Ok(())
     }
 
@@ -229,10 +355,13 @@ impl<T> Sender<T> {
                 }
             }
             // Queue full with items remaining: hand the window to the
-            // consumer (it may be asleep — wake it while we wait).
+            // consumer (it may be asleep — wake it while we wait). A
+            // signal-sleeping consumer must be woken too, or it would
+            // doze out its timeout while we hold the window.
             max_depth = max_depth.max(inner.buf.len() as u64);
             let start = Instant::now();
             self.shared.not_empty.notify_one();
+            self.shared.wake();
             inner = self.shared.not_full.wait(inner).unwrap();
             blocked_ns += start.elapsed().as_nanos() as u64;
         };
@@ -244,6 +373,7 @@ impl<T> Sender<T> {
             m.send_batches.fetch_add(1, Ordering::Relaxed);
             m.high_water.fetch_max(max_depth, Ordering::Relaxed);
             self.shared.not_empty.notify_one();
+            self.shared.wake();
         }
         if blocked_ns > 0 {
             m.blocked_ns.fetch_add(blocked_ns, Ordering::Relaxed);
@@ -251,11 +381,16 @@ impl<T> Sender<T> {
         result
     }
 
-    /// Non-blocking send; returns the value back if the queue is full.
-    pub fn try_send(&self, value: T) -> Result<(), SendError<T>> {
+    /// Non-blocking send; hands the value back with the refusal reason —
+    /// [`TrySendError::Full`] (transient backpressure) vs
+    /// [`TrySendError::Closed`] (the receiver is gone).
+    pub fn try_send(&self, value: T) -> Result<(), TrySendError<T>> {
         let mut inner = self.shared.queue.lock().unwrap();
-        if !inner.receiver_alive || inner.buf.len() >= self.shared.capacity {
-            return Err(SendError(value));
+        if !inner.receiver_alive {
+            return Err(TrySendError::Closed(value));
+        }
+        if inner.buf.len() >= self.shared.capacity {
+            return Err(TrySendError::Full(value));
         }
         inner.buf.push_back(value);
         drop(inner);
@@ -263,6 +398,7 @@ impl<T> Sender<T> {
         m.sent.fetch_add(1, Ordering::Relaxed);
         m.send_batches.fetch_add(1, Ordering::Relaxed);
         self.shared.not_empty.notify_one();
+        self.shared.wake();
         Ok(())
     }
 
@@ -287,6 +423,7 @@ impl<T> Drop for Sender<T> {
             drop(inner);
             // Wake the receiver so it can observe end-of-stream.
             self.shared.not_empty.notify_all();
+            self.shared.wake();
         }
     }
 }
@@ -449,6 +586,29 @@ impl<T> Receiver<T> {
         taken
     }
 
+    /// True once every sender is gone *and* the queue is drained — the
+    /// non-blocking end-of-stream probe for signal-driven consumers
+    /// (equivalent to `recv_many` returning `false`). Monotonic: once
+    /// true it stays true, since no sender can be cloned back into
+    /// existence.
+    pub fn is_ended(&self) -> bool {
+        let inner = self.shared.queue.lock().unwrap();
+        inner.senders == 0 && inner.buf.is_empty()
+    }
+
+    /// Fold externally measured wait time into this channel's
+    /// `recv_blocked_ns`. A signal-driven consumer waits on a
+    /// [`WakeSignal`] shared across channels instead of blocking inside
+    /// `recv_many`; attributing that wait here keeps the
+    /// send-vs-receive timing split live and monotone for such
+    /// consumers.
+    pub fn record_wait(&self, ns: u64) {
+        self.shared
+            .metrics
+            .recv_blocked_ns
+            .fetch_add(ns, Ordering::Relaxed);
+    }
+
     /// Snapshot of this channel's counters (both halves).
     pub fn metrics(&self) -> ChannelStats {
         self.shared.metrics.snapshot()
@@ -462,6 +622,7 @@ impl<T> Drop for Receiver<T> {
         inner.buf.clear();
         drop(inner);
         self.shared.not_full.notify_all();
+        self.shared.wake();
     }
 }
 
@@ -732,5 +893,99 @@ mod tests {
         }
         assert_eq!(tx.metrics().high_water, 5);
         let _ = rx.recv();
+    }
+
+    #[test]
+    fn try_send_distinguishes_full_from_closed() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.try_send(1).unwrap();
+        assert_eq!(tx.try_send(2), Err(TrySendError::Full(2)));
+        assert_eq!(rx.recv(), Some(1));
+        drop(rx);
+        assert_eq!(tx.try_send(3), Err(TrySendError::Closed(3)));
+        assert_eq!(TrySendError::Full(9).into_inner(), 9);
+    }
+
+    #[test]
+    fn is_ended_is_monotone_end_of_stream() {
+        let (tx, rx) = bounded::<u32>(4);
+        assert!(!rx.is_ended(), "sender alive");
+        tx.send(1).unwrap();
+        drop(tx);
+        assert!(!rx.is_ended(), "queued message still pending");
+        assert_eq!(rx.recv(), Some(1));
+        assert!(rx.is_ended());
+        assert!(rx.is_ended(), "stays ended");
+    }
+
+    #[test]
+    fn wake_signal_wakes_on_send_across_two_channels() {
+        // The two-input consumer shape: sleep on ONE signal, get woken
+        // by a message on EITHER channel.
+        let signal = WakeSignal::new();
+        let (tx_a, rx_a) = bounded_with_signal::<u32>(4, &signal);
+        let (tx_b, rx_b) = bounded_with_signal::<u32>(4, &signal);
+        let sig = signal.clone();
+        let h = thread::spawn(move || {
+            let mut got = Vec::new();
+            loop {
+                let seen = sig.epoch();
+                let mut buf = Vec::new();
+                rx_a.try_drain(&mut buf);
+                rx_b.try_drain(&mut buf);
+                got.extend(buf);
+                if got.len() == 2 {
+                    return got;
+                }
+                sig.wait_past(seen, std::time::Duration::from_secs(5));
+            }
+        });
+        thread::sleep(std::time::Duration::from_millis(10));
+        tx_a.send(1).unwrap();
+        thread::sleep(std::time::Duration::from_millis(10));
+        tx_b.send(2).unwrap();
+        let mut got = h.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+    }
+
+    #[test]
+    fn wake_signal_missed_wakeup_is_impossible_with_epoch_capture() {
+        // Epoch captured BEFORE the drain: a send racing between drain
+        // and wait bumps the epoch, so wait_past returns immediately.
+        let signal = WakeSignal::new();
+        let (tx, rx) = bounded_with_signal::<u32>(4, &signal);
+        let seen = signal.epoch();
+        tx.send(7).unwrap(); // "races" in after the epoch read
+        let mut buf = Vec::new();
+        rx.try_drain(&mut buf); // drained it, but epoch already moved
+        let t0 = Instant::now();
+        signal.wait_past(seen, std::time::Duration::from_secs(5));
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(1),
+            "wait_past must not sleep through a post-epoch send"
+        );
+    }
+
+    #[test]
+    fn wake_signal_fires_on_sender_teardown() {
+        let signal = WakeSignal::new();
+        let (tx, rx) = bounded_with_signal::<u32>(4, &signal);
+        let seen = signal.epoch();
+        let h = thread::spawn(move || {
+            thread::sleep(std::time::Duration::from_millis(10));
+            drop(tx);
+        });
+        signal.wait_past(seen, std::time::Duration::from_secs(5));
+        assert!(rx.is_ended(), "teardown woke the waiter into end-of-stream");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn record_wait_folds_into_recv_blocked() {
+        let (_tx, rx) = bounded::<u32>(4);
+        let before = rx.metrics().recv_blocked_ns;
+        rx.record_wait(1234);
+        assert_eq!(rx.metrics().recv_blocked_ns, before + 1234);
     }
 }

@@ -13,5 +13,8 @@ pub mod channel;
 pub mod worker;
 
 pub use actor::WorkerSnapshot;
-pub use channel::{bounded, ChannelStats, Receiver, SendError, Sender};
+pub use channel::{
+    bounded, bounded_with_signal, ChannelStats, Receiver, SendError, Sender,
+    TrySendError, WakeSignal,
+};
 pub use worker::{spawn, WorkerHandle};

@@ -24,6 +24,12 @@ use crate::data::types::ItemId;
 ///
 /// Returns fewer than `n` items when the union of the (filtered) inputs
 /// is smaller than `n`; empty inputs merge to an empty list.
+///
+/// **Truncation is a prefix**: for the same inputs, `merge_topn(.., k)`
+/// equals the first `k` items of `merge_topn(.., n)` for any `k <= n`
+/// (the full ranking is computed, then truncated). The serving cache
+/// relies on this to answer a shorter request from a cached longer
+/// merge without recomputing.
 pub fn merge_topn(
     lists: &[Vec<ItemId>],
     exclude: &HashSet<ItemId>,
@@ -124,6 +130,41 @@ mod tests {
         );
         let set: HashSet<ItemId> = merged.iter().copied().collect();
         assert_eq!(set.len(), merged.len(), "{merged:?}");
+    }
+
+    #[test]
+    fn truncation_is_a_prefix_of_the_longer_merge() {
+        // The property the serving cache leans on: a shorter request is
+        // exactly a prefix of the longer merge over the same inputs.
+        use crate::util::proptest::forall;
+        forall("merge_truncation_prefix", 100, |rng| {
+            let n_lists = 1 + rng.next_bounded(4) as usize;
+            let lists: Vec<Vec<ItemId>> = (0..n_lists)
+                .map(|_| {
+                    let len = rng.next_bounded(12) as usize;
+                    let mut l = Vec::new();
+                    for _ in 0..len {
+                        let item = rng.next_bounded(30);
+                        if !l.contains(&item) {
+                            l.push(item);
+                        }
+                    }
+                    l
+                })
+                .collect();
+            let exclude: HashSet<ItemId> = (0..rng.next_bounded(5))
+                .map(|_| rng.next_bounded(30))
+                .collect();
+            let n = 1 + rng.next_bounded(12) as usize;
+            let full = merge_topn(&lists, &exclude, n);
+            for k in 0..=n {
+                assert_eq!(
+                    merge_topn(&lists, &exclude, k),
+                    full[..k.min(full.len())],
+                    "k={k} n={n} lists={lists:?}"
+                );
+            }
+        });
     }
 
     // The rank-order proptest for the merge lives with the other query-

@@ -61,7 +61,7 @@
 //! cluster.ingest_batch(first_half)?;               // learning loop
 //! let recs = cluster.recommend(user, 10)?;         // serving loop
 //! let live = cluster.metrics()?;                   // live counters
-//! assert_eq!(live.processed, cluster.ingested());
+//! assert_eq!(live.processed + live.buffered, cluster.ingested());
 //!
 //! // Live elastic rescale: 4 -> 16 workers. Zero events lost, model
 //! // state moves exactly — the same query answers the same way.
@@ -93,10 +93,13 @@
 //!   over the batch. Sweep it for your workload with
 //!   `cargo run --release --bench pipeline` (writes `BENCH_ingest.json`).
 //! * **Flush-on-query** — you never trade consistency for throughput:
-//!   every route buffer is flushed before a `recommend`/`metrics` probe
-//!   is sent and in `finish()`, so reads always observe every prior
-//!   ingest and results are identical for any batch size
-//!   (property-tested in `tests/batching_equivalence.rs`).
+//!   a `recommend` flushes the *queried user's replica* route buffers
+//!   and carries a read-your-writes fence, so it always observes every
+//!   prior ingest for that user; `finish()` drains everything. Other
+//!   workers' buffers are left alone, and a `metrics` probe flushes
+//!   nothing at all (it reports `processed + buffered == ingested`).
+//!   Results are identical for any batch size (property-tested in
+//!   `tests/batching_equivalence.rs`).
 //! * **Prefer `ingest_batch` over per-event `ingest`** when events arrive
 //!   in slices: same semantics, but the routing loop stays hot and
 //!   buffers fill without re-entering the session between events.
@@ -104,6 +107,31 @@
 //! `RunReport::{backpressure_ns, recv_blocked_ns, mean_send_batch}` tell
 //! you which side of the transport (sender stalls vs receiver idling) a
 //! configuration is paying for.
+//!
+//! ## The serving plane (concurrent queries under live ingest)
+//!
+//! Queries run on a plane of their own: every worker has a dedicated
+//! bounded *query lane* that bypasses the ingest FIFO, so a `recommend`
+//! never queues behind ingest backpressure — in process and over TCP
+//! alike (query frames may overtake event frames on the wire). A
+//! read-your-writes **fence** (the newest sequence routed to the
+//! worker, captured at fan-out) keeps answers exact anyway: the worker
+//! parks the query until its applied watermark reaches the fence.
+//! [`coordinator::Cluster::serving`] returns a cloneable
+//! [`coordinator::ServingHandle`] whose `recommend` takes `&self`, so
+//! any number of threads query concurrently while ingest — and even a
+//! live rescale — proceed (property-tested in
+//! `tests/serving_equivalence.rs`). Repeated queries hit a sharded
+//! serving cache validated by `(topology epoch, column generation,
+//! column event count)`: a rescale, a crash recovery, or any write
+//! past `serving.cache_max_staleness` invalidates, so a stale answer is
+//! never served across those boundaries. Overload is *shed*, never
+//! queued unboundedly — at most `serving.max_in_flight` queries run at
+//! once and a full worker lane refuses instead of blocking
+//! (`ClusterMetrics::shed_queries`). The open-loop load harness
+//! `benches/serving.rs` drives a target QPS against a live ingesting
+//! cluster (one worker remote over loopback TCP) and records
+//! p50/p99/p99.9 serving latency into `BENCH_serving.json`.
 //!
 //! ## Elastic rescaling
 //!

@@ -153,13 +153,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     cluster.ingest_batch(&events)?;
     let live = cluster.metrics()?;
     println!(
-        "live: ingested={} processed={} recall={:.4} queries={} \
-         rescales={} recoveries={} replayed={} checkpoint_bytes={} \
-         router_epoch={}",
+        "live: ingested={} processed={} buffered={} recall={:.4} \
+         queries={} shed={} cache_hits={} rescales={} recoveries={} \
+         replayed={} checkpoint_bytes={} router_epoch={}",
         live.ingested,
         live.processed,
+        live.buffered,
         live.recall,
         live.queries,
+        live.shed_queries,
+        live.cache_hits,
         live.rescales,
         live.recoveries,
         live.replayed_events,

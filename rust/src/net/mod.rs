@@ -29,9 +29,10 @@ use anyhow::{bail, Context, Result};
 use crate::config::RunConfig;
 use crate::coordinator::router::StateGrid;
 use crate::engine::actor::{
-    ChaosPolicy, CheckpointMsg, CollectorMsg, WorkerActor, WorkerMsg,
+    ChaosPolicy, CheckpointMsg, CollectorMsg, QueryMsg, WorkerActor,
+    WorkerMsg,
 };
-use crate::engine::{spawn, Receiver, Sender, WorkerHandle};
+use crate::engine::{spawn, Receiver, Sender, WakeSignal, WorkerHandle};
 use crate::eval::WorkerReport;
 
 pub(crate) mod chaos;
@@ -54,6 +55,12 @@ pub(crate) struct WorkerBoot {
     pub(crate) grid: StateGrid,
     /// Consuming end of the slot's `WorkerMsg` FIFO.
     pub(crate) rx: Receiver<WorkerMsg>,
+    /// Consuming end of the slot's dedicated serving lane: queries
+    /// bypass the event FIFO entirely (see
+    /// [`QueryMsg`](crate::engine::actor::QueryMsg)).
+    pub(crate) query_rx: Receiver<QueryMsg>,
+    /// Shared wakeup latch covering both `rx` and `query_rx`.
+    pub(crate) signal: WakeSignal,
     /// Hit batches and `Done` markers flow here.
     pub(crate) col_tx: Sender<CollectorMsg>,
     /// Lane checkpoint frames (fault-tolerant sessions only).
@@ -82,8 +89,20 @@ pub(crate) struct InProcTransport;
 
 impl Transport for InProcTransport {
     fn spawn_worker(&self, boot: WorkerBoot) -> WorkerHandle<Result<WorkerReport>> {
-        let WorkerBoot { ord, cfg, grid, rx, col_tx, ckpt_tx, chaos } = boot;
-        let actor = WorkerActor::new(ord, cfg, grid, rx, col_tx, ckpt_tx, chaos);
+        let WorkerBoot {
+            ord,
+            cfg,
+            grid,
+            rx,
+            query_rx,
+            signal,
+            col_tx,
+            ckpt_tx,
+            chaos,
+        } = boot;
+        let actor = WorkerActor::new(
+            ord, cfg, grid, rx, query_rx, signal, col_tx, ckpt_tx, chaos,
+        );
         spawn(ord, "worker", move || actor.run())
     }
 

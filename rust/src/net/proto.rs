@@ -38,7 +38,11 @@ use crate::util::wire::{WireError, WireReader, WireWriter};
 /// frame and checked by the host before anything else is decoded.
 /// v2: liveness `Ping`/`Pong` frames + supervision and `[fault.net]`
 /// knobs appended to the config codec.
-pub(crate) const PROTO_VERSION: u8 = 2;
+/// v3: the query-plane split — `Query` frames carry the read-your-writes
+/// fence (and may arrive out of FIFO order; the host's serving lane
+/// parks them on the fence) + the `[serving]` knobs appended to the
+/// config codec.
+pub(crate) const PROTO_VERSION: u8 = 3;
 
 /// Upper bound on a single frame body (sanity cap so a corrupt length
 /// prefix fails fast instead of attempting a giant read).
@@ -91,7 +95,11 @@ pub(crate) enum Frame {
     Hello(Box<Hello>),
     /// A batch of stream events in FIFO order.
     Events(Vec<Envelope>),
-    /// `WorkerMsg::Query` as RPC.
+    /// [`QueryMsg`](crate::engine::actor::QueryMsg) as RPC. Unlike every
+    /// other coordinator frame this one is *not* FIFO-ordered relative
+    /// to `Events`: the proxy writes it immediately (the serving-lane
+    /// bypass), and the host parks it until the actor's applied
+    /// watermark reaches `fence`.
     Query {
         /// Multiplexer key echoed on the matching `Answer`.
         req_id: u64,
@@ -99,6 +107,9 @@ pub(crate) enum Frame {
         user: u64,
         /// Per-lane list length.
         n: u64,
+        /// Read-your-writes fence (`seq + 1` of the last event routed
+        /// to this worker; `0` = none).
+        fence: u64,
     },
     /// `WorkerMsg::MetricsSnapshot` as RPC.
     Snapshot {
@@ -203,11 +214,12 @@ impl Frame {
                     w.u64(env.rating.ts);
                 }
             }
-            Frame::Query { req_id, user, n } => {
+            Frame::Query { req_id, user, n, fence } => {
                 w.u8(TAG_QUERY);
                 w.u64(*req_id);
                 w.u64(*user);
                 w.u64(*n);
+                w.u64(*fence);
             }
             Frame::Snapshot { req_id } => {
                 w.u8(TAG_SNAPSHOT);
@@ -340,6 +352,7 @@ impl Frame {
                 req_id: r.u64()?,
                 user: r.u64()?,
                 n: r.u64()?,
+                fence: r.u64()?,
             },
             TAG_SNAPSHOT => Frame::Snapshot { req_id: r.u64()? },
             TAG_EXPORT => Frame::Export { req_id: r.u64()? },
@@ -569,6 +582,10 @@ fn encode_config(w: &mut WireWriter, cfg: &RunConfig) {
     w.u64(cfg.fault_net.sever_after_frames);
     w.u8(u8::from(cfg.fault_net.mid_frame_cut));
     w.u32(cfg.fault_net.refuse_dials);
+    w.u64(cfg.serving_queue_capacity as u64);
+    w.u64(cfg.serving_max_in_flight as u64);
+    w.u64(cfg.serving_cache_shards as u64);
+    w.u64(cfg.serving_cache_max_staleness);
 }
 
 fn decode_config(r: &mut WireReader<'_>) -> Result<RunConfig, WireError> {
@@ -636,6 +653,10 @@ fn decode_config(r: &mut WireReader<'_>) -> Result<RunConfig, WireError> {
         mid_frame_cut: r.u8()? != 0,
         refuse_dials: r.u32()?,
     };
+    let serving_queue_capacity = r.u64()? as usize;
+    let serving_max_in_flight = r.u64()? as usize;
+    let serving_cache_shards = r.u64()? as usize;
+    let serving_cache_max_staleness = r.u64()?;
     Ok(RunConfig {
         algorithm,
         backend,
@@ -665,6 +686,10 @@ fn decode_config(r: &mut WireReader<'_>) -> Result<RunConfig, WireError> {
         fault_rpc_timeout_ms,
         fault_heartbeat_interval_ms,
         fault_net,
+        serving_queue_capacity,
+        serving_max_in_flight,
+        serving_cache_shards,
+        serving_cache_max_staleness,
     })
 }
 
@@ -807,6 +832,10 @@ mod tests {
                 mid_frame_cut: true,
                 refuse_dials: 2,
             },
+            serving_queue_capacity: 77,
+            serving_max_in_flight: 33,
+            serving_cache_shards: 8,
+            serving_cache_max_staleness: 12,
             ..RunConfig::default()
         };
         vec![
@@ -826,7 +855,7 @@ mod tests {
                 },
             ]),
             Frame::Events(Vec::new()),
-            Frame::Query { req_id: 42, user: 17, n: 10 },
+            Frame::Query { req_id: 42, user: 17, n: 10, fence: 5000 },
             Frame::Snapshot { req_id: 43 },
             Frame::Export { req_id: 44 },
             Frame::Import {
@@ -930,6 +959,16 @@ mod tests {
             assert_eq!(back.artifacts_dir, cfg.artifacts_dir);
             assert_eq!(back.fault_dial_retries, cfg.fault_dial_retries);
             assert_eq!(back.fault_net, cfg.fault_net);
+            assert_eq!(
+                back.serving_queue_capacity,
+                cfg.serving_queue_capacity
+            );
+            assert_eq!(back.serving_max_in_flight, cfg.serving_max_in_flight);
+            assert_eq!(back.serving_cache_shards, cfg.serving_cache_shards);
+            assert_eq!(
+                back.serving_cache_max_staleness,
+                cfg.serving_cache_max_staleness
+            );
         }
     }
 

@@ -7,17 +7,24 @@
 //!
 //! The proxy thread dials the host (with bounded exponential backoff —
 //! see [`chaos::dial_with_backoff`]), sends the hello frame, then
-//! becomes the connection's single *writer*: it drains its `WorkerMsg`
-//! FIFO, batches consecutive events into one `Events` frame, and
-//! forwards control messages — flushing buffered events first, so the
-//! socket carries exactly the FIFO order the in-proc actor would have
-//! seen. A companion *reader* thread dispatches inbound frames: RPC
-//! replies resolve through a request-id multiplexer back to the parked
-//! reply `Sender`s, hit batches and `Done` markers go to the collector,
-//! and checkpoints are forwarded with the same non-blocking `try_send`
-//! contract the in-proc actor has (a full channel drops the frame; a
-//! fresher one always follows — blocking here would deadlock against a
-//! coordinator that is itself blocked sending events to this proxy).
+//! becomes the connection's single *writer* over the slot's two inputs:
+//! each wakeup on the shared [`WakeSignal`] it first drains the
+//! dedicated serving lane (`query_rx`) and writes each query as a
+//! `Query` frame *immediately* — ahead of any buffered events, which is
+//! the whole point of the lane; the frame carries the read-your-writes
+//! fence, so the host parks it until the covered events (later on the
+//! same socket, or already there) are applied — then drains the
+//! `WorkerMsg` FIFO, batches consecutive events into one `Events`
+//! frame, and forwards control messages, flushing buffered events
+//! first, so event-FIFO traffic keeps exactly the order the in-proc
+//! actor would have seen. A companion *reader* thread dispatches
+//! inbound frames: RPC replies resolve through a request-id multiplexer
+//! back to the parked reply `Sender`s, hit batches and `Done` markers
+//! go to the collector, and checkpoints are forwarded with the same
+//! non-blocking `try_send` contract the in-proc actor has (a full
+//! channel drops the frame; a fresher one always follows — blocking
+//! here would deadlock against a coordinator that is itself blocked
+//! sending events to this proxy).
 //!
 //! # Failure model
 //!
@@ -53,7 +60,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::engine::actor::{
-    CollectorMsg, Envelope, ReplicaAnswer, WorkerExport, WorkerMsg,
+    CollectorMsg, Envelope, QueryMsg, ReplicaAnswer, WorkerExport, WorkerMsg,
 };
 use crate::engine::{Sender, WorkerSnapshot};
 use crate::eval::WorkerReport;
@@ -205,7 +212,17 @@ impl Watchdog {
 /// (normal end of session / retire) or the actor exports. Panics on
 /// connection loss — see the module docs for why that is the contract.
 pub(crate) fn run_proxy(addr: &str, boot: WorkerBoot) -> Result<WorkerReport> {
-    let WorkerBoot { ord, cfg, grid, rx, col_tx, ckpt_tx, chaos } = boot;
+    let WorkerBoot {
+        ord,
+        cfg,
+        grid,
+        rx,
+        query_rx,
+        signal,
+        col_tx,
+        ckpt_tx,
+        chaos,
+    } = boot;
     let rpc_timeout_ms = cfg.fault_rpc_timeout_ms;
     let heartbeat_ms = cfg.fault_heartbeat_interval_ms;
     let fault = NetFaultPlan::from_config(&cfg)
@@ -272,33 +289,47 @@ pub(crate) fn run_proxy(addr: &str, boot: WorkerBoot) -> Result<WorkerReport> {
     let mut watchdog =
         Watchdog::new(rpc_timeout_ms, heartbeat_ms, Arc::clone(&health));
 
-    // Writer loop: drain the FIFO, batch events, forward control frames
-    // in FIFO position. `send` returns the frame to flush *after* the
-    // buffered events, preserving order on the socket.
+    // Writer loop: each WakeSignal wakeup drains the serving lane first
+    // (queries go out immediately — the fence makes overtaking buffered
+    // events safe), then the FIFO: batch events, forward control frames
+    // in FIFO position (`flush_events` before each control frame
+    // preserves event-FIFO order on the socket).
+    const IDLE_WAIT: Duration = Duration::from_millis(10);
+    let idle = tick.unwrap_or(IDLE_WAIT);
     let mut next_req: u64 = 0;
     let mut inbox: Vec<WorkerMsg> = Vec::new();
     let mut events: Vec<Envelope> = Vec::new();
+    let mut qbuf: Vec<QueryMsg> = Vec::new();
     let mut exported = false;
     'drain: loop {
-        let alive = match tick {
-            None => rx.recv_many(&mut inbox, usize::MAX),
-            Some(t) => rx.recv_many_deadline(
-                &mut inbox,
-                usize::MAX,
-                Instant::now() + t,
-            ),
-        };
+        // Epoch read BEFORE draining: anything arriving after it bumps
+        // the epoch, so the idle wait below can never sleep through a
+        // message (see `WakeSignal`).
+        let seen = signal.epoch();
+        let mut progress = query_rx.try_drain(&mut qbuf) > 0;
+        for q in qbuf.drain(..) {
+            let req_id = next_req;
+            next_req += 1;
+            park(&mux, req_id, Pending::Query(q.reply));
+            let frame = Frame::Query {
+                req_id,
+                user: q.user,
+                n: q.n as u64,
+                fence: q.fence,
+            };
+            if let Err(e) = link.write(&stream, &frame, true) {
+                fail(&mux, &stream);
+                lost(ord, addr, &e);
+            }
+        }
+        if rx.try_drain(&mut inbox) > 0 {
+            progress = true;
+        }
         for msg in inbox.drain(..) {
             let frame = match msg {
                 WorkerMsg::Event(env) => {
                     events.push(env);
                     continue;
-                }
-                WorkerMsg::Query { user, n, reply } => {
-                    let req_id = next_req;
-                    next_req += 1;
-                    park(&mux, req_id, Pending::Query(reply));
-                    Frame::Query { req_id, user, n: n as u64 }
                 }
                 WorkerMsg::MetricsSnapshot { reply } => {
                     let req_id = next_req;
@@ -326,10 +357,10 @@ pub(crate) fn run_proxy(addr: &str, boot: WorkerBoot) -> Result<WorkerReport> {
                     }
                     // Export is terminal for the actor (in-proc parity:
                     // it breaks its drain loop, so later sends fail).
-                    // Stop consuming the FIFO *now* — blocking in
-                    // recv_many here would deadlock the coordinator's
-                    // retire, which joins this thread before dropping
-                    // the next generation's senders.
+                    // Stop consuming the inputs *now* — waiting here
+                    // would deadlock the coordinator's retire, which
+                    // joins this thread before dropping the next
+                    // generation's senders.
                     exported = true;
                     break 'drain;
                 }
@@ -353,10 +384,23 @@ pub(crate) fn run_proxy(addr: &str, boot: WorkerBoot) -> Result<WorkerReport> {
                 lost(ord, addr, &cause);
             }
         }
-        if !alive {
+        if rx.is_ended() {
+            // End of stream: every coordinator-side event sender is
+            // gone (the serving plan drops its clone last, so no query
+            // can still be en route behind this point).
             break 'drain;
         }
+        if !progress {
+            let t0 = Instant::now();
+            signal.wait_past(seen, idle);
+            rx.record_wait(t0.elapsed().as_nanos() as u64);
+        }
     }
+    // Closing the serving lane drops any still-queued QueryMsg (reply
+    // senders with them): a fan-out blocked on this slot wakes with
+    // "sender gone" and retries — same degradation as a dead in-proc
+    // worker's parked queries.
+    drop(query_rx);
     drop(rx);
     if !exported {
         // Clean hangup: all coordinator senders gone. Tell the host to

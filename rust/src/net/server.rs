@@ -6,13 +6,16 @@
 //! full run configuration), after which the host builds the same
 //! channel plumbing an in-process spawn would have — a bounded
 //! `WorkerMsg` FIFO, a collector channel, and (with fault tolerance on)
-//! a checkpoint channel — and runs the actor on a local thread. A
-//! *reader* thread translates inbound frames into `WorkerMsg`s (reply
-//! senders for the RPC variants are parked in a FIFO of pending
-//! replies; the actor answers in request order because it is
-//! sequential), and the connection's handler thread *pumps* outbound
-//! traffic: hit batches, checkpoints, RPC replies, and finally the
-//! actor's report.
+//! a checkpoint channel, and the dedicated serving lane `Query` frames
+//! ride (fence and all) — and runs the actor on a local thread. A
+//! *reader* thread translates inbound frames into `WorkerMsg`s and
+//! `QueryMsg`s; reply senders for the RPC variants are parked in a FIFO
+//! of pending replies, and the connection's handler thread *pumps*
+//! outbound traffic: hit batches, checkpoints, RPC replies, and finally
+//! the actor's report. Event-FIFO RPCs (snapshot, export) complete in
+//! request order because the actor is sequential; query replies do
+//! *not* — a fence can park a query past a later snapshot — so the pump
+//! resolves them out of order wherever they sit in the queue.
 //!
 //! # Ordering invariant
 //!
@@ -47,10 +50,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::router::StateGrid;
 use crate::engine::actor::{
-    ChaosPolicy, CollectorMsg, ReplicaAnswer, WorkerActor, WorkerExport,
-    WorkerMsg,
+    ChaosPolicy, CollectorMsg, QueryMsg, ReplicaAnswer, WorkerActor,
+    WorkerExport, WorkerMsg,
 };
-use crate::engine::{bounded, spawn, Receiver, Sender, WorkerSnapshot};
+use crate::engine::{
+    bounded, bounded_with_signal, spawn, Receiver, Sender, WakeSignal,
+    WorkerSnapshot,
+};
 use crate::net::chaos::{FrameChaos, NetFaultPlan, Side};
 use crate::net::proto::{read_frame, Frame, Hello};
 
@@ -326,8 +332,21 @@ fn serve_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
         .context("rebuilding the state grid from the hello frame")?;
     let chaos = ChaosPolicy::from_parts(kill_at_seq, kill_in_checkpoint);
 
-    // The same plumbing Supervisor::spawn_slot builds for a local slot.
-    let (tx, rx) = bounded::<WorkerMsg>(cfg.channel_capacity);
+    // The same plumbing Supervisor::spawn_slot builds for a local slot:
+    // one shared wake latch over the event FIFO and the serving lane.
+    // The serving lane's capacity sits comfortably above the
+    // coordinator's global in-flight cap, so the reader's `try_send`
+    // into it can never legitimately fill up — the reader must never
+    // block there, because queries and events share one socket and a
+    // blocked reader would stall the very events a parked fence waits
+    // on.
+    let signal = WakeSignal::new();
+    let (tx, rx) =
+        bounded_with_signal::<WorkerMsg>(cfg.channel_capacity, &signal);
+    let (query_tx, query_rx) = bounded_with_signal::<QueryMsg>(
+        cfg.serving_max_in_flight + 256,
+        &signal,
+    );
     let (col_tx, col_rx) = bounded::<CollectorMsg>(1024);
     let (ckpt_tx, ckpt_rx) = if cfg.fault_checkpoint_interval > 0 {
         let (ctx, crx) = bounded(grid.n_lanes() as usize + 64);
@@ -335,8 +354,9 @@ fn serve_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
     } else {
         (None, None)
     };
-    let actor =
-        WorkerActor::new(ord, cfg, grid, rx, col_tx, ckpt_tx, chaos);
+    let actor = WorkerActor::new(
+        ord, cfg, grid, rx, query_rx, signal, col_tx, ckpt_tx, chaos,
+    );
     let actor_handle = spawn(ord, "worker", move || actor.run());
 
     let pending: Arc<Mutex<VecDeque<PendingReply>>> =
@@ -347,7 +367,7 @@ fn serve_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
         std::thread::Builder::new()
             .name(format!("net-host-reader-{ord}"))
             .spawn(move || {
-                reader_loop(reader_stream, tx, &pending, &shared)
+                reader_loop(reader_stream, tx, query_tx, &pending, &shared)
             })
             .context("spawning the connection reader")?
     };
@@ -397,10 +417,11 @@ fn serve_connection(shared: &Arc<Shared>, stream: TcpStream) -> Result<()> {
 fn reader_loop(
     mut stream: BufReader<TcpStream>,
     tx: Sender<WorkerMsg>,
+    query_tx: Sender<QueryMsg>,
     pending: &Arc<Mutex<VecDeque<PendingReply>>>,
     shared: &Arc<Shared>,
 ) {
-    let mut tx = Some(tx);
+    let mut lanes = Some((tx, query_tx));
     loop {
         let frame = match read_frame(&mut stream) {
             Ok(Some(frame)) => frame,
@@ -420,7 +441,7 @@ fn reader_loop(
                 .push_back(PendingReply::Pong(nonce));
             continue;
         }
-        let Some(sender) = tx.as_ref() else {
+        let Some((sender, qsender)) = lanes.as_ref() else {
             // Frames after Close violate the protocol; drop them and
             // keep draining to EOF so the peer's writes don't block.
             continue;
@@ -444,12 +465,18 @@ fn reader_loop(
             Frame::Import { lane, restore_counters, bytes } => sender
                 .send(WorkerMsg::Import { lane, bytes, restore_counters })
                 .is_ok(),
-            Frame::Query { req_id, user, n } => {
+            Frame::Query { req_id, user, n, fence } => {
+                // `try_send`, never `send`: the lane's capacity bound
+                // makes Full impossible in a well-behaved session (see
+                // `serve_connection`), and Closed means the actor died
+                // — both drop the connection loudly rather than block
+                // the socket the fence's events arrive on.
                 let (rtx, rrx) = bounded::<ReplicaAnswer>(1);
-                let ok = sender
-                    .send(WorkerMsg::Query {
+                let ok = qsender
+                    .try_send(QueryMsg {
                         user,
                         n: n as usize,
+                        fence,
                         reply: rtx,
                     })
                     .is_ok();
@@ -488,10 +515,12 @@ fn reader_loop(
                 ok
             }
             Frame::Close => {
-                // Drop our FIFO sender: the actor drains and reports.
-                // Keep reading to EOF so a slow peer never blocks on a
-                // full socket buffer.
-                tx = None;
+                // Drop both lane senders: the actor drains and reports
+                // (end-of-stream needs the event sender gone; closing
+                // the serving lane releases any still-queued reply
+                // senders). Keep reading to EOF so a slow peer never
+                // blocks on a full socket buffer.
+                lanes = None;
                 continue;
             }
             _ => {
@@ -574,26 +603,63 @@ fn pump(
                 broken = Some(e);
             }
         }
-        // Resolve at most ONE pending RPC reply per pass, in request
-        // order (the actor is sequential, so replies complete in the
-        // order they were asked). One per pass keeps the wire faithful
-        // to the in-proc ordering: hits the actor flushed before
-        // answering the *next* request are picked up by the next pass's
-        // collector drain and ship ahead of that reply.
+        // Query replies first, resolved *anywhere* in the queue: the
+        // serving lane answers out of order relative to the FIFO RPCs
+        // (a fence can park a query past a later snapshot, and a
+        // snapshot can be answered while an earlier query is still
+        // parked), so front-of-queue discipline would wedge. Eager
+        // shipping is safe ordering-wise because serving is a frozen
+        // read — a query never produces hits for a checkpoint to cover.
+        // A query the actor dropped (end-of-stream, death) leaves a
+        // dead, empty reply channel: discard it so the queue cannot
+        // wedge behind it.
+        let mut answers: Vec<Frame> = Vec::new();
+        {
+            let mut queue = pending.lock().expect("pending poisoned");
+            let mut dropped = false;
+            queue.retain(|entry| {
+                let PendingReply::Query(req_id, rrx) = entry else {
+                    return true;
+                };
+                let mut out = Vec::new();
+                rrx.try_drain(&mut out);
+                if let Some(answer) = out.pop() {
+                    answers
+                        .push(Frame::Answer { req_id: *req_id, answer });
+                    return false;
+                }
+                if rrx.is_ended() || finished || broken.is_some() {
+                    dropped = true;
+                    return false;
+                }
+                true
+            });
+            progress |= dropped;
+        }
+        for frame in answers {
+            progress = true;
+            if broken.is_none() {
+                if let Err(e) = link.write(stream, &frame, true) {
+                    broken = Some(e);
+                }
+            }
+        }
+        // Then at most ONE FIFO RPC reply per pass, in request order
+        // (the actor is sequential, so these complete in the order they
+        // were asked). One per pass keeps the wire faithful to the
+        // in-proc ordering: hits the actor flushed before answering the
+        // *next* request are picked up by the next pass's collector
+        // drain and ship ahead of that reply.
         let reply = {
             let mut queue = pending.lock().expect("pending poisoned");
             match queue.front() {
                 None => None,
                 Some(front) => {
                     let ready = match front {
-                        PendingReply::Query(req_id, rrx) => {
-                            let mut out = Vec::new();
-                            rrx.try_drain(&mut out);
-                            out.pop().map(|answer| Frame::Answer {
-                                req_id: *req_id,
-                                answer,
-                            })
-                        }
+                        // Unreachable after the sweep above (every
+                        // ready or dead query was removed); a parked
+                        // query simply isn't ready yet.
+                        PendingReply::Query(..) => None,
                         PendingReply::Snapshot(req_id, rrx) => {
                             let mut out = Vec::new();
                             rrx.try_drain(&mut out);

@@ -3,8 +3,10 @@
 //! optimization, so every observable — the prequential hit sequence
 //! (recall curve), per-worker reports, and online recommendations — must
 //! be identical for any `ingest_batch_size` and any ingest chunking.
-//! Also covers the flush-before-query rule: a query or metrics probe
-//! issued mid-buffer must observe every previously ingested event.
+//! Also covers the flush-before-query rule: a recommend issued
+//! mid-buffer flushes the queried user's replica buffers first, so it
+//! observes every previously ingested event for that user — while a
+//! metrics probe observes without flushing anything at all.
 
 use streamrec::config::{Algorithm, RunConfig, Topology};
 use streamrec::coordinator::Cluster;
@@ -119,13 +121,14 @@ fn query_mid_buffer_sees_all_ingested_events() {
 
     let m = buffered.metrics().unwrap();
     assert_eq!(m.ingested, 400);
-    assert_eq!(
-        m.processed, 400,
-        "a metrics probe mid-buffer must flush route buffers first"
-    );
+    // Regression guard for the serving plane: a metrics probe must NOT
+    // force a flush — the events stay buffered and are reported as such.
+    assert_eq!(m.processed, 0, "metrics() must not flush route buffers");
+    assert_eq!(m.buffered, 400, "buffered events must be accounted for");
 
-    // Read-your-writes: a recommend issued mid-buffer answers from models
-    // that have seen every prior event — identical to the unbatched
+    // Read-your-writes: a recommend issued mid-buffer flushes the queried
+    // user's replica buffers first, so it answers from models that have
+    // seen every prior event for that user — identical to the unbatched
     // cluster, and never recommending something the user already rated.
     let user = evs[0].user;
     let recs = buffered.recommend(user, 10).unwrap();

@@ -205,6 +205,9 @@ fn recovery_metrics_are_plumbed_end_to_end() {
     cfg.fault_chaos_kill_seq = Some(500);
     let mut cluster = Cluster::spawn_labeled(&cfg, "t-metrics").unwrap();
     cluster.ingest_batch(&evs[..800]).unwrap();
+    // metrics() no longer flushes route buffers; flush explicitly so the
+    // processed count is exact across the recovery.
+    cluster.flush().unwrap();
     let m = cluster.metrics().unwrap();
     assert_eq!(m.ingested, 800);
     assert_eq!(m.processed, 800, "read-your-writes across the recovery");
@@ -220,6 +223,67 @@ fn recovery_metrics_are_plumbed_end_to_end() {
     assert!(report.replayed_events >= m.replayed_events);
     assert!(report.recovery_pause_ns >= m.recovery_pause_ns);
     assert_eq!(total_processed(&report), 1200);
+}
+
+#[test]
+fn recovery_invalidates_cached_answers_for_the_killed_workers_columns() {
+    // The serving cache (keyed per user, validated by topology epoch +
+    // column generation) must never replay a pre-crash answer into the
+    // post-recovery world. An infinite staleness budget makes ingest
+    // alone *unable* to invalidate the entry, so the only thing standing
+    // between the stale answer and the caller is the column-generation
+    // bump in `ServingState::on_recover` — which this test pins down.
+    let evs = events(1200, 55);
+    let mut cfg = RunConfig {
+        algorithm: Algorithm::Isgd,
+        topology: Topology::new(1, 0).unwrap(),
+        sample_every: 200,
+        fault_checkpoint_interval: 8,
+        serving_cache_max_staleness: u64::MAX,
+        ..RunConfig::default()
+    };
+    cfg.fault_chaos_kill_seq = Some(900);
+    let mut cluster = Cluster::spawn_labeled(&cfg, "t-cache-inv").unwrap();
+    cluster.ingest_batch(&evs[..600]).unwrap();
+    let user = evs[0].user;
+    let before = cluster.recommend(user, 10).unwrap();
+    assert_eq!(
+        cluster.recommend(user, 10).unwrap(),
+        before,
+        "repeat query agrees"
+    );
+    let m = cluster.metrics().unwrap();
+    assert_eq!(m.cache_hits, 1, "the repeat query was served from cache");
+    assert_eq!(m.recoveries, 0, "the kill seq has not been reached yet");
+
+    // Drive through the kill point: the single worker dies at seq 900
+    // and is recovered, which bumps the generation of every column it
+    // hosts (all of them, on a 1-worker topology). The metrics probe
+    // rides the FIFO *behind* the kill point, so it forces the death to
+    // be detected and healed before we query — with an infinite
+    // staleness budget, a query racing ahead of detection may still be
+    // served from cache, and that is allowed; the property under test
+    // is that no query *after* the recovery ever is.
+    cluster.ingest_batch(&evs[600..]).unwrap();
+    let m = cluster.metrics().unwrap();
+    assert_eq!(m.recoveries, 1);
+    let after = cluster.recommend(user, 10).unwrap();
+    let m = cluster.metrics().unwrap();
+    assert_eq!(
+        m.cache_hits, 1,
+        "a post-recovery query must MISS the cache even under an \
+         infinite staleness budget: the entry predates the restored state"
+    );
+
+    // The recomputed answer equals a never-crashed session at the same
+    // watermark (exactly-once recovery), not the stale cached one.
+    let mut clean_cfg = cfg.clone();
+    clean_cfg.fault_chaos_kill_seq = None;
+    let mut clean = Cluster::spawn_labeled(&clean_cfg, "t-cache-base").unwrap();
+    clean.ingest_batch(&evs).unwrap();
+    assert_eq!(after, clean.recommend(user, 10).unwrap());
+    clean.finish().unwrap();
+    cluster.finish().unwrap();
 }
 
 #[test]

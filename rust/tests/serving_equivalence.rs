@@ -1,0 +1,330 @@
+//! Serving-plane correctness under concurrency: the query plane must be
+//! *semantically invisible* no matter how many threads use it.
+//!
+//! Two property families:
+//!
+//! * **Quiesced equivalence** — at any ingest watermark, for any number
+//!   of concurrent caller threads, every `recommend` answer equals the
+//!   answer a freshly flushed, quiescent reference cluster gives at the
+//!   same watermark — for both algorithms, random ingest batch sizes and
+//!   chunkings, with and without a mid-stream rescale, in-proc and over
+//!   loopback TCP. And after the session, the model state of the
+//!   query-hammered cluster is **byte-identical** (`state_fingerprint`)
+//!   to a query-free run, with identical hit totals and recall curves.
+//! * **Concurrent stress** — N reader threads issue queries *while* the
+//!   owner thread ingests and performs a live rescale. No deadlock
+//!   (bounded wall time), no shed below the admission threshold, no
+//!   degraded answers, and every answer is well-formed.
+
+use std::time::{Duration, Instant};
+
+use streamrec::config::{Algorithm, RunConfig, Topology};
+use streamrec::coordinator::Cluster;
+use streamrec::data::synth::{SyntheticConfig, SyntheticStream};
+use streamrec::data::types::Rating;
+use streamrec::eval::RunReport;
+use streamrec::net::WorkerServer;
+use streamrec::util::proptest::forall;
+use streamrec::util::rng::mix64;
+
+fn events(n: u64, seed: u64) -> Vec<Rating> {
+    SyntheticStream::new(SyntheticConfig::movielens_like(n, seed)).collect()
+}
+
+/// First `k` distinct users of a slice, in stream order.
+fn panel(evs: &[Rating], k: usize) -> Vec<u64> {
+    let mut users = Vec::new();
+    for e in evs {
+        if !users.contains(&e.user) {
+            users.push(e.user);
+            if users.len() == k {
+                break;
+            }
+        }
+    }
+    users
+}
+
+fn cfg(algo: Algorithm, ingest_batch_size: usize) -> RunConfig {
+    RunConfig {
+        algorithm: algo,
+        topology: Topology::new(2, 0).unwrap(),
+        rescale_max_n_i: 4,
+        sample_every: 200,
+        ingest_batch_size,
+        ..RunConfig::default()
+    }
+}
+
+/// What a session produces: the panel answers after each ingest round,
+/// the end-of-session state fingerprint, and the final report.
+struct Outcome {
+    rounds: Vec<Vec<Vec<u64>>>,
+    fingerprint: u64,
+    report: RunReport,
+}
+
+/// The reference: a quiescent cluster, queried single-threaded through
+/// `Cluster::recommend` after each chunk (the driver thread is the only
+/// thread alive, so each answer is taken at an exact watermark).
+fn run_reference(
+    cfg: &RunConfig,
+    evs: &[Rating],
+    chunk: usize,
+    users: &[u64],
+    rescale_round: Option<usize>,
+) -> Outcome {
+    let mut cluster = Cluster::spawn_labeled(cfg, "t-serve-ref").unwrap();
+    let mut rounds = Vec::new();
+    for (r, ch) in evs.chunks(chunk).enumerate() {
+        if Some(r) == rescale_round {
+            cluster.rescale(Topology::new(4, 0).unwrap()).unwrap();
+        }
+        cluster.ingest_batch(ch).unwrap();
+        rounds.push(
+            users
+                .iter()
+                .map(|&u| cluster.recommend(u, 10).unwrap())
+                .collect(),
+        );
+    }
+    let fingerprint = cluster.state_fingerprint().unwrap();
+    let report = cluster.finish().unwrap();
+    Outcome { rounds, fingerprint, report }
+}
+
+/// The noisy run: same ingest schedule, but after every chunk `threads`
+/// threads query the whole panel concurrently through cloned
+/// [`ServingHandle`]s. All threads must agree with each other — the
+/// caller then compares the agreed answers against the reference.
+fn run_noisy(
+    cfg: &RunConfig,
+    evs: &[Rating],
+    chunk: usize,
+    users: &[u64],
+    threads: usize,
+    rescale_round: Option<usize>,
+) -> Outcome {
+    let mut cluster = Cluster::spawn_labeled(cfg, "t-serve-noisy").unwrap();
+    let handle = cluster.serving();
+    let mut rounds = Vec::new();
+    for (r, ch) in evs.chunks(chunk).enumerate() {
+        if Some(r) == rescale_round {
+            cluster.rescale(Topology::new(4, 0).unwrap()).unwrap();
+        }
+        cluster.ingest_batch(ch).unwrap();
+        // No ingest is in flight now, so every thread's fence covers the
+        // full ingested prefix: all answers are at the same watermark.
+        let per_thread: Vec<Vec<Vec<u64>>> = std::thread::scope(|s| {
+            let joins: Vec<_> = (0..threads)
+                .map(|_| {
+                    let h = handle.clone();
+                    s.spawn(move || {
+                        users
+                            .iter()
+                            .map(|&u| h.recommend(u, 10).unwrap())
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        for t in &per_thread[1..] {
+            assert_eq!(
+                t, &per_thread[0],
+                "round {r}: concurrent threads must agree"
+            );
+        }
+        rounds.push(per_thread.into_iter().next().unwrap());
+    }
+    let m = cluster.metrics().unwrap();
+    assert_eq!(m.shed_queries, 0, "panel load sits below admission");
+    assert_eq!(m.degraded_queries, 0, "no worker ever failed");
+    let fingerprint = cluster.state_fingerprint().unwrap();
+    let report = cluster.finish().unwrap();
+    Outcome { rounds, fingerprint, report }
+}
+
+/// A query-free run of the same ingest schedule, for the byte-identity
+/// baseline.
+fn run_silent(
+    cfg: &RunConfig,
+    evs: &[Rating],
+    chunk: usize,
+    rescale_round: Option<usize>,
+) -> Outcome {
+    let mut cluster = Cluster::spawn_labeled(cfg, "t-serve-silent").unwrap();
+    for (r, ch) in evs.chunks(chunk).enumerate() {
+        if Some(r) == rescale_round {
+            cluster.rescale(Topology::new(4, 0).unwrap()).unwrap();
+        }
+        cluster.ingest_batch(ch).unwrap();
+    }
+    let fingerprint = cluster.state_fingerprint().unwrap();
+    let report = cluster.finish().unwrap();
+    Outcome { rounds: Vec::new(), fingerprint, report }
+}
+
+fn assert_equivalent(reference: &Outcome, noisy: &Outcome, label: &str) {
+    assert_eq!(
+        reference.rounds, noisy.rounds,
+        "{label}: every concurrent answer must equal the quiesced \
+         reference at the same watermark"
+    );
+    assert_eq!(
+        reference.fingerprint, noisy.fingerprint,
+        "{label}: queries perturbed model state"
+    );
+    assert_eq!(reference.report.hits, noisy.report.hits, "{label}: hits");
+    assert_eq!(
+        reference.report.recall_curve, noisy.report.recall_curve,
+        "{label}: recall curves"
+    );
+}
+
+#[test]
+fn property_concurrent_queries_match_quiesced_answers_inproc() {
+    // For random (algorithm, ingest batch size, chunking, ± mid-stream
+    // rescale): concurrent query answers equal the quiesced reference,
+    // and the queried cluster's final state is byte-identical to a
+    // query-free run.
+    let evs = events(2200, 71);
+    let users = panel(&evs, 4);
+    forall("serving_equivalence", 6, |rng| {
+        let algo = if rng.next_bounded(2) == 0 {
+            Algorithm::Isgd
+        } else {
+            Algorithm::Cosine
+        };
+        let batch = 1 + rng.next_bounded(200) as usize;
+        let chunk = 250 + rng.next_bounded(400) as usize;
+        let n_rounds = (evs.len() + chunk - 1) / chunk;
+        let rescale_round = if rng.next_bounded(2) == 0 {
+            Some(1 + rng.next_bounded(n_rounds.max(2) as u64 - 1) as usize)
+        } else {
+            None
+        };
+        let label = format!(
+            "algo={algo:?} batch={batch} chunk={chunk} \
+             rescale={rescale_round:?}"
+        );
+        let c = cfg(algo, batch);
+        let reference = run_reference(&c, &evs, chunk, &users, rescale_round);
+        let noisy = run_noisy(&c, &evs, chunk, &users, 4, rescale_round);
+        let silent = run_silent(&c, &evs, chunk, rescale_round);
+        assert_equivalent(&reference, &noisy, &label);
+        assert_eq!(
+            silent.fingerprint, noisy.fingerprint,
+            "{label}: query-free state baseline"
+        );
+        assert_eq!(silent.report.hits, noisy.report.hits, "{label}");
+        assert_eq!(
+            silent.report.recall_curve, noisy.report.recall_curve,
+            "{label}"
+        );
+    });
+}
+
+#[test]
+fn concurrent_queries_match_quiesced_answers_over_tcp() {
+    // The same equivalence with every worker behind loopback TCP: query
+    // frames bypass the event stream on the wire (fence-parked at the
+    // host), so this also pins down the remote fence path. The reference
+    // is the quiesced *in-proc* cluster — transport must not matter.
+    let evs = events(1400, 83);
+    let users = panel(&evs, 4);
+    let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+    let addr = format!("tcp://{}", server.local_addr());
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let c = cfg(algo, 64);
+        let mut tcp_cfg = c.clone();
+        tcp_cfg.cluster_workers = vec![addr.clone()];
+        let reference = run_reference(&c, &evs, 350, &users, Some(2));
+        let noisy = run_noisy(&tcp_cfg, &evs, 350, &users, 3, Some(2));
+        assert_equivalent(&reference, &noisy, &format!("{algo:?} tcp"));
+    }
+    server.wait_idle(Duration::from_millis(100));
+    server.shutdown().unwrap();
+}
+
+/// Shared body of the stress tests: `threads` readers hammer the serving
+/// handle with a fixed query budget while the owner thread ingests the
+/// whole stream and performs one live rescale in the middle. Returns the
+/// total number of successful queries.
+fn stress_session(mut cluster: Cluster, evs: &[Rating], threads: usize) -> u64 {
+    let users = panel(evs, 16);
+    let handle = cluster.serving();
+    let t0 = Instant::now();
+    let answered = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = handle.clone();
+                let users = &users;
+                s.spawn(move || {
+                    let mut ok = 0u64;
+                    for i in 0..200u64 {
+                        let u = users
+                            [(mix64(t as u64 ^ i.wrapping_mul(31)) as usize)
+                                % users.len()];
+                        // n = 0 exercises the empty-ask fast path too.
+                        let n = (mix64(i) % 11) as usize;
+                        let recs = h.recommend(u, n).unwrap();
+                        assert!(recs.len() <= n);
+                        ok += 1;
+                    }
+                    ok
+                })
+            })
+            .collect();
+
+        // Owner thread: live ingest with a rescale in the middle, racing
+        // the readers the whole time.
+        let half = evs.len() / 2;
+        cluster.ingest_batch(&evs[..half]).unwrap();
+        cluster.rescale(Topology::new(4, 0).unwrap()).unwrap();
+        cluster.ingest_batch(&evs[half..]).unwrap();
+
+        joins.into_iter().map(|j| j.join().unwrap()).sum::<u64>()
+    });
+    assert!(
+        t0.elapsed() < Duration::from_secs(120),
+        "stress session must be deadlock-free and bounded"
+    );
+    let m = cluster.metrics().unwrap();
+    assert_eq!(
+        m.shed_queries, 0,
+        "below the admission threshold nothing is shed"
+    );
+    assert_eq!(m.degraded_queries, 0, "no worker ever failed");
+    assert!(m.queries > 0, "workers actually answered queries");
+    assert_eq!(m.rescales, 1);
+    let report = cluster.finish().unwrap();
+    assert_eq!(report.events, evs.len() as u64, "no ingest lost under load");
+    answered
+}
+
+#[test]
+fn stress_many_readers_during_ingest_and_rescale_inproc() {
+    let evs = events(6000, 91);
+    let cluster =
+        Cluster::spawn_labeled(&cfg(Algorithm::Isgd, 64), "t-stress").unwrap();
+    let answered = stress_session(cluster, &evs, 8);
+    assert_eq!(answered, 8 * 200);
+}
+
+#[test]
+fn stress_many_readers_during_ingest_and_rescale_over_tcp() {
+    // Same race with a mixed placement — every other worker remote over
+    // loopback TCP — so concurrent queries, ingest, and the rescale all
+    // cross the wire protocol's serving lane.
+    let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+    let evs = events(4000, 97);
+    let mut c = cfg(Algorithm::Isgd, 64);
+    c.cluster_workers =
+        vec!["local".to_string(), format!("tcp://{}", server.local_addr())];
+    let cluster = Cluster::spawn_labeled(&c, "t-stress-tcp").unwrap();
+    let answered = stress_session(cluster, &evs, 4);
+    assert_eq!(answered, 4 * 200);
+    server.wait_idle(Duration::from_millis(200));
+    server.shutdown().unwrap();
+}

@@ -19,11 +19,12 @@ declare -A RECORDS=(
   [rescale]=BENCH_rescale.json
   [recovery]=BENCH_recovery.json
   [transport]=BENCH_transport.json
+  [serving]=BENCH_serving.json
 )
 
 benches=("$@")
 if [ ${#benches[@]} -eq 0 ]; then
-  benches=(pipeline rescale recovery transport)
+  benches=(pipeline rescale recovery transport serving)
 fi
 
 for bench in "${benches[@]}"; do
