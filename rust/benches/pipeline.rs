@@ -9,6 +9,10 @@
 //!
 //! These are the criterion-equivalent end-to-end benches (the offline
 //! build has no criterion; `benchutil` provides warmup + p50/p99).
+//!
+//! `PIPELINE_BENCH_SMOKE=1` (CI, `scripts/record_bench.sh --smoke`)
+//! shrinks the stream and skips the Fig 8/14 tables, but still records
+//! the full `BENCH_ingest.json` row schema from a real run.
 
 use std::time::Instant;
 
@@ -19,8 +23,13 @@ use streamrec::engine::bounded;
 use streamrec::util::json::{num, obj, s, to_string, Json};
 
 fn main() -> anyhow::Result<()> {
-    println!("== pipeline benchmarks (Fig 8 / Fig 14 shape) ==");
-    let events = DatasetSpec::parse("nf-like:30000", 21)?.load()?;
+    let smoke = std::env::var("PIPELINE_BENCH_SMOKE")
+        .map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false);
+    println!("== pipeline benchmarks (Fig 8 / Fig 14 shape, smoke={smoke}) ==");
+    let dataset = if smoke { "nf-like:6000" } else { "nf-like:30000" };
+    let events = DatasetSpec::parse(dataset, 21)?.load()?;
+    let chan_count = if smoke { 200_000u64 } else { 2_000_000u64 };
 
     // Channel substrate cost first (context for the numbers below):
     // per-message sends vs bulk send_many + draining recv_many.
@@ -34,7 +43,7 @@ fn main() -> anyhow::Result<()> {
             n
         });
         let t0 = Instant::now();
-        let count = 2_000_000u64;
+        let count = chan_count;
         for i in 0..count {
             tx.send(i).unwrap();
         }
@@ -58,7 +67,7 @@ fn main() -> anyhow::Result<()> {
             n
         });
         let t0 = Instant::now();
-        let count = 2_000_000u64;
+        let count = chan_count;
         let mut batch = Vec::with_capacity(256);
         for i in 0..count {
             batch.push(i);
@@ -86,7 +95,9 @@ fn main() -> anyhow::Result<()> {
     );
     let mut sweep_rows: Vec<Json> = Vec::new();
     let mut base_thpt = None;
-    for batch_size in [1usize, 8, 64, 256] {
+    let batch_sizes: &[usize] =
+        if smoke { &[1, 64, 256] } else { &[1, 8, 64, 256] };
+    for &batch_size in batch_sizes {
         let cfg = RunConfig {
             topology: Topology::new(2, 0)?,
             sample_every: 10_000,
@@ -118,14 +129,19 @@ fn main() -> anyhow::Result<()> {
     }
     let doc = obj(vec![
         ("bench", s("ingest_batch_size sweep")),
-        ("dataset", s("nf-like:30000 (seed 21)")),
+        ("dataset", s(&format!("{dataset} (seed 21)"))),
         ("algorithm", s("isgd")),
         ("n_i", num(2.0)),
+        ("smoke", num(if smoke { 1.0 } else { 0.0 })),
         ("rows", Json::Arr(sweep_rows)),
     ]);
     std::fs::write("BENCH_ingest.json", to_string(&doc) + "\n")?;
     println!("(sweep recorded in BENCH_ingest.json)");
 
+    if smoke {
+        println!("(smoke mode: skipping the Fig 8 / Fig 14 tables)");
+        return Ok(());
+    }
     println!(
         "\n{:8} {:>4} {:>10} {:>12} {:>12} {:>10}",
         "algo", "n_i", "policy", "events", "ev/s", "speedup"

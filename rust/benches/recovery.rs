@@ -12,6 +12,10 @@
 //! checkpoint traffic but a shorter replay — this bench is the knob's
 //! price list. Results are written to `BENCH_recovery.json` (current
 //! working directory), mirroring the `BENCH_rescale.json` convention.
+//!
+//! `RECOVERY_BENCH_SMOKE=1` (CI, `scripts/record_bench.sh --smoke`)
+//! shrinks to one warm size and one interval, same row schema and the
+//! same recovery assertions.
 
 use streamrec::config::{Algorithm, RunConfig, Topology};
 use streamrec::coordinator::Cluster;
@@ -19,8 +23,15 @@ use streamrec::data::DatasetSpec;
 use streamrec::util::json::{num, obj, s, to_string, Json};
 
 fn main() -> anyhow::Result<()> {
-    println!("== recovery benchmarks (pause vs state size) ==");
-    let events = DatasetSpec::parse("nf-like:120000", 33)?.load()?;
+    let smoke = std::env::var("RECOVERY_BENCH_SMOKE")
+        .map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false);
+    println!("== recovery benchmarks (pause vs state size, smoke={smoke}) ==");
+    let dataset = if smoke { "nf-like:5000" } else { "nf-like:120000" };
+    let events = DatasetSpec::parse(dataset, 33)?.load()?;
+    let warms: &[usize] =
+        if smoke { &[4_000] } else { &[5_000, 20_000, 80_000] };
+    let intervals: &[u64] = if smoke { &[512] } else { &[512, 8_192] };
 
     println!(
         "{:8} {:>9} {:>9} | {:>11} {:>9} {:>13}",
@@ -28,8 +39,8 @@ fn main() -> anyhow::Result<()> {
     );
     let mut rows = Vec::new();
     for algo in [Algorithm::Isgd, Algorithm::Cosine] {
-        for &warm in &[5_000usize, 20_000, 80_000] {
-            for &interval in &[512u64, 8_192] {
+        for &warm in warms {
+            for &interval in intervals {
                 let cfg = RunConfig {
                     algorithm: algo,
                     topology: Topology::new(2, 0)?,
@@ -85,7 +96,8 @@ fn main() -> anyhow::Result<()> {
     }
     let doc = obj(vec![
         ("bench", s("recovery pause vs state size")),
-        ("dataset", s("nf-like:120000 (seed 33)")),
+        ("dataset", s(&format!("{dataset} (seed 33)"))),
+        ("smoke", num(if smoke { 1.0 } else { 0.0 })),
         (
             "scenario",
             s("n_i 2 (4 workers), kill the worker processing the last \

@@ -9,6 +9,9 @@
 //! lanes moved for both directions. Results are written to
 //! `BENCH_rescale.json` (current working directory), mirroring the
 //! `BENCH_ingest.json` convention.
+//!
+//! `RESCALE_BENCH_SMOKE=1` (CI, `scripts/record_bench.sh --smoke`)
+//! shrinks the stream to one warm size per algorithm, same row schema.
 
 use streamrec::config::{Algorithm, RunConfig, Topology};
 use streamrec::coordinator::Cluster;
@@ -16,8 +19,14 @@ use streamrec::data::DatasetSpec;
 use streamrec::util::json::{num, obj, s, to_string, Json};
 
 fn main() -> anyhow::Result<()> {
-    println!("== rescale benchmarks (pause vs state size) ==");
-    let events = DatasetSpec::parse("nf-like:120000", 33)?.load()?;
+    let smoke = std::env::var("RESCALE_BENCH_SMOKE")
+        .map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false);
+    println!("== rescale benchmarks (pause vs state size, smoke={smoke}) ==");
+    let dataset = if smoke { "nf-like:5000" } else { "nf-like:120000" };
+    let events = DatasetSpec::parse(dataset, 33)?.load()?;
+    let warms: &[usize] =
+        if smoke { &[3_000] } else { &[5_000, 20_000, 80_000] };
 
     println!(
         "{:8} {:>9} {:>12} | {:>11} {:>11} {:>7} | {:>11} {:>11}",
@@ -32,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     );
     let mut rows = Vec::new();
     for algo in [Algorithm::Isgd, Algorithm::Cosine] {
-        for &warm in &[5_000usize, 20_000, 80_000] {
+        for &warm in warms {
             let cfg = RunConfig {
                 algorithm: algo,
                 topology: Topology::new(2, 0)?,
@@ -79,8 +88,9 @@ fn main() -> anyhow::Result<()> {
     }
     let doc = obj(vec![
         ("bench", s("rescale pause vs state size")),
-        ("dataset", s("nf-like:120000 (seed 33)")),
+        ("dataset", s(&format!("{dataset} (seed 33)"))),
         ("topologies", s("n_i 2 -> 4 -> 2, state grid 4x4")),
+        ("smoke", num(if smoke { 1.0 } else { 0.0 })),
         ("rows", Json::Arr(rows)),
     ]);
     std::fs::write("BENCH_rescale.json", to_string(&doc) + "\n")?;

@@ -11,6 +11,10 @@
 //! seeded `[fault.net]` sever forces a respawn through refused dials,
 //! across three `fault.dial_backoff_ms` settings. Results are recorded
 //! in `BENCH_transport.json` (schema: docs/EXPERIMENTS.md).
+//!
+//! `TRANSPORT_BENCH_SMOKE=1` (CI, `scripts/record_bench.sh --smoke`)
+//! shrinks the stream and records one backoff row instead of three,
+//! with the same row schema and the same hit-equality assertions.
 
 use std::time::Instant;
 
@@ -21,8 +25,13 @@ use streamrec::net::WorkerServer;
 use streamrec::util::json::{num, obj, s, to_string, Json};
 
 fn main() -> anyhow::Result<()> {
-    println!("== transport benchmarks (in-proc vs loopback TCP) ==");
-    let events = DatasetSpec::parse("nf-like:30000", 21)?.load()?;
+    let smoke = std::env::var("TRANSPORT_BENCH_SMOKE")
+        .map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false);
+    println!("== transport benchmarks (in-proc vs loopback TCP, smoke={smoke}) ==");
+    let dataset = if smoke { "nf-like:8000" } else { "nf-like:30000" };
+    let events = DatasetSpec::parse(dataset, 21)?.load()?;
+    let warm = if smoke { 1000 } else { 2000 };
 
     // One host serves every remote slot (each connection is its own
     // actor, exactly like a separate `streamrec worker` process).
@@ -51,7 +60,7 @@ fn main() -> anyhow::Result<()> {
         };
         // Warmup pass (connection setup, allocator, page cache), then
         // the measured pass.
-        run_pipeline(&cfg, &events[..2000], &format!("warmup-{name}"))?;
+        run_pipeline(&cfg, &events[..warm], &format!("warmup-{name}"))?;
         let t0 = Instant::now();
         let r = run_pipeline(&cfg, &events, &format!("bench-{name}"))?;
         let dt = t0.elapsed().as_secs_f64();
@@ -92,7 +101,8 @@ fn main() -> anyhow::Result<()> {
         "dial backoff", "events", "ev/s", "recoveries", "pause ms"
     );
     let mut recovery_rows: Vec<Json> = Vec::new();
-    for backoff_ms in [5u64, 25, 100] {
+    let backoffs: &[u64] = if smoke { &[5] } else { &[5, 25, 100] };
+    for &backoff_ms in backoffs {
         let cfg = RunConfig {
             topology: Topology::new(2, 0)?,
             sample_every: 10_000,
@@ -137,9 +147,10 @@ fn main() -> anyhow::Result<()> {
 
     let doc = obj(vec![
         ("bench", s("worker transport: in-proc vs loopback TCP")),
-        ("dataset", s("nf-like:30000 (seed 21)")),
+        ("dataset", s(&format!("{dataset} (seed 21)"))),
         ("algorithm", s("isgd")),
         ("n_i", num(2.0)),
+        ("smoke", num(if smoke { 1.0 } else { 0.0 })),
         ("rows", Json::Arr(rows)),
         ("recovery_rows", Json::Arr(recovery_rows)),
     ]);

@@ -374,9 +374,23 @@ impl CosineModel {
                 scored.push((est, rated_mass, p));
             }
         }
-        scored.sort_unstable_by(|a, b| {
+        // (est desc, rated_mass desc, id asc) — a strict total order
+        // (ids are unique), so select-nth + sort-the-prefix returns the
+        // byte-identical list a full sort would, at O(C + n log n)
+        // instead of O(C log C) over the whole candidate set (the same
+        // shape `collect_topk` uses; BENCH_hotpath.json `cosine_rank/*`).
+        let by_rank = |a: &(f32, f32, ItemId), b: &(f32, f32, ItemId)| {
             b.0.total_cmp(&a.0).then(b.1.total_cmp(&a.1)).then(a.2.cmp(&b.2))
-        });
+        };
+        if scored.len() > n {
+            if n == 0 {
+                scored.clear();
+            } else {
+                scored.select_nth_unstable_by(n - 1, by_rank);
+                scored.truncate(n);
+            }
+        }
+        scored.sort_unstable_by(by_rank);
         let out: Vec<ItemId> =
             scored.iter().take(n).map(|&(_, _, p)| p).collect();
         // Return the scratch buffers.
@@ -1075,5 +1089,49 @@ mod tests {
         assert_eq!(s.users, 5);
         assert_eq!(s.items, 4);
         assert_eq!(s.aux, 12); // 6 unordered pairs x 2 directions
+    }
+
+    #[test]
+    fn rank_matches_full_sort_reference() {
+        // The select-nth ranking tail must return the byte-identical
+        // prefix of a full sort, ties included. `rank` with n >= |scored|
+        // never enters the select-nth branch — it IS the naive full-sort
+        // reference — so every top-n must equal its prefix. Ratings are
+        // uniform 5.0, so similarity and estimate ties are everywhere;
+        // the (est desc, mass desc, id asc) tie-break carries the proof.
+        use crate::util::proptest::forall;
+        for strict in [true, false] {
+            forall("cosine_rank_vs_full_sort", 25, |rng| {
+                let k = 1 + rng.next_bounded(5) as usize;
+                let mut m = CosineModel::with_mode(k, strict);
+                for step in 0..200u64 {
+                    m.update(&ev(
+                        rng.next_bounded(10),
+                        rng.next_bounded(18),
+                        step,
+                    ));
+                }
+                for user in 0..10u64 {
+                    // recommend() first settles any due cache rebuilds;
+                    // the full list and every shorter read after it see
+                    // identical estimates.
+                    let full = m.recommend(user, 10_000);
+                    for n in [0usize, 1, 2, 3, 7, 15] {
+                        let top = m.recommend(user, n);
+                        assert_eq!(
+                            top,
+                            full[..n.min(full.len())],
+                            "strict={strict} user={user} n={n}"
+                        );
+                        let served = m.serve(user, n);
+                        assert_eq!(
+                            served,
+                            full[..n.min(full.len())],
+                            "serve: strict={strict} user={user} n={n}"
+                        );
+                    }
+                }
+            });
+        }
     }
 }

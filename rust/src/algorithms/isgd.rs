@@ -16,7 +16,7 @@ use anyhow::{bail, Result};
 
 use crate::algorithms::StreamingRecommender;
 use crate::data::types::{ItemId, Rating, StateSizes, UserId};
-use crate::runtime::ScoringBackend;
+use crate::runtime::{Scored, ScoringBackend};
 use crate::state::{SweepKind, TrackedMap, VectorSlab};
 use crate::util::rng::Pcg32;
 use crate::util::wire::{WireReader, WireWriter};
@@ -42,6 +42,10 @@ pub struct IsgdModel {
     lambda: f32,
     /// Scratch for recommend() (no per-event allocation).
     rec_buf: Vec<ItemId>,
+    /// Caller-owned scoring scratch threaded through
+    /// [`ScoringBackend::topn_into`] — the candidate heap lives here, so
+    /// steady-state serving allocates nothing per query.
+    topn_scratch: Vec<Scored>,
     /// Events processed (diagnostics).
     pub updates: u64,
 }
@@ -65,6 +69,7 @@ impl IsgdModel {
             eta,
             lambda,
             rec_buf: Vec::new(),
+            topn_scratch: Vec::new(),
             updates: 0,
         }
     }
@@ -102,9 +107,14 @@ impl StreamingRecommender for IsgdModel {
         // artifact overfetch bound; the native backend honours any size,
         // PJRT caps at the compiled length (n + |rated| rarely exceeds it).
         let want = (n + state.rated.len()).min(n + 40);
-        let scored = self.backend.topn(&state.vec, &self.items, want);
+        self.backend.topn_into(
+            &state.vec,
+            &self.items,
+            want,
+            &mut self.topn_scratch,
+        );
         self.rec_buf.clear();
-        for s in scored {
+        for s in &self.topn_scratch {
             if let Some(id) = self.items.id_at(s.row) {
                 if !state.rated.contains(&id) {
                     self.rec_buf.push(id);

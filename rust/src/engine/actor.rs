@@ -306,9 +306,12 @@ pub(crate) struct LaneFrame<'a> {
     pub(crate) model: &'a [u8],
 }
 
-/// Encode one lane into its wire frame.
+/// Encode one lane into its wire frame. The model partition is
+/// serialized first so the writer can be sized exactly — one allocation
+/// per checkpoint for the header+body copy, no growth doublings.
 fn encode_lane_frame(lane: &Lane) -> Vec<u8> {
-    let mut w = WireWriter::new();
+    let model = lane.model.export_partition(&|_| true);
+    let mut w = WireWriter::with_capacity(LANE_FRAME_HEADER + model.len());
     w.u8(LANE_FRAME_VERSION);
     w.u8(u8::from(lane.watermark.is_some()));
     w.u64(lane.watermark.unwrap_or(0));
@@ -320,7 +323,7 @@ fn encode_lane_frame(lane: &Lane) -> Vec<u8> {
     w.u64(ev);
     w.u64(ts);
     w.u64(sw);
-    w.bytes(&lane.model.export_partition(&|_| true));
+    w.bytes(&model);
     w.into_bytes()
 }
 

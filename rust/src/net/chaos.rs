@@ -31,7 +31,7 @@ use std::time::Duration;
 use crate::config::RunConfig;
 use crate::util::rng::{mix64, Pcg32};
 
-use super::proto::{write_frame, Frame};
+use super::proto::{write_frame_into, Frame};
 
 /// Domain separator for the dial-backoff jitter stream so it never
 /// correlates with the per-connection fault draws.
@@ -142,12 +142,16 @@ pub(crate) struct FrameChaos {
     /// Counted frames still to deliver; `None` = never sever.
     fuse: Option<u64>,
     mid_frame: bool,
+    /// Recycled per-connection encode buffer: every delivered frame is
+    /// built here, so the steady-state event path never allocates per
+    /// write (BENCH_hotpath.json `wire_encode/*` measures the win).
+    wbuf: Vec<u8>,
 }
 
 impl FrameChaos {
     /// A transparent wrapper (the no-plan / not-my-side case).
     pub(crate) fn none() -> FrameChaos {
-        FrameChaos { fuse: None, mid_frame: false }
+        FrameChaos { fuse: None, mid_frame: false, wbuf: Vec::new() }
     }
 
     /// Arm this side with `fault`'s sever iff it targets `side`.
@@ -156,6 +160,7 @@ impl FrameChaos {
             Some(s) if s.side == side => FrameChaos {
                 fuse: Some(s.after_frames),
                 mid_frame: s.mid_frame,
+                wbuf: Vec::new(),
             },
             _ => FrameChaos::none(),
         }
@@ -171,14 +176,14 @@ impl FrameChaos {
         counts: bool,
     ) -> std::io::Result<()> {
         let Some(fuse) = &mut self.fuse else {
-            return write_frame(&mut stream, frame);
+            return write_frame_into(&mut stream, frame, &mut self.wbuf);
         };
         if !counts {
-            return write_frame(&mut stream, frame);
+            return write_frame_into(&mut stream, frame, &mut self.wbuf);
         }
         if *fuse > 1 {
             *fuse -= 1;
-            return write_frame(&mut stream, frame);
+            return write_frame_into(&mut stream, frame, &mut self.wbuf);
         }
         // The fuse burned down: this frame dies instead of going out.
         if self.mid_frame {

@@ -191,7 +191,47 @@ impl Frame {
     /// Encode into a frame body (tag + payload, no length prefix — the
     /// socket layer adds that).
     pub(crate) fn encode(&self) -> Vec<u8> {
-        let mut w = WireWriter::new();
+        let mut w = WireWriter::with_capacity(self.size_hint());
+        self.encode_into(&mut w);
+        w.into_bytes()
+    }
+
+    /// Exact encoded body size for the fixed-layout and hot variants,
+    /// a ballpark for the cold config/report ones. Only a capacity
+    /// hint — encoding never depends on it — but an exact hint on the
+    /// per-event path means the write buffer never growth-reallocs
+    /// mid-frame (BENCH_hotpath.json `wire_encode/*` rows).
+    fn size_hint(&self) -> usize {
+        match self {
+            Frame::Hello(_) | Frame::Report(_) => 512,
+            Frame::Events(envs) => 5 + 36 * envs.len(),
+            Frame::Query { .. } => 33,
+            Frame::Snapshot { .. } | Frame::Export { .. } => 9,
+            Frame::Import { bytes, .. } => 14 + bytes.len(),
+            Frame::Close => 1,
+            Frame::Ping { .. } | Frame::Pong { .. } => 9,
+            Frame::Answer { answer, .. } => {
+                13 + answer.lists.iter().map(|l| 4 + 8 * l.len()).sum::<usize>()
+                    + 4
+                    + 8 * answer.rated.len()
+            }
+            Frame::SnapshotReply { .. } => 73,
+            Frame::ExportReply { export, .. } => {
+                21 + export
+                    .lanes
+                    .iter()
+                    .map(|l| 12 + l.bytes.len())
+                    .sum::<usize>()
+            }
+            Frame::Hits(samples) => 5 + 9 * samples.len(),
+            Frame::Done { .. } => 9,
+            Frame::Checkpoint { bytes, .. } => 21 + bytes.len(),
+        }
+    }
+
+    /// Append the encoded body to `w` (the workhorse behind
+    /// [`Frame::encode`] and [`write_frame_into`]'s reused buffer).
+    fn encode_into(&self, w: &mut WireWriter) {
         match self {
             Frame::Hello(h) => {
                 w.u8(TAG_HELLO);
@@ -199,9 +239,9 @@ impl Frame {
                 w.u64(h.ord);
                 w.u64(h.v_i);
                 w.u64(h.v_u);
-                opt_u64(&mut w, h.kill_at_seq);
+                opt_u64(w, h.kill_at_seq);
                 w.u8(u8::from(h.kill_in_checkpoint));
-                encode_config(&mut w, &h.cfg);
+                encode_config(w, &h.cfg);
             }
             Frame::Events(envs) => {
                 w.u8(TAG_EVENTS);
@@ -261,7 +301,7 @@ impl Frame {
                 w.u64(snap.hits);
                 w.u64(snap.queries);
                 w.u64(snap.lanes);
-                encode_state(&mut w, &snap.state);
+                encode_state(w, &snap.state);
             }
             Frame::ExportReply { req_id, export } => {
                 w.u8(TAG_EXPORT_REPLY);
@@ -293,10 +333,9 @@ impl Frame {
             }
             Frame::Report(report) => {
                 w.u8(TAG_REPORT);
-                encode_report(&mut w, report);
+                encode_report(w, report);
             }
         }
-        w.into_bytes()
     }
 
     /// Decode a frame body. Unknown tags, truncation at any byte,
@@ -443,19 +482,30 @@ impl Frame {
     }
 }
 
-/// Write one length-prefixed frame. The prefix and body go out in a
-/// single `write_all` so a frame is never interleaved with another
-/// writer's bytes (each connection has exactly one writer thread; this
-/// keeps the failure mode of a future refactor loud instead of subtle).
-pub(crate) fn write_frame(
+/// Write one length-prefixed frame, building it in the caller-owned
+/// `buf` (cleared, allocation recycled) — a connection's steady-state
+/// event path allocates nothing per frame. The prefix and body go out
+/// in a single `write_all` so a frame is never interleaved with
+/// another writer's bytes (each connection has exactly one writer
+/// thread), and the wire bytes are exactly
+/// `(body.len() as u32).to_le_bytes() ++ frame.encode()` — the prefix
+/// is written as a placeholder and patched once the body length is
+/// known.
+pub(crate) fn write_frame_into(
     w: &mut impl Write,
     frame: &Frame,
+    buf: &mut Vec<u8>,
 ) -> std::io::Result<()> {
-    let body = frame.encode();
-    let mut out = Vec::with_capacity(4 + body.len());
-    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    out.extend_from_slice(&body);
-    w.write_all(&out)
+    let mut ww = WireWriter::from_vec(std::mem::take(buf));
+    ww.reserve(4 + frame.size_hint());
+    ww.u32(0); // length placeholder
+    frame.encode_into(&mut ww);
+    let mut out = ww.into_bytes();
+    let body_len = (out.len() - 4) as u32;
+    out[..4].copy_from_slice(&body_len.to_le_bytes());
+    let res = w.write_all(&out);
+    *buf = out;
+    res
 }
 
 /// Read one length-prefixed frame. `Ok(None)` is a clean end-of-stream
@@ -1055,10 +1105,36 @@ mod tests {
     }
 
     #[test]
-    fn stream_read_write_round_trips_and_ends_cleanly() {
+    fn reused_write_buffer_is_byte_identical_to_fresh_writes() {
+        // One recycled buffer across every variant (small frames after
+        // big ones included) must put the exact same bytes on the wire
+        // as a fresh buffer per frame, and both must equal the documented
+        // layout: le length prefix ++ Frame::encode().
+        let mut reused = Vec::new();
         let mut buf = Vec::new();
         for frame in every_variant() {
-            write_frame(&mut buf, &frame).unwrap();
+            write_frame_into(&mut reused, &frame, &mut buf).unwrap();
+        }
+        let mut fresh = Vec::new();
+        for frame in every_variant() {
+            write_frame_into(&mut fresh, &frame, &mut Vec::new()).unwrap();
+        }
+        assert_eq!(reused, fresh);
+        let mut manual = Vec::new();
+        for frame in every_variant() {
+            let body = frame.encode();
+            manual.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            manual.extend_from_slice(&body);
+        }
+        assert_eq!(reused, manual);
+    }
+
+    #[test]
+    fn stream_read_write_round_trips_and_ends_cleanly() {
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        for frame in every_variant() {
+            write_frame_into(&mut buf, &frame, &mut scratch).unwrap();
         }
         let mut cursor = std::io::Cursor::new(&buf[..]);
         let mut n = 0;

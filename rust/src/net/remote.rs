@@ -475,7 +475,15 @@ fn flush_events(
         return Ok(());
     }
     let frame = Frame::Events(std::mem::take(events));
-    link.write(stream, &frame, true)
+    let res = link.write(stream, &frame, true);
+    // Take the batch buffer back out of the frame so its capacity is
+    // reused across drained windows — the steady-state ingest path
+    // re-grows nothing per flush.
+    if let Frame::Events(mut batch) = frame {
+        batch.clear();
+        *events = batch;
+    }
+    res
 }
 
 /// Reader-thread body: dispatch inbound frames until the host hangs up.

@@ -247,22 +247,30 @@ impl ScoringBackend for PjrtBackend {
         "pjrt"
     }
 
-    fn topn(&mut self, u: &[f32], slab: &VectorSlab, n: usize) -> Vec<Scored> {
+    fn topn_into(
+        &mut self,
+        u: &[f32],
+        slab: &VectorSlab,
+        n: usize,
+        out: &mut Vec<Scored>,
+    ) {
         if slab.capacity() > self.max_bucket {
             self.fallbacks += 1;
-            return self.native.topn(u, slab, n);
+            return self.native.topn_into(u, slab, n, out);
         }
         match self.engine.topn(u, slab) {
-            Ok(mut scored) => {
-                scored.truncate(n);
-                scored
+            Ok(scored) => {
+                // The PJRT execute allocates its own result literals;
+                // the caller scratch still amortizes the truncated copy.
+                out.clear();
+                out.extend(scored.into_iter().take(n));
             }
             Err(e) => {
                 // A failed execute is a bug, not a recoverable condition —
                 // but degrade gracefully rather than poisoning the worker.
                 log::error!("pjrt topn failed ({e:#}); native fallback");
                 self.fallbacks += 1;
-                self.native.topn(u, slab, n)
+                self.native.topn_into(u, slab, n, out);
             }
         }
     }

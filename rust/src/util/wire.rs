@@ -38,6 +38,28 @@ impl WireWriter {
         Self::default()
     }
 
+    /// Fresh empty writer whose buffer is pre-sized for `cap` bytes, so
+    /// an encoder that knows its output size up front pays one exact
+    /// allocation instead of a sequence of growth doublings.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap) }
+    }
+
+    /// Fresh *empty* writer that recycles `buf`'s allocation (the vector
+    /// is cleared, its capacity kept). Paired with
+    /// [`WireWriter::into_bytes`] this lets a hot encode loop — e.g. the
+    /// per-frame TCP write path — reuse one buffer across iterations
+    /// instead of allocating per frame.
+    pub fn from_vec(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        Self { buf }
+    }
+
+    /// Reserve room for at least `additional` more bytes.
+    pub fn reserve(&mut self, additional: usize) {
+        self.buf.reserve(additional);
+    }
+
     /// Bytes written so far.
     pub fn len(&self) -> usize {
         self.buf.len()
@@ -324,6 +346,26 @@ mod tests {
         let err = WireReader::new(&bytes).string().unwrap_err();
         assert_eq!(err.pos, 0);
         assert!(err.to_string().contains("UTF-8"));
+    }
+
+    #[test]
+    fn recycled_and_presized_writers_encode_identically() {
+        let encode = |mut w: WireWriter| {
+            w.u8(3);
+            w.u64(0xFEED_FACE_CAFE_BEEF);
+            w.byte_slice(&[7, 7, 7]);
+            w.into_bytes()
+        };
+        let fresh = encode(WireWriter::new());
+        assert_eq!(encode(WireWriter::with_capacity(64)), fresh);
+        // from_vec clears stale content but keeps the allocation.
+        let recycled = Vec::from([9u8; 128]);
+        let cap = recycled.capacity();
+        let w = WireWriter::from_vec(recycled);
+        assert!(w.is_empty());
+        let bytes = encode(w);
+        assert_eq!(bytes, fresh);
+        assert!(bytes.capacity() >= cap, "allocation was recycled");
     }
 
     #[test]

@@ -6,9 +6,23 @@
 # benches write to the *current working directory*, so this script must
 # run from the repo root (it cd's there itself).
 #
+# BENCH_drift.json is NOT recorded here: it comes from the experiment
+# driver (`streamrec experiment --config configs/drift_paper.toml`),
+# not from a cargo bench target.
+#
 # Usage:
-#   scripts/record_bench.sh            # all recorded benches
-#   scripts/record_bench.sh transport  # just one
+#   scripts/record_bench.sh                    # all recorded benches, full shapes
+#   scripts/record_bench.sh transport          # just one
+#   scripts/record_bench.sh --smoke hotpath    # CI shapes (<BENCH>_BENCH_SMOKE=1)
+#   scripts/record_bench.sh --smoke --check …  # also fail on a throughput
+#                                              # regression vs the committed JSON
+#
+# --check compares the best per-second figure in the freshly recorded
+# file against the best figure in the committed file (skipped when the
+# committed file is still a stub or was recorded at a different
+# smoke/full shape). The gate is deliberately loose — it catches
+# order-of-magnitude regressions, not noise: fail when
+#   new_max < old_max * (1 - RECORD_BENCH_CHECK_TOLERANCE)   (default 0.6)
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -20,12 +34,37 @@ declare -A RECORDS=(
   [recovery]=BENCH_recovery.json
   [transport]=BENCH_transport.json
   [serving]=BENCH_serving.json
+  [hotpath]=BENCH_hotpath.json
 )
 
-benches=("$@")
+smoke=0
+check=0
+benches=()
+for arg in "$@"; do
+  case "$arg" in
+    --smoke) smoke=1 ;;
+    --check) check=1 ;;
+    --*) echo "unknown flag '$arg'" >&2; exit 1 ;;
+    *) benches+=("$arg") ;;
+  esac
+done
 if [ ${#benches[@]} -eq 0 ]; then
-  benches=(pipeline rescale recovery transport serving)
+  benches=(pipeline rescale recovery transport serving hotpath)
 fi
+
+# Best "per second" figure in a recorded file (rows use throughput_ev_s,
+# throughput_per_sec, or per_sec depending on the bench). Prints 0 when
+# the file has none.
+best_rate() {
+  grep -oE '"(throughput_ev_s|throughput_per_sec|per_sec)": *-?[0-9.eE+-]+' "$1" \
+    | awk -F': *' 'BEGIN { m = 0 } { if ($2 + 0 > m) m = $2 + 0 } END { print m }'
+}
+
+# Smoke/full shape tag of a recorded file ("" when absent, i.e. stubs or
+# pre-smoke recordings).
+shape_of() {
+  grep -oE '"smoke": *[0-9]+' "$1" | head -n1 | grep -oE '[0-9]+$' || true
+}
 
 for bench in "${benches[@]}"; do
   out="${RECORDS[$bench]:-}"
@@ -33,11 +72,39 @@ for bench in "${benches[@]}"; do
     echo "unknown bench '$bench' (known: ${!RECORDS[*]})" >&2
     exit 1
   fi
-  echo "== recording $out via 'cargo bench --bench $bench' =="
-  cargo bench --manifest-path rust/Cargo.toml --bench "$bench"
-  if grep -q '"status"' "$out"; then
+
+  old_rate=""
+  if [ "$check" = 1 ] && [ -f "$out" ] && ! grep -q '"not yet recorded' "$out"; then
+    if [ "$(shape_of "$out")" = "$smoke" ]; then
+      old_rate="$(best_rate "$out")"
+    else
+      echo "($out was recorded at a different smoke/full shape; check skipped)"
+    fi
+  fi
+
+  if [ "$smoke" = 1 ]; then
+    env_name="$(echo "$bench" | tr '[:lower:]' '[:upper:]')_BENCH_SMOKE"
+    echo "== recording $out via 'cargo bench --bench $bench' ($env_name=1) =="
+    env "$env_name=1" cargo bench --manifest-path rust/Cargo.toml --bench "$bench"
+  else
+    echo "== recording $out via 'cargo bench --bench $bench' =="
+    cargo bench --manifest-path rust/Cargo.toml --bench "$bench"
+  fi
+
+  if grep -q '"not yet recorded' "$out"; then
     echo "error: $out still looks like a stub after the run" >&2
     exit 1
   fi
   echo "recorded: $out"
+
+  if [ -n "$old_rate" ] && awk -v o="$old_rate" 'BEGIN { exit !(o > 0) }'; then
+    new_rate="$(best_rate "$out")"
+    tol="${RECORD_BENCH_CHECK_TOLERANCE:-0.6}"
+    if awk -v n="$new_rate" -v o="$old_rate" -v t="$tol" \
+        'BEGIN { exit !(n < o * (1 - t)) }'; then
+      echo "error: $out regressed: best rate $new_rate/s < $old_rate/s * (1 - $tol)" >&2
+      exit 1
+    fi
+    echo "check ok: $out best rate $new_rate/s vs committed $old_rate/s (tol $tol)"
+  fi
 done
