@@ -1,0 +1,193 @@
+//! Memory-tier benchmark: what does a `[memory]` budget cost?
+//!
+//! For each algorithm the bench first runs the stream *unlimited* to
+//! measure the working set (final resident state bytes), then re-runs
+//! it under a budget of **one tenth of that working set** — a
+//! population 10x beyond the cap — in two modes:
+//!
+//! * **spill-only** (no `[forgetting]` policy): pressure sweeps cannot
+//!   evict, so the budget is enforced purely by tiering cold lanes to
+//!   disk. Resident bytes stay bounded and the results are
+//!   *byte-identical* to the unlimited run (asserted on the hit count)
+//!   — the cost is fault-in churn, visible in the throughput column.
+//! * **evict+spill** (LFU pressure sweeps + spill): sweeps shed
+//!   low-frequency entries first, spill covers what remains. The recall
+//!   delta vs the unlimited run is the quantified price of forgetting
+//!   under pressure.
+//!
+//! The grid is over-partitioned (`rescale.max_n_i = 4`, so 16 lanes on
+//! one worker) to give the tiering real cold lanes to choose from.
+//! Results are written to `BENCH_memory.json` (current working
+//! directory), mirroring the other `BENCH_*` conventions.
+//!
+//! `MEMORY_BENCH_SMOKE=1` (CI, `scripts/record_bench.sh --smoke`)
+//! shrinks the stream; same row schema, same assertions.
+
+use streamrec::config::{Algorithm, Forgetting, RunConfig, Topology};
+use streamrec::coordinator::Cluster;
+use streamrec::data::types::Rating;
+use streamrec::data::DatasetSpec;
+use streamrec::util::json::{num, obj, s, to_string, Json};
+
+struct RunOut {
+    resident_bytes: u64,
+    state_bytes: u64,
+    spilled_bytes: u64,
+    spills: u64,
+    spill_faultins: u64,
+    evicted: u64,
+    hits: u64,
+    avg_recall: f64,
+    throughput: f64,
+}
+
+fn run(cfg: &RunConfig, label: &str, events: &[Rating]) -> anyhow::Result<RunOut> {
+    let mut cluster = Cluster::spawn_labeled(cfg, label)?;
+    cluster.ingest_batch(events)?;
+    cluster.flush()?;
+    // The snapshot is the bounded-residency witness: every worker
+    // re-measures its lanes and re-enforces its budget right before
+    // replying, so `resident_bytes` here is exact, not sampled.
+    let m = cluster.metrics()?;
+    let report = cluster.finish()?;
+    assert_eq!(report.events, events.len() as u64, "bench lost events");
+    Ok(RunOut {
+        resident_bytes: m.resident_bytes,
+        state_bytes: m.state_bytes,
+        spilled_bytes: m.spilled_bytes,
+        spills: report.spills,
+        spill_faultins: report.spill_faultins,
+        evicted: report
+            .workers
+            .iter()
+            .chain(report.retired.iter())
+            .map(|w| w.evicted)
+            .sum(),
+        hits: report.hits,
+        avg_recall: report.avg_recall,
+        throughput: report.throughput,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("MEMORY_BENCH_SMOKE")
+        .map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false);
+    println!("== memory-tier benchmarks (10x beyond the cap, smoke={smoke}) ==");
+    let dataset = if smoke { "nf-like:6000" } else { "nf-like:120000" };
+    let events = DatasetSpec::parse(dataset, 41)?.load()?;
+    let n = events.len() as u64;
+
+    println!(
+        "{:8} {:12} {:>12} {:>12} {:>8} {:>8} | {:>8} {:>11}",
+        "algo", "mode", "resident", "cap", "spills", "faultin", "recall", "thpt"
+    );
+    let mut rows = Vec::new();
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let base = RunConfig {
+            algorithm: algo,
+            topology: Topology::new(1, 0)?,
+            // 16 lanes on the single worker: cold lanes exist, and the
+            // lane partitioning is identical across all three modes.
+            rescale_max_n_i: 4,
+            sample_every: 10_000,
+            memory_check_events: 32,
+            ..RunConfig::default()
+        };
+
+        let unlimited =
+            run(&base, &format!("bench-mem-{}-unlimited", algo.name()), &events)?;
+        // The headline shape: a budget of a tenth of the working set.
+        let cap = (unlimited.resident_bytes / 10).max(1);
+
+        let spill_cfg = RunConfig {
+            memory_budget_bytes: cap,
+            ..base.clone()
+        };
+        let spill_only = run(
+            &spill_cfg,
+            &format!("bench-mem-{}-spill", algo.name()),
+            &events,
+        )?;
+        assert!(
+            spill_only.resident_bytes <= cap,
+            "{}: resident {} exceeds cap {}",
+            algo.name(),
+            spill_only.resident_bytes,
+            cap
+        );
+        assert!(spill_only.spills >= 1, "a 10x cap must force spills");
+        assert_eq!(
+            spill_only.hits, unlimited.hits,
+            "spill is lossless: capped hits must equal unlimited hits"
+        );
+
+        let evict_cfg = RunConfig {
+            memory_budget_bytes: cap,
+            // Clock never fires on its own (huge trigger): every sweep
+            // in this run is memory-pressure-driven.
+            forgetting: Forgetting::Lfu {
+                trigger_events: u64::MAX,
+                min_freq: 2,
+            },
+            ..base.clone()
+        };
+        let evict = run(
+            &evict_cfg,
+            &format!("bench-mem-{}-evict", algo.name()),
+            &events,
+        )?;
+        assert!(evict.resident_bytes <= cap);
+
+        for (mode, out, budget) in [
+            ("unlimited", &unlimited, 0u64),
+            ("spill-only", &spill_only, cap),
+            ("evict+spill", &evict, cap),
+        ] {
+            println!(
+                "{:8} {:12} {:>12} {:>12} {:>8} {:>8} | {:>8.4} {:>8.0}/s",
+                algo.name(),
+                mode,
+                out.resident_bytes,
+                budget,
+                out.spills,
+                out.spill_faultins,
+                out.avg_recall,
+                out.throughput,
+            );
+            rows.push(obj(vec![
+                ("algorithm", s(algo.name())),
+                ("mode", s(mode)),
+                ("events", num(n as f64)),
+                ("memory_budget_bytes", num(budget as f64)),
+                ("resident_bytes", num(out.resident_bytes as f64)),
+                ("state_bytes", num(out.state_bytes as f64)),
+                ("spilled_bytes", num(out.spilled_bytes as f64)),
+                ("spills", num(out.spills as f64)),
+                ("spill_faultins", num(out.spill_faultins as f64)),
+                ("evicted", num(out.evicted as f64)),
+                ("avg_recall", num(out.avg_recall)),
+                (
+                    "recall_cost_vs_unlimited",
+                    num(unlimited.avg_recall - out.avg_recall),
+                ),
+                ("throughput_ev_s", num(out.throughput)),
+            ]));
+        }
+    }
+    let doc = obj(vec![
+        ("bench", s("memory budget: resident bound + recall cost")),
+        ("dataset", s(&format!("{dataset} (seed 41)"))),
+        ("smoke", num(if smoke { 1.0 } else { 0.0 })),
+        (
+            "scenario",
+            s("1 worker x 16 lanes; cap = working set / 10; spill-only \
+               is byte-identical to unlimited, evict+spill quantifies \
+               the recall cost of pressure eviction"),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_memory.json", to_string(&doc) + "\n")?;
+    println!("(recorded in BENCH_memory.json)");
+    Ok(())
+}

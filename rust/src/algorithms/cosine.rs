@@ -494,6 +494,37 @@ impl StreamingRecommender for CosineModel {
         }
     }
 
+    fn state_bytes(&self) -> u64 {
+        // Deterministic per-structure accounting: counts (id + count +
+        // recency/frequency metadata), co-occurrence adjacency (16 bytes
+        // per directed entry + a per-row header), user histories (id +
+        // metadata + 8 bytes per rated item), and the visible read-side
+        // caches — topk neighborhoods (12 bytes per cached neighbor),
+        // the dirty set, and the fast-mode dirt counters. All are
+        // functions of logical state only, so a migrated copy reports
+        // the same figure.
+        let items = self.item_count.len() as u64;
+        let pair_rows = self.pairs.len() as u64;
+        let pair_entries = self.pair_entries();
+        let history: u64 =
+            self.users.iter().map(|(_, h)| h.len() as u64).sum();
+        let users = self.users.len() as u64;
+        let cached: u64 = self
+            .topk
+            .values()
+            .map(|n| n.neighbors.len() as u64)
+            .sum();
+        64 + items * 32
+            + pair_rows * 8
+            + pair_entries * 16
+            + users * 32
+            + history * 8
+            + self.topk.len() as u64 * 12
+            + cached * 12
+            + self.dirty.len() as u64 * 8
+            + self.dirt.len() as u64 * 12
+    }
+
     fn export_partition(&self, keep_user: &dyn Fn(UserId) -> bool) -> Vec<u8> {
         let mut w = WireWriter::new();
         w.u8(COSINE_WIRE_TAG);
@@ -1089,6 +1120,30 @@ mod tests {
         assert_eq!(s.users, 5);
         assert_eq!(s.items, 4);
         assert_eq!(s.aux, 12); // 6 unordered pairs x 2 directions
+    }
+
+    #[test]
+    fn state_bytes_is_deterministic_and_migration_invariant() {
+        let mut m = CosineModel::fast(10);
+        assert_eq!(m.state_bytes(), 64, "empty model: base overhead only");
+        for u in 0..12u64 {
+            for i in 0..6u64 {
+                m.update(&ev(u % 4, (u + i) % 9, u * 6 + i));
+            }
+        }
+        // Read path populates the visible topk caches too.
+        let _ = m.recommend(1, 5);
+        let b = m.state_bytes();
+        assert!(b > 64);
+        // A migrated copy (counts, pairs, histories, caches, dirt all
+        // travel) reports the identical figure.
+        let mut n = CosineModel::fast(10);
+        n.import_partition(&m.export_partition(&|_| true)).unwrap();
+        assert_eq!(n.state_bytes(), b);
+        // Evicting everything returns to the base overhead.
+        m.sweep(SweepKind::Lru { cutoff_ts: u64::MAX });
+        assert_eq!(m.state_sizes().users, 0);
+        assert!(m.state_bytes() < b);
     }
 
     #[test]

@@ -165,6 +165,26 @@ impl StreamingRecommender for IsgdModel {
         }
     }
 
+    fn state_bytes(&self) -> u64 {
+        // Deterministic per-structure accounting (entry counts x entry
+        // widths), identical for a model and its migrated copy. Per
+        // user: id + recency/frequency metadata + k f32s + the rated
+        // set (8 bytes per item id). Per live item row: id + metadata +
+        // k f32s + validity slot. The slab's capacity padding is
+        // deliberately excluded — it is allocator layout, not state,
+        // and it would differ across bucket boundaries after a
+        // migration re-pack.
+        let k4 = 4 * self.k as u64;
+        let rated: u64 = self
+            .users
+            .iter()
+            .map(|(_, s)| s.rated.len() as u64)
+            .sum();
+        let users = self.users.len() as u64;
+        let items = self.items.len() as u64;
+        64 + users * (32 + k4) + rated * 8 + items * (36 + k4)
+    }
+
     fn export_partition(&self, keep_user: &dyn Fn(UserId) -> bool) -> Vec<u8> {
         let mut w = WireWriter::new();
         w.u8(ISGD_WIRE_TAG);
@@ -411,6 +431,30 @@ mod tests {
         for (b, a) in before.iter().zip(after.iter()) {
             assert!((a - b * 0.5).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn state_bytes_is_deterministic_and_migration_invariant() {
+        let mut m = model(8);
+        assert_eq!(m.state_bytes(), 64, "empty model: base overhead only");
+        for u in 0..30u64 {
+            for i in 0..8u64 {
+                m.update(&ev(u % 6, (u * 3 + i) % 20, u * 8 + i));
+            }
+        }
+        let b = m.state_bytes();
+        assert!(b > 64, "populated model accounts its entries");
+        // Closed form: users*(32+4k) + rated*8 + items*(36+4k) + 64.
+        let s = m.state_sizes();
+        let rated: u64 = (0..6u64).map(|u| m.rated_items(u).len() as u64).sum();
+        assert_eq!(b, 64 + s.users * (32 + 40) + rated * 8 + s.items * (36 + 40));
+        // A migrated copy reports the identical figure.
+        let mut n = model(777);
+        n.import_partition(&m.export_partition(&|_| true)).unwrap();
+        assert_eq!(n.state_bytes(), b);
+        // Eviction shrinks it.
+        m.sweep(SweepKind::Lru { cutoff_ts: u64::MAX });
+        assert_eq!(m.state_bytes(), 64);
     }
 
     #[test]

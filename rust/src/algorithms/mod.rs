@@ -61,6 +61,20 @@ pub trait StreamingRecommender {
     /// Current state-entry counts (the paper's memory metric).
     fn state_sizes(&self) -> StateSizes;
 
+    /// Estimated resident bytes of this model's **visible** (serialized)
+    /// state. This is a deterministic accounting computed from entry
+    /// counts and dimensions — not an allocator measurement — so a model
+    /// and its migrated copy report the same figure and per-lane rollups
+    /// are placement-independent. The `[memory]` budget (pressure sweeps
+    /// and cold-lane spill) keys off this number.
+    ///
+    /// The default derives a coarse figure from [`Self::state_sizes`];
+    /// real models override it with per-structure accounting.
+    fn state_bytes(&self) -> u64 {
+        let s = self.state_sizes();
+        (s.users + s.items + s.aux) * 32
+    }
+
     /// Apply a forgetting sweep; returns the number of evicted entries.
     fn sweep(&mut self, kind: SweepKind) -> u64;
 

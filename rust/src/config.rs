@@ -355,6 +355,40 @@ pub struct RunConfig {
     /// the column invalidates the entry. Rescales and worker recoveries
     /// always invalidate regardless of this budget.
     pub serving_cache_max_staleness: u64,
+    /// Per-worker resident state budget in bytes (TOML:
+    /// `memory.budget_bytes`). `0` (default) = unlimited, exactly the
+    /// pre-budget behavior. With a budget set, each lane gets an equal
+    /// slice of it (`budget / state-grid lanes` — the state grid is fixed
+    /// for a session, so the slice is placement-independent): a lane over
+    /// its slice triggers a pressure sweep through the configured
+    /// `[forgetting]` policy, and a worker whose resident lanes together
+    /// exceed the budget spills its coldest lanes to disk (see
+    /// `memory.spill`). Accounting uses the models' deterministic
+    /// [`state_bytes`](crate::algorithms::StreamingRecommender::state_bytes)
+    /// figure, not allocator numbers, so budget-driven behavior replays
+    /// exactly. See docs/CONFIG.md and ARCHITECTURE.md §11.
+    pub memory_budget_bytes: u64,
+    /// Cold-lane spill switch (TOML: `memory.spill`, default `true`).
+    /// While the budget is exceeded after pressure sweeps, the worker
+    /// serializes its coldest lanes (smallest watermark) through the
+    /// lane-frame format into a disk store and faults them back in on
+    /// the lane's next event, query, or export — result-transparent
+    /// tiering. `false` keeps everything resident (the budget then only
+    /// drives pressure sweeps). Ignored while `memory.budget_bytes = 0`.
+    pub memory_spill: bool,
+    /// Directory for spilled lane frames (TOML: `memory.spill_dir`).
+    /// Empty (default) uses the platform temp directory. Each worker
+    /// actor creates a unique subdirectory and removes it on shutdown;
+    /// spilled frames never need to outlive the actor (crash recovery
+    /// uses supervisor checkpoints + replay, not spill files).
+    pub memory_spill_dir: String,
+    /// Per-lane pressure-check cadence in events (TOML:
+    /// `memory.check_events`, default 64): a lane re-measures its
+    /// `state_bytes` and checks its budget slice every this many events
+    /// *applied to that lane*. The counter travels in lane frames, so
+    /// the cadence is preserved across migration and recovery. Must be
+    /// >= 1.
+    pub memory_check_events: u64,
 }
 
 impl Default for RunConfig {
@@ -392,6 +426,10 @@ impl Default for RunConfig {
             serving_max_in_flight: 256,
             serving_cache_shards: 16,
             serving_cache_max_staleness: 0,
+            memory_budget_bytes: 0,
+            memory_spill: true,
+            memory_spill_dir: String::new(),
+            memory_check_events: 64,
         }
     }
 }
@@ -403,6 +441,36 @@ impl RunConfig {
             format!("reading config {}", path.as_ref().display())
         })?;
         Self::from_toml(&text)
+    }
+
+    /// The `[memory]` footgun: a byte budget with no eviction policy.
+    /// Pressure sweeps derive their eviction from `[forgetting]`, so
+    /// with `Forgetting::None` a pressure check can evict nothing and
+    /// every over-budget lane goes straight to the disk tier (or, with
+    /// `memory.spill = false` too, the budget is simply unenforceable).
+    /// That is a legal configuration — the spill tier keeps results
+    /// byte-identical — but it is almost never what a capped deployment
+    /// wants, so `Cluster::metrics` warns once per session and the
+    /// scenario driver refuses to run it. Returns the warning text when
+    /// the combination is configured.
+    pub fn memory_footgun(&self) -> Option<String> {
+        if self.memory_budget_bytes > 0 && self.forgetting == Forgetting::None {
+            Some(format!(
+                "[memory] budget_bytes = {} is set but [forgetting] is \
+                 'none': pressure sweeps cannot evict anything, so the \
+                 budget is enforced by disk spill alone{}. Configure a \
+                 [forgetting] policy (lru/lfu/decay) to shed state.",
+                self.memory_budget_bytes,
+                if self.memory_spill {
+                    ""
+                } else {
+                    " — and memory.spill = false disables that too, \
+                     leaving the budget unenforced"
+                }
+            ))
+        } else {
+            None
+        }
     }
 
     /// Parse from TOML-subset text.
@@ -542,6 +610,17 @@ impl RunConfig {
             cfg.serving_cache_max_staleness,
             u64
         );
+        num!("memory.budget_bytes", cfg.memory_budget_bytes, u64);
+        if let Some(v) = get("memory.spill") {
+            cfg.memory_spill = v.bool()?;
+        }
+        if let Some(v) = get("memory.spill_dir") {
+            cfg.memory_spill_dir = v.str()?.to_string();
+        }
+        num!("memory.check_events", cfg.memory_check_events, u64);
+        if cfg.memory_check_events == 0 {
+            bail!("memory.check_events must be >= 1");
+        }
         if cfg.serving_queue_capacity == 0 {
             bail!("serving.queue_capacity must be >= 1");
         }
@@ -945,6 +1024,47 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.fault_net.refuse_dials, 3);
+    }
+
+    #[test]
+    fn parses_memory_section() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.memory_budget_bytes, 0, "default: unlimited");
+        assert!(cfg.memory_spill);
+        assert!(cfg.memory_spill_dir.is_empty());
+        assert_eq!(cfg.memory_check_events, 64);
+        let cfg = RunConfig::from_toml(
+            "[memory]\nbudget_bytes = 1048576\nspill = false\n\
+             spill_dir = \"/tmp/spill\"\ncheck_events = 16",
+        )
+        .unwrap();
+        assert_eq!(cfg.memory_budget_bytes, 1_048_576);
+        assert!(!cfg.memory_spill);
+        assert_eq!(cfg.memory_spill_dir, "/tmp/spill");
+        assert_eq!(cfg.memory_check_events, 16);
+        // A zero check cadence would never re-measure; rejected loudly.
+        assert!(RunConfig::from_toml("[memory]\ncheck_events = 0").is_err());
+        // A cap with no [forgetting] policy parses fine here (spill alone
+        // honors the resident cap); the *scenario driver* rejects it and
+        // Cluster::metrics warns — both through memory_footgun().
+        let cfg =
+            RunConfig::from_toml("[memory]\nbudget_bytes = 4096").unwrap();
+        assert_eq!(cfg.memory_budget_bytes, 4096);
+        assert!(matches!(cfg.forgetting, Forgetting::None));
+        let warning = cfg.memory_footgun().expect("cap without policy warns");
+        assert!(warning.contains("4096"));
+        assert!(warning.contains("disk spill alone"));
+        let mut no_spill = cfg.clone();
+        no_spill.memory_spill = false;
+        let warning = no_spill.memory_footgun().unwrap();
+        assert!(warning.contains("unenforced"), "spill-off variant is louder");
+        // Any eviction policy (or no cap) silences it.
+        let ok = RunConfig::from_toml(
+            "[memory]\nbudget_bytes = 4096\n[forgetting]\nkind = \"lfu\"",
+        )
+        .unwrap();
+        assert!(ok.memory_footgun().is_none());
+        assert!(RunConfig::default().memory_footgun().is_none());
     }
 
     #[test]

@@ -152,6 +152,7 @@
 //! generation, column write count) — see `coordinator/serving.rs` for
 //! admission control and shedding.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -235,6 +236,27 @@ pub struct ClusterMetrics {
     /// Total ns spent inside crash recoveries (reap + respawn + restore
     /// + replay).
     pub recovery_pause_ns: u64,
+    /// Resident logical state bytes summed over live workers — the
+    /// figure a `[memory]` budget bounds. Exact as of the snapshot
+    /// replies: each worker re-measures its lanes and re-enforces its
+    /// budget right before answering, so with spill enabled every
+    /// worker's contribution is `<=` its budget by construction.
+    pub resident_bytes: u64,
+    /// Total logical state bytes over live workers, resident + spilled
+    /// — the paper's memory metric in bytes, placement-independent
+    /// (retired workers exported their lanes, so nothing is counted
+    /// twice).
+    pub state_bytes: u64,
+    /// Lanes currently parked in the disk tier across live workers.
+    pub spilled_lanes: u64,
+    /// Logical bytes of those spilled lanes (their `state_bytes` at
+    /// spill time).
+    pub spilled_bytes: u64,
+    /// Cumulative cold-lane spills to the disk tier (live + retired
+    /// workers). `0` unless a `[memory]` budget forced tiering.
+    pub spills: u64,
+    /// Cumulative spilled-lane fault-ins (live + retired workers).
+    pub spill_faultins: u64,
     /// [`Cluster::recommend`] calls answered *degraded*: replicas kept
     /// dying across the full retry budget, so the answer was merged
     /// from the surviving replicas only (fault-tolerant sessions; a
@@ -311,6 +333,10 @@ pub struct Cluster {
     col_tx: Option<Sender<CollectorMsg>>,
     /// Final reports of workers retired by rescales.
     retired: Vec<WorkerReport>,
+    /// Set once [`Cluster::metrics`] has logged the `[memory]`-budget-
+    /// without-eviction-policy footgun warning, so a metrics polling
+    /// loop doesn't spam it.
+    memory_warned: AtomicBool,
     /// Wall clock starts at the first ingest (matches the old
     /// `run_pipeline` accounting, which excluded worker spawn).
     started: Option<Instant>,
@@ -424,6 +450,7 @@ impl Cluster {
             collector: Some(collector),
             col_tx: Some(col_tx),
             retired: Vec::new(),
+            memory_warned: AtomicBool::new(false),
             started: None,
             seq: 0,
             route_ns: 0,
@@ -666,6 +693,16 @@ impl Cluster {
     /// reports its restored counters, so the identity holds across
     /// recoveries too.
     pub fn metrics(&self) -> Result<ClusterMetrics> {
+        // The [memory] footgun: a budget with no eviction policy means
+        // pressure sweeps can't shed anything and every over-budget
+        // lane goes straight to disk. Legal (results stay identical)
+        // but almost never intended — warn once per session. The
+        // scenario driver refuses the combination outright.
+        if let Some(msg) = self.cfg.memory_footgun() {
+            if !self.memory_warned.swap(true, Ordering::Relaxed) {
+                log::warn!("cluster '{}': {msg}", self.label);
+            }
+        }
         for _attempt in 0..3 {
             let n = self.sup.lock().expect("supervisor lock").n_workers();
             let targets: Vec<usize> = (0..n).collect();
@@ -682,10 +719,21 @@ impl Cluster {
             let mut processed: u64 = workers.iter().map(|w| w.processed).sum();
             let mut hits: u64 = workers.iter().map(|w| w.hits).sum();
             let mut queries: u64 = workers.iter().map(|w| w.queries).sum();
+            let resident_bytes: u64 =
+                workers.iter().map(|w| w.state_bytes).sum();
+            let spilled_lanes: u64 =
+                workers.iter().map(|w| w.spilled_lanes).sum();
+            let spilled_bytes: u64 =
+                workers.iter().map(|w| w.spilled_bytes).sum();
+            let mut spills: u64 = workers.iter().map(|w| w.spills).sum();
+            let mut spill_faultins: u64 =
+                workers.iter().map(|w| w.spill_faultins).sum();
             for w in &self.retired {
                 processed += w.processed;
                 hits += w.hits;
                 queries += w.queries;
+                spills += w.spills;
+                spill_faultins += w.spill_faultins;
             }
             let (chan, fault) = {
                 let sup = self.sup.lock().expect("supervisor lock");
@@ -710,6 +758,12 @@ impl Cluster {
                 checkpoint_bytes: fault.checkpoint_bytes,
                 replayed_events: fault.replayed_events,
                 recovery_pause_ns: fault.recovery_pause_ns,
+                resident_bytes,
+                state_bytes: resident_bytes + spilled_bytes,
+                spilled_lanes,
+                spilled_bytes,
+                spills,
+                spill_faultins,
                 degraded_queries: self.serving.degraded_total(),
                 router_epoch: self.router.epoch(),
                 workers,
@@ -986,6 +1040,20 @@ impl Cluster {
         let mut retired = std::mem::take(&mut self.retired);
         retired.sort_by_key(|w| w.worker_id);
         let events = self.seq;
+        // Memory rollups: retired workers exported their lanes (their
+        // state_bytes reads zero), so the live sum is the whole story;
+        // spill/fault-in counters are lifetime totals on both sides.
+        let state_bytes: u64 = workers.iter().map(|w| w.state_bytes).sum();
+        let spills: u64 = workers
+            .iter()
+            .chain(retired.iter())
+            .map(|w| w.spills)
+            .sum();
+        let spill_faultins: u64 = workers
+            .iter()
+            .chain(retired.iter())
+            .map(|w| w.spill_faultins)
+            .sum();
         Ok(RunReport {
             label: self.label.clone(),
             n_workers,
@@ -1009,6 +1077,9 @@ impl Cluster {
             checkpoint_bytes: fault.checkpoint_bytes,
             replayed_events: fault.replayed_events,
             recovery_pause_ns: fault.recovery_pause_ns,
+            state_bytes,
+            spills,
+            spill_faultins,
         })
     }
 }
@@ -1181,6 +1252,58 @@ mod tests {
         assert_eq!(m2.router_epoch, 0);
         let report = cluster.finish().unwrap();
         assert_eq!(report.hits, m2.hits, "final report matches last snapshot");
+    }
+
+    #[test]
+    fn memory_budget_spills_and_accounting_reconciles() {
+        // A 1-byte budget makes every lane over-budget, so the whole
+        // working set tiers out to disk — the degenerate case that
+        // exercises every accounting identity at once: counters must
+        // keep counting while lanes are on disk, the reported resident
+        // must respect the budget, and later traffic must fault lanes
+        // back in transparently.
+        let events = small_events(1500);
+        let mut c = cfg(2);
+        c.memory_budget_bytes = 1;
+        c.memory_check_events = 8;
+        let mut cluster = Cluster::spawn_labeled(&c, "t-mem").unwrap();
+        cluster.ingest_batch(&events[..1000]).unwrap();
+        cluster.flush().unwrap();
+        let m = cluster.metrics().unwrap();
+        assert_eq!(m.processed, 1000, "spilled lanes keep counting");
+        assert_eq!(m.resident_bytes, 0, "budget enforced before the reply");
+        assert!(m.spills > 0);
+        assert!(m.spilled_lanes > 0);
+        assert!(m.spilled_bytes > 0);
+        assert_eq!(m.state_bytes, m.resident_bytes + m.spilled_bytes);
+        assert_eq!(
+            m.state_bytes,
+            m.workers
+                .iter()
+                .map(|w| w.state_bytes + w.spilled_bytes)
+                .sum::<u64>(),
+            "cluster rollup equals the per-worker sums"
+        );
+        // Later events touch spilled lanes: transparent fault-ins.
+        cluster.ingest_batch(&events[1000..]).unwrap();
+        cluster.flush().unwrap();
+        let m2 = cluster.metrics().unwrap();
+        assert_eq!(m2.processed, 1500);
+        assert!(m2.spill_faultins > 0, "ingest faulted lanes back in");
+        assert!(m2.spills >= m.spills, "spill counter is monotone");
+        // Serving still works against tiered lanes (fault-in on query).
+        let recs = cluster.recommend(events[0].user, 5).unwrap();
+        assert!(!recs.is_empty());
+        let report = cluster.finish().unwrap();
+        assert_eq!(report.events, 1500);
+        assert!(report.spills >= m2.spills);
+        assert!(report.spill_faultins >= m2.spill_faultins);
+        assert!(report.state_bytes > 0, "spilled lanes stay in the rollup");
+        assert_eq!(
+            report.workers.iter().map(|w| w.processed).sum::<u64>(),
+            1500,
+            "no events lost to tiering"
+        );
     }
 
     #[test]

@@ -54,6 +54,30 @@
 //! liveness, while a stalled pump (or dead host) is what the
 //! coordinator's watchdog converts into a crash within
 //! `fault.rpc_timeout_ms`.
+//!
+//! # Memory
+//!
+//! Each lane carries a cached `state_bytes` figure — the model's
+//! deterministic accounting, refreshed every `memory.check_events`
+//! events applied to the lane (the counter travels in lane frames, so
+//! the cadence survives migration). With a `[memory]` budget set, two
+//! mechanisms keep a worker inside it, both placement-independent:
+//!
+//! * **Pressure sweeps** (per lane): a lane over its equal slice of the
+//!   budget (`budget / state-grid lanes`; the grid is fixed for a
+//!   session) fires the configured `[forgetting]` policy's sweep
+//!   immediately — same [`SweepKind`], same parameters, the pressure
+//!   trigger only changes *when*, never *what*. The lane's `ForgetClock`
+//!   is not touched, so the event-cadence sweeps keep their schedule.
+//! * **Cold-lane spill** (per worker): if the resident lanes together
+//!   still exceed the budget at a window boundary (or right before a
+//!   metrics reply — so reported resident bytes respect the budget by
+//!   construction), the coldest lanes (smallest applied watermark) are
+//!   serialized through the *same lane frame* checkpoints and rescale
+//!   use and parked in a [`SpillStore`]. Spilled frames are offered to
+//!   the supervisor as checkpoints (they are valid ones), and the lane
+//!   faults back in transparently on its next event, query, import, or
+//!   export — results are byte-identical to a run that never spilled.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -61,12 +85,13 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::algorithms::{build_model, StreamingRecommender};
-use crate::config::RunConfig;
+use crate::config::{Forgetting, RunConfig};
 use crate::coordinator::router::StateGrid;
 use crate::data::types::{ItemId, Rating, StateSizes, UserId};
 use crate::engine::{Receiver, Sender, WakeSignal};
 use crate::eval::{HitSample, Prequential, WorkerReport};
-use crate::state::ForgetClock;
+use crate::state::spill::{SpillMeta, SpillStore};
+use crate::state::{ForgetClock, SweepKind};
 use crate::util::histogram::Histogram;
 use crate::util::wire::{WireError, WireReader, WireWriter};
 
@@ -215,11 +240,28 @@ pub struct WorkerSnapshot {
     /// surviving replicas of an in-flight fan-out (so it can also count
     /// a little high around a crash).
     pub queries: u64,
-    /// Lane models currently hosted (1 per worker in the default
-    /// grid-equals-topology configuration).
+    /// Lane models currently hosted, resident *and* spilled (1 per
+    /// worker in the default grid-equals-topology configuration).
     pub lanes: u64,
-    /// Current state-entry counts (summed over hosted lanes).
+    /// Current state-entry counts (summed over hosted lanes, including
+    /// spilled ones — a spilled lane's entries are still this worker's
+    /// logical state).
     pub state: StateSizes,
+    /// Resident lane bytes (the models' deterministic accounting,
+    /// exact as of this reply — lanes are re-measured, and the
+    /// `[memory]` budget re-enforced, right before answering). Excludes
+    /// spilled lanes; with spill enabled this is `<=` the budget by
+    /// construction.
+    pub state_bytes: u64,
+    /// Lanes currently parked in the spill store.
+    pub spilled_lanes: u64,
+    /// Logical bytes of the spilled lanes (their `state_bytes` at spill
+    /// time).
+    pub spilled_bytes: u64,
+    /// Cumulative lane spills performed by this worker (monotone).
+    pub spills: u64,
+    /// Cumulative lane fault-ins performed by this worker (monotone).
+    pub spill_faultins: u64,
 }
 
 /// Deterministic fault injection: panic a worker at an exact stream
@@ -410,12 +452,20 @@ struct Lane {
     since_ckpt: u64,
     /// Whether any checkpoint (or import, which is one) covers the lane.
     checkpointed: bool,
+    /// Cached `state_bytes` of the model — refreshed every
+    /// `memory.check_events` events on the lane, after sweeps, after
+    /// imports/fault-ins, and exactly before metrics replies. Budget
+    /// enforcement sums these, so accounting granularity is the check
+    /// cadence, never a per-event full-model walk.
+    bytes: u64,
 }
 
 impl Lane {
     fn new(cfg: &RunConfig, lane_id: u64) -> Result<Self> {
+        let model = build_model(cfg, lane_id as usize)?;
+        let bytes = model.state_bytes();
         Ok(Self {
-            model: build_model(cfg, lane_id as usize)?,
+            model,
             clock: ForgetClock::new(cfg.forgetting),
             processed: 0,
             hits: 0,
@@ -424,6 +474,7 @@ impl Lane {
             watermark: None,
             since_ckpt: 0,
             checkpointed: false,
+            bytes,
         })
     }
 }
@@ -495,6 +546,24 @@ impl WorkerActor {
             chaos,
         } = self;
         let ckpt_interval = cfg.fault_checkpoint_interval.max(1);
+        // [memory] plumbing (module docs §Memory): the per-lane pressure
+        // slice is derived from the fixed state grid, so it is identical
+        // wherever a lane is hosted. `.max(1)` keeps a sub-lane-sized
+        // budget meaning "always under pressure" rather than "disabled".
+        let budget = cfg.memory_budget_bytes;
+        let lane_budget = if budget > 0 {
+            (budget / grid.n_lanes().max(1)).max(1)
+        } else {
+            0
+        };
+        let check_events = cfg.memory_check_events.max(1);
+        let mut spill_store: Option<SpillStore> = (budget > 0
+            && cfg.memory_spill)
+            .then(|| SpillStore::new(&cfg.memory_spill_dir, ord));
+        // Counters of lanes that left via `Export` while spilled: their
+        // frames went to the new owners (counting from zero there), so
+        // this retiring worker's report must keep the totals.
+        let mut banked = (0u64, 0u64, 0u64, 0u64);
         let mut lanes: BTreeMap<u64, Lane> = BTreeMap::new();
         let mut preq = Prequential::new(cfg.top_n, cfg.recall_window);
         let mut latency = Histogram::new();
@@ -528,7 +597,14 @@ impl WorkerActor {
             if query_rx.try_drain(&mut qbuf) > 0 {
                 for q in qbuf.drain(..) {
                     if q.fence <= applied {
-                        answer_query(&mut lanes, &grid, &mut queries, q);
+                        answer_query(
+                            &mut lanes,
+                            &mut spill_store,
+                            &cfg,
+                            &grid,
+                            &mut queries,
+                            q,
+                        )?;
                         served = true;
                     } else {
                         parked.push_back(q);
@@ -536,7 +612,19 @@ impl WorkerActor {
                 }
             }
             if rx.try_drain(&mut inbox) == 0 {
-                if !served {
+                if served {
+                    // Queries may have faulted spilled lanes back in;
+                    // re-enforce the budget before sleeping on them.
+                    enforce_budget(
+                        &mut lanes,
+                        &mut spill_store,
+                        budget,
+                        ord,
+                        &ckpt_tx,
+                        &col_tx,
+                        &mut batch,
+                    )?;
+                } else {
                     if rx.is_ended() {
                         // End-of-stream: the coordinator dropped its
                         // event sender. Any still-parked query waits on
@@ -578,6 +666,9 @@ impl WorkerActor {
                         }
                         let lane_id =
                             grid.lane(env.rating.user, env.rating.item);
+                        // A spilled lane faults back in before learning
+                        // touches it (transparent disk tier).
+                        fault_in(&mut lanes, &mut spill_store, &cfg, lane_id)?;
                         let lane = lane_entry(&mut lanes, &cfg, lane_id)?;
                         // Watermark filter (exactly-once): an event at or
                         // below the lane's high-water seq was already
@@ -610,6 +701,31 @@ impl WorkerActor {
                         {
                             lane.sweeps += 1;
                             lane.evicted += lane.model.sweep(kind);
+                            if budget > 0 {
+                                lane.bytes = lane.model.state_bytes();
+                            }
+                        }
+                        // Memory pressure (module docs §Memory): at the
+                        // check cadence, re-measure the lane; over its
+                        // budget slice, fire the configured policy's
+                        // sweep now. Cadence keys off `lane.processed`
+                        // (travels in lane frames) and the slice off the
+                        // fixed grid, so pressure sweeps replay
+                        // identically across placements.
+                        if lane_budget > 0
+                            && lane.processed % check_events == 0
+                        {
+                            lane.bytes = lane.model.state_bytes();
+                            if lane.bytes > lane_budget {
+                                if let Some(kind) = pressure_sweep(
+                                    cfg.forgetting,
+                                    env.rating.ts,
+                                ) {
+                                    lane.sweeps += 1;
+                                    lane.evicted += lane.model.sweep(kind);
+                                    lane.bytes = lane.model.state_bytes();
+                                }
+                            }
                         }
                         // Periodic per-lane checkpoint: eagerly on the
                         // lane's first event (a tiny frame buys replay-
@@ -672,7 +788,24 @@ impl WorkerActor {
                         }
                     }
                     WorkerMsg::MetricsSnapshot { reply } => {
-                        let _ = reply.send(WorkerSnapshot {
+                        // Exact accounting at probe time: re-measure
+                        // every resident lane, then re-enforce the
+                        // budget, so the reported resident bytes are
+                        // both exact and (with spill on) within budget
+                        // by construction.
+                        for lane in lanes.values_mut() {
+                            lane.bytes = lane.model.state_bytes();
+                        }
+                        enforce_budget(
+                            &mut lanes,
+                            &mut spill_store,
+                            budget,
+                            ord,
+                            &ckpt_tx,
+                            &col_tx,
+                            &mut batch,
+                        )?;
+                        let mut snap = WorkerSnapshot {
                             worker_id: ord,
                             processed: lanes
                                 .values()
@@ -682,9 +815,39 @@ impl WorkerActor {
                             queries,
                             lanes: lanes.len() as u64,
                             state: sum_state(&lanes),
-                        });
+                            state_bytes: lanes
+                                .values()
+                                .map(|l| l.bytes)
+                                .sum(),
+                            spilled_lanes: 0,
+                            spilled_bytes: 0,
+                            spills: 0,
+                            spill_faultins: 0,
+                        };
+                        if let Some(store) = &spill_store {
+                            snap.lanes += store.len() as u64;
+                            snap.spilled_lanes = store.len() as u64;
+                            snap.spilled_bytes = store.spilled_bytes();
+                            snap.spills = store.spills();
+                            snap.spill_faultins = store.faultins();
+                            for id in store.lanes() {
+                                let m = store.meta(id).expect("listed");
+                                snap.processed += m.processed;
+                                snap.hits += m.hits;
+                                snap.state.users += m.sizes.users;
+                                snap.state.items += m.sizes.items;
+                                snap.state.aux += m.sizes.aux;
+                            }
+                        }
+                        let _ = reply.send(snap);
                     }
                     WorkerMsg::Import { lane, bytes, restore_counters } => {
+                        // The incoming frame overwrites the lane
+                        // wholesale; a spilled copy is stale — drop it
+                        // unread instead of faulting it in first.
+                        if let Some(store) = &mut spill_store {
+                            store.remove(lane as usize);
+                        }
                         let slot = lane_entry(&mut lanes, &cfg, lane)?;
                         let frame = decode_lane_frame(&bytes)?;
                         slot.model.import_partition(frame.model)?;
@@ -708,6 +871,7 @@ impl WorkerActor {
                         // periodic one is an interval away.
                         slot.since_ckpt = 0;
                         slot.checkpointed = true;
+                        slot.bytes = slot.model.state_bytes();
                     }
                     WorkerMsg::Export { reply } => {
                         // Terminal: everything ingested before this probe
@@ -725,19 +889,43 @@ impl WorkerActor {
                             if q.fence <= applied {
                                 answer_query(
                                     &mut lanes,
+                                    &mut spill_store,
+                                    &cfg,
                                     &grid,
                                     &mut queries,
                                     q,
-                                );
+                                )?;
                             }
                         }
-                        let out: Vec<LaneSnapshot> = lanes
+                        let mut out: Vec<LaneSnapshot> = lanes
                             .iter()
                             .map(|(id, lane)| LaneSnapshot {
                                 lane: *id,
                                 bytes: encode_lane_frame(lane),
                             })
                             .collect();
+                        // Spilled lanes export *verbatim*: nothing has
+                        // touched a lane since it was spilled, so its
+                        // parked frame — watermark, counters, clock,
+                        // model — is exactly the frame encoding it now
+                        // would produce. Their counters are banked into
+                        // this retiring worker's report (the importing
+                        // generation counts from zero).
+                        if let Some(store) = &mut spill_store {
+                            for id in store.lanes() {
+                                let m = store.meta(id).expect("listed");
+                                banked.0 += m.processed;
+                                banked.1 += m.hits;
+                                banked.2 += m.evicted;
+                                banked.3 += m.sweeps;
+                                if let Some(bytes) = store.take(id)? {
+                                    out.push(LaneSnapshot {
+                                        lane: id as u64,
+                                        bytes,
+                                    });
+                                }
+                            }
+                        }
                         exported = true;
                         let _ = reply.send(WorkerExport { ord, lanes: out });
                         break 'drain;
@@ -750,30 +938,87 @@ impl WorkerActor {
             for _ in 0..parked.len() {
                 let q = parked.pop_front().expect("len-bounded");
                 if q.fence <= applied {
-                    answer_query(&mut lanes, &grid, &mut queries, q);
+                    answer_query(
+                        &mut lanes,
+                        &mut spill_store,
+                        &cfg,
+                        &grid,
+                        &mut queries,
+                        q,
+                    )?;
                 } else {
                     parked.push_back(q);
                 }
             }
+            // Window boundary: if the resident lanes (per their cached
+            // cadence-fresh figures) exceed the worker budget even after
+            // pressure sweeps, tier the coldest out to disk.
+            enforce_budget(
+                &mut lanes,
+                &mut spill_store,
+                budget,
+                ord,
+                &ckpt_tx,
+                &col_tx,
+                &mut batch,
+            )?;
         }
         if !batch.is_empty() {
             let _ = col_tx.send(CollectorMsg::Hits(batch));
         }
+        // Final rollup: resident lanes + still-spilled lanes (their
+        // counters live in the spill metadata) + counters banked when
+        // spilled lanes left via Export.
+        let mut processed: u64 = lanes.values().map(|l| l.processed).sum();
+        let mut hits: u64 = lanes.values().map(|l| l.hits).sum();
+        let mut sweeps: u64 = lanes.values().map(|l| l.sweeps).sum();
+        let mut evicted: u64 = lanes.values().map(|l| l.evicted).sum();
+        // An exported worker handed its state off; reporting it again
+        // would double-count entries that now live on the new workers.
+        let mut state = if exported {
+            StateSizes::default()
+        } else {
+            sum_state(&lanes)
+        };
+        // Exact (re-measured) logical bytes, not the cached figures: the
+        // final report is the placement-independent accounting record.
+        let mut state_bytes: u64 = if exported {
+            0
+        } else {
+            lanes.values().map(|l| l.model.state_bytes()).sum()
+        };
+        let (mut spills, mut spill_faultins) = (0u64, 0u64);
+        if let Some(store) = &spill_store {
+            spills = store.spills();
+            spill_faultins = store.faultins();
+            for id in store.lanes() {
+                let m = store.meta(id).expect("listed");
+                processed += m.processed;
+                hits += m.hits;
+                sweeps += m.sweeps;
+                evicted += m.evicted;
+                state.users += m.sizes.users;
+                state.items += m.sizes.items;
+                state.aux += m.sizes.aux;
+                state_bytes += m.bytes;
+            }
+        }
+        processed += banked.0;
+        hits += banked.1;
+        evicted += banked.2;
+        sweeps += banked.3;
         let report = WorkerReport {
             worker_id: ord,
-            processed: lanes.values().map(|l| l.processed).sum(),
-            hits: lanes.values().map(|l| l.hits).sum(),
+            processed,
+            hits,
             queries,
-            // An exported worker handed its state off; reporting it again
-            // would double-count entries that now live on the new workers.
-            state: if exported {
-                StateSizes::default()
-            } else {
-                sum_state(&lanes)
-            },
+            state,
+            state_bytes,
             latency,
-            sweeps: lanes.values().map(|l| l.sweeps).sum(),
-            evicted: lanes.values().map(|l| l.evicted).sum(),
+            sweeps,
+            evicted,
+            spills,
+            spill_faultins,
             recommend_ns,
             update_ns,
             windows: preq.windowed().stats().to_vec(),
@@ -799,20 +1044,157 @@ fn lane_entry<'a>(
     })
 }
 
+/// The sweep a memory-pressure trigger fires: the *same* kinds with the
+/// *same* parameters as the clock-driven path derives from the policy —
+/// pressure only changes *when* a sweep runs, never *what* it evicts
+/// (the determinism the equivalence suite leans on). `Forgetting::None`
+/// yields no sweep: with no policy configured, only spill can honor a
+/// budget (see `Cluster::metrics`'s warn-once and the scenario driver's
+/// rejection).
+fn pressure_sweep(policy: Forgetting, now_ts: u64) -> Option<SweepKind> {
+    match policy {
+        Forgetting::None => None,
+        Forgetting::Lru { max_idle_secs, .. } => Some(SweepKind::Lru {
+            cutoff_ts: now_ts.saturating_sub(max_idle_secs),
+        }),
+        Forgetting::Lfu { min_freq, .. } => {
+            Some(SweepKind::Lfu { min_freq })
+        }
+        Forgetting::Decay { factor, .. } => {
+            Some(SweepKind::Decay { factor })
+        }
+    }
+}
+
+/// Fault a spilled lane back in: decode its parked frame and rebuild
+/// the lane exactly — model (including its RNG stream), clock cadence,
+/// watermark, and live counters all travel in the frame, so the lane is
+/// byte-identical to one that never spilled. No-op if the lane is not
+/// spilled (or spill is off).
+fn fault_in(
+    lanes: &mut BTreeMap<u64, Lane>,
+    spill: &mut Option<SpillStore>,
+    cfg: &RunConfig,
+    id: u64,
+) -> Result<()> {
+    let Some(store) = spill else { return Ok(()) };
+    let Some(frame_bytes) = store.take(id as usize)? else {
+        return Ok(());
+    };
+    let lane = lane_entry(lanes, cfg, id)?;
+    let frame = decode_lane_frame(&frame_bytes)?;
+    lane.model.import_partition(frame.model)?;
+    let (ev, ts, sw) = frame.clock;
+    lane.clock.restore(ev, ts, sw);
+    lane.watermark = frame.watermark;
+    lane.processed = frame.processed;
+    lane.hits = frame.hits;
+    lane.evicted = frame.evicted;
+    lane.sweeps = frame.sweeps;
+    lane.bytes = lane.model.state_bytes();
+    // The spill frame was offered to the supervisor as a checkpoint at
+    // spill time; either way the lane needs no eager first checkpoint —
+    // the periodic cadence resumes from here.
+    lane.since_ckpt = 0;
+    lane.checkpointed = true;
+    Ok(())
+}
+
+/// Spill coldest lanes (smallest applied watermark; never-touched lanes
+/// first) until the worker's resident lane bytes fit `budget`. Called
+/// at window boundaries and right before metrics replies, so any
+/// reported resident figure respects the budget by construction. With
+/// fault tolerance on, each spilled frame is also offered to the
+/// supervisor as a checkpoint — a spilled frame *is* a valid lane
+/// checkpoint (buffered hit samples are flushed first, the same
+/// ordering rule the periodic checkpoint path follows). No-op without
+/// a spill store (budget unset, or `memory.spill = false`).
+#[allow(clippy::too_many_arguments)]
+fn enforce_budget(
+    lanes: &mut BTreeMap<u64, Lane>,
+    spill: &mut Option<SpillStore>,
+    budget: u64,
+    ord: usize,
+    ckpt_tx: &Option<Sender<CheckpointMsg>>,
+    col_tx: &Sender<CollectorMsg>,
+    batch: &mut Vec<HitSample>,
+) -> Result<()> {
+    let Some(store) = spill else { return Ok(()) };
+    let mut resident: u64 = lanes.values().map(|l| l.bytes).sum();
+    if resident <= budget {
+        return Ok(());
+    }
+    let mut order: Vec<(u64, u64)> = lanes
+        .iter()
+        .map(|(id, l)| (l.watermark.map_or(0, |w| w + 1), *id))
+        .collect();
+    order.sort_unstable();
+    for (_, id) in order {
+        if resident <= budget {
+            break;
+        }
+        let lane = lanes.get(&id).expect("id listed from lanes");
+        let cached = lane.bytes;
+        let frame = encode_lane_frame(lane);
+        let meta = SpillMeta {
+            bytes: lane.model.state_bytes(),
+            watermark: lane.watermark.map_or(0, |w| w + 1),
+            sizes: lane.model.state_sizes(),
+            processed: lane.processed,
+            hits: lane.hits,
+            evicted: lane.evicted,
+            sweeps: lane.sweeps,
+        };
+        if let Some(tx) = ckpt_tx {
+            // Same rule as the periodic path: hand buffered hit samples
+            // to the collector before a frame covering them can land.
+            if !batch.is_empty() {
+                let full = std::mem::replace(batch, Vec::with_capacity(256));
+                let _ = col_tx.send(CollectorMsg::Hits(full));
+            }
+            let _ = tx.try_send(CheckpointMsg {
+                ord,
+                lane: id,
+                bytes: frame.clone(),
+            });
+        }
+        store.put(id as usize, &frame, meta)?;
+        resident = resident.saturating_sub(cached);
+        lanes.remove(&id);
+    }
+    Ok(())
+}
+
 /// Answer one serving query from the hosted lanes: every lane of the
 /// user's grid column contributes its ranked local list, plus the
 /// user's locally-rated items for global exclusion. `serve` is the
 /// frozen read — answering never trains the models, so query timing
-/// cannot perturb the event timeline crash recovery replays.
+/// cannot perturb the event timeline crash recovery replays. Spilled
+/// lanes of the queried column fault back in first: the disk tier is
+/// transparent to serving too.
 fn answer_query(
     lanes: &mut BTreeMap<u64, Lane>,
+    spill: &mut Option<SpillStore>,
+    cfg: &RunConfig,
     grid: &StateGrid,
     queries: &mut u64,
     q: QueryMsg,
-) {
+) -> Result<()> {
     *queries += 1;
     let QueryMsg { user, n, reply, .. } = q;
     let col = grid.user_col(user);
+    let spilled: Vec<u64> = match spill {
+        Some(store) => store
+            .lanes()
+            .into_iter()
+            .map(|id| id as u64)
+            .filter(|id| grid.lane_col(*id) == col)
+            .collect(),
+        None => Vec::new(),
+    };
+    for id in spilled {
+        fault_in(lanes, spill, cfg, id)?;
+    }
     let mut lists = Vec::new();
     let mut rated = Vec::new();
     for (lane_id, lane) in lanes.iter_mut() {
@@ -826,6 +1208,7 @@ fn answer_query(
         rated.extend(lane.model.rated_items(user));
     }
     let _ = reply.send(ReplicaAnswer { lists, rated });
+    Ok(())
 }
 
 /// Sum state-entry counts across a worker's hosted lanes.
@@ -950,6 +1333,84 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn pressure_sweep_reuses_policy_parameters() {
+        // The pressure trigger must fire the *same* sweep the clock
+        // path would derive from the policy — only the timing differs.
+        assert_eq!(pressure_sweep(Forgetting::None, 100), None);
+        assert_eq!(
+            pressure_sweep(
+                Forgetting::Lru { trigger_secs: 5, max_idle_secs: 30 },
+                100
+            ),
+            Some(SweepKind::Lru { cutoff_ts: 70 })
+        );
+        assert_eq!(
+            pressure_sweep(
+                Forgetting::Lru { trigger_secs: 5, max_idle_secs: 500 },
+                100
+            ),
+            Some(SweepKind::Lru { cutoff_ts: 0 }),
+            "cutoff saturates at zero like the clock path"
+        );
+        assert_eq!(
+            pressure_sweep(
+                Forgetting::Lfu { trigger_events: 9, min_freq: 2 },
+                0
+            ),
+            Some(SweepKind::Lfu { min_freq: 2 })
+        );
+        assert_eq!(
+            pressure_sweep(
+                Forgetting::Decay { trigger_events: 9, factor: 0.5 },
+                0
+            ),
+            Some(SweepKind::Decay { factor: 0.5 })
+        );
+    }
+
+    #[test]
+    fn spill_and_fault_in_rebuild_the_lane_exactly() {
+        let cfg = RunConfig::default();
+        let mut lanes: BTreeMap<u64, Lane> = BTreeMap::new();
+        let mut spill = Some(SpillStore::new("", 0));
+        let lane = lane_entry(&mut lanes, &cfg, 3).unwrap();
+        lane.model.update(&Rating::new(1, 2, 5.0, 0));
+        lane.model.update(&Rating::new(4, 7, 4.0, 1));
+        lane.processed = 2;
+        lane.hits = 1;
+        lane.sweeps = 1;
+        lane.evicted = 4;
+        lane.watermark = Some(9);
+        lane.clock.restore(2, 0, 1);
+        lane.bytes = lane.model.state_bytes();
+        let reference = encode_lane_frame(lane);
+        let bytes_before = lane.bytes;
+        let meta = SpillMeta {
+            bytes: bytes_before,
+            watermark: 10,
+            sizes: lane.model.state_sizes(),
+            processed: 2,
+            hits: 1,
+            evicted: 4,
+            sweeps: 1,
+        };
+        spill.as_mut().unwrap().put(3, &reference, meta).unwrap();
+        lanes.remove(&3);
+        fault_in(&mut lanes, &mut spill, &cfg, 3).unwrap();
+        assert!(spill.as_ref().unwrap().is_empty());
+        let lane = lanes.get(&3).unwrap();
+        // Frame-for-frame identical: model bytes (including the RNG
+        // stream), watermark, counters, and clock all round-tripped.
+        assert_eq!(encode_lane_frame(lane), reference);
+        assert_eq!(lane.bytes, bytes_before);
+        assert!(lane.checkpointed);
+        assert_eq!(lane.since_ckpt, 0);
+        // A second fault-in is a no-op (the lane is resident).
+        fault_in(&mut lanes, &mut spill, &cfg, 3).unwrap();
+        assert_eq!(encode_lane_frame(lanes.get(&3).unwrap()), reference);
     }
 
     #[test]

@@ -23,12 +23,21 @@ pub struct WorkerReport {
     /// Final state-entry counts (zero for workers retired by a rescale:
     /// their state was exported to the next generation).
     pub state: StateSizes,
+    /// Final logical state bytes — the models' deterministic accounting
+    /// summed over hosted lanes, resident *and* spilled (zero for
+    /// retired workers, like `state`). Placement-independent: the same
+    /// stream yields the same total however lanes were placed.
+    pub state_bytes: u64,
     /// Per-event processing latency (recommend + update), nanoseconds.
     pub latency: Histogram,
-    /// Forgetting sweeps run.
+    /// Forgetting sweeps run (clock-driven and memory-pressure-driven).
     pub sweeps: u64,
     /// Entries evicted by forgetting sweeps.
     pub evicted: u64,
+    /// Cold-lane spills to the disk tier performed by this worker.
+    pub spills: u64,
+    /// Spilled-lane fault-ins performed by this worker.
+    pub spill_faultins: u64,
     /// Nanoseconds spent inside recommend() (profile split).
     pub recommend_ns: u64,
     /// Nanoseconds spent inside update() (profile split).
@@ -108,6 +117,15 @@ pub struct RunReport {
     /// replay) — the fault-tolerance analog of `rescale_pause_ns`,
     /// measured by `benches/recovery.rs`.
     pub recovery_pause_ns: u64,
+    /// Final logical state bytes summed over the final topology's
+    /// workers (the paper's memory metric in bytes; retired workers
+    /// report zero, so there is no double counting).
+    pub state_bytes: u64,
+    /// Total cold-lane spills to the disk tier across all workers
+    /// (live + retired). `0` unless a `[memory]` budget forced tiering.
+    pub spills: u64,
+    /// Total spilled-lane fault-ins across all workers (live + retired).
+    pub spill_faultins: u64,
 }
 
 impl RunReport {
@@ -177,9 +195,12 @@ mod tests {
             hits: 2,
             queries: 0,
             state: StateSizes { users, items, aux: 0 },
+            state_bytes: (users + items) * 32,
             latency: Histogram::new(),
             sweeps: 0,
             evicted: 0,
+            spills: 0,
+            spill_faultins: 0,
             recommend_ns: 0,
             update_ns: 0,
             windows: vec![],
@@ -211,6 +232,9 @@ mod tests {
             checkpoint_bytes: 0,
             replayed_events: 0,
             recovery_pause_ns: 0,
+            state_bytes: (10 + 4 + 20 + 6) * 32,
+            spills: 0,
+            spill_faultins: 0,
         };
         assert!((r.mean_user_state() - 15.0).abs() < 1e-9);
         assert!((r.mean_item_state() - 5.0).abs() < 1e-9);

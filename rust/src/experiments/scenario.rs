@@ -171,6 +171,14 @@ impl Scenario {
                  off; set fault.checkpoint_interval > 0 (or drop the kill)"
             );
         }
+        // The [memory] footgun is an error here (not just the warning
+        // Cluster::metrics logs): a scenario is a batch grid nobody is
+        // watching, so a cap whose pressure sweeps cannot evict
+        // anything would silently churn every lane through the disk
+        // tier for the whole grid.
+        if let Some(msg) = base.memory_footgun() {
+            bail!("scenario: {msg}");
+        }
         // A chaos kill composes with remote workers: the kill fires
         // inside whichever slot hosts the chosen sequence number (the
         // placement cycle decides whether that is a local thread or a
@@ -428,6 +436,9 @@ fn write_bench_json(
                 ("rescales", num(r.report.rescales as f64)),
                 ("recoveries", num(r.report.recoveries as f64)),
                 ("replayed_events", num(r.report.replayed_events as f64)),
+                ("state_bytes", num(r.report.state_bytes as f64)),
+                ("spills", num(r.report.spills as f64)),
+                ("spill_faultins", num(r.report.spill_faultins as f64)),
             ];
             if let Some(resp) = r.response {
                 pairs.push(("pre_drift_recall", num(resp.pre)));
@@ -445,6 +456,7 @@ fn write_bench_json(
         ("events", num(sc.events as f64)),
         ("seed", num(sc.seed as f64)),
         ("window_events", num(sc.window_events as f64)),
+        ("memory_budget_bytes", num(sc.base.memory_budget_bytes as f64)),
         ("rows", Json::Arr(rows)),
     ]);
     let path = PathBuf::from(&sc.bench_out);
@@ -561,6 +573,25 @@ mod tests {
              [cluster]\nworkers = [\"tcp://127.0.0.1:7461\"]",
         )
         .is_err());
+    }
+
+    #[test]
+    fn memory_cap_without_policy_is_rejected_loudly() {
+        // The footgun satellite: a [memory] budget whose pressure
+        // sweeps cannot evict anything (no [forgetting] policy) is an
+        // error for the batch driver, with a message naming the fix.
+        let err = Scenario::from_toml("[memory]\nbudget_bytes = 4096")
+            .expect_err("cap without a forgetting policy must be rejected");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("[forgetting]"), "message names the cause");
+        assert!(msg.contains("lru/lfu/decay"), "message names the fix");
+        // Any eviction policy makes the same cap acceptable.
+        let ok = Scenario::from_toml(
+            "[memory]\nbudget_bytes = 4096\n\
+             [forgetting]\nkind = \"lru\"",
+        )
+        .unwrap();
+        assert_eq!(ok.base.memory_budget_bytes, 4096);
     }
 
     #[test]

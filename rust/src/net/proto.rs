@@ -42,7 +42,10 @@ use crate::util::wire::{WireError, WireReader, WireWriter};
 /// fence (and may arrive out of FIFO order; the host's serving lane
 /// parks them on the fence) + the `[serving]` knobs appended to the
 /// config codec.
-pub(crate) const PROTO_VERSION: u8 = 3;
+/// v4: the memory subsystem — `[memory]` knobs appended to the config
+/// codec, resident/spill accounting appended to `SnapshotReply`, and
+/// `state_bytes`/`spills`/`spill_faultins` appended to `Report`.
+pub(crate) const PROTO_VERSION: u8 = 4;
 
 /// Upper bound on a single frame body (sanity cap so a corrupt length
 /// prefix fails fast instead of attempting a giant read).
@@ -215,7 +218,7 @@ impl Frame {
                     + 4
                     + 8 * answer.rated.len()
             }
-            Frame::SnapshotReply { .. } => 73,
+            Frame::SnapshotReply { .. } => 113,
             Frame::ExportReply { export, .. } => {
                 21 + export
                     .lanes
@@ -302,6 +305,11 @@ impl Frame {
                 w.u64(snap.queries);
                 w.u64(snap.lanes);
                 encode_state(w, &snap.state);
+                w.u64(snap.state_bytes);
+                w.u64(snap.spilled_lanes);
+                w.u64(snap.spilled_bytes);
+                w.u64(snap.spills);
+                w.u64(snap.spill_faultins);
             }
             Frame::ExportReply { req_id, export } => {
                 w.u8(TAG_EXPORT_REPLY);
@@ -425,6 +433,11 @@ impl Frame {
                     queries: r.u64()?,
                     lanes: r.u64()?,
                     state: decode_state(&mut r)?,
+                    state_bytes: r.u64()?,
+                    spilled_lanes: r.u64()?,
+                    spilled_bytes: r.u64()?,
+                    spills: r.u64()?,
+                    spill_faultins: r.u64()?,
                 },
             },
             TAG_EXPORT_REPLY => {
@@ -636,6 +649,10 @@ fn encode_config(w: &mut WireWriter, cfg: &RunConfig) {
     w.u64(cfg.serving_max_in_flight as u64);
     w.u64(cfg.serving_cache_shards as u64);
     w.u64(cfg.serving_cache_max_staleness);
+    w.u64(cfg.memory_budget_bytes);
+    w.u8(u8::from(cfg.memory_spill));
+    w.string(&cfg.memory_spill_dir);
+    w.u64(cfg.memory_check_events);
 }
 
 fn decode_config(r: &mut WireReader<'_>) -> Result<RunConfig, WireError> {
@@ -707,6 +724,10 @@ fn decode_config(r: &mut WireReader<'_>) -> Result<RunConfig, WireError> {
     let serving_max_in_flight = r.u64()? as usize;
     let serving_cache_shards = r.u64()? as usize;
     let serving_cache_max_staleness = r.u64()?;
+    let memory_budget_bytes = r.u64()?;
+    let memory_spill = r.u8()? != 0;
+    let memory_spill_dir = r.string()?;
+    let memory_check_events = r.u64()?;
     Ok(RunConfig {
         algorithm,
         backend,
@@ -740,6 +761,10 @@ fn decode_config(r: &mut WireReader<'_>) -> Result<RunConfig, WireError> {
         serving_max_in_flight,
         serving_cache_shards,
         serving_cache_max_staleness,
+        memory_budget_bytes,
+        memory_spill,
+        memory_spill_dir,
+        memory_check_events,
     })
 }
 
@@ -761,6 +786,9 @@ fn encode_report(w: &mut WireWriter, rep: &WorkerReport) {
         w.u64(win.events);
         w.u64(win.hits);
     }
+    w.u64(rep.state_bytes);
+    w.u64(rep.spills);
+    w.u64(rep.spill_faultins);
 }
 
 fn decode_report(
@@ -786,15 +814,21 @@ fn decode_report(
             hits: r.u64()?,
         });
     }
+    let state_bytes = r.u64()?;
+    let spills = r.u64()?;
+    let spill_faultins = r.u64()?;
     Ok(WorkerReport {
         worker_id,
         processed,
         hits,
         queries,
         state,
+        state_bytes,
         latency,
         sweeps,
         evicted,
+        spills,
+        spill_faultins,
         recommend_ns,
         update_ns,
         windows,
@@ -839,9 +873,12 @@ mod tests {
             hits: 17,
             queries: 3,
             state: StateSizes { users: 5, items: 9, aux: 2 },
+            state_bytes: 7_777,
             latency,
             sweeps: 1,
             evicted: 40,
+            spills: 3,
+            spill_faultins: 2,
             recommend_ns: 123_456,
             update_ns: 654_321,
             windows: vec![
@@ -886,6 +923,10 @@ mod tests {
             serving_max_in_flight: 33,
             serving_cache_shards: 8,
             serving_cache_max_staleness: 12,
+            memory_budget_bytes: 1 << 20,
+            memory_spill: false,
+            memory_spill_dir: "/tmp/spill".to_string(),
+            memory_check_events: 32,
             ..RunConfig::default()
         };
         vec![
@@ -930,6 +971,11 @@ mod tests {
                     queries: 2,
                     lanes: 1,
                     state: StateSizes { users: 10, items: 20, aux: 0 },
+                    state_bytes: 2048,
+                    spilled_lanes: 1,
+                    spilled_bytes: 512,
+                    spills: 2,
+                    spill_faultins: 1,
                 },
             },
             Frame::ExportReply {
@@ -996,7 +1042,14 @@ mod tests {
             Forgetting::Lfu { trigger_events: 10, min_freq: 2 },
             Forgetting::Decay { trigger_events: 7, factor: 0.5 },
         ] {
-            let cfg = RunConfig { forgetting, ..RunConfig::default() };
+            let cfg = RunConfig {
+                forgetting,
+                memory_budget_bytes: 9999,
+                memory_spill: false,
+                memory_spill_dir: "spill".to_string(),
+                memory_check_events: 7,
+                ..RunConfig::default()
+            };
             let mut w = WireWriter::new();
             encode_config(&mut w, &cfg);
             let bytes = w.into_bytes();
@@ -1019,6 +1072,10 @@ mod tests {
                 back.serving_cache_max_staleness,
                 cfg.serving_cache_max_staleness
             );
+            assert_eq!(back.memory_budget_bytes, cfg.memory_budget_bytes);
+            assert_eq!(back.memory_spill, cfg.memory_spill);
+            assert_eq!(back.memory_spill_dir, cfg.memory_spill_dir);
+            assert_eq!(back.memory_check_events, cfg.memory_check_events);
         }
     }
 

@@ -1,11 +1,13 @@
 //! Worker-local (shared-nothing) state stores: tracked keyed maps, the
-//! capacity-padded vector slab the AOT artifacts consume, and the
-//! forgetting trigger clocks.
+//! capacity-padded vector slab the AOT artifacts consume, the
+//! forgetting trigger clocks, and the cold-lane spill store.
 
 pub mod forgetting;
+pub mod spill;
 pub mod tracked;
 pub mod vector_slab;
 
 pub use forgetting::{ForgetClock, SweepKind};
+pub use spill::SpillStore;
 pub use tracked::TrackedMap;
 pub use vector_slab::VectorSlab;

@@ -1,0 +1,273 @@
+//! Cold-lane spill store: the disk tier of the `[memory]` budget.
+//!
+//! When a worker's resident lane bytes exceed its budget even after
+//! pressure sweeps, the engine serializes whole lanes — through the same
+//! lane-frame format that checkpoints and rescale migration use — and
+//! parks the frames here. A spilled lane is *not* a different kind of
+//! state: the frame is byte-identical to the checkpoint the lane would
+//! have produced, so faulting it back in (frame → `import_partition`)
+//! reconstructs the lane exactly and every downstream guarantee
+//! (rescale equivalence, crash recovery, TCP workers) holds unchanged.
+//!
+//! The store is strictly actor-local and ephemeral: each store owns a
+//! unique directory (under the configured spill dir, or the platform
+//! temp dir) and removes it on drop. Spilled frames never need to
+//! outlive the actor — crash recovery rebuilds workers from supervisor
+//! checkpoints plus replay, not from spill files.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::data::types::StateSizes;
+
+/// Distinguishes concurrently-created stores within one process.
+static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Metadata the engine keeps about a spilled lane so it can account for
+/// it — entry counts *and* the lane's baseline-relative counters, which
+/// must keep contributing to worker rollups while the lane is on disk —
+/// without touching the disk frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpillMeta {
+    /// The lane's logical `state_bytes` at spill time (deterministic
+    /// model accounting — identical after fault-in).
+    pub bytes: u64,
+    /// The lane's applied watermark at spill time (spill order is
+    /// coldest-first by this).
+    pub watermark: u64,
+    /// The lane's state-entry counts at spill time.
+    pub sizes: StateSizes,
+    /// Events applied to the lane since its counter baseline.
+    pub processed: u64,
+    /// Prequential hits since the baseline.
+    pub hits: u64,
+    /// Entries evicted by sweeps since the baseline.
+    pub evicted: u64,
+    /// Sweeps run since the baseline.
+    pub sweeps: u64,
+}
+
+struct SpilledLane {
+    path: PathBuf,
+    frame_len: u64,
+    meta: SpillMeta,
+}
+
+/// Disk store holding spilled lane frames for one worker actor.
+///
+/// Keys are lane ids (state-grid cells). Frames are opaque bytes — the
+/// engine's lane-frame encoding — written one file per lane. All
+/// accounting methods are O(1) or O(spilled lanes); no disk I/O happens
+/// outside [`SpillStore::put`] / [`SpillStore::take`] /
+/// [`SpillStore::remove`].
+pub struct SpillStore {
+    dir: PathBuf,
+    entries: BTreeMap<usize, SpilledLane>,
+    /// Cumulative spill count (monotone; survives take/remove).
+    spills: u64,
+    /// Cumulative fault-in count (monotone).
+    faultins: u64,
+}
+
+impl SpillStore {
+    /// Create a store rooted in a fresh unique directory under `base`
+    /// (empty `base` = the platform temp directory). The directory
+    /// itself is created lazily on the first [`SpillStore::put`].
+    pub fn new(base: &str, worker_id: usize) -> Self {
+        let root = if base.is_empty() {
+            std::env::temp_dir()
+        } else {
+            PathBuf::from(base)
+        };
+        let dir = root.join(format!(
+            "streamrec-spill-{}-{}-w{}",
+            std::process::id(),
+            STORE_SEQ.fetch_add(1, Ordering::Relaxed),
+            worker_id
+        ));
+        Self { dir, entries: BTreeMap::new(), spills: 0, faultins: 0 }
+    }
+
+    /// Spill a lane: write `frame` to disk and record `meta`. Replaces
+    /// any previous frame for the lane.
+    pub fn put(
+        &mut self,
+        lane: usize,
+        frame: &[u8],
+        meta: SpillMeta,
+    ) -> Result<()> {
+        std::fs::create_dir_all(&self.dir).with_context(|| {
+            format!("creating spill dir {}", self.dir.display())
+        })?;
+        let path = self.dir.join(format!("lane-{lane}.frame"));
+        std::fs::write(&path, frame).with_context(|| {
+            format!("writing spill frame {}", path.display())
+        })?;
+        self.entries.insert(
+            lane,
+            SpilledLane { path, frame_len: frame.len() as u64, meta },
+        );
+        self.spills += 1;
+        Ok(())
+    }
+
+    /// Fault a lane back in: read and delete its frame, returning the
+    /// bytes exactly as written. `None` if the lane is not spilled.
+    pub fn take(&mut self, lane: usize) -> Result<Option<Vec<u8>>> {
+        let Some(entry) = self.entries.remove(&lane) else {
+            return Ok(None);
+        };
+        let frame = std::fs::read(&entry.path).with_context(|| {
+            format!("reading spill frame {}", entry.path.display())
+        })?;
+        let _ = std::fs::remove_file(&entry.path);
+        self.faultins += 1;
+        Ok(Some(frame))
+    }
+
+    /// Discard a spilled frame without reading it (the lane is being
+    /// overwritten wholesale, e.g. by a rescale `Import`). Returns true
+    /// if a frame was dropped.
+    pub fn remove(&mut self, lane: usize) -> bool {
+        match self.entries.remove(&lane) {
+            Some(entry) => {
+                let _ = std::fs::remove_file(&entry.path);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// True if `lane` currently has a spilled frame.
+    pub fn contains(&self, lane: usize) -> bool {
+        self.entries.contains_key(&lane)
+    }
+
+    /// Recorded metadata for a spilled lane.
+    pub fn meta(&self, lane: usize) -> Option<SpillMeta> {
+        self.entries.get(&lane).map(|e| e.meta)
+    }
+
+    /// Number of lanes currently spilled.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no lanes are spilled.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Sum of the spilled lanes' logical `state_bytes` (the model
+    /// accounting figure, not the on-disk frame size).
+    pub fn spilled_bytes(&self) -> u64 {
+        self.entries.values().map(|e| e.meta.bytes).sum()
+    }
+
+    /// Sum of the spilled lanes' on-disk frame sizes.
+    pub fn spilled_frame_bytes(&self) -> u64 {
+        self.entries.values().map(|e| e.frame_len).sum()
+    }
+
+    /// Cumulative number of lane spills performed (monotone).
+    pub fn spills(&self) -> u64 {
+        self.spills
+    }
+
+    /// Cumulative number of lane fault-ins performed (monotone).
+    pub fn faultins(&self) -> u64 {
+        self.faultins
+    }
+
+    /// Lane ids of the spilled lanes, ascending.
+    pub fn lanes(&self) -> Vec<usize> {
+        self.entries.keys().copied().collect()
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        // Best-effort cleanup: the dir only exists if something spilled.
+        if self.dir.exists() {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(bytes: u64, watermark: u64) -> SpillMeta {
+        SpillMeta {
+            bytes,
+            watermark,
+            sizes: StateSizes { users: 1, items: 2, aux: 3 },
+            processed: 10,
+            hits: 4,
+            evicted: 0,
+            sweeps: 1,
+        }
+    }
+
+    #[test]
+    fn round_trips_frames_byte_identically() {
+        let mut store = SpillStore::new("", 0);
+        assert!(store.is_empty());
+        let frame: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        store.put(3, &frame, meta(4096, 17)).unwrap();
+        assert!(store.contains(3));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.spilled_bytes(), 4096);
+        assert_eq!(store.spilled_frame_bytes(), 1000);
+        assert_eq!(store.meta(3).unwrap().watermark, 17);
+        assert_eq!(store.spills(), 1);
+        let back = store.take(3).unwrap().unwrap();
+        assert_eq!(back, frame, "fault-in must be byte-identical");
+        assert!(!store.contains(3));
+        assert_eq!(store.spilled_bytes(), 0);
+        assert_eq!(store.faultins(), 1);
+        assert_eq!(store.take(3).unwrap(), None, "double take is None");
+    }
+
+    #[test]
+    fn replaces_and_removes_entries() {
+        let mut store = SpillStore::new("", 7);
+        store.put(0, b"old", meta(10, 1)).unwrap();
+        store.put(0, b"new", meta(20, 2)).unwrap();
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.spilled_bytes(), 20, "replace overwrites meta");
+        assert_eq!(store.spills(), 2, "spill count is cumulative");
+        assert_eq!(store.take(0).unwrap().unwrap(), b"new");
+        store.put(1, b"x", meta(5, 3)).unwrap();
+        assert!(store.remove(1));
+        assert!(!store.remove(1), "second remove is a no-op");
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn lanes_are_sorted_and_dir_is_cleaned_up() {
+        let mut store = SpillStore::new("", 1);
+        for lane in [5usize, 1, 9] {
+            store.put(lane, b"frame", meta(1, lane as u64)).unwrap();
+        }
+        assert_eq!(store.lanes(), vec![1, 5, 9]);
+        let dir = store.dir.clone();
+        assert!(dir.exists());
+        drop(store);
+        assert!(!dir.exists(), "drop removes the spill dir");
+    }
+
+    #[test]
+    fn distinct_stores_never_collide() {
+        let mut a = SpillStore::new("", 0);
+        let mut b = SpillStore::new("", 0);
+        a.put(0, b"aaa", meta(1, 1)).unwrap();
+        b.put(0, b"bbb", meta(1, 1)).unwrap();
+        assert_eq!(a.take(0).unwrap().unwrap(), b"aaa");
+        assert_eq!(b.take(0).unwrap().unwrap(), b"bbb");
+    }
+}

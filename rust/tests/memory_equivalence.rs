@@ -1,0 +1,316 @@
+//! Equivalence and accounting properties for the `[memory]` tier.
+//!
+//! The contract under test, for ISGD and cosine, in-proc and over
+//! loopback TCP, with and without a mid-stream rescale or a chaos
+//! kill:
+//!
+//! * **Generous budgets are invisible** — any budget large enough that
+//!   pressure never fires produces a session byte-identical to the
+//!   unlimited one: same answers, hits, recall curve, and state
+//!   fingerprint.
+//! * **Spill is lossless** — a budget far *below* the working set with
+//!   no eviction policy forces the whole population through the disk
+//!   tier, and the session is *still* byte-identical to unlimited:
+//!   spilled frames fault back in exactly, on ingest and on query.
+//! * **Accounting reconciles** — logical state bytes are a pure
+//!   function of the stream (placement-independent across topologies,
+//!   rescales, recoveries, and tiering), cluster rollups equal the
+//!   per-worker sums, and with spill enabled every worker's reported
+//!   resident bytes respect its budget.
+
+use std::time::Duration;
+
+use streamrec::config::{Algorithm, Forgetting, RunConfig, Topology};
+use streamrec::coordinator::Cluster;
+use streamrec::data::synth::{SyntheticConfig, SyntheticStream};
+use streamrec::data::types::Rating;
+use streamrec::eval::RunReport;
+use streamrec::net::WorkerServer;
+use streamrec::util::proptest::forall;
+
+fn events(n: u64, seed: u64) -> Vec<Rating> {
+    SyntheticStream::new(SyntheticConfig::netflix_like(n, seed)).collect()
+}
+
+/// First `k` distinct users of a slice, in stream order.
+fn panel(evs: &[Rating], k: usize) -> Vec<u64> {
+    let mut users = Vec::new();
+    for e in evs {
+        if !users.contains(&e.user) {
+            users.push(e.user);
+            if users.len() == k {
+                break;
+            }
+        }
+    }
+    users
+}
+
+/// Base config: n_i = 2 (4 workers) over a 4x4 (16-lane) grid ceiling,
+/// so rescaling to 4 is reachable and lanes are plentiful enough for
+/// tiering to have real cold lanes to choose from.
+fn base_cfg(algo: Algorithm, checkpoint_interval: u64) -> RunConfig {
+    RunConfig {
+        algorithm: algo,
+        topology: Topology::new(2, 0).unwrap(),
+        rescale_max_n_i: 4,
+        sample_every: 200,
+        fault_checkpoint_interval: checkpoint_interval,
+        memory_check_events: 16,
+        ..RunConfig::default()
+    }
+}
+
+/// What one session produces at the shared probe points.
+struct Outcome {
+    mid: Vec<Vec<u64>>,
+    end: Vec<Vec<u64>>,
+    fingerprint: u64,
+    report: RunReport,
+}
+
+/// Drive one full session: ingest the first half, probe the panel,
+/// optionally rescale, ingest the rest, probe again, fingerprint the
+/// full model state, finish. The same sequence for every memory
+/// configuration so outcomes compare the exact same session shape.
+fn run_session(
+    cfg: &RunConfig,
+    evs: &[Rating],
+    users: &[u64],
+    rescale_to: Option<u64>,
+) -> Outcome {
+    let mut cluster = Cluster::spawn_labeled(cfg, "t-memory").unwrap();
+    let split = evs.len() / 2;
+    cluster.ingest_batch(&evs[..split]).unwrap();
+    let mid: Vec<Vec<u64>> = users
+        .iter()
+        .map(|&u| cluster.recommend(u, 10).unwrap())
+        .collect();
+    if let Some(n_i) = rescale_to {
+        cluster.rescale(Topology::new(n_i, 0).unwrap()).unwrap();
+    }
+    cluster.ingest_batch(&evs[split..]).unwrap();
+    let end: Vec<Vec<u64>> = users
+        .iter()
+        .map(|&u| cluster.recommend(u, 10).unwrap())
+        .collect();
+    let fingerprint = cluster.state_fingerprint().unwrap();
+    let report = cluster.finish().unwrap();
+    Outcome { mid, end, fingerprint, report }
+}
+
+fn assert_identical(unlimited: &Outcome, capped: &Outcome, label: &str) {
+    assert_eq!(unlimited.mid, capped.mid, "{label}: mid-stream answers");
+    assert_eq!(unlimited.end, capped.end, "{label}: end-of-stream answers");
+    assert_eq!(
+        unlimited.report.hits, capped.report.hits,
+        "{label}: hit totals"
+    );
+    assert_eq!(
+        unlimited.report.recall_curve, capped.report.recall_curve,
+        "{label}: recall curves"
+    );
+    assert_eq!(
+        unlimited.fingerprint, capped.fingerprint,
+        "{label}: state fingerprints"
+    );
+    assert_eq!(
+        unlimited.report.state_bytes, capped.report.state_bytes,
+        "{label}: final logical state bytes"
+    );
+}
+
+#[test]
+fn property_budgets_are_result_transparent() {
+    // For random (algorithm, transport, budget shape, ± rescale,
+    // ± chaos kill): a memory-managed session is byte-identical to the
+    // unlimited session with the same shape. "Generous" budgets never
+    // feel pressure; "tight" budgets (1 byte, no eviction policy) tier
+    // the *entire* population through disk and must still not change a
+    // single bit of output.
+    let evs = events(1600, 61);
+    let users = panel(&evs, 4);
+    let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+    let addr = format!("tcp://{}", server.local_addr());
+    forall("memory_equivalence", 6, |rng| {
+        let algo = if rng.next_bounded(2) == 0 {
+            Algorithm::Isgd
+        } else {
+            Algorithm::Cosine
+        };
+        let tcp = rng.next_bounded(2) == 0;
+        let tight = rng.next_bounded(2) == 0;
+        let rescale_to =
+            if rng.next_bounded(2) == 0 { Some(4u64) } else { None };
+        let chaos = rng.next_bounded(2) == 0;
+        let label = format!(
+            "algo={algo:?} tcp={tcp} tight={tight} rescale={rescale_to:?} \
+             chaos={chaos}"
+        );
+
+        let mut cfg = base_cfg(algo, if chaos { 32 } else { 0 });
+        if chaos {
+            cfg.fault_chaos_kill_seq =
+                Some(300 + rng.next_bounded(evs.len() as u64 - 600));
+        }
+        if tcp {
+            cfg.cluster_workers = vec![addr.clone()];
+        }
+        let mut capped = cfg.clone();
+        if tight {
+            // 1 byte: every lane is over budget at every enforcement
+            // point — maximal tiering churn, zero output change.
+            capped.memory_budget_bytes = 1;
+        } else {
+            // Generous: pressure can never fire, and the policy's own
+            // clock sweeps must stay exactly as frequent as unlimited.
+            capped.memory_budget_bytes = 1 << 40;
+            capped.forgetting =
+                Forgetting::Lfu { trigger_events: 400, min_freq: 2 };
+            cfg.forgetting =
+                Forgetting::Lfu { trigger_events: 400, min_freq: 2 };
+        }
+
+        let unlimited = run_session(&cfg, &evs, &users, rescale_to);
+        let managed = run_session(&capped, &evs, &users, rescale_to);
+        assert_identical(&unlimited, &managed, &label);
+        if tight {
+            assert!(
+                managed.report.spills > 0,
+                "{label}: a 1-byte budget must have tiered lanes out"
+            );
+            assert!(
+                managed.report.spill_faultins > 0,
+                "{label}: touching tiered lanes must have faulted them in"
+            );
+            assert_eq!(
+                unlimited.report.spills, 0,
+                "{label}: the unlimited run must not spill"
+            );
+        }
+        if chaos {
+            assert!(
+                managed.report.recoveries >= 1,
+                "{label}: the chaos kill must have fired and recovered"
+            );
+        }
+    });
+    server.wait_idle(Duration::from_millis(100));
+}
+
+#[test]
+fn spilled_lanes_fault_in_for_queries_exactly() {
+    // The cluster-level spill/fault-in round trip: spill everything,
+    // then serve a panel — answers must equal the unlimited session's,
+    // and the fault-ins must show up in the books.
+    let evs = events(1800, 7);
+    let users = panel(&evs, 6);
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let cfg = base_cfg(algo, 0);
+        let mut tight = cfg.clone();
+        tight.memory_budget_bytes = 1;
+
+        let mut unlimited = Cluster::spawn_labeled(&cfg, "t-mem-q").unwrap();
+        let mut capped = Cluster::spawn_labeled(&tight, "t-mem-q").unwrap();
+        unlimited.ingest_batch(&evs).unwrap();
+        capped.ingest_batch(&evs).unwrap();
+        capped.flush().unwrap();
+        let m = capped.metrics().unwrap();
+        assert_eq!(m.resident_bytes, 0, "{algo:?}: all lanes tiered out");
+        assert!(m.spilled_lanes > 0);
+        for &u in &users {
+            assert_eq!(
+                capped.recommend(u, 10).unwrap(),
+                unlimited.recommend(u, 10).unwrap(),
+                "{algo:?}: answer served from a faulted-in lane"
+            );
+        }
+        let m2 = capped.metrics().unwrap();
+        assert!(
+            m2.spill_faultins > m.spill_faultins,
+            "{algo:?}: queries faulted spilled lanes back in"
+        );
+        let rep_c = capped.finish().unwrap();
+        let rep_u = unlimited.finish().unwrap();
+        assert_eq!(rep_c.hits, rep_u.hits, "{algo:?}: hit totals");
+        assert_eq!(
+            rep_c.state_bytes, rep_u.state_bytes,
+            "{algo:?}: tiering never changes the logical state total"
+        );
+    }
+}
+
+#[test]
+fn state_accounting_is_placement_independent() {
+    // Logical state bytes (and entry counts) are a pure function of
+    // the stream: the same totals whether the lanes live on 1 worker,
+    // 4 workers, 16 workers after a rescale, a recovered worker — or
+    // on disk.
+    let evs = events(2000, 53);
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let run = |n_i: u64,
+                   rescale_to: Option<u64>,
+                   budget: u64,
+                   chaos: bool| {
+            let mut cfg = base_cfg(algo, if chaos { 32 } else { 0 });
+            cfg.topology = Topology::new(n_i, 0).unwrap();
+            cfg.memory_budget_bytes = budget;
+            if chaos {
+                cfg.fault_chaos_kill_seq = Some(900);
+            }
+            let mut cluster =
+                Cluster::spawn_labeled(&cfg, "t-mem-acct").unwrap();
+            cluster.ingest_batch(&evs[..1000]).unwrap();
+            if let Some(to) = rescale_to {
+                cluster.rescale(Topology::new(to, 0).unwrap()).unwrap();
+            }
+            cluster.ingest_batch(&evs[1000..]).unwrap();
+            cluster.flush().unwrap();
+            let m = cluster.metrics().unwrap();
+            if budget > 0 {
+                for w in &m.workers {
+                    assert!(
+                        w.state_bytes <= budget,
+                        "{algo:?}: worker {} resident {} > budget {budget}",
+                        w.worker_id,
+                        w.state_bytes,
+                    );
+                }
+            }
+            assert_eq!(
+                m.state_bytes,
+                m.workers
+                    .iter()
+                    .map(|w| w.state_bytes + w.spilled_bytes)
+                    .sum::<u64>(),
+                "{algo:?}: cluster rollup equals per-worker sums"
+            );
+            let report = cluster.finish().unwrap();
+            assert_eq!(
+                report.state_bytes, m.state_bytes,
+                "{algo:?}: final report agrees with the last snapshot"
+            );
+            let state: (u64, u64, u64) = report.workers.iter().fold(
+                (0, 0, 0),
+                |acc, w| {
+                    (
+                        acc.0 + w.state.users,
+                        acc.1 + w.state.items,
+                        acc.2 + w.state.aux,
+                    )
+                },
+            );
+            (report.state_bytes, state)
+        };
+        let central = run(1, None, 0, false);
+        let distributed = run(2, None, 0, false);
+        let rescaled = run(2, Some(4), 0, false);
+        let tiered = run(2, None, 64 * 1024, false);
+        let recovered = run(2, None, 0, true);
+        assert_eq!(central, distributed, "{algo:?}: 1 vs 4 workers");
+        assert_eq!(central, rescaled, "{algo:?}: across a rescale");
+        assert_eq!(central, tiered, "{algo:?}: with lanes tiered to disk");
+        assert_eq!(central, recovered, "{algo:?}: across a crash recovery");
+        assert!(central.0 > 0, "{algo:?}: the stream built real state");
+    }
+}

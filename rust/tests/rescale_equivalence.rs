@@ -268,6 +268,73 @@ fn forgetting_cadence_survives_rescale() {
 }
 
 #[test]
+fn pressure_sweeps_survive_rescale() {
+    // The `[memory]` analog of forgetting_cadence_survives_rescale:
+    // here the clock trigger sits beyond the stream, so *every* sweep
+    // is memory-pressure-driven. Pressure is lane-local by design —
+    // each lane gets a fixed byte slice of the per-worker budget over
+    // the fixed state grid, re-checked on a processed-count cadence
+    // that travels inside the lane wire frames — so a mid-stream
+    // rescale must change nothing: answers, hits, recall curve, and
+    // sweep/eviction totals all match the never-rescaled session, even
+    // while cold lanes churn through the disk tier.
+    let evs = events(3000, 29);
+    for algo in [Algorithm::Isgd, Algorithm::Cosine] {
+        let mut c = ceiling_cfg(algo, 2);
+        // Per-lane slice = 32 KiB / 16 lanes = 2 KiB: far below a
+        // lane's working set, so pressure fires throughout.
+        c.memory_budget_bytes = 32 * 1024;
+        c.memory_check_events = 16;
+        c.forgetting =
+            Forgetting::Lfu { trigger_events: 1_000_000, min_freq: 2 };
+        let users = panel(&evs, 5);
+        let run = |rescale: bool| {
+            let mut cluster =
+                Cluster::spawn_labeled(&c, "t-pressure").unwrap();
+            cluster.ingest_batch(&evs[..1500]).unwrap();
+            if rescale {
+                cluster.rescale(Topology::new(4, 0).unwrap()).unwrap();
+            }
+            cluster.ingest_batch(&evs[1500..]).unwrap();
+            let answers: Vec<Vec<u64>> = users
+                .iter()
+                .map(|&u| cluster.recommend(u, 10).unwrap())
+                .collect();
+            let report = cluster.finish().unwrap();
+            (answers, report)
+        };
+        let (ans_a, rep_a) = run(false);
+        let (ans_b, rep_b) = run(true);
+        assert_eq!(ans_a, ans_b, "{algo:?}: answers under memory pressure");
+        assert_eq!(rep_a.hits, rep_b.hits, "{algo:?}: hit totals");
+        assert_eq!(
+            rep_a.recall_curve, rep_b.recall_curve,
+            "{algo:?}: recall curves"
+        );
+        let totals = |r: &RunReport| {
+            let all = || r.workers.iter().chain(r.retired.iter());
+            (
+                all().map(|w| w.sweeps).sum::<u64>(),
+                all().map(|w| w.evicted).sum::<u64>(),
+            )
+        };
+        assert_eq!(
+            totals(&rep_a),
+            totals(&rep_b),
+            "{algo:?}: pressure sweep/eviction totals are \
+             placement-independent"
+        );
+        let (sweeps, evicted) = totals(&rep_b);
+        assert!(sweeps > 0, "{algo:?}: pressure sweeps actually fired");
+        assert!(evicted > 0, "{algo:?}: pressure sweeps actually evicted");
+        assert!(
+            rep_a.spills > 0 && rep_b.spills > 0,
+            "{algo:?}: the cap also forced the disk tier to engage"
+        );
+    }
+}
+
+#[test]
 fn rescale_of_empty_cluster_is_cheap_and_sound() {
     // No state yet: the cutover moves nothing and the session works
     // normally afterwards.

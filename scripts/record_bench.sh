@@ -35,6 +35,7 @@ declare -A RECORDS=(
   [transport]=BENCH_transport.json
   [serving]=BENCH_serving.json
   [hotpath]=BENCH_hotpath.json
+  [memory]=BENCH_memory.json
 )
 
 smoke=0
@@ -49,7 +50,7 @@ for arg in "$@"; do
   esac
 done
 if [ ${#benches[@]} -eq 0 ]; then
-  benches=(pipeline rescale recovery transport serving hotpath)
+  benches=(pipeline rescale recovery transport serving hotpath memory)
 fi
 
 # Best "per second" figure in a recorded file (rows use throughput_ev_s,
